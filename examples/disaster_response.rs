@@ -1,0 +1,48 @@
+//! Disaster-response scenario (paper §5): a drone feed analyzed at the
+//! edge; the operator reflashes the FPGA cartridge from debris detection
+//! (object-detect bitstream) to person detection mid-mission.
+//!
+//!     cargo run --release --example disaster_response
+
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::fpga::{reflash, Bitstream};
+use champ::device::{Cartridge, DeviceKind};
+use champ::workload::video::VideoSource;
+
+fn main() -> anyhow::Result<()> {
+    // Phase 1: debris survey with an object-detection bitstream.
+    let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 4);
+    let uid = o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Fpga, CapDescriptor::object_detect()))?;
+    let mut drone = VideoSource::paper_stream(21).with_rate_fps(10.0);
+    let rep1 = o.run_pipelined(&mut drone, 50, vec![]);
+    println!("phase 1 (debris survey): {:.1} fps, mean latency {:.1} ms",
+        rep1.fps, rep1.latency.mean_us() / 1e3);
+
+    // Phase 2: survivors suspected — reflash to face detection.
+    let bus_rate = o.bus.profile.bytes_per_us();
+    let cart = o.carts.get_mut(&uid).unwrap();
+    let reflash_us = reflash(cart, Bitstream::for_cap(CapDescriptor::face_detect()), bus_rate)?;
+    println!("reflash to face-detect: {:.2} s (bitstream push + partial reconfiguration)",
+        reflash_us as f64 / 1e6);
+    // Registry must re-learn the capability (new handshake after DPR).
+    let slot = o.topology.slot_of(uid).unwrap();
+    o.unplug(slot)?;
+    let c2 = {
+        let mut c = Cartridge::new(uid, DeviceKind::Fpga, CapDescriptor::face_detect());
+        c.uid = uid;
+        c
+    };
+    o.plug(slot, c2)?;
+    o.clock.advance_by(reflash_us);
+
+    let rep2 = o.run_pipelined(&mut drone, 50, vec![]);
+    println!("phase 2 (person search): {:.1} fps, mean latency {:.1} ms",
+        rep2.fps, rep2.latency.mean_us() / 1e3);
+    println!("pipeline now: {}",
+        o.pipeline.stages.iter().map(|s| s.cap.id.name()).collect::<Vec<_>>().join(" -> "));
+    assert_eq!(o.pipeline.stages[0].cap.id.name(), "face-detect");
+    Ok(())
+}

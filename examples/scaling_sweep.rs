@@ -1,0 +1,32 @@
+//! Table-1 scaling sweep through the public API (paper §4.1).
+//!
+//!     cargo run --release --example scaling_sweep [-- --kind coral]
+
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::{Cartridge, DeviceKind};
+use champ::workload::video::VideoSource;
+
+fn main() -> anyhow::Result<()> {
+    let kind = if std::env::args().any(|a| a == "coral") {
+        DeviceKind::Coral
+    } else {
+        DeviceKind::Ncs2
+    };
+    println!("broadcast scaling, {kind:?}, MobileNetV2 300x300, saturating stream");
+    println!("{:<10} {:>8} {:>12} {:>12} {:>14}", "devices", "FPS", "wire util", "host util", "per-dev FPS");
+    for n in 1..=5usize {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        for i in 0..n {
+            o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))?;
+        }
+        let mut src = VideoSource::paper_stream(7);
+        let rep = o.run_broadcast(&mut src, 60);
+        println!("{:<10} {:>8.1} {:>11.1}% {:>11.1}% {:>14.2}",
+            n, rep.fps, rep.wire_utilization * 100.0, rep.host_utilization * 100.0,
+            rep.fps / n as f64);
+    }
+    Ok(())
+}

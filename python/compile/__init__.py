@@ -1,0 +1,1 @@
+"""CHAMP build-time compile path (L2 models + L1 kernels + AOT)."""

@@ -1,0 +1,125 @@
+"""AOT compiler: lower every cartridge model to HLO text + manifest.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model ``name`` in ``model.REGISTRY``:
+  artifacts/<name>.hlo.txt      -- the lowered module
+  artifacts/manifest.json       -- input/output shapes+dtypes for the Rust
+                                   runtime, plus FLOPs and VMEM reports.
+
+Usage: python -m compile.aot --out ../artifacts [--only name]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import cosine as kcos
+from .kernels import dwconv as kdw
+from .kernels import matmul as kmm
+
+_DTYPE = {
+    jnp.float32.dtype: "f32",
+    jnp.int32.dtype: "i32",
+    jnp.int8.dtype: "i8",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(s) -> dict:
+    return {"shape": list(s.shape), "dtype": _DTYPE[jnp.dtype(s.dtype)]}
+
+
+def lower_one(name: str, out_dir: str) -> dict:
+    fn, example_in, desc = model.REGISTRY[name]
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_in)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    out_shapes = jax.eval_shape(fn, *example_in)
+    if not isinstance(out_shapes, (tuple, list)):
+        out_shapes = (out_shapes,)
+    entry = {
+        "name": name,
+        "description": desc,
+        "file": f"{name}.hlo.txt",
+        "inputs": [_spec(s) for s in example_in],
+        "outputs": [_spec(s) for s in out_shapes],
+        "hlo_bytes": len(text),
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "lower_seconds": round(time.time() - t0, 2),
+    }
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO in {entry['lower_seconds']}s",
+          flush=True)
+    return entry
+
+
+def kernel_reports() -> dict:
+    """Static VMEM/MXU tiling reports for the perf section of DESIGN.md."""
+    return {
+        "matmul_pointwise_6x6x96_to_128": kmm.vmem_report(36, 128, 96),
+        "matmul_fc_2048_to_128": kmm.vmem_report(1, 128, 2048),
+        "matmul_gemm_1024": kmm.vmem_report(1024, 1024, 1024),
+        "dwconv_48x48x96": kdw.vmem_report(48, 48, 96),
+        "cosine_gallery_1024x128": kcos.vmem_report(1, 1024, 128),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="lower a single model from the registry")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = [args.only] if args.only else list(model.REGISTRY)
+    entries = []
+    for name in names:
+        if name not in model.REGISTRY:
+            sys.exit(f"unknown model {name!r}; have {list(model.REGISTRY)}")
+        entries.append(lower_one(name, args.out))
+
+    manifest = {
+        "format": "hlo-text-v1",
+        "models": entries,
+        "kernel_reports": kernel_reports(),
+        "constants": {
+            "embed_dim": model.EMBED_DIM,
+            "gait_dim": model.GAIT_DIM,
+            "gallery_size": model.GALLERY_SIZE,
+            "num_classes": model.NUM_CLASSES,
+            "gait_frames": model.GAIT_FRAMES,
+        },
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""CHAMP Layer-1 Pallas kernels (build-time only; interpret=True on CPU)."""
+from . import common, cosine, dwconv, matmul, quant, ref  # noqa: F401

@@ -1,0 +1,55 @@
+"""Shared helpers for the CHAMP Pallas kernels.
+
+All kernels in this package are lowered with ``interpret=True``: the image's
+PJRT plugin is CPU-only and real TPU lowering would emit Mosaic custom-calls
+it cannot execute.  The BlockSpec structure is still written as if targeting
+a VMEM-limited accelerator (the NCS2's 2.5 MB CMX scratchpad is the budget we
+tile for -- see DESIGN.md section "Hardware adaptation").
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# VMEM budget we tile for, in bytes.  The Movidius Myriad X has 2.5 MB of CMX
+# scratchpad; the Edge TPU has 8 MB of on-chip SRAM.  We tile for the smaller.
+VMEM_BUDGET_BYTES = 2_500_000
+
+# MXU-friendly inner dimension: blocks are multiples of 128 lanes wherever the
+# operand is large enough to support it.
+LANE = 128
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return ((x + m - 1) // m) * m
+
+
+def pad_axis(x, axis: int, target: int, value=0.0):
+    """Zero-pad ``x`` along ``axis`` up to length ``target``."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - cur)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Pick a block size for a dimension: ``preferred`` when the dimension is
+    at least that large, otherwise the whole (rounded-up-to-8) dimension."""
+    if dim >= preferred:
+        return preferred
+    return max(8, round_up(dim, 8))
+
+
+def block_vmem_bytes(*block_shapes, dtype_bytes: int = 4) -> int:
+    """Total VMEM footprint of a set of resident blocks (double-buffered)."""
+    total = 0
+    for shape in block_shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * dtype_bytes
+    # Double buffering: the HBM->VMEM pipeline keeps two copies in flight.
+    return 2 * total

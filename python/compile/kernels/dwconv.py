@@ -1,0 +1,73 @@
+"""Depthwise 3x3 convolution Pallas kernel.
+
+MobileNetV2's inverted-residual blocks spend most of their non-GEMM time in
+depthwise 3x3 convolutions.  On the Myriad-X-class cartridge this runs on the
+vector (VPU/VMEM) units rather than the MAC array, so the kernel is written
+as nine shifted multiply-accumulates over a channel-blocked layout: the grid
+walks channel blocks, each program holding a (H+2, W+2, bc) input tile and a
+(H, W, bc) output tile in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, h: int, w: int, relu6: bool):
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    # Nine static shifts -- the VPU-friendly formulation of a 3x3 stencil.
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + x_ref[dy:dy + h, dx:dx + w, :] * w_ref[dy, dx, :]
+    acc = acc + b_ref[0, 0, :]
+    if relu6:
+        acc = jnp.clip(acc, 0.0, 6.0)
+    o_ref[...] = acc
+
+
+def depthwise3x3(x, w, b, relu6: bool = True, bc: int = 32):
+    """Depthwise 3x3, stride 1, SAME padding.
+
+    x: (H, W, C) f32, w: (3, 3, C) f32, b: (C,) f32 -> (H, W, C) f32.
+    """
+    h, wd, c = x.shape
+    assert w.shape == (3, 3, c)
+    bc = common.pick_block(c, bc)
+    cp = common.round_up(c, bc)
+    xp = common.pad_axis(x, 2, cp)
+    wp = common.pad_axis(w, 2, cp)
+    bp = common.pad_axis(b, 0, cp).reshape(1, 1, cp)
+    # SAME halo for the 3x3 stencil.
+    xp = jnp.pad(xp, ((1, 1), (1, 1), (0, 0)))
+
+    grid = (cp // bc,)
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, h=h, w=wd, relu6=relu6),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((h + 2, wd + 2, bc), lambda i: (0, 0, i)),
+            pl.BlockSpec((3, 3, bc), lambda i: (0, 0, i)),
+            pl.BlockSpec((1, 1, bc), lambda i: (0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((h, wd, bc), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((h, wd, cp), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:, :, :c]
+
+
+def vmem_report(h: int, w: int, c: int, bc: int = 32) -> dict:
+    bc = common.pick_block(c, bc)
+    vmem = common.block_vmem_bytes((h + 2, w + 2, bc), (h, w, bc))
+    return {
+        "block": [h, w, bc],
+        "vmem_bytes": vmem,
+        "vmem_ok": vmem <= common.VMEM_BUDGET_BYTES,
+        "flops": 2 * 9 * h * w * c,
+    }

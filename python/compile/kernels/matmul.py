@@ -1,0 +1,146 @@
+"""Tiled matmul Pallas kernels: the CHAMP cartridge compute workhorse.
+
+Every pointwise (1x1) convolution and fully-connected layer in the cartridge
+model zoo lowers to ``matmul_bias`` -- an (M,K)x(K,N) GEMM with fused bias
+and optional ReLU6, tiled so each (bm,bk)+(bk,bn)+(bm,bn) working set fits
+the VMEM budget and the inner dims are MXU-lane aligned where possible.
+
+An int8 variant (``matmul_int8``) accumulates in int32, mirroring the Edge
+TPU's quantized execution path; it is used by the quantized model variants
+and the quantization ablation bench.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _mm_kernel(x_ref, y_ref, b_ref, o_ref, *, nsteps: int, activation: str):
+    """Grid = (M/bm, N/bn, K/bk); accumulate over the K axis of the grid."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _finish():
+        acc = o_ref[...] + b_ref[...]
+        if activation == "relu6":
+            acc = jnp.clip(acc, 0.0, 6.0)
+        elif activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def matmul_bias(x, y, b, activation: str = "none",
+                bm: int = 64, bn: int = common.LANE, bk: int = common.LANE):
+    """``activation(x @ y + b)`` with a VMEM-tiled Pallas kernel.
+
+    x: (M, K) f32, y: (K, N) f32, b: (N,) f32 -> (M, N) f32.
+    Arbitrary M/N/K are handled by zero-padding up to the block grid.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm = common.pick_block(m, bm)
+    bn = common.pick_block(n, bn)
+    bk = common.pick_block(k, bk)
+    mp, np_, kp = (common.round_up(m, bm), common.round_up(n, bn),
+                   common.round_up(k, bk))
+    xp = common.pad_axis(common.pad_axis(x, 0, mp), 1, kp)
+    yp = common.pad_axis(common.pad_axis(y, 0, kp), 1, np_)
+    bp = common.pad_axis(b, 0, np_).reshape(1, np_)
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    kernel = functools.partial(_mm_kernel, nsteps=grid[2], activation=activation)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp, bp)
+    return out[:m, :n]
+
+
+def _mm_int8_kernel(x_ref, y_ref, o_ref, *, nsteps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        y_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def matmul_int8(x, y, bm: int = 64, bn: int = common.LANE, bk: int = common.LANE):
+    """int8 x int8 -> int32 GEMM, the Edge-TPU-style quantized inner loop.
+
+    x: (M, K) int8, y: (K, N) int8 -> (M, N) int32.
+    """
+    m, k = x.shape
+    _, n = y.shape
+    bm = common.pick_block(m, bm)
+    bn = common.pick_block(n, bn)
+    bk = common.pick_block(k, bk)
+    mp, np_, kp = (common.round_up(m, bm), common.round_up(n, bn),
+                   common.round_up(k, bk))
+    xp = common.pad_axis(common.pad_axis(x, 0, mp, 0), 1, kp, 0)
+    yp = common.pad_axis(common.pad_axis(y, 0, kp, 0), 1, np_, 0)
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_mm_int8_kernel, nsteps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def vmem_report(m: int, n: int, k: int, bm: int = 64, bn: int = 128,
+                bk: int = 128) -> dict:
+    """Static VMEM/MXU estimate for a matmul tiling (recorded by aot.py)."""
+    bm = common.pick_block(m, bm)
+    bn = common.pick_block(n, bn)
+    bk = common.pick_block(k, bk)
+    vmem = common.block_vmem_bytes((bm, bk), (bk, bn), (bm, bn))
+    flops = 2 * m * n * k
+    # MXU utilization estimate: fraction of the 128x128 systolic array the
+    # block actually covers, times the fraction of the padded grid that is
+    # real work.
+    mxu_cover = min(bn, 128) * min(bk, 128) / (128 * 128)
+    real = (m * n * k) / (
+        common.round_up(m, bm) * common.round_up(n, bn) * common.round_up(k, bk)
+    )
+    return {
+        "block": [bm, bn, bk],
+        "vmem_bytes": vmem,
+        "vmem_ok": vmem <= common.VMEM_BUDGET_BYTES,
+        "flops": flops,
+        "mxu_utilization_est": round(mxu_cover * real, 4),
+    }

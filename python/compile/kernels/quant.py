@@ -1,0 +1,79 @@
+"""Affine int8 quantize / dequantize Pallas kernels.
+
+The Edge TPU executes int8 models exclusively; the NCS2 favours fp16 but
+gains from int8 as well.  These kernels implement the standard affine scheme
+``q = clamp(round(x / scale) + zero_point, -128, 127)`` used by the quantized
+model variants and the quantization ablation bench.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _quant_kernel(x_ref, s_ref, o_ref):
+    scale = s_ref[0, 0]
+    zp = s_ref[0, 1]
+    q = jnp.round(x_ref[...] / scale) + zp
+    o_ref[...] = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+
+
+def quantize(x, scale: float, zero_point: int = 0, bn: int = 4096):
+    """x: (N,) f32 -> (N,) int8 under the affine scheme."""
+    (n,) = x.shape
+    bn = common.pick_block(n, bn)
+    np_ = common.round_up(n, bn)
+    xp = common.pad_axis(x, 0, np_).reshape(np_ // bn, bn)
+    params = jnp.array([[float(scale), float(zero_point)]], jnp.float32)
+
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_ // bn, bn), jnp.int8),
+        interpret=True,
+    )(xp, params)
+    return out.reshape(np_)[:n]
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    scale = s_ref[0, 0]
+    zp = s_ref[0, 1]
+    o_ref[...] = (q_ref[...].astype(jnp.float32) - zp) * scale
+
+
+def dequantize(q, scale: float, zero_point: int = 0, bn: int = 4096):
+    """q: (N,) int8 -> (N,) f32."""
+    (n,) = q.shape
+    bn = common.pick_block(n, bn)
+    np_ = common.round_up(n, bn)
+    qp = common.pad_axis(q, 0, np_, 0).reshape(np_ // bn, bn)
+    params = jnp.array([[float(scale), float(zero_point)]], jnp.float32)
+
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_ // bn, bn), jnp.float32),
+        interpret=True,
+    )(qp, params)
+    return out.reshape(np_)[:n]
+
+
+def calibrate_scale(x, percentile: float = 99.9) -> float:
+    """Symmetric per-tensor calibration: scale so that the given percentile
+    of |x| maps to 127."""
+    amax = jnp.percentile(jnp.abs(x), percentile)
+    return float(jnp.maximum(amax, 1e-6) / 127.0)

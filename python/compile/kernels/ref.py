@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels match these to tight tolerances.
+No pallas imports allowed in this file.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def matmul_bias(x, y, b, activation: str = "none"):
+    out = x.astype(jnp.float32) @ y.astype(jnp.float32) + b
+    if activation == "relu6":
+        out = jnp.clip(out, 0.0, 6.0)
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def matmul_int8(x, y):
+    return x.astype(jnp.int32) @ y.astype(jnp.int32)
+
+
+def depthwise3x3(x, w, b, relu6: bool = True):
+    h, wd, c = x.shape
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    acc = jnp.zeros((h, wd, c), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + xp[dy:dy + h, dx:dx + wd, :] * w[dy, dx, :]
+    acc = acc + b
+    if relu6:
+        acc = jnp.clip(acc, 0.0, 6.0)
+    return acc
+
+
+def _l2n(v):
+    return v / jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True) + EPS)
+
+
+def cosine_scores(probe, gallery):
+    return _l2n(probe) @ _l2n(gallery).T
+
+
+def secure_scores(probe, rotation, gallery_rot):
+    return _l2n(probe @ rotation) @ _l2n(gallery_rot).T
+
+
+def quantize(x, scale, zero_point=0):
+    q = jnp.round(x / scale) + zero_point
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def dequantize(q, scale, zero_point=0):
+    return (q.astype(jnp.float32) - zero_point) * scale

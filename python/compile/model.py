@@ -1,0 +1,331 @@
+"""CHAMP Layer-2: the cartridge model zoo, written in JAX.
+
+Each capability cartridge in the paper runs one network.  The zoo below
+mirrors the paper's cartridge list (section 3.2) with compile-time-friendly
+"lite" variants: same architecture family and output contract, scaled to the
+96x96/64x64 inputs that a Myriad-X-class accelerator actually serves after
+the host's ROI crop.
+
+All pointwise (1x1) convolutions and FC layers route through the Layer-1
+Pallas ``matmul_bias`` kernel; stride-1 depthwise 3x3 convs route through the
+Pallas ``depthwise3x3`` kernel; strided convolutions use ``lax`` directly
+(they are <10% of FLOPs and stride is awkward under a stencil BlockSpec --
+see DESIGN.md).  Weights are deterministic (seeded) and baked into the HLO as
+constants, so the AOT artifacts are self-contained: the Rust runtime feeds
+frames, nothing else.
+
+Build-time only.  Never imported on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import cosine as kcos
+from .kernels import dwconv as kdw
+from .kernels import matmul as kmm
+from .kernels import quant as kq
+
+# ---------------------------------------------------------------------------
+# Parameter factory: deterministic He-style init, one PRNG stream per model.
+# ---------------------------------------------------------------------------
+
+
+class Params:
+    """Deterministic parameter factory; counts params for the manifest."""
+
+    def __init__(self, seed: int):
+        self._key = jax.random.PRNGKey(seed)
+        self.n_params = 0
+
+    def take(self, shape, fan_in=None):
+        self._key, sub = jax.random.split(self._key)
+        fan = fan_in if fan_in is not None else (shape[0] if shape else 1)
+        w = jax.random.normal(sub, shape) * jnp.sqrt(2.0 / max(fan, 1))
+        n = 1
+        for d in shape:
+            n *= d
+        self.n_params += n
+        return w
+
+    def zeros(self, shape):
+        n = 1
+        for d in shape:
+            n *= d
+        self.n_params += n
+        return jnp.zeros(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Layer helpers (single image, HWC layout).
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, b, stride=1):
+    """General conv via lax (used only for strided/spatial stem layers).
+    x: (H,W,Cin), w: (kh,kw,Cin,Cout)."""
+    out = lax.conv_general_dilated(
+        x[None], w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    return out + b
+
+
+def pointwise(x, w, b, activation="relu6"):
+    """1x1 conv as a Pallas GEMM.  x: (H,W,Cin), w: (Cin,Cout).
+
+    bm=576 (vs the 64 default): one grid step covers a 24x24 feature map
+    and 48x48 maps take 4 steps.  Fewer grid iterations cut interpret-mode
+    dispatch overhead ~2x (EXPERIMENTS.md SPerf iter. 3) while the
+    double-buffered working set stays ~1.3 MB < the 2.5 MB CMX budget."""
+    h, wd, cin = x.shape
+    out = kmm.matmul_bias(x.reshape(h * wd, cin), w, b, activation, bm=576)
+    return out.reshape(h, wd, -1)
+
+
+def pointwise_int8(x, w, b, activation="relu6", x_scale=0.05, w_scale=0.01):
+    """Quantized 1x1 conv: int8 GEMM with affine (de)quant Pallas kernels.
+
+    Mirrors the Edge TPU execution path; accumulation in int32, rescale to
+    f32 afterwards.  Scales are static (calibrated offline).
+    """
+    h, wd, cin = x.shape
+    cout = w.shape[1]
+    xq = kq.quantize(x.reshape(-1), x_scale).reshape(h * wd, cin)
+    wq = kq.quantize(w.reshape(-1), w_scale).reshape(cin, cout)
+    acc = kmm.matmul_int8(xq, wq)
+    out = acc.astype(jnp.float32) * (x_scale * w_scale) + b
+    if activation == "relu6":
+        out = jnp.clip(out, 0.0, 6.0)
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out.reshape(h, wd, cout)
+
+
+def depthwise(x, w, b, stride=1, relu6=True):
+    """Depthwise 3x3.  Stride-1 goes through the Pallas stencil kernel;
+    stride-2 subsamples the stride-1 output (identical numerics; the extra
+    work is negligible at these compile-scale resolutions)."""
+    out = kdw.depthwise3x3(x, w, b, relu6)
+    if stride == 2:
+        out = out[::2, ::2, :]
+    return out
+
+
+def inverted_residual(x, p, cin, cout, expand, stride, int8=False):
+    """MobileNetV2 inverted-residual block (expand -> depthwise -> project)."""
+    cmid = cin * expand
+    pw = pointwise_int8 if int8 else pointwise
+    h = pw(x, p.take((cin, cmid)), p.zeros((cmid,)), "relu6")
+    h = depthwise(h, p.take((3, 3, cmid), fan_in=9), p.zeros((cmid,)), stride)
+    h = pw(h, p.take((cmid, cout)), p.zeros((cout,)), "none")
+    if stride == 1 and cin == cout:
+        h = h + x
+    return h
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Cartridge models.  Each returns a tuple of outputs (AOT lowers with
+# return_tuple=True; the Rust side unwraps the tuple).
+# ---------------------------------------------------------------------------
+
+NUM_CLASSES = 21          # VOC-style: 20 classes + background
+DET_ANCHORS = 2
+EMBED_DIM = 128
+GAIT_DIM = 64
+GALLERY_SIZE = 1024
+GAIT_FRAMES = 8
+
+
+def _mnv2_backbone(x, p, int8=False):
+    """Shared MobileNetV2-lite backbone: 96x96x3 -> 6x6x96."""
+    h = jnp.clip(conv2d(x, p.take((3, 3, 3, 16), fan_in=27), p.zeros((16,)), 2),
+                 0.0, 6.0)                                    # 48x48x16
+    h = inverted_residual(h, p, 16, 16, 1, 1, int8)
+    h = inverted_residual(h, p, 16, 24, 2, 2, int8)           # 24x24x24
+    h = inverted_residual(h, p, 24, 24, 2, 1, int8)
+    h = inverted_residual(h, p, 24, 48, 2, 2, int8)           # 12x12x48
+    h = inverted_residual(h, p, 48, 48, 2, 1, int8)
+    h = inverted_residual(h, p, 48, 96, 2, 2, int8)           # 6x6x96
+    return h
+
+
+def mobilenet_v2_det(x, int8=False):
+    """Object-detection cartridge: MobileNetV2-lite + SSD-lite head.
+
+    x: (96, 96, 3) f32 in [0,1].
+    Returns (boxes (72, 4) cxcywh in [0,1], logits (72, 21)).
+    72 = 6*6 cells * 2 anchors.
+    """
+    p = Params(seed=101)
+    x = x * 2.0 - 1.0
+    h = _mnv2_backbone(x, p, int8)
+    pw = pointwise_int8 if int8 else pointwise
+    head = pw(h, p.take((96, 128)), p.zeros((128,)), "relu6")   # 6x6x128
+    raw = pw(head, p.take((128, DET_ANCHORS * (4 + NUM_CLASSES))),
+             p.zeros((DET_ANCHORS * (4 + NUM_CLASSES),)), "none")
+    raw = raw.reshape(6 * 6 * DET_ANCHORS, 4 + NUM_CLASSES)
+    boxes = jax.nn.sigmoid(raw[:, :4])
+    logits = raw[:, 4:]
+    return boxes, logits
+
+
+def retinaface_det(x):
+    """Face-detection cartridge (RetinaFace-lite, single FPN level).
+
+    x: (96, 96, 3) f32.  Returns (scores (36,), boxes (36, 4),
+    landmarks (36, 10)) over a 6x6 grid, 1 anchor per cell.
+    """
+    p = Params(seed=202)
+    x = x * 2.0 - 1.0
+    h = _mnv2_backbone(x, p)
+    ctx = pointwise(h, p.take((96, 64)), p.zeros((64,)), "relu")   # SSH-lite
+    ctx = depthwise(ctx, p.take((3, 3, 64), fan_in=9), p.zeros((64,)), 1)
+    raw = pointwise(ctx, p.take((64, 15)), p.zeros((15,)), "none")
+    raw = raw.reshape(36, 15)
+    return raw[:, 0], jax.nn.sigmoid(raw[:, 1:5]), raw[:, 5:]
+
+
+def facenet_embed(x):
+    """Face-recognition cartridge (FaceNet-lite).
+
+    x: (64, 64, 3) f32 aligned face crop.
+    Returns (embedding (128,),) L2-normalized -- cosine-space templates.
+    """
+    p = Params(seed=303)
+    x = x * 2.0 - 1.0
+    h = jnp.clip(conv2d(x, p.take((3, 3, 3, 24), fan_in=27), p.zeros((24,)), 2),
+                 0.0, 6.0)                                    # 32x32x24
+    h = inverted_residual(h, p, 24, 32, 2, 2)                 # 16x16x32
+    h = inverted_residual(h, p, 32, 32, 2, 1)
+    h = inverted_residual(h, p, 32, 64, 2, 2)                 # 8x8x64
+    h = inverted_residual(h, p, 64, 64, 2, 1)
+    h = inverted_residual(h, p, 64, 128, 2, 2)                # 4x4x128
+    flat = h.reshape(1, 4 * 4 * 128)
+    # bk=1024: the 2048-deep FC runs in 2 K-steps instead of 16 (SPerf).
+    emb = kmm.matmul_bias(flat, p.take((4 * 4 * 128, EMBED_DIM)),
+                          p.zeros((EMBED_DIM,)), "none", bk=1024)[0]
+    emb = emb / jnp.sqrt(jnp.sum(emb * emb) + 1e-8)
+    return (emb,)
+
+
+def crfiqa_quality(x):
+    """Face-quality cartridge (CR-FIQA-lite): quality in [0, 1].
+
+    x: (64, 64, 3) f32 face crop.  Returns (quality (1,),).
+    """
+    p = Params(seed=404)
+    x = x * 2.0 - 1.0
+    h = jnp.clip(conv2d(x, p.take((3, 3, 3, 16), fan_in=27), p.zeros((16,)), 2),
+                 0.0, 6.0)                                    # 32x32x16
+    h = inverted_residual(h, p, 16, 24, 2, 2)                 # 16x16x24
+    h = inverted_residual(h, p, 24, 48, 2, 2)                 # 8x8x48
+    feat = global_avg_pool(h).reshape(1, 48)
+    q = kmm.matmul_bias(feat, p.take((48, 1)), p.zeros((1,)), "none")
+    return (jax.nn.sigmoid(q[0]),)
+
+
+def gaitset_embed(sils):
+    """Gait-recognition cartridge (GaitSet-lite): set-pooled silhouettes.
+
+    sils: (8, 32, 32) f32 binary-ish silhouettes.
+    Returns (embedding (64,),) L2-normalized.
+    """
+    p = Params(seed=505)
+    cw1 = p.take((3, 3, 1, 16), fan_in=9)
+    cb1 = p.zeros((16,))
+    cw2 = p.take((3, 3, 16, 32), fan_in=144)
+    cb2 = p.zeros((32,))
+
+    def frame_feat(f):
+        h = jnp.maximum(conv2d(f[:, :, None], cw1, cb1, 2), 0.0)   # 16x16x16
+        h = jnp.maximum(conv2d(h, cw2, cb2, 2), 0.0)               # 8x8x32
+        return h
+
+    feats = jax.vmap(frame_feat)(sils)          # (8, 8, 8, 32)
+    setf = jnp.max(feats, axis=0)               # set pooling (GaitSet's core op)
+    flat = setf.reshape(1, 8 * 8 * 32)
+    emb = kmm.matmul_bias(flat, p.take((8 * 8 * 32, GAIT_DIM)),
+                          p.zeros((GAIT_DIM,)), "none", bk=1024)[0]
+    emb = emb / jnp.sqrt(jnp.sum(emb * emb) + 1e-8)
+    return (emb,)
+
+
+def gallery_match(probe, gallery):
+    """Database-cartridge plaintext matcher.
+
+    probe: (1, 128), gallery: (G, 128).
+    Returns (scores (1, G), best_idx (1,) i32, best_score (1,)).
+    """
+    scores = kcos.cosine_scores(probe, gallery)
+    best = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    return scores, best, jnp.max(scores, axis=1)
+
+
+def secure_gallery_match(probe, rotation, gallery_rot):
+    """Database-cartridge protected matcher: gallery stored rotated; the
+    probe is rotated inside the kernel; scores equal plaintext cosine."""
+    scores = kcos.secure_scores(probe, rotation, gallery_rot)
+    best = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    return scores, best, jnp.max(scores, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# AOT registry: name -> (fn, example input ShapeDtypeStructs, description).
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+
+
+def _s(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+REGISTRY = {
+    "mobilenet_v2_det": (
+        lambda x: mobilenet_v2_det(x, int8=False),
+        [_s((96, 96, 3))],
+        "Object-detection cartridge: MobileNetV2-lite + SSD-lite head",
+    ),
+    "mobilenet_v2_det_int8": (
+        lambda x: mobilenet_v2_det(x, int8=True),
+        [_s((96, 96, 3))],
+        "Quantized (int8 GEMM) variant of the detection cartridge",
+    ),
+    "retinaface_det": (
+        retinaface_det,
+        [_s((96, 96, 3))],
+        "Face-detection cartridge: RetinaFace-lite",
+    ),
+    "facenet_embed": (
+        facenet_embed,
+        [_s((64, 64, 3))],
+        "Face-recognition cartridge: FaceNet-lite 128-d embeddings",
+    ),
+    "crfiqa_quality": (
+        crfiqa_quality,
+        [_s((64, 64, 3))],
+        "Face-quality cartridge: CR-FIQA-lite",
+    ),
+    "gaitset_embed": (
+        gaitset_embed,
+        [_s((GAIT_FRAMES, 32, 32))],
+        "Gait-recognition cartridge: GaitSet-lite 64-d embeddings",
+    ),
+    "gallery_match": (
+        gallery_match,
+        [_s((1, EMBED_DIM)), _s((GALLERY_SIZE, EMBED_DIM))],
+        "Database cartridge: plaintext cosine gallery match",
+    ),
+    "secure_gallery_match": (
+        secure_gallery_match,
+        [_s((1, EMBED_DIM)), _s((EMBED_DIM, EMBED_DIM)),
+         _s((GALLERY_SIZE, EMBED_DIM))],
+        "Database cartridge: rotation-protected gallery match",
+    ),
+}

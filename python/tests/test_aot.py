@@ -1,0 +1,61 @@
+"""AOT path: HLO-text emission + manifest consistency.
+
+These tests lower the two smallest registry entries end-to-end (the full set
+is exercised by `make artifacts`) and validate the manifest contract the
+Rust runtime depends on.
+"""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_is_parseable_entry(tmp_path):
+    entry = aot.lower_one("gallery_match", str(tmp_path))
+    text = (tmp_path / "gallery_match.hlo.txt").read_text()
+    assert "ENTRY" in text and "HloModule" in text
+    # Tuple-root: rust unwraps a 3-tuple for this model.
+    assert len(entry["outputs"]) == 3
+
+
+def test_manifest_entry_shapes_match_registry(tmp_path):
+    entry = aot.lower_one("crfiqa_quality", str(tmp_path))
+    assert entry["inputs"] == [{"shape": [64, 64, 3], "dtype": "f32"}]
+    assert entry["outputs"] == [{"shape": [1], "dtype": "f32"}]
+    assert entry["sha256"] and entry["hlo_bytes"] > 0
+
+
+def test_kernel_reports_all_within_vmem_budget():
+    reports = aot.kernel_reports()
+    assert reports, "no kernel reports"
+    for name, rep in reports.items():
+        assert rep["vmem_ok"], f"{name} exceeds VMEM budget: {rep}"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_built_manifest_consistent_with_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = {m["name"] for m in manifest["models"]}
+    assert names == set(model.REGISTRY)
+    for m in manifest["models"]:
+        path = os.path.join(ART, m["file"])
+        assert os.path.exists(path), path
+        assert os.path.getsize(path) == m["hlo_bytes"]
+
+
+def test_dtype_map_covers_registry():
+    import jax.numpy as jnp
+    for name, (fn, example_in, _) in model.REGISTRY.items():
+        out = jax.eval_shape(fn, *example_in)
+        if not isinstance(out, (tuple, list)):
+            out = (out,)
+        for s in list(example_in) + list(out):
+            assert jnp.dtype(s.dtype) in aot._DTYPE, (name, s.dtype)

@@ -1,0 +1,187 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (including awkward non-multiples of the block
+sizes, which exercise the padding paths) and value ranges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cosine, dwconv, matmul, quant, ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rnd(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------- matmul ---
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 90), k=st.integers(1, 160), n=st.integers(1, 150),
+    act=st.sampled_from(["none", "relu", "relu6"]), seed=st.integers(0, 2**31),
+)
+def test_matmul_bias_matches_ref(m, k, n, act, seed):
+    x = rnd(seed, (m, k))
+    y = rnd(seed + 1, (k, n))
+    b = rnd(seed + 2, (n,))
+    got = matmul.matmul_bias(x, y, b, act)
+    want = ref.matmul_bias(x, y, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 70), k=st.integers(1, 140), n=st.integers(1, 70),
+       seed=st.integers(0, 2**31))
+def test_matmul_int8_exact(m, k, n, seed):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.randint(kx, (m, k), -128, 128, jnp.int8)
+    y = jax.random.randint(ky, (k, n), -128, 128, jnp.int8)
+    np.testing.assert_array_equal(matmul.matmul_int8(x, y), ref.matmul_int8(x, y))
+
+
+def test_matmul_relu6_saturates():
+    x = jnp.ones((4, 4)) * 100.0
+    y = jnp.eye(4)
+    b = jnp.zeros(4)
+    out = matmul.matmul_bias(x, y, b, "relu6")
+    assert float(out.max()) == 6.0 and float(out.min()) == 6.0
+
+
+def test_matmul_block_bigger_than_input():
+    x = rnd(0, (2, 3))
+    y = rnd(1, (3, 2))
+    b = rnd(2, (2,))
+    np.testing.assert_allclose(
+        matmul.matmul_bias(x, y, b), ref.matmul_bias(x, y, b), rtol=1e-5, atol=1e-6)
+
+
+def test_matmul_vmem_report_within_budget():
+    rep = matmul.vmem_report(1024, 1024, 1024)
+    assert rep["vmem_ok"], rep
+    assert rep["flops"] == 2 * 1024 ** 3
+    assert 0 < rep["mxu_utilization_est"] <= 1
+
+
+# ---------------------------------------------------------------- dwconv ---
+
+@settings(**SETTINGS)
+@given(h=st.integers(2, 20), w=st.integers(2, 20), c=st.integers(1, 70),
+       relu6=st.booleans(), seed=st.integers(0, 2**31))
+def test_depthwise3x3_matches_ref(h, w, c, relu6, seed):
+    x = rnd(seed, (h, w, c))
+    wt = rnd(seed + 1, (3, 3, c))
+    b = rnd(seed + 2, (c,))
+    got = dwconv.depthwise3x3(x, wt, b, relu6)
+    want = ref.depthwise3x3(x, wt, b, relu6)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_depthwise3x3_identity_kernel():
+    """A delta kernel at the center must reproduce the input."""
+    x = rnd(7, (8, 8, 16), 2.0)
+    wt = jnp.zeros((3, 3, 16)).at[1, 1, :].set(1.0)
+    b = jnp.zeros(16)
+    np.testing.assert_allclose(
+        dwconv.depthwise3x3(x, wt, b, relu6=False), x, rtol=1e-6, atol=1e-6)
+
+
+def test_depthwise3x3_vmem_budget():
+    rep = dwconv.vmem_report(48, 48, 96)
+    assert rep["vmem_ok"], rep
+
+
+# ---------------------------------------------------------------- cosine ---
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 8), g=st.integers(1, 600), d=st.sampled_from([32, 64, 128]),
+       seed=st.integers(0, 2**31))
+def test_cosine_scores_matches_ref(b, g, d, seed):
+    p = rnd(seed, (b, d))
+    gal = rnd(seed + 1, (g, d))
+    got = cosine.cosine_scores(p, gal)
+    want = ref.cosine_scores(p, gal)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_cosine_self_match_is_one():
+    gal = rnd(3, (50, 128))
+    scores = cosine.cosine_scores(gal[:5], gal)
+    for i in range(5):
+        assert scores[i].argmax() == i
+        assert abs(float(scores[i, i]) - 1.0) < 1e-5
+
+
+def test_cosine_scores_bounded():
+    p = rnd(0, (4, 64), 10.0)
+    gal = rnd(1, (200, 64), 0.1)
+    s = cosine.cosine_scores(p, gal)
+    assert float(jnp.abs(s).max()) <= 1.0 + 1e-5
+
+
+# ------------------------------------------------------------- secure ------
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 4), g=st.integers(1, 300), seed=st.integers(0, 2**31))
+def test_secure_match_equals_plaintext(b, g, seed):
+    """Orthogonal rotation preserves cosine scores: the template-protection
+    scheme must be score-invariant (the paper's HE-matching claim)."""
+    d = 64
+    p = rnd(seed, (b, d))
+    gal = rnd(seed + 1, (g, d))
+    q, _ = jnp.linalg.qr(rnd(seed + 2, (d, d)))
+    got = cosine.secure_scores(p, q, gal @ q)
+    want = ref.cosine_scores(p, gal)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_secure_scores_matches_its_own_ref():
+    p = rnd(0, (2, 64))
+    gal = rnd(1, (100, 64))
+    q, _ = jnp.linalg.qr(rnd(2, (64, 64)))
+    np.testing.assert_allclose(
+        cosine.secure_scores(p, q, gal @ q),
+        ref.secure_scores(p, q, gal @ q), rtol=1e-4, atol=1e-5)
+
+
+def test_rotated_gallery_hides_templates():
+    """Sanity: the rotated gallery is NOT the plaintext gallery."""
+    gal = rnd(1, (100, 64))
+    q, _ = jnp.linalg.qr(rnd(2, (64, 64)))
+    assert float(jnp.abs(gal @ q - gal).max()) > 0.1
+
+
+# ---------------------------------------------------------------- quant ----
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 9000), scale=st.floats(0.01, 0.5), zp=st.integers(-10, 10),
+       seed=st.integers(0, 2**31))
+def test_quantize_matches_ref(n, scale, zp, seed):
+    x = rnd(seed, (n,), 3.0)
+    np.testing.assert_array_equal(
+        quant.quantize(x, scale, zp), ref.quantize(x, scale, zp))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 9000), scale=st.floats(0.01, 0.5), seed=st.integers(0, 2**31))
+def test_dequantize_roundtrip_within_half_step(n, scale, seed):
+    """Round-trip error is bounded by scale/2 for in-range values."""
+    x = jnp.clip(rnd(seed, (n,), 2.0), -126 * scale, 126 * scale)
+    rt = quant.dequantize(quant.quantize(x, scale), scale)
+    assert float(jnp.abs(rt - x).max()) <= scale / 2 + 1e-6
+
+
+def test_quantize_saturates():
+    x = jnp.array([1e6, -1e6], jnp.float32)
+    q = quant.quantize(x, 0.1)
+    assert int(q[0]) == 127 and int(q[1]) == -128
+
+
+def test_calibrate_scale_reasonable():
+    x = rnd(0, (10000,), 1.0)
+    s = quant.calibrate_scale(x)
+    assert 0.001 < s < 1.0

@@ -1,0 +1,141 @@
+"""L2 correctness: cartridge model contracts (shapes, ranges, invariants)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def img(seed, shape=(96, 96, 3)):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape)
+
+
+# ----------------------------------------------------------- detection -----
+
+def test_mobilenet_det_shapes():
+    boxes, logits = model.mobilenet_v2_det(img(0))
+    assert boxes.shape == (72, 4)
+    assert logits.shape == (72, model.NUM_CLASSES)
+
+
+def test_mobilenet_det_boxes_in_unit_range():
+    boxes, _ = model.mobilenet_v2_det(img(1))
+    assert float(boxes.min()) >= 0.0 and float(boxes.max()) <= 1.0
+
+
+def test_mobilenet_det_deterministic():
+    a = model.mobilenet_v2_det(img(2))
+    b = model.mobilenet_v2_det(img(2))
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_mobilenet_det_int8_close_to_f32():
+    """The quantized cartridge must agree with fp32 at the decision level:
+    per-anchor argmax class mostly unchanged."""
+    x = img(3)
+    _, lg32 = model.mobilenet_v2_det(x, int8=False)
+    _, lg8 = model.mobilenet_v2_det(x, int8=True)
+    agree = float(jnp.mean((jnp.argmax(lg32, -1) == jnp.argmax(lg8, -1))))
+    assert agree >= 0.7, f"int8/f32 class agreement too low: {agree}"
+
+
+def test_retinaface_shapes():
+    scores, boxes, lmk = model.retinaface_det(img(4))
+    assert scores.shape == (36,)
+    assert boxes.shape == (36, 4)
+    assert lmk.shape == (36, 10)
+    assert float(boxes.min()) >= 0.0 and float(boxes.max()) <= 1.0
+
+
+# ----------------------------------------------------------- embeddings ----
+
+def test_facenet_embedding_normalized():
+    (emb,) = model.facenet_embed(img(5, (64, 64, 3)))
+    assert emb.shape == (model.EMBED_DIM,)
+    assert abs(float(jnp.linalg.norm(emb)) - 1.0) < 1e-4
+
+
+def test_facenet_embedding_discriminative():
+    """Different inputs produce different embeddings; same input, same."""
+    (e1,) = model.facenet_embed(img(6, (64, 64, 3)))
+    (e2,) = model.facenet_embed(img(7, (64, 64, 3)))
+    (e1b,) = model.facenet_embed(img(6, (64, 64, 3)))
+    assert float(jnp.abs(e1 - e1b).max()) == 0.0
+    assert float(jnp.dot(e1, e2)) < 0.999
+
+
+def test_gaitset_embedding_normalized():
+    (emb,) = model.gaitset_embed(img(8, (8, 32, 32)))
+    assert emb.shape == (model.GAIT_DIM,)
+    assert abs(float(jnp.linalg.norm(emb)) - 1.0) < 1e-4
+
+
+def test_gaitset_set_pooling_permutation_invariant():
+    """GaitSet treats the gait sequence as a SET: frame order must not
+    change the embedding (max-pool over the set dimension)."""
+    sils = img(9, (8, 32, 32))
+    (e1,) = model.gaitset_embed(sils)
+    (e2,) = model.gaitset_embed(sils[::-1])
+    np.testing.assert_allclose(e1, e2, atol=1e-6)
+
+
+def test_quality_in_unit_interval():
+    for seed in range(4):
+        (q,) = model.crfiqa_quality(img(10 + seed, (64, 64, 3)))
+        assert q.shape == (1,)
+        assert 0.0 <= float(q[0]) <= 1.0
+
+
+# ----------------------------------------------------------- matchers ------
+
+def _gallery(seed, g=256, d=model.EMBED_DIM):
+    gal = jax.random.normal(jax.random.PRNGKey(seed), (g, d))
+    return gal / jnp.linalg.norm(gal, axis=1, keepdims=True)
+
+
+def test_gallery_match_finds_planted_probe():
+    gal = _gallery(20)
+    probe = gal[37:38]
+    scores, best, best_score = model.gallery_match(probe, gal)
+    assert scores.shape == (1, 256)
+    assert int(best[0]) == 37
+    assert abs(float(best_score[0]) - 1.0) < 1e-4
+
+
+def test_gallery_match_noisy_probe_still_rank1():
+    gal = _gallery(21)
+    noise = 0.1 * jax.random.normal(jax.random.PRNGKey(99), (1, model.EMBED_DIM))
+    probe = gal[5:6] + noise
+    _, best, _ = model.gallery_match(probe, gal)
+    assert int(best[0]) == 5
+
+
+def test_secure_match_same_decision_as_plaintext():
+    gal = _gallery(22)
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (128, 128)))
+    probe = gal[11:12] + 0.05 * jax.random.normal(jax.random.PRNGKey(2), (1, 128))
+    s_plain, best_plain, _ = model.gallery_match(probe, gal)
+    s_sec, best_sec, _ = model.secure_gallery_match(probe, q, gal @ q)
+    assert int(best_plain[0]) == int(best_sec[0]) == 11
+    np.testing.assert_allclose(s_plain, s_sec, rtol=1e-3, atol=1e-4)
+
+
+# ----------------------------------------------------------- registry ------
+
+def test_registry_covers_paper_cartridges():
+    """Section 3.2's cartridge list must be present in the AOT registry."""
+    names = set(model.REGISTRY)
+    for required in ["mobilenet_v2_det", "retinaface_det", "facenet_embed",
+                     "crfiqa_quality", "gaitset_embed", "gallery_match",
+                     "secure_gallery_match"]:
+        assert required in names
+
+
+def test_registry_example_shapes_run():
+    """eval_shape of every registry entry agrees with its example spec."""
+    for name, (fn, example_in, _) in model.REGISTRY.items():
+        out = jax.eval_shape(fn, *example_in)
+        assert out is not None, name

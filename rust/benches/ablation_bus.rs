@@ -1,0 +1,57 @@
+//! Ablation: bus technology (paper §6 future work — "USB-C, PCIe or even
+//! proprietary serial links", peer-to-peer cartridge transfers).
+//!
+//! Sweeps the Table-1 broadcast experiment across bus profiles and models
+//! the §6 peer-to-peer pipeline (intermediate tensors skip the host hop).
+
+mod common;
+
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::timing::stream_handoff_us;
+use champ::device::{Cartridge, DeviceKind};
+use champ::workload::video::VideoSource;
+
+fn broadcast_fps(profile: BusProfile, n: usize) -> f64 {
+    let mut o = Orchestrator::new(profile, 6);
+    for i in 0..n {
+        o.plug(SlotId(i as u8), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::object_detect()))
+            .unwrap();
+    }
+    let mut src = VideoSource::paper_stream(7);
+    o.run_broadcast(&mut src, 60).fps
+}
+
+fn main() {
+    common::header("Ablation: bus technology (broadcast, NCS2)");
+    println!("{:<16} | {:>7} | {:>7} | {:>7}", "bus", "N=1", "N=3", "N=5");
+    for (name, prof) in [
+        ("usb3-gen1", BusProfile::usb3_gen1()),
+        ("pcie-gen3-x1", BusProfile::pcie_gen3_x1()),
+    ] {
+        println!("{:<16} | {:>7.1} | {:>7.1} | {:>7.1}",
+            name, broadcast_fps(prof, 1), broadcast_fps(prof, 3), broadcast_fps(prof, 5));
+    }
+    // PCIe removes most of the per-transaction host cost: the N=5 point
+    // must recover a large fraction of the single-device rate.
+    let usb5 = broadcast_fps(BusProfile::usb3_gen1(), 5);
+    let pcie5 = broadcast_fps(BusProfile::pcie_gen3_x1(), 5);
+    assert!(pcie5 > usb5, "faster bus must help at N=5");
+
+    // Peer-to-peer pipeline estimate (§6): per-hop handoff loses the host
+    // component; only wire time remains between adjacent cartridges.
+    common::header("Ablation: host-mediated vs peer-to-peer handoff (3-stage pipeline)");
+    let hop_bytes = 24_576u64; // FaceCrop
+    let host_hop = stream_handoff_us(DeviceKind::Ncs2)
+        + BusProfile::usb3_gen1().wire_time_us(hop_bytes);
+    let p2p_hop = BusProfile::usb3_gen1().wire_time_us(hop_bytes);
+    let stages_ms = 90.0;
+    let host_lat = stages_ms + 4.0 * host_hop as f64 / 1e3;
+    let p2p_lat = stages_ms + 2.0 * host_hop as f64 / 1e3 + 2.0 * p2p_hop as f64 / 1e3;
+    println!("host-mediated: {host_lat:.1} ms   peer-to-peer: {p2p_lat:.1} ms   saving: {:.1} ms",
+        host_lat - p2p_lat);
+    assert!(p2p_lat < host_lat);
+    println!("ablation_bus OK");
+}

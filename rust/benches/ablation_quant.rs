@@ -1,0 +1,52 @@
+//! Ablation: fp32 vs int8 cartridge models (paper §6: "quantization to
+//! low-bit ... to fit big AI capabilities into small cartridges").
+//!
+//! Compares the real AOT artifacts through PJRT: wall-clock execution and
+//! decision agreement between the fp32 and int8 detection heads.
+
+mod common;
+
+use champ::runtime::{ExecutorPool, Manifest};
+use champ::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("ablation_quant SKIPPED (run `make artifacts` first)");
+        return Ok(());
+    };
+    let pool = ExecutorPool::new(manifest)?;
+    common::header("Ablation: fp32 vs int8 detection cartridge (real PJRT)");
+
+    let f32_exe = pool.get("mobilenet_v2_det")?;
+    let i8_exe = pool.get("mobilenet_v2_det_int8")?;
+    let mut rng = Rng::new(5);
+    let frame: Vec<f32> = (0..96 * 96 * 3).map(|_| rng.f32()).collect();
+
+    let s32 = common::time_it(2, 10, || {
+        f32_exe.run_f32(&[frame.clone()]).unwrap();
+    });
+    let s8 = common::time_it(2, 10, || {
+        i8_exe.run_f32(&[frame.clone()]).unwrap();
+    });
+    println!("fp32: mean {:.1} ms   int8: mean {:.1} ms (CPU interpret: int8 pays \
+emulation cost; on an Edge TPU this inverts)", s32.mean_us / 1e3, s8.mean_us / 1e3);
+
+    // Decision agreement.
+    let o32 = f32_exe.run_f32(&[frame.clone()])?;
+    let o8 = i8_exe.run_f32(&[frame])?;
+    let (lg32, lg8) = (&o32[1], &o8[1]);
+    let nc = 21;
+    let mut agree = 0;
+    for a in 0..72 {
+        let am32 = (0..nc).max_by(|&i, &j| lg32[a * nc + i].total_cmp(&lg32[a * nc + j])).unwrap();
+        let am8 = (0..nc).max_by(|&i, &j| lg8[a * nc + i].total_cmp(&lg8[a * nc + j])).unwrap();
+        if am32 == am8 {
+            agree += 1;
+        }
+    }
+    let rate = agree as f64 / 72.0;
+    println!("per-anchor argmax agreement fp32 vs int8: {:.1}%", rate * 100.0);
+    assert!(rate >= 0.7, "quantized model diverged: {rate}");
+    println!("ablation_quant OK");
+    Ok(())
+}

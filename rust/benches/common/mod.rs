@@ -1,0 +1,40 @@
+//! Shared bench harness (criterion is unavailable offline).
+//!
+//! Benches here are of two kinds:
+//! * *simulated-time* benches reproduce the paper's tables over the virtual
+//!   clock (deterministic, no variance);
+//! * *wall-clock* benches time the real hot path (PJRT execution, matching)
+//!   with warmup + repeated samples, reporting mean/p50/p95.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Wall-clock measurement of `f`, `samples` times after `warmup` runs.
+pub fn time_it<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> WallStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut us: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = us.iter().sum::<f64>() / us.len() as f64;
+    let p95_idx = ((us.len() as f64 * 0.95) as usize).min(us.len() - 1);
+    WallStats { mean_us: mean, p50_us: us[us.len() / 2], p95_us: us[p95_idx], min_us: us[0] }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct WallStats {
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub min_us: f64,
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

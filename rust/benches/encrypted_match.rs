@@ -1,0 +1,63 @@
+//! Bench: encrypted template matching (paper §2.3/§3.1 claim + §6 future
+//! work on "privacy-preserving template encryption and matching inline").
+//!
+//! Wall-clock cost of the storage cartridge's match paths over gallery
+//! sizes: plaintext cosine, rotation-protected cosine, and Paillier
+//! encrypted-score aggregation.
+
+mod common;
+
+use champ::biometric::gallery::Gallery;
+use champ::biometric::matcher::Matcher;
+use champ::biometric::template::Template;
+use champ::crypto::paillier::{quantize_score, PaillierPriv};
+use champ::crypto::rotation::RotationKey;
+use champ::crypto::seal::SealKey;
+use champ::device::storage::StorageCartridge;
+use champ::util::rng::Rng;
+
+fn gallery(n: usize, dim: usize, seed: u64) -> Gallery {
+    let mut rng = Rng::new(seed);
+    let mut g = Gallery::new(dim);
+    for i in 0..n {
+        g.add(format!("id{i}"), Template::new(rng.unit_vec(dim)));
+    }
+    g
+}
+
+fn main() {
+    common::header("Encrypted matching: plaintext vs rotation-protected vs Paillier");
+    println!("{:<9} | {:>15} | {:>15} | {:>18}",
+        "gallery", "plaintext us", "rotated us", "paillier-agg us");
+    let dim = 128;
+    for &n in &[128usize, 512, 1024, 4096] {
+        let g = gallery(n, dim, 1);
+        let rot = RotationKey::generate(dim, 2);
+        let sc = StorageCartridge::enroll(1, &g, rot, SealKey::from_passphrase("k"));
+        let probe = g.get("id7").unwrap().clone();
+        let m = Matcher::default();
+
+        let plain = common::time_it(3, 20, || {
+            let r = m.rank(&probe, &g);
+            assert_eq!(r[0].0, "id7");
+        });
+        let rotated = common::time_it(3, 20, || {
+            let out = sc.match_probe(&probe, 1).unwrap();
+            assert_eq!(out.best_id, "id7");
+        });
+        // Paillier: encrypt the top score from each of 4 simulated units
+        // and aggregate homomorphically.
+        let sk = PaillierPriv::generate(3);
+        let mut rng = Rng::new(4);
+        let paillier = common::time_it(1, 10, || {
+            let parts: Vec<_> = (0..4)
+                .map(|_| sk.pk.encrypt(quantize_score(0.9), &mut rng))
+                .collect();
+            let sum = parts[1..].iter().fold(parts[0], |acc, c| sk.pk.add(acc, *c));
+            let _ = sk.decrypt(sum);
+        });
+        println!("{:<9} | {:>15.1} | {:>15.1} | {:>18.1}",
+            n, plain.mean_us, rotated.mean_us, paillier.mean_us);
+    }
+    println!("encrypted_match OK");
+}

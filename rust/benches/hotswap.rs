@@ -1,0 +1,41 @@
+//! Bench: paper §4.2 hot-swap — remove the middle (quality) cartridge
+//! mid-run, then re-insert it.  Paper: ~0.5 s pause on removal with zero
+//! frame loss; ~2 s to reintegrate (model reload).
+
+mod common;
+
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::{Cartridge, DeviceKind};
+use champ::workload::traces::MissionTrace;
+use champ::workload::video::VideoSource;
+
+fn main() {
+    common::header("Section 4.2: hot-swap downtime (remove + re-insert quality stage)");
+    println!("{:<8} | {:>12} | {:>12} | {:>9} | {:>12}",
+        "src FPS", "remove s", "reinsert s", "dropped", "max buffered");
+    for fps in [4.0, 8.0, 12.0] {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+        let quality =
+            o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
+
+        let trace = MissionTrace::hotswap_experiment();
+        let events = trace.to_hotplug_events(quality);
+        let frames = (trace.total_run_us() as f64 / 1e6 * fps) as u64;
+        let mut src = VideoSource::paper_stream(5).with_rate_fps(fps);
+        let rep = o.run_pipelined(&mut src, frames, events);
+
+        let remove_s = rep.swap_records[0].downtime_us() as f64 / 1e6;
+        let reinsert_s = rep.swap_records[1].downtime_us() as f64 / 1e6;
+        println!("{:<8.1} | {:>12.2} | {:>12.2} | {:>9} | {:>12}",
+            fps, remove_s, reinsert_s, rep.frames_dropped, rep.max_buffered);
+        assert_eq!(rep.frames_dropped, 0, "hot-swap must not lose frames");
+        assert!((0.3..0.7).contains(&remove_s), "remove downtime {remove_s}");
+        assert!((1.5..2.5).contains(&reinsert_s), "reinsert downtime {reinsert_s}");
+    }
+    println!("hotswap OK");
+}

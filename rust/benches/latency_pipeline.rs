@@ -1,0 +1,38 @@
+//! Bench: paper §4.2 — end-to-end latency of a 3-stage NCS2 pipeline
+//! (face detect -> quality -> embed): "roughly the sum of individual device
+//! latencies plus a small overhead (~5%) ... about 95-100 ms".
+
+mod common;
+
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::{Cartridge, DeviceKind};
+use champ::workload::video::VideoSource;
+
+fn main() {
+    common::header("Section 4.2: pipelined latency (3x NCS2, 30 ms stages)");
+    println!("{:<10} | {:>12} | {:>12} | {:>10} | {:>9}",
+        "src FPS", "mean ms", "p99 ms", "compute ms", "overhead");
+    for fps in [4.0, 8.0, 10.0] {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
+        let mut src = VideoSource::paper_stream(3).with_rate_fps(fps);
+        let rep = o.run_pipelined(&mut src, 60, vec![]);
+        let overhead = rep.latency.mean_us() / rep.compute_us_mean - 1.0;
+        println!("{:<10.1} | {:>12.1} | {:>12.1} | {:>10.1} | {:>8.1}%",
+            fps,
+            rep.latency.mean_us() / 1e3,
+            rep.latency.percentile_us(99.0) as f64 / 1e3,
+            rep.compute_us_mean / 1e3,
+            overhead * 100.0);
+        // Paper's envelope: 95-100 ms e2e, overhead ~5%.
+        let mean_ms = rep.latency.mean_us() / 1e3;
+        assert!((90.0..105.0).contains(&mean_ms), "latency {mean_ms} out of envelope");
+        assert!(overhead < 0.10, "handoff overhead {overhead} too high");
+    }
+    println!("latency_pipeline OK");
+}

@@ -1,0 +1,46 @@
+//! Bench: paper §4.3 power efficiency.
+//!
+//! Two views: (a) duty-cycle-integrated power from the simulated run, and
+//! (b) the paper's own spec-sheet extrapolation (sticks at full draw), plus
+//! the GPU-baseline ratio ("an order of magnitude lower power").
+
+mod common;
+
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::timing::DeviceProfile;
+use champ::device::{Cartridge, DeviceKind};
+use champ::power::PowerModel;
+use champ::workload::video::VideoSource;
+
+fn main() {
+    common::header("Section 4.3: power (NCS2 broadcast rack)");
+    let pm = PowerModel::default();
+    println!("{:<8} | {:>10} | {:>9} | {:>12} | {:>9} | {:>9}",
+        "devices", "measured W", "spec W", "spec total W", "frames/J", "GPU ratio");
+    for n in 1..=5usize {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        for i in 0..n {
+            o.plug(SlotId(i as u8), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::object_detect()))
+                .unwrap();
+        }
+        let mut src = VideoSource::paper_stream(7);
+        let rep = o.run_broadcast(&mut src, 60);
+        let p = pm.report(&o.device_busy(), rep.elapsed_us, rep.frames_out);
+        // Paper-style extrapolation: every stick at active draw + host.
+        let spec_sticks = n as f64 * DeviceProfile::ncs2().active_w;
+        let spec_total = spec_sticks + p.host_w;
+        println!("{:<8} | {:>10.2} | {:>9.2} | {:>12.2} | {:>9.3} | {:>8.1}x",
+            n, p.total_w, spec_sticks, spec_total, p.frames_per_joule,
+            PowerModel::gpu_baseline_w() / spec_total);
+        if n == 5 {
+            // Paper: five sticks 7-8 W (spec), system ~10 W, >=~10x under GPU.
+            assert!((7.0..10.0).contains(&spec_sticks), "spec sticks {spec_sticks}");
+            assert!((9.0..13.0).contains(&spec_total), "spec total {spec_total}");
+            assert!(PowerModel::gpu_baseline_w() / spec_total >= 8.0);
+        }
+    }
+    println!("power OK");
+}

@@ -1,0 +1,53 @@
+//! Bench: the PJRT hot path — per-model execution wall-clock.
+//!
+//! This is the L3 perf-pass instrument: it times exactly what the request
+//! path pays per inference (literal creation + execute + readback).
+
+mod common;
+
+use champ::runtime::{ExecutorPool, Manifest};
+use champ::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("runtime_exec SKIPPED (run `make artifacts` first)");
+        return Ok(());
+    };
+    let pool = ExecutorPool::new(manifest)?;
+    common::header("PJRT hot path: per-model execution (CPU)");
+    println!("{:<24} | {:>10} | {:>10} | {:>10}", "model", "mean ms", "p50 ms", "p95 ms");
+    let names: Vec<String> = pool.manifest().models.iter().map(|m| m.name.clone()).collect();
+    let mut rng = Rng::new(9);
+    for name in names {
+        let exe = pool.get(&name)?;
+        let inputs: Vec<Vec<f32>> = exe
+            .meta
+            .inputs
+            .iter()
+            .map(|s| (0..s.elements()).map(|_| rng.f32()).collect())
+            .collect();
+        let stats = common::time_it(3, 15, || {
+            exe.run_f32(&inputs).unwrap();
+        });
+        println!("{:<24} | {:>10.2} | {:>10.2} | {:>10.2}",
+            name, stats.mean_us / 1e3, stats.p50_us / 1e3, stats.p95_us / 1e3);
+    }
+    // §Perf instrument: caller-side operand cloning vs borrowing on the
+    // secure-match path (512 kB gallery + 64 kB rotation per call).
+    common::header("secure match: cloned operands vs borrowed (run_f32 vs run_f32_refs)");
+    let exe = pool.get("secure_gallery_match")?;
+    let probe: Vec<f32> = (0..128).map(|_| rng.f32()).collect();
+    let rot: Vec<f32> = (0..128 * 128).map(|_| rng.f32()).collect();
+    let gal: Vec<f32> = (0..1024 * 128).map(|_| rng.f32()).collect();
+    let cloned = common::time_it(3, 25, || {
+        exe.run_f32(&[probe.clone(), rot.clone(), gal.clone()]).unwrap();
+    });
+    let borrowed = common::time_it(3, 25, || {
+        exe.run_f32_refs(&[&probe, &rot, &gal]).unwrap();
+    });
+    println!("cloned: {:.2} ms   borrowed: {:.2} ms   saving: {:.0}%",
+        cloned.mean_us / 1e3, borrowed.mean_us / 1e3,
+        (1.0 - borrowed.mean_us / cloned.mean_us) * 100.0);
+    println!("runtime_exec OK");
+    Ok(())
+}

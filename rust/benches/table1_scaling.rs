@@ -1,0 +1,57 @@
+//! Bench: paper Table 1 — inference throughput scaling with 1..5 USB3
+//! neural accelerators running MobileNetV2, broadcast dispatch.
+//!
+//! Regenerates the table for both device families and prints paper-reported
+//! values alongside for comparison.  Deterministic (virtual time).
+
+mod common;
+
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::{Cartridge, DeviceKind};
+use champ::workload::video::VideoSource;
+
+const PAPER_NCS2: [f64; 5] = [15.0, 13.0, 10.0, 8.0, 6.0];
+const PAPER_CORAL: [f64; 5] = [25.0, 22.0, 19.0, 17.0, 15.0];
+
+fn sweep(kind: DeviceKind) -> Vec<f64> {
+    (1..=5)
+        .map(|n| {
+            let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+            for i in 0..n {
+                o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))
+                    .unwrap();
+            }
+            let mut src = VideoSource::paper_stream(7);
+            o.run_broadcast(&mut src, 60).fps
+        })
+        .collect()
+}
+
+fn main() {
+    common::header("Table 1: throughput scaling with USB3 accelerators (MobileNetV2)");
+    println!("{:<12} | {:>10} | {:>10} | {:>11} | {:>11}",
+        "# of Modules", "NCS2 paper", "NCS2 sim", "Coral paper", "Coral sim");
+    let ncs2 = sweep(DeviceKind::Ncs2);
+    let coral = sweep(DeviceKind::Coral);
+    let mut max_err: f64 = 0.0;
+    for n in 0..5 {
+        println!("{:<12} | {:>10.0} | {:>10.1} | {:>11.0} | {:>11.1}",
+            n + 1, PAPER_NCS2[n], ncs2[n], PAPER_CORAL[n], coral[n]);
+        max_err = max_err
+            .max((ncs2[n] - PAPER_NCS2[n]).abs())
+            .max((coral[n] - PAPER_CORAL[n]).abs());
+    }
+    println!("max |sim - paper| = {max_err:.2} FPS");
+    assert!(max_err <= 1.0, "Table 1 reproduction drifted: {max_err:.2} FPS");
+    // Shape assertions: monotone decline, saturation at the tail.
+    for w in ncs2.windows(2) {
+        assert!(w[1] < w[0], "NCS2 FPS must decline with device count");
+    }
+    for w in coral.windows(2) {
+        assert!(w[1] < w[0], "Coral FPS must decline with device count");
+    }
+    println!("table1_scaling OK");
+}

@@ -1,0 +1,86 @@
+//! Multi-modal score fusion (paper §6: "pipelines that fuse, for example,
+//! image and audio data for better ... biometric matching").
+//!
+//! Score-level fusion of face + gait match scores with per-modality
+//! normalization — the standard min-max + weighted-sum baseline.
+
+/// One modality's score list over the same candidate set.
+#[derive(Debug, Clone)]
+pub struct ModalityScores {
+    pub name: String,
+    pub weight: f64,
+    pub scores: Vec<f32>,
+}
+
+/// Min-max normalize to [0,1]; constant lists map to 0.5.
+pub fn min_max_normalize(scores: &[f32]) -> Vec<f32> {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &s in scores {
+        lo = lo.min(s);
+        hi = hi.max(s);
+    }
+    if !lo.is_finite() || (hi - lo).abs() < 1e-12 {
+        return vec![0.5; scores.len()];
+    }
+    scores.iter().map(|s| (s - lo) / (hi - lo)).collect()
+}
+
+/// Weighted-sum fusion across modalities.  All score lists must be the
+/// same length (same candidate order).  Weights are re-normalized.
+pub fn fuse(modalities: &[ModalityScores]) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(!modalities.is_empty(), "no modalities");
+    let n = modalities[0].scores.len();
+    anyhow::ensure!(
+        modalities.iter().all(|m| m.scores.len() == n),
+        "modalities disagree on candidate count"
+    );
+    let wsum: f64 = modalities.iter().map(|m| m.weight).sum();
+    anyhow::ensure!(wsum > 0.0, "weights sum to zero");
+    let mut out = vec![0.0f32; n];
+    for m in modalities {
+        let norm = min_max_normalize(&m.scores);
+        let w = (m.weight / wsum) as f32;
+        for (o, s) in out.iter_mut().zip(norm) {
+            *o += w * s;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fusion_prefers_agreement() {
+        // Candidate 1 is strong in both modalities; 0 only in face.
+        let face = ModalityScores { name: "face".into(), weight: 0.6, scores: vec![0.9, 0.8, 0.1] };
+        let gait = ModalityScores { name: "gait".into(), weight: 0.4, scores: vec![0.2, 0.9, 0.1] };
+        let fused = fuse(&[face, gait]).unwrap();
+        let best = fused
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 1);
+    }
+
+    #[test]
+    fn normalize_handles_constant() {
+        assert_eq!(min_max_normalize(&[3.0, 3.0]), vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let a = ModalityScores { name: "a".into(), weight: 1.0, scores: vec![0.1] };
+        let b = ModalityScores { name: "b".into(), weight: 1.0, scores: vec![0.1, 0.2] };
+        assert!(fuse(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn single_modality_is_normalized_passthrough() {
+        let a = ModalityScores { name: "a".into(), weight: 2.0, scores: vec![1.0, 3.0] };
+        assert_eq!(fuse(&[a]).unwrap(), vec![0.0, 1.0]);
+    }
+}

@@ -1,0 +1,111 @@
+//! Identity gallery: id -> template store.
+
+use super::template::Template;
+
+/// An ordered gallery of enrolled identities.
+#[derive(Debug, Clone)]
+pub struct Gallery {
+    dim: usize,
+    entries: Vec<(String, Template)>,
+}
+
+impl Gallery {
+    pub fn new(dim: usize) -> Self {
+        Gallery { dim, entries: Vec::new() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Enroll (replaces an existing id).
+    pub fn add(&mut self, id: String, t: Template) {
+        assert_eq!(t.dim(), self.dim, "template dim mismatch");
+        if let Some(e) = self.entries.iter_mut().find(|(i, _)| *i == id) {
+            e.1 = t;
+        } else {
+            self.entries.push((id, t));
+        }
+    }
+
+    pub fn remove(&mut self, id: &str) -> bool {
+        let before = self.entries.len();
+        self.entries.retain(|(i, _)| i != id);
+        self.entries.len() != before
+    }
+
+    pub fn get(&self, id: &str) -> Option<&Template> {
+        self.entries.iter().find(|(i, _)| i == id).map(|(_, t)| t)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(String, Template)> {
+        self.entries.iter()
+    }
+
+    /// Flatten to a row-major matrix (for feeding the gallery_match HLO).
+    pub fn to_matrix(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len() * self.dim);
+        for (_, t) in &self.entries {
+            out.extend_from_slice(t.as_slice());
+        }
+        out
+    }
+
+    pub fn id_at(&self, idx: usize) -> Option<&str> {
+        self.entries.get(idx).map(|(i, _)| i.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn add_get_remove() {
+        let mut g = Gallery::new(4);
+        g.add("a".into(), Template::new(vec![1.0, 0.0, 0.0, 0.0]));
+        assert_eq!(g.len(), 1);
+        assert!(g.get("a").is_some());
+        assert!(g.remove("a"));
+        assert!(!g.remove("a"));
+        assert!(g.is_empty());
+    }
+
+    #[test]
+    fn re_enroll_replaces() {
+        let mut g = Gallery::new(2);
+        g.add("x".into(), Template::new(vec![1.0, 0.0]));
+        g.add("x".into(), Template::new(vec![0.0, 1.0]));
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.get("x").unwrap().as_slice(), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn to_matrix_is_row_major() {
+        let mut g = Gallery::new(2);
+        g.add("a".into(), Template::new(vec![1.0, 2.0]));
+        g.add("b".into(), Template::new(vec![3.0, 4.0]));
+        assert_eq!(g.to_matrix(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(g.id_at(1), Some("b"));
+    }
+
+    #[test]
+    fn synthetic_gallery_scale() {
+        let mut rng = Rng::new(3);
+        let mut g = Gallery::new(128);
+        for i in 0..1000 {
+            g.add(format!("p{i}"), Template::new(rng.unit_vec(128)));
+        }
+        assert_eq!(g.len(), 1000);
+        assert_eq!(g.to_matrix().len(), 128_000);
+    }
+}

@@ -1,0 +1,131 @@
+//! Host-side cosine matcher + evaluation metrics.
+//!
+//! The storage cartridge does protected matching; this plaintext matcher is
+//! the *baseline* (and the verifier for the HLO gallery_match artifact).
+
+use super::gallery::Gallery;
+use super::template::Template;
+
+/// Plaintext top-k cosine matcher.
+#[derive(Debug, Clone)]
+pub struct Matcher {
+    pub threshold: f32,
+}
+
+impl Default for Matcher {
+    fn default() -> Self {
+        Matcher { threshold: 0.5 }
+    }
+}
+
+impl Matcher {
+    /// Score probe against every gallery entry, sorted descending.
+    pub fn rank(&self, probe: &Template, gallery: &Gallery) -> Vec<(String, f32)> {
+        let mut scored: Vec<(String, f32)> = gallery
+            .iter()
+            .map(|(id, t)| (id.clone(), probe.cosine(t)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored
+    }
+
+    /// Best match above threshold, if any.
+    pub fn identify(&self, probe: &Template, gallery: &Gallery) -> Option<(String, f32)> {
+        self.rank(probe, gallery)
+            .into_iter()
+            .next()
+            .filter(|(_, s)| *s >= self.threshold)
+    }
+}
+
+/// Rank of `true_id` in a scored list (1 = top).  None if absent.
+pub fn rank_of(scored: &[(String, f32)], true_id: &str) -> Option<usize> {
+    scored.iter().position(|(id, _)| id == true_id).map(|p| p + 1)
+}
+
+/// Rank-1 identification rate over (probe, true_id) trials.
+pub fn rank1_rate(trials: &[(Template, String)], gallery: &Gallery) -> f64 {
+    if trials.is_empty() {
+        return 0.0;
+    }
+    let m = Matcher::default();
+    let hits = trials
+        .iter()
+        .filter(|(p, id)| {
+            m.rank(p, gallery)
+                .first()
+                .map(|(best, _)| best == id)
+                .unwrap_or(false)
+        })
+        .count();
+    hits as f64 / trials.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gallery(n: usize, seed: u64) -> Gallery {
+        let mut rng = Rng::new(seed);
+        let mut g = Gallery::new(64);
+        for i in 0..n {
+            g.add(format!("id{i}"), Template::new(rng.unit_vec(64)));
+        }
+        g
+    }
+
+    #[test]
+    fn identify_planted() {
+        let g = gallery(100, 5);
+        let m = Matcher::default();
+        let (id, s) = m.identify(g.get("id42").unwrap(), &g).unwrap();
+        assert_eq!(id, "id42");
+        assert!(s > 0.99);
+    }
+
+    #[test]
+    fn threshold_rejects_impostor() {
+        let g = gallery(50, 6);
+        let mut rng = Rng::new(77);
+        let impostor = Template::new(rng.unit_vec(64));
+        let m = Matcher { threshold: 0.9 };
+        assert!(m.identify(&impostor, &g).is_none());
+    }
+
+    #[test]
+    fn rank_of_finds_position() {
+        let scored = vec![("a".to_string(), 0.9), ("b".to_string(), 0.5)];
+        assert_eq!(rank_of(&scored, "b"), Some(2));
+        assert_eq!(rank_of(&scored, "zz"), None);
+    }
+
+    #[test]
+    fn rank1_rate_perfect_on_clean_probes() {
+        let g = gallery(30, 8);
+        let trials: Vec<(Template, String)> = (0..30)
+            .map(|i| (g.get(&format!("id{i}")).unwrap().clone(), format!("id{i}")))
+            .collect();
+        assert_eq!(rank1_rate(&trials, &g), 1.0);
+    }
+
+    #[test]
+    fn rank1_rate_high_on_noisy_probes() {
+        let g = gallery(100, 9);
+        let mut rng = Rng::new(10);
+        let trials: Vec<(Template, String)> = (0..100)
+            .map(|i| {
+                let id = format!("id{i}");
+                let noisy: Vec<f32> = g
+                    .get(&id)
+                    .unwrap()
+                    .as_slice()
+                    .iter()
+                    .map(|v| v + 0.08 * rng.normal())
+                    .collect();
+                (Template::new(noisy), id)
+            })
+            .collect();
+        assert!(rank1_rate(&trials, &g) > 0.95);
+    }
+}

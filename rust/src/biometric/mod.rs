@@ -1,0 +1,17 @@
+//! Biometric substrate: templates, galleries, matching, quality gating,
+//! and multi-modal score fusion.
+//!
+//! These are the host-side (orchestrator) halves of the biometric
+//! cartridges: the accelerators produce embeddings; this module owns the
+//! identity bookkeeping, decision logic, and evaluation metrics
+//! (rank-k / verification rates for EXPERIMENTS.md).
+
+pub mod fusion;
+pub mod gallery;
+pub mod matcher;
+pub mod quality;
+pub mod template;
+
+pub use gallery::Gallery;
+pub use matcher::{rank_of, Matcher};
+pub use template::Template;

@@ -1,0 +1,74 @@
+//! Quality gating: the host-side policy around the quality cartridge.
+//!
+//! The quality cartridge (CR-FIQA-lite) emits a scalar in [0,1]; the
+//! pipeline drops low-quality crops *before* they hit the (more expensive)
+//! embedding stage — the reason the paper puts the quality stage between
+//! detector and embedder.
+
+/// Quality gate with hysteresis: once a track's quality passes `enroll`,
+/// it stays accepted until it drops below `keep` (prevents flapping on
+/// borderline faces across consecutive frames).
+#[derive(Debug, Clone)]
+pub struct QualityGate {
+    pub enroll: f32,
+    pub keep: f32,
+    accepted: bool,
+}
+
+impl QualityGate {
+    pub fn new(enroll: f32, keep: f32) -> Self {
+        assert!(keep <= enroll, "hysteresis requires keep <= enroll");
+        QualityGate { enroll, keep, accepted: false }
+    }
+
+    /// Feed one quality observation; returns whether the crop passes.
+    pub fn observe(&mut self, q: f32) -> bool {
+        if self.accepted {
+            self.accepted = q >= self.keep;
+        } else {
+            self.accepted = q >= self.enroll;
+        }
+        self.accepted
+    }
+
+    pub fn is_accepted(&self) -> bool {
+        self.accepted
+    }
+}
+
+/// Simple batch filter without hysteresis.
+pub fn filter_by_quality(scores: &[f32], threshold: f32) -> Vec<usize> {
+    scores
+        .iter()
+        .enumerate()
+        .filter(|(_, q)| **q >= threshold)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_hysteresis() {
+        let mut g = QualityGate::new(0.7, 0.5);
+        assert!(!g.observe(0.6)); // below enroll
+        assert!(g.observe(0.75)); // passes enroll
+        assert!(g.observe(0.55)); // hysteresis keeps it
+        assert!(!g.observe(0.4)); // drops below keep
+        assert!(!g.observe(0.6)); // needs enroll again
+    }
+
+    #[test]
+    #[should_panic(expected = "hysteresis")]
+    fn invalid_thresholds_panic() {
+        QualityGate::new(0.5, 0.7);
+    }
+
+    #[test]
+    fn batch_filter() {
+        let idx = filter_by_quality(&[0.9, 0.2, 0.7, 0.69], 0.7);
+        assert_eq!(idx, vec![0, 2]);
+    }
+}

@@ -1,0 +1,88 @@
+//! Biometric template: a fixed-dimension embedding.
+
+/// An embedding vector (cosine space).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Template {
+    v: Vec<f32>,
+}
+
+impl Template {
+    pub fn new(v: Vec<f32>) -> Self {
+        Template { v }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.v
+    }
+
+    pub fn norm(&self) -> f32 {
+        self.v.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// L2-normalized copy.
+    pub fn normalized(&self) -> Template {
+        let n = self.norm().max(1e-8);
+        Template::new(self.v.iter().map(|x| x / n).collect())
+    }
+
+    /// Cosine similarity (EPS-regularized, in [-1, 1]).
+    pub fn cosine(&self, other: &Template) -> f32 {
+        assert_eq!(self.dim(), other.dim(), "dimension mismatch");
+        let dot: f32 = self.v.iter().zip(&other.v).map(|(a, b)| a * b).sum();
+        let d = (self.norm() * other.norm()).max(1e-8);
+        (dot / d).clamp(-1.0, 1.0)
+    }
+
+    /// Serialized size on the bus (f32 payload).
+    pub fn wire_bytes(&self) -> u64 {
+        (self.v.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cosine_of_self_is_one() {
+        let mut rng = Rng::new(2);
+        let t = Template::new(rng.unit_vec(128));
+        assert!((t.cosine(&t) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cosine_symmetric_and_bounded_property() {
+        prop::check("cosine-sym", 11, 50, |rng, _| {
+            let a = Template::new((0..64).map(|_| rng.normal()).collect());
+            let b = Template::new((0..64).map(|_| rng.normal()).collect());
+            let ab = a.cosine(&b);
+            let ba = b.cosine(&a);
+            assert!((ab - ba).abs() < 1e-5);
+            assert!((-1.0..=1.0).contains(&ab));
+        });
+    }
+
+    #[test]
+    fn normalized_has_unit_norm() {
+        let t = Template::new(vec![3.0, 4.0]);
+        assert!((t.normalized().norm() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_template_safe() {
+        let z = Template::new(vec![0.0; 8]);
+        assert_eq!(z.cosine(&z), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn dim_mismatch_panics() {
+        Template::new(vec![1.0]).cosine(&Template::new(vec![1.0, 2.0]));
+    }
+}

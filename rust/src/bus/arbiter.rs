@@ -1,0 +1,64 @@
+//! Multi-drop bus arbitration.
+//!
+//! When several cartridges have pending transfers, the CHAMP bus grants the
+//! wire in round-robin slot order (fair for the broadcast experiment, and
+//! matching how a single USB host controller services endpoints).  The
+//! arbiter is deliberately policy-pluggable: the paper's §6 floats
+//! peer-to-peer and re-routable topologies, which the ablation bench
+//! exercises via [`Policy::PeerToPeer`].
+
+use super::topology::SlotId;
+
+/// Arbitration policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// All traffic goes through the host, wire granted round-robin.
+    RoundRobin,
+    /// Future-bus mode: adjacent cartridges exchange intermediate tensors
+    /// directly; host only sees first input and final output.  Modeled as
+    /// a second, independent wire segment between neighbours.
+    PeerToPeer,
+}
+
+/// Round-robin grant order starting after `last`: slots are visited in
+/// physical order, wrapping.
+pub fn grant_order(slots: &[SlotId], last: Option<SlotId>) -> Vec<SlotId> {
+    if slots.is_empty() {
+        return vec![];
+    }
+    let start = match last {
+        Some(l) => slots.iter().position(|&s| s == l).map(|i| i + 1).unwrap_or(0),
+        None => 0,
+    };
+    let mut out = Vec::with_capacity(slots.len());
+    for i in 0..slots.len() {
+        out.push(slots[(start + i) % slots.len()]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_wraps() {
+        let slots = vec![SlotId(0), SlotId(1), SlotId(2)];
+        assert_eq!(grant_order(&slots, None), slots);
+        assert_eq!(
+            grant_order(&slots, Some(SlotId(1))),
+            vec![SlotId(2), SlotId(0), SlotId(1)]
+        );
+    }
+
+    #[test]
+    fn empty_slots_no_grants() {
+        assert!(grant_order(&[], None).is_empty());
+    }
+
+    #[test]
+    fn unknown_last_starts_from_zero() {
+        let slots = vec![SlotId(3), SlotId(4)];
+        assert_eq!(grant_order(&slots, Some(SlotId(9))), slots);
+    }
+}

@@ -1,0 +1,112 @@
+//! Hot-plug event source: live insertion/removal of cartridges.
+//!
+//! The physical bus staggers pin contact (ground, then power, then data) so
+//! live insertion does not glitch the rail; what the OS observes is a
+//! *detach*/*attach* notification after a debounce window.  This module
+//! models the OS-visible event stream: scripted events over virtual time,
+//! with the electrical+enumeration latencies the paper reports folded into
+//! [`HotplugKind::latency_us`].
+
+use super::topology::SlotId;
+
+/// What happened on the bus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HotplugKind {
+    /// Cartridge physically inserted (pins staggered: gnd/power/data).
+    Attach,
+    /// Cartridge yanked.
+    Detach,
+}
+
+impl HotplugKind {
+    /// OS-visible notification latency: debounce + USB enumeration for
+    /// attach; removal interrupt is quicker.
+    pub fn latency_us(&self) -> u64 {
+        match self {
+            HotplugKind::Attach => 150_000, // debounce + enumerate ~150ms
+            HotplugKind::Detach => 20_000,  // port status interrupt ~20ms
+        }
+    }
+}
+
+/// A scripted hot-plug event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HotplugEvent {
+    /// Virtual time at which the physical action happens.
+    pub at_us: u64,
+    pub slot: SlotId,
+    pub kind: HotplugKind,
+    /// Cartridge uid being attached (ignored for detach).
+    pub uid: u64,
+}
+
+impl HotplugEvent {
+    /// When the OS notices.
+    pub fn visible_at(&self) -> u64 {
+        self.at_us + self.kind.latency_us()
+    }
+}
+
+/// Time-ordered queue of scripted events.
+#[derive(Debug, Default, Clone)]
+pub struct HotplugScript {
+    events: Vec<HotplugEvent>,
+}
+
+impl HotplugScript {
+    pub fn new(mut events: Vec<HotplugEvent>) -> Self {
+        events.sort_by_key(|e| e.at_us);
+        HotplugScript { events }
+    }
+
+    /// Pop every event whose *visible* time is <= `now`.
+    pub fn due(&mut self, now_us: u64) -> Vec<HotplugEvent> {
+        let (due, rest): (Vec<_>, Vec<_>) =
+            self.events.iter().partition(|e| e.visible_at() <= now_us);
+        self.events = rest;
+        due
+    }
+
+    pub fn pending(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Next visible time, if any (lets the scheduler advance idle time).
+    pub fn next_visible(&self) -> Option<u64> {
+        self.events.iter().map(|e| e.visible_at()).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attach_slower_than_detach() {
+        assert!(HotplugKind::Attach.latency_us() > HotplugKind::Detach.latency_us());
+    }
+
+    #[test]
+    fn due_respects_visible_time() {
+        let e = HotplugEvent { at_us: 1000, slot: SlotId(0), kind: HotplugKind::Detach, uid: 1 };
+        let mut s = HotplugScript::new(vec![e]);
+        assert!(s.due(1000).is_empty()); // not yet visible
+        let due = s.due(e.visible_at());
+        assert_eq!(due.len(), 1);
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn events_sorted_by_time() {
+        let mk = |t| HotplugEvent { at_us: t, slot: SlotId(0), kind: HotplugKind::Detach, uid: 0 };
+        let s = HotplugScript::new(vec![mk(500), mk(100)]);
+        assert_eq!(s.events[0].at_us, 100);
+    }
+
+    #[test]
+    fn next_visible_is_min() {
+        let mk = |t| HotplugEvent { at_us: t, slot: SlotId(0), kind: HotplugKind::Detach, uid: 0 };
+        let s = HotplugScript::new(vec![mk(500), mk(100)]);
+        assert_eq!(s.next_visible(), Some(100 + 20_000));
+    }
+}

@@ -1,0 +1,30 @@
+//! The CHAMP bus substrate: a discrete-event USB3 simulator.
+//!
+//! The paper's prototype bus is an off-the-shelf multi-drop USB3.1 Gen1
+//! (5 Gbps) segment shared by all cartridges.  We have no USB hardware in
+//! this environment, so the bus is modeled as a set of FIFO resources over
+//! **virtual time** (microseconds):
+//!
+//! * one shared *wire* — bulk transactions serialize on it;
+//! * one *host controller* timeline — URB submission/completion work
+//!   serializes on the host CPU, and its per-transaction cost inflates with
+//!   the number of concurrently-managed devices (the paper observed host
+//!   CPU utilization climbing with device count — that effect, not raw
+//!   wire bandwidth, is what bends Table 1);
+//! * per-device timelines — a cartridge computes one frame at a time.
+//!
+//! The same machinery also models the inter-unit Gigabit-Ethernet link
+//! (`EthLink`) used when two CHAMP units are chained.
+
+pub mod arbiter;
+pub mod clock;
+pub mod hotplug;
+pub mod topology;
+pub mod transfer;
+pub mod usb3;
+
+pub use clock::{Resource, SimClock};
+pub use hotplug::{HotplugEvent, HotplugKind};
+pub use topology::{SlotId, Topology};
+pub use transfer::{Direction, Transfer};
+pub use usb3::{BusProfile, Usb3Bus};

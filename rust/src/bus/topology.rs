@@ -1,0 +1,104 @@
+//! Physical slot chain: which cartridge sits where on the bus.
+//!
+//! VDiSK builds the default pipeline in *physical slot order* ("the operator
+//! just plugs in the cartridges in the desired order and the system
+//! auto-configures" — paper §3.3), so slot bookkeeping is load-bearing.
+
+/// A physical position on the CHAMP bus backplane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SlotId(pub u8);
+
+/// Occupancy of the backplane.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    /// slot -> cartridge uid (None = empty).
+    slots: Vec<Option<u64>>,
+}
+
+impl Topology {
+    pub fn new(n_slots: usize) -> Self {
+        Topology { slots: vec![None; n_slots] }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Insert a cartridge uid at `slot`.  Fails if occupied or out of range.
+    pub fn insert(&mut self, slot: SlotId, uid: u64) -> anyhow::Result<()> {
+        let i = slot.0 as usize;
+        anyhow::ensure!(i < self.slots.len(), "slot {i} out of range");
+        anyhow::ensure!(self.slots[i].is_none(), "slot {i} already occupied");
+        self.slots[i] = Some(uid);
+        Ok(())
+    }
+
+    /// Remove whatever occupies `slot`, returning the uid if any.
+    pub fn remove(&mut self, slot: SlotId) -> Option<u64> {
+        self.slots.get_mut(slot.0 as usize).and_then(|s| s.take())
+    }
+
+    pub fn occupant(&self, slot: SlotId) -> Option<u64> {
+        self.slots.get(slot.0 as usize).copied().flatten()
+    }
+
+    /// Occupied slots in physical order — the default pipeline order.
+    pub fn occupied(&self) -> Vec<(SlotId, u64)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.map(|uid| (SlotId(i as u8), uid)))
+            .collect()
+    }
+
+    pub fn slot_of(&self, uid: u64) -> Option<SlotId> {
+        self.slots
+            .iter()
+            .position(|s| *s == Some(uid))
+            .map(|i| SlotId(i as u8))
+    }
+
+    pub fn first_free(&self) -> Option<SlotId> {
+        self.slots.iter().position(|s| s.is_none()).map(|i| SlotId(i as u8))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut t = Topology::new(4);
+        t.insert(SlotId(2), 77).unwrap();
+        assert_eq!(t.occupant(SlotId(2)), Some(77));
+        assert_eq!(t.slot_of(77), Some(SlotId(2)));
+        assert_eq!(t.remove(SlotId(2)), Some(77));
+        assert_eq!(t.occupant(SlotId(2)), None);
+    }
+
+    #[test]
+    fn occupied_preserves_physical_order() {
+        let mut t = Topology::new(5);
+        t.insert(SlotId(3), 30).unwrap();
+        t.insert(SlotId(0), 10).unwrap();
+        t.insert(SlotId(1), 20).unwrap();
+        let uids: Vec<u64> = t.occupied().iter().map(|(_, u)| *u).collect();
+        assert_eq!(uids, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn double_insert_rejected() {
+        let mut t = Topology::new(2);
+        t.insert(SlotId(0), 1).unwrap();
+        assert!(t.insert(SlotId(0), 2).is_err());
+        assert!(t.insert(SlotId(5), 3).is_err());
+    }
+
+    #[test]
+    fn first_free_scans_in_order() {
+        let mut t = Topology::new(3);
+        t.insert(SlotId(0), 1).unwrap();
+        assert_eq!(t.first_free(), Some(SlotId(1)));
+    }
+}

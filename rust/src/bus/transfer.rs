@@ -1,0 +1,66 @@
+//! Bulk-transfer bookkeeping: framing of messages into bus transactions.
+
+/// Transfer direction relative to the host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HostToDevice,
+    DeviceToHost,
+}
+
+/// One logical transfer (a frame out, or a result back).
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    pub bytes: u64,
+    pub dir: Direction,
+    /// Sequence number of the message this transfer carries.
+    pub seq: u64,
+}
+
+/// Maximum bulk-transfer segment CHAMP uses; larger payloads are split and
+/// each segment pays the per-transaction overhead (mirrors URB sizing).
+pub const MAX_SEGMENT_BYTES: u64 = 1 << 20;
+
+impl Transfer {
+    pub fn new(bytes: u64, dir: Direction, seq: u64) -> Self {
+        Transfer { bytes, dir, seq }
+    }
+
+    /// Split into bus-sized segments.
+    pub fn segments(&self) -> Vec<u64> {
+        if self.bytes == 0 {
+            return vec![0];
+        }
+        let mut out = Vec::new();
+        let mut left = self.bytes;
+        while left > 0 {
+            let seg = left.min(MAX_SEGMENT_BYTES);
+            out.push(seg);
+            left -= seg;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_transfer_single_segment() {
+        let t = Transfer::new(1000, Direction::HostToDevice, 1);
+        assert_eq!(t.segments(), vec![1000]);
+    }
+
+    #[test]
+    fn large_transfer_splits() {
+        let t = Transfer::new(2 * MAX_SEGMENT_BYTES + 5, Direction::DeviceToHost, 2);
+        let segs = t.segments();
+        assert_eq!(segs.len(), 3);
+        assert_eq!(segs.iter().sum::<u64>(), t.bytes);
+    }
+
+    #[test]
+    fn zero_byte_transfer_is_one_token() {
+        assert_eq!(Transfer::new(0, Direction::HostToDevice, 0).segments(), vec![0]);
+    }
+}

@@ -1,0 +1,168 @@
+//! USB3 bus bandwidth & overhead model.
+
+use super::clock::Resource;
+
+/// Static characteristics of a bus generation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BusProfile {
+    /// Marketing line rate in Gbps (5.0 for USB3.1 Gen1).
+    pub line_rate_gbps: f64,
+    /// Effective bulk payload fraction after 8b/10b encoding, link-layer
+    /// framing and bulk-protocol overhead.  Measured USB3 Gen1 bulk tops
+    /// out around 350-400 MB/s, i.e. ~0.64 of line rate.
+    pub efficiency: f64,
+    /// Fixed per-transaction cost on the wire (token/handshake), us.
+    pub per_txn_us: u64,
+    /// Host controller (URB submit + completion + thread wake) cost per
+    /// transaction at 1 managed device, us.
+    pub host_txn_us: f64,
+    /// Superlinear host inflation: per-transaction host cost grows by this
+    /// fraction for every *additional* concurrently-managed device.  This is
+    /// the "host CPU utilization increased with more devices" effect the
+    /// paper reports; it dominates the Table 1 roll-off for the NCS2 stack.
+    pub host_contention: f64,
+}
+
+impl BusProfile {
+    /// USB3.1 Gen1 as used by the paper's prototype.
+    pub fn usb3_gen1() -> Self {
+        BusProfile {
+            line_rate_gbps: 5.0,
+            efficiency: 0.64,
+            per_txn_us: 30,
+            host_txn_us: 500.0,
+            host_contention: 0.0,
+        }
+    }
+
+    /// A future CHAMP bus (the paper's §6: USB-C / PCIe-class links).
+    pub fn pcie_gen3_x1() -> Self {
+        BusProfile {
+            line_rate_gbps: 8.0,
+            efficiency: 0.90,
+            per_txn_us: 5,
+            host_txn_us: 100.0,
+            host_contention: 0.0,
+        }
+    }
+
+    /// Gigabit Ethernet (for the inter-unit link).
+    pub fn gbe() -> Self {
+        BusProfile {
+            line_rate_gbps: 1.0,
+            efficiency: 0.95,
+            per_txn_us: 50,
+            host_txn_us: 200.0,
+            host_contention: 0.0,
+        }
+    }
+
+    /// Payload bytes per microsecond.
+    pub fn bytes_per_us(&self) -> f64 {
+        self.line_rate_gbps * self.efficiency * 1e9 / 8.0 / 1e6
+    }
+
+    /// Wire time for a payload of `bytes`.
+    pub fn wire_time_us(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.bytes_per_us()).ceil() as u64 + self.per_txn_us
+    }
+
+    /// Host driver efficiency relative to the USB3 reference stack: a
+    /// PCIe-class bus cuts per-transaction host work (no URB layer).
+    pub fn host_efficiency(&self) -> f64 {
+        self.host_txn_us / BusProfile::usb3_gen1().host_txn_us
+    }
+
+    /// Host-side cost of one transaction with `active_devices` managed.
+    pub fn host_time_us(&self, active_devices: usize) -> u64 {
+        let infl = 1.0 + self.host_contention * active_devices.saturating_sub(1) as f64;
+        (self.host_txn_us * infl).round() as u64
+    }
+}
+
+/// The shared bus: one wire resource + one host-controller resource.
+#[derive(Debug, Clone)]
+pub struct Usb3Bus {
+    pub profile: BusProfile,
+    pub wire: Resource,
+    pub host: Resource,
+    /// Number of devices the host stack is currently juggling.
+    active_devices: usize,
+}
+
+impl Usb3Bus {
+    pub fn new(profile: BusProfile) -> Self {
+        Usb3Bus { profile, wire: Resource::new(), host: Resource::new(), active_devices: 0 }
+    }
+
+    pub fn set_active_devices(&mut self, n: usize) {
+        self.active_devices = n;
+    }
+
+    pub fn active_devices(&self) -> usize {
+        self.active_devices
+    }
+
+    /// Book one bulk transaction of `bytes` payload, starting no earlier
+    /// than `earliest`.  Host work precedes the wire transfer.  Returns
+    /// (wire_start, wire_end).
+    pub fn transact(&mut self, earliest_us: u64, bytes: u64) -> (u64, u64) {
+        let host_cost = self.profile.host_time_us(self.active_devices);
+        let (_, host_done) = self.host.reserve(earliest_us, host_cost);
+        let wire_cost = self.profile.wire_time_us(bytes);
+        self.wire.reserve(host_done, wire_cost)
+    }
+
+    /// Wire utilization over `[0, now]`.
+    pub fn wire_utilization(&self, now_us: u64) -> f64 {
+        self.wire.utilization(now_us)
+    }
+
+    pub fn host_utilization(&self, now_us: u64) -> f64 {
+        self.host.utilization(now_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen1_effective_rate_is_realistic() {
+        let p = BusProfile::usb3_gen1();
+        let mbps = p.bytes_per_us(); // bytes/us == MB/s
+        assert!((300.0..450.0).contains(&mbps), "effective {mbps} MB/s");
+    }
+
+    #[test]
+    fn wire_time_includes_fixed_overhead() {
+        let p = BusProfile::usb3_gen1();
+        assert!(p.wire_time_us(0) >= p.per_txn_us);
+        let big = p.wire_time_us(400_000);
+        assert!(big > p.wire_time_us(4_000));
+    }
+
+    #[test]
+    fn host_cost_inflates_with_devices() {
+        let mut p = BusProfile::usb3_gen1();
+        p.host_contention = 0.5;
+        assert_eq!(p.host_time_us(1), 500);
+        assert_eq!(p.host_time_us(3), 1000); // 1 + 0.5*2
+    }
+
+    #[test]
+    fn transactions_serialize_on_the_wire() {
+        let mut bus = Usb3Bus::new(BusProfile::usb3_gen1());
+        bus.set_active_devices(1);
+        let (_, e1) = bus.transact(0, 270_000);
+        let (s2, _) = bus.transact(0, 270_000);
+        assert!(s2 >= e1, "second transfer must wait for the wire");
+    }
+
+    #[test]
+    fn pcie_is_faster_than_usb3() {
+        let usb = BusProfile::usb3_gen1().wire_time_us(270_000);
+        let pcie = BusProfile::pcie_gen3_x1().wire_time_us(270_000);
+        assert!(pcie < usb);
+    }
+}

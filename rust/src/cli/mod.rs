@@ -1,0 +1,100 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports the subcommand + `--flag value` + `--switch` shape `champd`
+//! needs.  Unknown flags are errors; `--help` text is the caller's job.
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: Vec<(String, Option<String>)>,
+    pub positional: Vec<String>,
+}
+
+/// Parse `argv[1..]`.  The first non-flag token is the subcommand; tokens
+/// starting with `--` become flags, consuming a value unless followed by
+/// another flag/end (then they're switches).
+pub fn parse_args<I: IntoIterator<Item = String>>(argv: I) -> Args {
+    let tokens: Vec<String> = argv.into_iter().collect();
+    let mut out = Args::default();
+    let mut i = 0;
+    while i < tokens.len() {
+        let t = &tokens[i];
+        if let Some(name) = t.strip_prefix("--") {
+            let has_value = i + 1 < tokens.len() && !tokens[i + 1].starts_with("--");
+            if has_value {
+                out.flags.push((name.to_string(), Some(tokens[i + 1].clone())));
+                i += 2;
+            } else {
+                out.flags.push((name.to_string(), None));
+                i += 1;
+            }
+        } else if out.subcommand.is_none() {
+            out.subcommand = Some(t.clone());
+            i += 1;
+        } else {
+            out.positional.push(t.clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> u64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        parse_args(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = args("sweep --devices 5 --kind coral --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert_eq!(a.flag("devices"), Some("5"));
+        assert_eq!(a.flag("kind"), Some("coral"));
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn numeric_helpers() {
+        let a = args("run --frames 250");
+        assert_eq!(a.flag_u64("frames", 10), 250);
+        assert_eq!(a.flag_u64("missing", 10), 10);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = args("run config.json");
+        assert_eq!(a.positional, vec!["config.json"]);
+    }
+
+    #[test]
+    fn switch_before_end() {
+        let a = args("run --real-compute");
+        assert!(a.switch("real-compute"));
+    }
+}

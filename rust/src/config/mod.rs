@@ -1,0 +1,219 @@
+//! System configuration: what `champd` loads at boot.
+//!
+//! JSON-based (see [`crate::json`]): bus profile, slot layout, cartridge
+//! kinds, workload and dispatch parameters, with sane defaults matching the
+//! paper's prototype (USB3 Gen1, 6 slots, saturating 300x300 stream).
+
+use crate::bus::usb3::BusProfile;
+use crate::coordinator::scheduler::DispatchMode;
+use crate::json::{parse, Value};
+
+/// Cartridge slot assignment in a config file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotConfig {
+    pub slot: u8,
+    /// Device kind: "ncs2" | "coral" | "fpga" | "storage".
+    pub kind: String,
+    /// Capability: "object-detect" | "face-detect" | "face-quality"
+    /// | "face-embed" | "gait-embed" | "database".
+    pub capability: String,
+}
+
+/// Full system configuration.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub bus: BusProfile,
+    pub n_slots: usize,
+    pub slots: Vec<SlotConfig>,
+    pub dispatch: DispatchMode,
+    /// Frames to drive in a run (0 = until trace ends).
+    pub frames: u64,
+    pub frame_width: usize,
+    pub frame_height: usize,
+    pub seed: u64,
+    /// Use the real PJRT backend (needs artifacts/).
+    pub real_compute: bool,
+    pub artifacts_dir: String,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            bus: BusProfile::usb3_gen1(),
+            n_slots: 6,
+            slots: vec![
+                SlotConfig { slot: 0, kind: "ncs2".into(), capability: "face-detect".into() },
+                SlotConfig { slot: 1, kind: "ncs2".into(), capability: "face-quality".into() },
+                SlotConfig { slot: 2, kind: "ncs2".into(), capability: "face-embed".into() },
+            ],
+            dispatch: DispatchMode::Pipelined,
+            frames: 100,
+            frame_width: 300,
+            frame_height: 300,
+            seed: 7,
+            real_compute: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+fn bus_from_name(name: &str) -> anyhow::Result<BusProfile> {
+    match name {
+        "usb3-gen1" => Ok(BusProfile::usb3_gen1()),
+        "pcie-gen3-x1" => Ok(BusProfile::pcie_gen3_x1()),
+        "gbe" => Ok(BusProfile::gbe()),
+        other => anyhow::bail!("unknown bus profile {other:?}"),
+    }
+}
+
+impl SystemConfig {
+    /// Parse from JSON text; missing fields keep defaults.
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let v = parse(text)?;
+        let mut cfg = SystemConfig::default();
+        if let Some(b) = v.get("bus").and_then(|b| b.as_str()) {
+            cfg.bus = bus_from_name(b)?;
+        }
+        if let Some(n) = v.get("n_slots").and_then(|n| n.as_usize()) {
+            cfg.n_slots = n;
+        }
+        if let Some(d) = v.get("dispatch").and_then(|d| d.as_str()) {
+            cfg.dispatch = match d {
+                "broadcast" => DispatchMode::Broadcast,
+                "pipelined" => DispatchMode::Pipelined,
+                other => anyhow::bail!("unknown dispatch {other:?}"),
+            };
+        }
+        if let Some(f) = v.get("frames").and_then(|f| f.as_u64()) {
+            cfg.frames = f;
+        }
+        if let Some(s) = v.get("seed").and_then(|s| s.as_u64()) {
+            cfg.seed = s;
+        }
+        if let Some(r) = v.get("real_compute").and_then(|r| r.as_bool()) {
+            cfg.real_compute = r;
+        }
+        if let Some(a) = v.get("artifacts_dir").and_then(|a| a.as_str()) {
+            cfg.artifacts_dir = a.to_string();
+        }
+        if let Some(slots) = v.get("slots").and_then(|s| s.as_arr()) {
+            cfg.slots = slots
+                .iter()
+                .map(|s| -> anyhow::Result<SlotConfig> {
+                    Ok(SlotConfig {
+                        slot: s.get("slot").and_then(|x| x.as_u64()).unwrap_or(0) as u8,
+                        kind: s
+                            .get("kind")
+                            .and_then(|x| x.as_str())
+                            .unwrap_or("ncs2")
+                            .to_string(),
+                        capability: s
+                            .get("capability")
+                            .and_then(|x| x.as_str())
+                            .ok_or_else(|| anyhow::anyhow!("slot missing capability"))?
+                            .to_string(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_slots >= 1 && self.n_slots <= 16, "1..=16 slots");
+        for s in &self.slots {
+            anyhow::ensure!(
+                (s.slot as usize) < self.n_slots,
+                "slot {} out of range (n_slots={})",
+                s.slot,
+                self.n_slots
+            );
+        }
+        let mut seen = std::collections::HashSet::new();
+        for s in &self.slots {
+            anyhow::ensure!(seen.insert(s.slot), "duplicate slot {}", s.slot);
+        }
+        Ok(())
+    }
+
+    /// Emit JSON for `champd config --dump`.
+    pub fn to_json(&self) -> Value {
+        use crate::json::{num, obj, s};
+        obj(vec![
+            ("bus", s(match self.bus {
+                b if b == BusProfile::usb3_gen1() => "usb3-gen1",
+                b if b == BusProfile::pcie_gen3_x1() => "pcie-gen3-x1",
+                _ => "custom",
+            })),
+            ("n_slots", num(self.n_slots as f64)),
+            ("dispatch", s(match self.dispatch {
+                DispatchMode::Broadcast => "broadcast",
+                DispatchMode::Pipelined => "pipelined",
+            })),
+            ("frames", num(self.frames as f64)),
+            ("seed", num(self.seed as f64)),
+            ("real_compute", Value::Bool(self.real_compute)),
+            ("artifacts_dir", s(&self.artifacts_dir)),
+            (
+                "slots",
+                Value::Arr(
+                    self.slots
+                        .iter()
+                        .map(|sl| {
+                            obj(vec![
+                                ("slot", num(sl.slot as f64)),
+                                ("kind", s(&sl.kind)),
+                                ("capability", s(&sl.capability)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SystemConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = SystemConfig::default();
+        let text = cfg.to_json().to_json_pretty();
+        let back = SystemConfig::from_json(&text).unwrap();
+        assert_eq!(back.slots, cfg.slots);
+        assert_eq!(back.frames, cfg.frames);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let cfg = SystemConfig::from_json(r#"{"frames": 7}"#).unwrap();
+        assert_eq!(cfg.frames, 7);
+        assert_eq!(cfg.n_slots, 6);
+    }
+
+    #[test]
+    fn rejects_duplicate_slots() {
+        let bad = r#"{"slots": [
+            {"slot": 0, "capability": "face-detect"},
+            {"slot": 0, "capability": "face-embed"}
+        ]}"#;
+        assert!(SystemConfig::from_json(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_bus() {
+        assert!(SystemConfig::from_json(r#"{"bus": "warp-bus"}"#).is_err());
+    }
+}

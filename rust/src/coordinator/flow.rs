@@ -1,0 +1,100 @@
+//! Credit-based flow control (paper §3.2: "if a cartridge's processing
+//! time is slower than the input rate, it can signal upstream modules or
+//! the main controller to throttle the data flow, preventing overload").
+//!
+//! Each stage grants the upstream a fixed number of credits (queue slots).
+//! A send consumes a credit; completion returns it.  When credits hit zero
+//! the upstream must hold — the scheduler turns that into source throttling.
+
+use std::collections::HashMap;
+
+/// Per-stage credit accounting.
+#[derive(Debug, Clone)]
+pub struct CreditFlow {
+    max_credits: u32,
+    credits: HashMap<u64, u32>,
+    /// How many sends were delayed by an empty credit pool.
+    pub throttle_events: u64,
+}
+
+impl CreditFlow {
+    pub fn new(max_credits: u32) -> Self {
+        assert!(max_credits >= 1);
+        CreditFlow { max_credits, credits: HashMap::new(), throttle_events: 0 }
+    }
+
+    /// Register a stage (fills its credit pool).
+    pub fn register(&mut self, uid: u64) {
+        self.credits.insert(uid, self.max_credits);
+    }
+
+    pub fn deregister(&mut self, uid: u64) {
+        self.credits.remove(&uid);
+    }
+
+    /// Try to consume a credit for a send to `uid`.
+    pub fn try_acquire(&mut self, uid: u64) -> bool {
+        match self.credits.get_mut(&uid) {
+            Some(c) if *c > 0 => {
+                *c -= 1;
+                true
+            }
+            Some(_) => {
+                self.throttle_events += 1;
+                false
+            }
+            None => false,
+        }
+    }
+
+    /// Stage finished a unit of work: return the credit.
+    pub fn release(&mut self, uid: u64) {
+        if let Some(c) = self.credits.get_mut(&uid) {
+            *c = (*c + 1).min(self.max_credits);
+        }
+    }
+
+    pub fn available(&self, uid: u64) -> u32 {
+        self.credits.get(&uid).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn credits_bound_in_flight() {
+        let mut f = CreditFlow::new(2);
+        f.register(1);
+        assert!(f.try_acquire(1));
+        assert!(f.try_acquire(1));
+        assert!(!f.try_acquire(1), "third send must throttle");
+        assert_eq!(f.throttle_events, 1);
+        f.release(1);
+        assert!(f.try_acquire(1));
+    }
+
+    #[test]
+    fn release_never_exceeds_max() {
+        let mut f = CreditFlow::new(1);
+        f.register(1);
+        f.release(1);
+        f.release(1);
+        assert_eq!(f.available(1), 1);
+    }
+
+    #[test]
+    fn unknown_stage_rejects_sends() {
+        let mut f = CreditFlow::new(4);
+        assert!(!f.try_acquire(99));
+    }
+
+    #[test]
+    fn deregister_removes_pool() {
+        let mut f = CreditFlow::new(2);
+        f.register(1);
+        f.deregister(1);
+        assert!(!f.try_acquire(1));
+    }
+}

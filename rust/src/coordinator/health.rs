@@ -1,0 +1,134 @@
+//! Cartridge health monitoring: heartbeats + operator alerts.
+//!
+//! The user-space VDiSK daemon expects periodic heartbeats from every
+//! registered cartridge; missed beats mark a cartridge *suspect* (it may be
+//! wedged rather than removed — removal is a bus event, not a health one)
+//! and eventually *dead*, raising an operator alert.
+
+use std::collections::HashMap;
+
+/// Health verdict for a cartridge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    /// Missed >= 2 intervals.
+    Suspect,
+    /// Missed >= 5 intervals.
+    Dead,
+}
+
+/// An alert surfaced to the operator console.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Alert {
+    pub at_us: u64,
+    pub uid: u64,
+    pub text: String,
+}
+
+/// The heartbeat monitor.
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    interval_us: u64,
+    last_beat: HashMap<u64, u64>,
+    alerted_dead: HashMap<u64, bool>,
+    pub alerts: Vec<Alert>,
+}
+
+impl HealthMonitor {
+    pub fn new(interval_us: u64) -> Self {
+        HealthMonitor {
+            interval_us,
+            last_beat: HashMap::new(),
+            alerted_dead: HashMap::new(),
+            alerts: Vec::new(),
+        }
+    }
+
+    pub fn register(&mut self, uid: u64, now_us: u64) {
+        self.last_beat.insert(uid, now_us);
+        self.alerted_dead.insert(uid, false);
+    }
+
+    pub fn deregister(&mut self, uid: u64) {
+        self.last_beat.remove(&uid);
+        self.alerted_dead.remove(&uid);
+    }
+
+    pub fn beat(&mut self, uid: u64, now_us: u64) {
+        if let Some(t) = self.last_beat.get_mut(&uid) {
+            *t = now_us;
+            self.alerted_dead.insert(uid, false);
+        }
+    }
+
+    pub fn status(&self, uid: u64, now_us: u64) -> Option<Health> {
+        let last = *self.last_beat.get(&uid)?;
+        let missed = now_us.saturating_sub(last) / self.interval_us;
+        Some(match missed {
+            0 | 1 => Health::Healthy,
+            2..=4 => Health::Suspect,
+            _ => Health::Dead,
+        })
+    }
+
+    /// Sweep all cartridges; raise (once) an alert per newly-dead one.
+    pub fn sweep(&mut self, now_us: u64) -> Vec<u64> {
+        let mut dead = Vec::new();
+        let uids: Vec<u64> = self.last_beat.keys().copied().collect();
+        for uid in uids {
+            if self.status(uid, now_us) == Some(Health::Dead) {
+                dead.push(uid);
+                if !self.alerted_dead.get(&uid).copied().unwrap_or(false) {
+                    self.alerts.push(Alert {
+                        at_us: now_us,
+                        uid,
+                        text: format!("cartridge {uid} stopped responding"),
+                    });
+                    self.alerted_dead.insert(uid, true);
+                }
+            }
+        }
+        dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_while_beating() {
+        let mut h = HealthMonitor::new(100_000);
+        h.register(1, 0);
+        h.beat(1, 90_000);
+        assert_eq!(h.status(1, 150_000), Some(Health::Healthy));
+    }
+
+    #[test]
+    fn degrades_to_suspect_then_dead() {
+        let mut h = HealthMonitor::new(100_000);
+        h.register(1, 0);
+        assert_eq!(h.status(1, 250_000), Some(Health::Suspect));
+        assert_eq!(h.status(1, 600_000), Some(Health::Dead));
+    }
+
+    #[test]
+    fn sweep_alerts_once() {
+        let mut h = HealthMonitor::new(100_000);
+        h.register(1, 0);
+        assert_eq!(h.sweep(600_000), vec![1]);
+        h.sweep(700_000);
+        assert_eq!(h.alerts.len(), 1, "no duplicate alerts");
+        // Recovery clears the alert latch.
+        h.beat(1, 750_000);
+        assert_eq!(h.status(1, 760_000), Some(Health::Healthy));
+        h.sweep(1_400_000);
+        assert_eq!(h.alerts.len(), 2);
+    }
+
+    #[test]
+    fn unknown_uid_none() {
+        let h = HealthMonitor::new(100_000);
+        assert_eq!(h.status(9, 0), None);
+    }
+}

@@ -1,0 +1,71 @@
+//! Bus message framing (paper §3.2: "a framing for messages — image frames
+//! are tagged with sequence numbers and partitioned if large, inference
+//! results are tagged with metadata about type and size").
+
+use crate::device::caps::DataKind;
+
+/// Payload riding in a message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Timing-only runs carry no bytes, just the size.
+    Opaque,
+    /// Real-compute runs carry flattened tensors.
+    Tensors(Vec<Vec<f32>>),
+}
+
+/// One message on the CHAMP bus.
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub seq: u64,
+    pub kind: DataKind,
+    /// Serialized size on the wire.
+    pub bytes: u64,
+    /// Virtual time the original frame was captured (for e2e latency).
+    pub born_us: u64,
+    pub payload: Payload,
+}
+
+impl Message {
+    pub fn frame(seq: u64, bytes: u64, born_us: u64) -> Self {
+        Message { seq, kind: DataKind::Frame, bytes, born_us, payload: Payload::Opaque }
+    }
+
+    /// Transform into the next stage's output kind/size.
+    pub fn transformed(&self, kind: DataKind, bytes: u64) -> Message {
+        Message { seq: self.seq, kind, bytes, born_us: self.born_us, payload: Payload::Opaque }
+    }
+}
+
+/// Wire size of a stage's output by kind: intermediate tensors are far
+/// smaller than raw frames — this asymmetry is why pipelined mode scales
+/// better than broadcast (paper §4.1's closing observation).
+pub fn output_bytes(kind: DataKind) -> u64 {
+    match kind {
+        DataKind::Frame => 270_000,         // 300x300 RGB8
+        DataKind::Detections => 8_000,      // boxes + labels
+        DataKind::FaceCrop => 24_576,       // 64x64x3 fp16
+        DataKind::ScoredFaceCrop => 24_640, // crop + score
+        DataKind::Embedding => 512,         // 128-d f32
+        DataKind::MatchResult => 64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transform_preserves_birth_time() {
+        let m = Message::frame(3, 270_000, 1000);
+        let t = m.transformed(DataKind::FaceCrop, output_bytes(DataKind::FaceCrop));
+        assert_eq!(t.seq, 3);
+        assert_eq!(t.born_us, 1000);
+        assert_eq!(t.kind, DataKind::FaceCrop);
+    }
+
+    #[test]
+    fn intermediate_tensors_smaller_than_frames() {
+        assert!(output_bytes(DataKind::FaceCrop) < output_bytes(DataKind::Frame));
+        assert!(output_bytes(DataKind::Embedding) < output_bytes(DataKind::FaceCrop));
+    }
+}

@@ -1,0 +1,34 @@
+//! VDiSK — the Virtual Distributed Streaming Kernel (CHAMP fork).
+//!
+//! This is the paper's system contribution: the orchestration layer that
+//! recognizes cartridges as they are added or removed, queries their
+//! capabilities, builds the processing pipeline in physical slot order,
+//! routes messages between stages over the bus, applies backpressure, and
+//! keeps the pipeline alive through hot-swap events.
+//!
+//! Module map:
+//! * [`registry`]  — capability handshake + zeroconf-style announcements
+//! * [`pipeline`]  — pipeline graph construction + bridge/rebuild rules
+//! * [`messages`]  — bus message framing (seq, kind, fragmentation)
+//! * [`router`]    — pub/sub topic routing between stages
+//! * [`flow`]      — credit-based flow control / backpressure
+//! * [`hotswap`]   — the pause/buffer/reconfigure/resume state machine
+//! * [`scheduler`] — the orchestrator main loop over virtual time
+//! * [`health`]    — heartbeat monitoring + operator alerts
+//! * [`ui`]        — ComfyUI-style workflow graph export (paper Fig. 3)
+//! * [`link`]      — multi-unit CHAMP chaining over Ethernet (§3.1)
+
+pub mod flow;
+pub mod health;
+pub mod hotswap;
+pub mod link;
+pub mod messages;
+pub mod pipeline;
+pub mod registry;
+pub mod router;
+pub mod scheduler;
+pub mod ui;
+
+pub use pipeline::{Pipeline, Stage};
+pub use registry::Registry;
+pub use scheduler::{DispatchMode, Orchestrator, RunReport};

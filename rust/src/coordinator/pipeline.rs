@@ -1,0 +1,217 @@
+//! Pipeline graph construction.
+//!
+//! "VDiSK then links the output of one cartridge to the input of the next
+//! in a pipeline according to the physical order of cartridges" (§2.3).
+//! The builder validates type compatibility along the chain and implements
+//! the removal rule from §3.2: bridge the gap when the missing stage is
+//! pass-through compatible, otherwise pause and alert the operator.
+
+use crate::device::caps::{CapDescriptor, DataKind};
+
+/// One pipeline stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    pub uid: u64,
+    pub cap: CapDescriptor,
+}
+
+/// A validated linear pipeline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Pipeline {
+    pub stages: Vec<Stage>,
+}
+
+/// Why a pipeline (re)build failed.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum PipelineError {
+    #[error("stage {index} ({name}) consumes {wants:?} but receives {gets:?}")]
+    TypeMismatch { index: usize, name: String, wants: DataKind, gets: DataKind },
+    #[error("pipeline must start from a Frame consumer, got {0:?}")]
+    BadHead(DataKind),
+    #[error("removing stage {0} breaks the pipeline (not pass-through compatible)")]
+    NotBridgeable(usize),
+}
+
+impl Pipeline {
+    /// Build from (uid, capability) pairs in slot order.
+    pub fn build(stages: Vec<(u64, CapDescriptor)>) -> Result<Self, PipelineError> {
+        let stages: Vec<Stage> = stages
+            .into_iter()
+            .map(|(uid, cap)| Stage { uid, cap })
+            .collect();
+        Self::validate(&stages)?;
+        Ok(Pipeline { stages })
+    }
+
+    fn validate(stages: &[Stage]) -> Result<(), PipelineError> {
+        for i in 1..stages.len() {
+            // Consecutive cartridges with the *same* capability are
+            // parallel replicas (the broadcast experiment racks up to five
+            // identical sticks); they form one logical stage.
+            if stages[i].cap.id == stages[i - 1].cap.id {
+                continue;
+            }
+            let gets = stages[i - 1].cap.produces;
+            let wants = stages[i].cap.consumes;
+            if gets != wants {
+                return Err(PipelineError::TypeMismatch {
+                    index: i,
+                    name: stages[i].cap.id.name().to_string(),
+                    wants,
+                    gets,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// A pipeline is *runnable* from a camera only when its head consumes
+    /// raw frames.  Partially-populated racks (e.g. the embedder plugged
+    /// before the detector during boot) build fine but are not runnable.
+    pub fn is_runnable(&self) -> Result<(), PipelineError> {
+        match self.stages.first() {
+            Some(s) if s.cap.consumes != DataKind::Frame => {
+                Err(PipelineError::BadHead(s.cap.consumes))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    pub fn position_of(&self, uid: u64) -> Option<usize> {
+        self.stages.iter().position(|s| s.uid == uid)
+    }
+
+    /// Remove the stage with `uid`.  Succeeds when the neighbours remain
+    /// type-compatible (the §3.2 bridging rule); otherwise returns
+    /// `NotBridgeable` and the caller must pause + alert.
+    pub fn bridge_out(&self, uid: u64) -> Result<Pipeline, PipelineError> {
+        let idx = self
+            .position_of(uid)
+            .ok_or(PipelineError::NotBridgeable(usize::MAX))?;
+        // §3.2 rule: only annotate-in-place (pass-through) stages may be
+        // bridged; removing a transforming stage loses a capability the
+        // mission depends on, so the pipeline halts until the operator acts.
+        // A parallel replica is also safe to drop (its twin keeps serving).
+        let has_replica = self
+            .stages
+            .iter()
+            .enumerate()
+            .any(|(i, s)| i != idx && s.cap.id == self.stages[idx].cap.id);
+        if !self.stages[idx].cap.pass_through_ok && !has_replica {
+            return Err(PipelineError::NotBridgeable(idx));
+        }
+        let mut stages = self.stages.clone();
+        stages.remove(idx);
+        Self::validate(&stages).map_err(|_| PipelineError::NotBridgeable(idx))?;
+        Ok(Pipeline { stages })
+    }
+
+    /// Insert a stage at pipeline position derived from its slot order
+    /// position `index` (clamped).
+    pub fn insert_at(&self, index: usize, stage: Stage) -> Result<Pipeline, PipelineError> {
+        let mut stages = self.stages.clone();
+        stages.insert(index.min(stages.len()), stage);
+        Self::validate(&stages)?;
+        Ok(Pipeline { stages })
+    }
+
+    /// The data kind emitted by the final stage.
+    pub fn output_kind(&self) -> Option<DataKind> {
+        self.stages.last().map(|s| s.cap.produces)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn face_pipeline() -> Pipeline {
+        Pipeline::build(vec![
+            (1, CapDescriptor::face_detect()),
+            (2, CapDescriptor::face_quality()),
+            (3, CapDescriptor::face_embed()),
+            (4, CapDescriptor::database()),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn valid_chain_builds() {
+        let p = face_pipeline();
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.output_kind(), Some(DataKind::MatchResult));
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        // detector -> database skips the embedding stage: FaceCrop != Embedding.
+        let err = Pipeline::build(vec![
+            (1, CapDescriptor::face_detect()),
+            (2, CapDescriptor::database()),
+        ])
+        .unwrap_err();
+        assert!(matches!(err, PipelineError::TypeMismatch { index: 1, .. }));
+    }
+
+    #[test]
+    fn head_must_consume_frames_to_be_runnable() {
+        // Builds (partially-populated rack) but is not runnable.
+        let p = Pipeline::build(vec![(1, CapDescriptor::face_embed())]).unwrap();
+        assert!(matches!(p.is_runnable(), Err(PipelineError::BadHead(_))));
+        let ok = Pipeline::build(vec![(1, CapDescriptor::face_detect())]).unwrap();
+        assert!(ok.is_runnable().is_ok());
+    }
+
+    #[test]
+    fn parallel_replicas_build_and_bridge() {
+        // Five identical sticks (the Table-1 rack) form one replica group.
+        let p = Pipeline::build(
+            (1..=5).map(|i| (i, CapDescriptor::object_detect())).collect(),
+        )
+        .unwrap();
+        assert_eq!(p.len(), 5);
+        // Dropping one replica is always safe.
+        assert_eq!(p.bridge_out(3).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn quality_stage_bridges_out() {
+        // The paper's §4.2 experiment: remove the middle quality stage.
+        let p = face_pipeline();
+        let bridged = p.bridge_out(2).unwrap();
+        assert_eq!(bridged.len(), 3);
+        assert!(bridged.position_of(2).is_none());
+    }
+
+    #[test]
+    fn embed_stage_not_bridgeable() {
+        let p = face_pipeline();
+        let err = p.bridge_out(3).unwrap_err();
+        assert!(matches!(err, PipelineError::NotBridgeable(2)));
+    }
+
+    #[test]
+    fn reinsert_restores_pipeline() {
+        let p = face_pipeline();
+        let bridged = p.bridge_out(2).unwrap();
+        let restored = bridged
+            .insert_at(1, Stage { uid: 2, cap: CapDescriptor::face_quality() })
+            .unwrap();
+        assert_eq!(restored, p);
+    }
+
+    #[test]
+    fn empty_pipeline_is_fine() {
+        let p = Pipeline::build(vec![]).unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p.output_kind(), None);
+    }
+}

@@ -1,0 +1,156 @@
+//! Capability registry: the insertion handshake.
+//!
+//! "When a new cartridge is inserted, the main module ... addresses the new
+//! cartridge and initiates a handshake.  The new cartridge reports its
+//! capability ID and its data format." (paper §3.2).  Discovery rides on a
+//! zeroconf-style announcement (mDNS in the prototype).
+
+use std::collections::HashMap;
+
+use crate::bus::topology::SlotId;
+use crate::device::caps::{CapDescriptor, CapabilityId};
+
+/// A zeroconf-style announcement record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Announcement {
+    pub uid: u64,
+    pub service: String, // "_champ._usb.local"-style service name
+    pub cap_code: u8,
+    pub at_us: u64,
+}
+
+/// Handshake outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HandshakeResult {
+    Accepted { uid: u64, slot: SlotId },
+    /// Capability code unknown to this VDiSK build.
+    UnknownCapability(u8),
+    /// Slot mismatch / double registration.
+    Conflict(String),
+}
+
+/// The live registry of known cartridges.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    by_uid: HashMap<u64, (SlotId, CapDescriptor)>,
+    log: Vec<Announcement>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Process an insertion handshake.
+    pub fn register(
+        &mut self,
+        uid: u64,
+        slot: SlotId,
+        cap: CapDescriptor,
+        now_us: u64,
+    ) -> HandshakeResult {
+        if CapabilityId::from_code(cap.id.code()).is_none() {
+            return HandshakeResult::UnknownCapability(cap.id.code());
+        }
+        if self.by_uid.contains_key(&uid) {
+            return HandshakeResult::Conflict(format!("uid {uid} already registered"));
+        }
+        if self.by_uid.values().any(|(s, _)| *s == slot) {
+            return HandshakeResult::Conflict(format!("slot {} occupied", slot.0));
+        }
+        self.log.push(Announcement {
+            uid,
+            service: format!("_champ-{}._usb.local", cap.id.name()),
+            cap_code: cap.id.code(),
+            at_us: now_us,
+        });
+        self.by_uid.insert(uid, (slot, cap));
+        HandshakeResult::Accepted { uid, slot }
+    }
+
+    /// Remove a cartridge (hot-detach).
+    pub fn deregister(&mut self, uid: u64) -> Option<(SlotId, CapDescriptor)> {
+        self.by_uid.remove(&uid)
+    }
+
+    pub fn capability(&self, uid: u64) -> Option<&CapDescriptor> {
+        self.by_uid.get(&uid).map(|(_, c)| c)
+    }
+
+    pub fn slot(&self, uid: u64) -> Option<SlotId> {
+        self.by_uid.get(&uid).map(|(s, _)| *s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_uid.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_uid.is_empty()
+    }
+
+    /// Announcement history (for the operator UI).
+    pub fn announcements(&self) -> &[Announcement] {
+        &self.log
+    }
+
+    /// Registered cartridges in slot order.
+    pub fn in_slot_order(&self) -> Vec<(SlotId, u64, CapDescriptor)> {
+        let mut v: Vec<_> = self
+            .by_uid
+            .iter()
+            .map(|(uid, (slot, cap))| (*slot, *uid, cap.clone()))
+            .collect();
+        v.sort_by_key(|(s, _, _)| *s);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handshake_accepts_known_capability() {
+        let mut r = Registry::new();
+        let res = r.register(1, SlotId(0), CapDescriptor::face_detect(), 100);
+        assert_eq!(res, HandshakeResult::Accepted { uid: 1, slot: SlotId(0) });
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.announcements().len(), 1);
+        assert!(r.announcements()[0].service.contains("face-detect"));
+    }
+
+    #[test]
+    fn double_registration_conflicts() {
+        let mut r = Registry::new();
+        r.register(1, SlotId(0), CapDescriptor::face_detect(), 0);
+        match r.register(1, SlotId(1), CapDescriptor::face_embed(), 1) {
+            HandshakeResult::Conflict(_) => {}
+            other => panic!("expected conflict, got {other:?}"),
+        }
+        match r.register(2, SlotId(0), CapDescriptor::face_embed(), 2) {
+            HandshakeResult::Conflict(_) => {}
+            other => panic!("expected slot conflict, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deregister_frees_slot() {
+        let mut r = Registry::new();
+        r.register(1, SlotId(0), CapDescriptor::face_detect(), 0);
+        assert!(r.deregister(1).is_some());
+        assert!(r.deregister(1).is_none());
+        // Slot is reusable now.
+        let res = r.register(2, SlotId(0), CapDescriptor::face_embed(), 5);
+        assert!(matches!(res, HandshakeResult::Accepted { .. }));
+    }
+
+    #[test]
+    fn slot_order_iteration() {
+        let mut r = Registry::new();
+        r.register(10, SlotId(2), CapDescriptor::face_embed(), 0);
+        r.register(11, SlotId(0), CapDescriptor::face_detect(), 0);
+        let order: Vec<u64> = r.in_slot_order().iter().map(|(_, u, _)| *u).collect();
+        assert_eq!(order, vec![11, 10]);
+    }
+}

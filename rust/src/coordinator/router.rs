@@ -1,0 +1,122 @@
+//! Pub/sub message routing (paper §2.3: "a publish/subscribe model for
+//! data exchange between cartridges, not unlike ROS topics, but optimized
+//! for high-throughput streaming of imagery and vectors").
+//!
+//! Topics are data kinds; each stage subscribes to its `consumes` kind and
+//! publishes its `produces` kind.  For a linear pipeline the subscription
+//! table resolves to "next stage", but the table is general: branching
+//! pipelines (paper §6) fall out of multiple subscribers per topic.
+
+use std::collections::HashMap;
+
+use crate::device::caps::DataKind;
+
+use super::messages::Message;
+use super::pipeline::Pipeline;
+
+/// The routing table: topic -> ordered subscriber uids.
+#[derive(Debug, Default, Clone)]
+pub struct Router {
+    subs: HashMap<DataKind, Vec<u64>>,
+    /// Per-hop counters for the metrics report.
+    pub routed: u64,
+    pub dead_lettered: u64,
+}
+
+impl Router {
+    /// Build the table from a pipeline: stage i subscribes to the kind
+    /// stage i-1 produces (the head subscribes to Frame).
+    pub fn from_pipeline(p: &Pipeline) -> Self {
+        let mut subs: HashMap<DataKind, Vec<u64>> = HashMap::new();
+        for s in &p.stages {
+            subs.entry(s.cap.consumes).or_default().push(s.uid);
+        }
+        Router { subs, routed: 0, dead_lettered: 0 }
+    }
+
+    /// Who receives this message?  For linear pipelines: the stage after
+    /// `from` subscribed to the message kind; `None` from = the source.
+    pub fn route(&mut self, msg: &Message, from: Option<u64>, p: &Pipeline) -> Option<u64> {
+        let Some(subs) = self.subs.get(&msg.kind) else {
+            self.dead_lettered += 1;
+            return None;
+        };
+        let next = match from {
+            None => subs.first().copied(),
+            Some(f) => {
+                let from_pos = p.position_of(f)?;
+                subs.iter()
+                    .copied()
+                    .find(|&uid| p.position_of(uid).map(|i| i > from_pos).unwrap_or(false))
+            }
+        };
+        match next {
+            Some(uid) => {
+                self.routed += 1;
+                Some(uid)
+            }
+            None => {
+                self.dead_lettered += 1;
+                None
+            }
+        }
+    }
+
+    pub fn subscribers(&self, kind: DataKind) -> &[u64] {
+        self.subs.get(&kind).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::caps::CapDescriptor;
+
+    fn pipeline() -> Pipeline {
+        Pipeline::build(vec![
+            (1, CapDescriptor::face_detect()),
+            (2, CapDescriptor::face_quality()),
+            (3, CapDescriptor::face_embed()),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn source_frame_routes_to_head() {
+        let p = pipeline();
+        let mut r = Router::from_pipeline(&p);
+        let m = Message::frame(0, 270_000, 0);
+        assert_eq!(r.route(&m, None, &p), Some(1));
+        assert_eq!(r.routed, 1);
+    }
+
+    #[test]
+    fn stage_output_routes_downstream() {
+        let p = pipeline();
+        let mut r = Router::from_pipeline(&p);
+        let m = Message::frame(0, 270_000, 0)
+            .transformed(DataKind::FaceCrop, 24_576);
+        // From the detector (uid 1) a FaceCrop goes to quality (uid 2),
+        // not back to itself even though quality also *produces* FaceCrop.
+        assert_eq!(r.route(&m, Some(1), &p), Some(2));
+        // From quality (uid 2) the same kind goes to the embedder.
+        assert_eq!(r.route(&m, Some(2), &p), Some(3));
+    }
+
+    #[test]
+    fn tail_output_dead_letters() {
+        let p = pipeline();
+        let mut r = Router::from_pipeline(&p);
+        let m = Message::frame(0, 1, 0).transformed(DataKind::Embedding, 512);
+        assert_eq!(r.route(&m, Some(3), &p), None);
+        assert_eq!(r.dead_lettered, 1);
+    }
+
+    #[test]
+    fn rebuilding_after_bridge_skips_removed_stage() {
+        let p = pipeline().bridge_out(2).unwrap();
+        let mut r = Router::from_pipeline(&p);
+        let m = Message::frame(0, 1, 0).transformed(DataKind::FaceCrop, 24_576);
+        assert_eq!(r.route(&m, Some(1), &p), Some(3));
+    }
+}

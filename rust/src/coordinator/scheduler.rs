@@ -1,0 +1,539 @@
+//! The orchestrator main loop: frames through cartridges over virtual time.
+//!
+//! Two dispatch modes, matching the paper's experiments:
+//!
+//! * [`DispatchMode::Broadcast`] — §4.1 / Table 1: every frame is copied to
+//!   *all* cartridges simultaneously to stress the bus; a frame completes
+//!   when every device has returned a result.  Synchronous per-frame
+//!   barrier, exactly as the experiment is described.
+//! * [`DispatchMode::Pipelined`] — real deployments (§4.2): cartridges form
+//!   a processing chain; stages overlap across frames; per-hop handoffs use
+//!   the streaming (gRPC-like) path.
+//!
+//! All timing flows through the bus/device [`Resource`] reservations, so
+//! throughput and latency *emerge* from the substrate model rather than
+//! being computed in closed form here.
+
+use std::collections::HashMap;
+
+use crate::bus::clock::SimClock;
+use crate::bus::hotplug::{HotplugEvent, HotplugKind, HotplugScript};
+use crate::bus::topology::{SlotId, Topology};
+use crate::bus::usb3::{BusProfile, Usb3Bus};
+use crate::device::timing::stream_handoff_us;
+use crate::device::{Cartridge, StorageCartridge};
+use crate::metrics::{Histogram, StageMetrics};
+use crate::workload::video::VideoSource;
+
+use super::flow::CreditFlow;
+use super::health::HealthMonitor;
+use super::hotswap::{SwapController, SwapRecord};
+use super::messages::{output_bytes, Message};
+use super::pipeline::Pipeline;
+use super::registry::{HandshakeResult, Registry};
+use super::router::Router;
+
+/// How frames are dispatched to cartridges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    Broadcast,
+    Pipelined,
+}
+
+/// Summary of a run (both modes).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub frames_dropped: u64,
+    pub fps: f64,
+    pub latency: Histogram,
+    /// Per-stage handoff overhead totals, us.
+    pub handoff_us_total: u64,
+    /// Sum of pure compute time across stages for one frame, us (mean).
+    pub compute_us_mean: f64,
+    pub wire_utilization: f64,
+    pub host_utilization: f64,
+    pub elapsed_us: u64,
+    pub swap_records: Vec<SwapRecord>,
+    /// Peak number of frames waiting during a pause.
+    pub max_buffered: u64,
+    pub throttle_events: u64,
+}
+
+/// The VDiSK orchestrator: owns the bus, the cartridges, and the pipeline.
+pub struct Orchestrator {
+    pub bus: Usb3Bus,
+    pub topology: Topology,
+    pub registry: Registry,
+    pub carts: HashMap<u64, Cartridge>,
+    pub storage: Option<StorageCartridge>,
+    pub pipeline: Pipeline,
+    pub router: Router,
+    pub flow: CreditFlow,
+    pub health: HealthMonitor,
+    pub swap: SwapController,
+    pub clock: SimClock,
+    pub stage_metrics: HashMap<u64, StageMetrics>,
+    next_uid: u64,
+}
+
+impl Orchestrator {
+    pub fn new(profile: BusProfile, n_slots: usize) -> Self {
+        Orchestrator {
+            bus: Usb3Bus::new(profile),
+            topology: Topology::new(n_slots),
+            registry: Registry::new(),
+            carts: HashMap::new(),
+            storage: None,
+            pipeline: Pipeline::default(),
+            router: Router::default(),
+            flow: CreditFlow::new(4),
+            health: HealthMonitor::new(100_000),
+            swap: SwapController::new(),
+            clock: SimClock::new(),
+            stage_metrics: HashMap::new(),
+            next_uid: 1,
+        }
+    }
+
+    pub fn alloc_uid(&mut self) -> u64 {
+        let u = self.next_uid;
+        self.next_uid += 1;
+        u
+    }
+
+    /// Plug a cartridge into a slot and (re)build the pipeline.
+    pub fn plug(&mut self, slot: SlotId, mut cart: Cartridge) -> anyhow::Result<u64> {
+        if cart.uid == 0 {
+            cart.uid = self.alloc_uid();
+        }
+        let uid = cart.uid;
+        self.topology.insert(slot, uid)?;
+        match self.registry.register(uid, slot, cart.cap.clone(), self.clock.now()) {
+            HandshakeResult::Accepted { .. } => {}
+            other => anyhow::bail!("handshake failed: {other:?}"),
+        }
+        self.health.register(uid, self.clock.now());
+        self.flow.register(uid);
+        self.carts.insert(uid, cart);
+        if let Err(e) = self.rebuild_pipeline() {
+            // Roll back: an invalid chain must not leave ghost state.
+            self.topology.remove(slot);
+            self.registry.deregister(uid);
+            self.health.deregister(uid);
+            self.flow.deregister(uid);
+            self.carts.remove(&uid);
+            self.rebuild_pipeline().ok();
+            return Err(e);
+        }
+        Ok(uid)
+    }
+
+    /// Immediate unplug (boot-time reconfiguration; for *live* removal use
+    /// [`Orchestrator::run_pipelined`] with a hotplug script).
+    pub fn unplug(&mut self, slot: SlotId) -> anyhow::Result<u64> {
+        let uid = self
+            .topology
+            .remove(slot)
+            .ok_or_else(|| anyhow::anyhow!("slot {} empty", slot.0))?;
+        self.registry.deregister(uid);
+        self.health.deregister(uid);
+        self.flow.deregister(uid);
+        self.carts.remove(&uid);
+        self.rebuild_pipeline()?;
+        Ok(uid)
+    }
+
+    fn rebuild_pipeline(&mut self) -> anyhow::Result<()> {
+        let stages: Vec<_> = self
+            .registry
+            .in_slot_order()
+            .into_iter()
+            .map(|(_, uid, cap)| (uid, cap))
+            .collect();
+        self.pipeline = Pipeline::build(stages)?;
+        self.router = Router::from_pipeline(&self.pipeline);
+        self.bus.set_active_devices(self.carts.len());
+        Ok(())
+    }
+
+    fn accel_uids(&self) -> Vec<u64> {
+        self.registry
+            .in_slot_order()
+            .into_iter()
+            .map(|(_, uid, _)| uid)
+            .collect()
+    }
+
+    // ----------------------------------------------------------- broadcast
+
+    /// §4.1 / Table 1: synchronous broadcast of each frame to all devices.
+    pub fn run_broadcast(&mut self, source: &mut VideoSource, frames: u64) -> RunReport {
+        let uids = self.accel_uids();
+        let n = uids.len();
+        let mut latency = Histogram::default();
+        let first_start = self.clock.now();
+        let mut completed = 0u64;
+
+        for _ in 0..frames {
+            let t0 = self.clock.now();
+            let frame = source.next_frame(t0);
+            let mut frame_done = t0;
+            // Pass 1: host submissions + input transfers + compute.  The
+            // wire resource is FIFO in booking order, so all inputs are
+            // booked before any results — matching how the host controller
+            // queues URBs (outbound burst first, completions stream back).
+            let mut infer_dones: Vec<(u64, u64)> = Vec::with_capacity(n);
+            for &uid in &uids {
+                let (in_bytes, host_cost) = {
+                    let c = &self.carts[&uid];
+                    // A leaner bus generation (PCIe-class) also cuts the
+                    // host driver cost per transaction (§6 future work).
+                    let eff = self.bus.profile.host_efficiency();
+                    (c.profile.input_bytes,
+                     (c.profile.host_time_us(n) as f64 * eff).round() as u64)
+                };
+                // Host prepares this device's submission (serialized).
+                let (_, host_done) = self.bus.host.reserve(t0, host_cost);
+                // Input over the shared wire.
+                let wire_cost = self.bus.profile.wire_time_us(in_bytes);
+                let (_, wire_done) = self.bus.wire.reserve(host_done, wire_cost);
+                // Device computes.
+                let cart = self.carts.get_mut(&uid).unwrap();
+                let (_, infer_done) = cart.infer(wire_done);
+                infer_dones.push((uid, infer_done));
+                let m = self.stage_metrics.entry(uid).or_default();
+                m.processed.inc();
+            }
+            // Pass 2: results return over the wire as devices finish.
+            infer_dones.sort_by_key(|(_, t)| *t);
+            for (uid, infer_done) in infer_dones {
+                let out_bytes = self.carts[&uid].profile.output_bytes;
+                let r_cost = self.bus.profile.wire_time_us(out_bytes);
+                let (_, result_done) = self.bus.wire.reserve(infer_done, r_cost);
+                frame_done = frame_done.max(result_done);
+            }
+            // Synchronous barrier: next frame distributed after all results.
+            self.clock.advance_to(frame_done);
+            latency.record(frame_done - frame.ts_us.min(frame_done));
+            completed += 1;
+        }
+
+        let elapsed = self.clock.now() - first_start;
+        RunReport {
+            frames_in: frames,
+            frames_out: completed,
+            frames_dropped: 0,
+            fps: if elapsed > 0 { completed as f64 * 1e6 / elapsed as f64 } else { 0.0 },
+            latency,
+            handoff_us_total: 0,
+            compute_us_mean: self
+                .carts
+                .values()
+                .map(|c| c.service_us as f64)
+                .sum::<f64>()
+                / n.max(1) as f64,
+            wire_utilization: self.bus.wire_utilization(self.clock.now()),
+            host_utilization: self.bus.host_utilization(self.clock.now()),
+            elapsed_us: elapsed,
+            swap_records: vec![],
+            max_buffered: 0,
+            throttle_events: self.flow.throttle_events,
+        }
+    }
+
+    // ----------------------------------------------------------- pipelined
+
+    /// Process hot-plug events that became visible by `now`.
+    fn apply_hotplug(&mut self, script: &mut HotplugScript, now: u64,
+                     spares: &mut HashMap<u64, Cartridge>) {
+        for ev in script.due(now) {
+            match ev.kind {
+                HotplugKind::Detach => {
+                    if let Some(uid) = self.topology.remove(ev.slot) {
+                        self.registry.deregister(uid);
+                        self.health.deregister(uid);
+                        self.flow.deregister(uid);
+                        // Keep the cartridge object around as a spare so a
+                        // later re-insert reuses it (state on the stick is
+                        // lost; the model reload cost covers that).
+                        if let Some(c) = self.carts.remove(&uid) {
+                            spares.insert(uid, c);
+                        }
+                        self.pipeline = self.swap.on_detach(
+                            ev.visible_at(), ev.slot, uid, &self.pipeline);
+                        self.router = Router::from_pipeline(&self.pipeline);
+                        self.bus.set_active_devices(self.carts.len());
+                    }
+                }
+                HotplugKind::Attach => {
+                    let Some(cart) = spares.remove(&ev.uid) else { continue };
+                    // Pipeline position = count of stages in earlier slots.
+                    let pos = self
+                        .registry
+                        .in_slot_order()
+                        .iter()
+                        .filter(|(s, _, _)| *s < ev.slot)
+                        .count();
+                    match self.swap.on_attach(
+                        ev.visible_at(), ev.slot, &cart, pos, &self.pipeline) {
+                        Ok(p) => {
+                            let uid = cart.uid;
+                            let _ = self.topology.insert(ev.slot, uid);
+                            self.registry.register(
+                                uid, ev.slot, cart.cap.clone(), ev.visible_at());
+                            self.health.register(uid, ev.visible_at());
+                            self.flow.register(uid);
+                            self.carts.insert(uid, cart);
+                            self.pipeline = p;
+                            self.router = Router::from_pipeline(&self.pipeline);
+                            self.bus.set_active_devices(self.carts.len());
+                        }
+                        Err(e) => {
+                            // Incompatible cartridge: alert, leave pipeline.
+                            self.health.alerts_push(ev.visible_at(), cart.uid,
+                                format!("insert rejected: {e}"));
+                            spares.insert(ev.uid, cart);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// §4.2-style pipelined run with optional hot-plug events.
+    ///
+    /// `frames` counts source frames to drive.  Returns per-frame latency,
+    /// FPS, swap downtime records, and the peak pause-buffer depth.
+    pub fn run_pipelined(
+        &mut self,
+        source: &mut VideoSource,
+        frames: u64,
+        events: Vec<HotplugEvent>,
+    ) -> RunReport {
+        let mut script = HotplugScript::new(events);
+        // A pipeline whose head cannot consume camera frames drops
+        // everything (the operator console shows the BadHead alert).
+        if let Err(e) = self.pipeline.is_runnable() {
+            self.health.alerts_push(self.clock.now(), 0, format!("pipeline not runnable: {e}"));
+            return RunReport {
+                frames_in: frames,
+                frames_out: 0,
+                frames_dropped: frames,
+                fps: 0.0,
+                latency: Histogram::default(),
+                handoff_us_total: 0,
+                compute_us_mean: 0.0,
+                wire_utilization: 0.0,
+                host_utilization: 0.0,
+                elapsed_us: 0,
+                swap_records: self.swap.records.clone(),
+                max_buffered: 0,
+                throttle_events: self.flow.throttle_events,
+            };
+        }
+        let mut spares: HashMap<u64, Cartridge> = HashMap::new();
+        let mut latency = Histogram::default();
+        let mut handoff_total = 0u64;
+        let mut compute_sums: Vec<f64> = Vec::new();
+        let mut completed = 0u64;
+        let mut max_buffered = 0u64;
+        let start = self.clock.now();
+        let mut last_complete = start;
+
+        for _ in 0..frames {
+            let now = self.clock.now();
+            let frame = source.next_frame(now);
+            let arrival = frame.ts_us;
+
+            // Hot-plug events that became visible while we were idle or
+            // processing are applied before this frame enters.
+            self.apply_hotplug(&mut script, arrival.max(now), &mut spares);
+
+            // Pause gate: frames buffer (not drop) while reconfiguring.
+            let mut gate = arrival.max(now);
+            if self.swap.is_paused(gate) {
+                if self.swap.pause_until == u64::MAX {
+                    // Halted: wait for the next attach event to unhalt.
+                    if let Some(t) = script.next_visible() {
+                        self.apply_hotplug(&mut script, t, &mut spares);
+                    }
+                }
+                if self.swap.pause_until == u64::MAX {
+                    // Still halted with no rescue in the script: frame is
+                    // dropped (operator never restored the capability).
+                    continue;
+                }
+                // Count frames that arrived during this pause window.
+                let buffered = if source.interval_us > 0 {
+                    (self.swap.pause_until.saturating_sub(arrival)) / source.interval_us
+                } else {
+                    1
+                };
+                max_buffered = max_buffered.max(buffered);
+                gate = self.swap.pause_until;
+            }
+
+            // Chain through the pipeline stages.
+            let uids: Vec<u64> = self.pipeline.stages.iter().map(|s| s.uid).collect();
+            let mut msg = Message::frame(frame.seq, frame.bytes, arrival);
+            let mut t = gate;
+            let mut compute_sum = 0.0f64;
+            for &uid in &uids {
+                let (handoff, in_wire, out_kind) = {
+                    let c = &self.carts[&uid];
+                    (stream_handoff_us(c.kind),
+                     self.bus.profile.wire_time_us(msg.bytes),
+                     c.cap.produces)
+                };
+                // Handoff: host routing work + wire transfer of the input.
+                // Pipelined handoffs use the streaming path and keep the
+                // host/wire below ~15% utilization, so they are modeled as
+                // pure latency; the *devices* are the contended resources
+                // (their FIFO timelines serialize frames correctly).
+                let host_done = t + handoff;
+                let wire_done = host_done + in_wire;
+                handoff_total += handoff + in_wire;
+                // Stage compute (device serializes its own frames).
+                let cart = self.carts.get_mut(&uid).unwrap();
+                let (_, infer_done) = cart.infer(wire_done);
+                compute_sum += cart.service_us as f64;
+                let m = self.stage_metrics.entry(uid).or_default();
+                m.processed.inc();
+                m.latency.record(infer_done - t);
+                self.health.beat(uid, infer_done);
+                msg = msg.transformed(out_kind, output_bytes(out_kind));
+                t = infer_done;
+            }
+            // Final result back to the orchestrator (small).
+            let tail_wire = self.bus.profile.wire_time_us(msg.bytes);
+            let done = t + tail_wire;
+            handoff_total += tail_wire;
+
+            latency.record(done - gate.min(done));
+            completed += 1;
+            compute_sums.push(compute_sum);
+            last_complete = last_complete.max(done);
+
+            // The source is the pacing element: advance to when the *head*
+            // stage can accept the next frame (pipelining across frames).
+            let next_ready = if source.interval_us > 0 {
+                (frame.seq + 1) * source.interval_us
+            } else {
+                // Saturating source: head-of-pipeline availability.
+                uids.first()
+                    .map(|u| self.carts[u].timeline.next_free())
+                    .unwrap_or(done)
+            };
+            self.clock.advance_to(next_ready.min(done).max(gate));
+        }
+
+        // Drain: advance to the final completion.
+        self.clock.advance_to(last_complete);
+        let elapsed = self.clock.now() - start;
+        let handoff_util = if elapsed > 0 {
+            handoff_total as f64 / elapsed as f64
+        } else {
+            0.0
+        };
+        RunReport {
+            frames_in: frames,
+            frames_out: completed,
+            frames_dropped: frames - completed,
+            fps: if elapsed > 0 { completed as f64 * 1e6 / elapsed as f64 } else { 0.0 },
+            latency,
+            handoff_us_total: handoff_total,
+            compute_us_mean: crate::util::mean(&compute_sums),
+            wire_utilization: handoff_util,
+            host_utilization: handoff_util,
+            elapsed_us: elapsed,
+            swap_records: self.swap.records.clone(),
+            max_buffered,
+            throttle_events: self.flow.throttle_events,
+        }
+    }
+
+    /// Device busy times + profiles (for the power model).
+    pub fn device_busy(&self) -> Vec<(u64, crate::device::timing::DeviceProfile)> {
+        self.carts
+            .values()
+            .map(|c| (c.timeline.busy_us(), c.profile))
+            .collect()
+    }
+}
+
+impl super::health::HealthMonitor {
+    /// Push an operator alert directly (used for rejected inserts).
+    pub fn alerts_push(&mut self, at_us: u64, uid: u64, text: String) {
+        self.alerts.push(super::health::Alert { at_us, uid, text });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::caps::CapDescriptor;
+    use crate::device::DeviceKind;
+
+    fn orch_with_n_ncs2(n: usize) -> Orchestrator {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        for i in 0..n {
+            // Broadcast experiment: identical object-detection sticks.
+            let cart = Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::object_detect());
+            o.plug(SlotId(i as u8), cart).unwrap();
+        }
+        o
+    }
+
+    #[test]
+    fn broadcast_single_ncs2_matches_paper_15fps() {
+        let mut o = orch_with_n_ncs2(1);
+        let mut src = VideoSource::paper_stream(1);
+        let rep = o.run_broadcast(&mut src, 50);
+        assert!((14.0..16.0).contains(&rep.fps), "fps {}", rep.fps);
+    }
+
+    #[test]
+    fn broadcast_five_ncs2_matches_paper_6fps() {
+        let mut o = orch_with_n_ncs2(5);
+        let mut src = VideoSource::paper_stream(1);
+        let rep = o.run_broadcast(&mut src, 50);
+        assert!((5.2..7.0).contains(&rep.fps), "fps {}", rep.fps);
+    }
+
+    #[test]
+    fn pipelined_latency_is_sum_plus_small_overhead() {
+        // Paper §4.2: 3 stages x 30ms -> ~95-100ms end to end.
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
+        let mut src = VideoSource::paper_stream(1).with_rate_fps(8.0);
+        let rep = o.run_pipelined(&mut src, 40, vec![]);
+        let mean_ms = rep.latency.mean_us() / 1000.0;
+        assert!((92.0..102.0).contains(&mean_ms), "latency {mean_ms}ms");
+        // Overhead over pure compute ~5%.
+        let overhead = rep.latency.mean_us() / rep.compute_us_mean - 1.0;
+        assert!((0.02..0.10).contains(&overhead), "overhead {overhead}");
+    }
+
+    #[test]
+    fn pipeline_order_follows_slots() {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
+        let names: Vec<&str> = o.pipeline.stages.iter().map(|s| s.cap.id.name()).collect();
+        assert_eq!(names, vec!["face-detect", "face-quality", "face-embed"]);
+    }
+
+    #[test]
+    fn incompatible_plug_rejected() {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+        // Database right after detector: FaceCrop != Embedding.
+        let res = o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::database()));
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Operator UI export: the ComfyUI-style workflow graph (paper Fig. 3).
+//!
+//! "The code utilizes the ComfyUI workflow editor to allow an operator to
+//! see which cartridges are present and active" (§3.3).  We emit the node
+//! graph JSON that editor consumes: one node per live cartridge (grouped by
+//! capability), a camera source node, a sink node, and links that mirror
+//! the active pipeline routing.
+
+use crate::json::{num, obj, s, Value};
+
+use super::pipeline::Pipeline;
+
+/// Export the live pipeline as a node-editor graph.
+pub fn export_workflow(p: &Pipeline, title: &str) -> Value {
+    let mut nodes = Vec::new();
+    let mut links = Vec::new();
+
+    // Node ids: 1 = camera, 2..n+1 = stages, n+2 = sink.
+    nodes.push(obj(vec![
+        ("id", num(1.0)),
+        ("type", s("champ/CameraSource")),
+        ("title", s("Camera")),
+        ("pos", Value::Arr(vec![num(40.0), num(200.0)])),
+        ("outputs", Value::Arr(vec![s("Frame")])),
+    ]));
+
+    for (i, stage) in p.stages.iter().enumerate() {
+        let id = (i + 2) as f64;
+        nodes.push(obj(vec![
+            ("id", num(id)),
+            ("type", s(&format!("champ/{}", stage.cap.id.name()))),
+            ("title", s(&format!("{} (uid {})", stage.cap.id.name(), stage.uid))),
+            ("pos", Value::Arr(vec![num(40.0 + 220.0 * (i as f64 + 1.0)), num(200.0)])),
+            ("group", s(group_for(stage.cap.id.name()))),
+            ("inputs", Value::Arr(vec![s(&format!("{:?}", stage.cap.consumes))])),
+            ("outputs", Value::Arr(vec![s(&format!("{:?}", stage.cap.produces))])),
+            ("model", s(&stage.cap.model)),
+        ]));
+        // Link from previous node.
+        links.push(Value::Arr(vec![
+            num((links.len() + 1) as f64),
+            num((i + 1) as f64),
+            num(id),
+        ]));
+    }
+
+    let sink_id = (p.stages.len() + 2) as f64;
+    nodes.push(obj(vec![
+        ("id", num(sink_id)),
+        ("type", s("champ/OperatorConsole")),
+        ("title", s("Operator console")),
+        ("pos", Value::Arr(vec![num(40.0 + 220.0 * (p.stages.len() as f64 + 1.0)), num(200.0)])),
+        ("inputs", Value::Arr(vec![s("Any")])),
+    ]));
+    links.push(Value::Arr(vec![
+        num((links.len() + 1) as f64),
+        num((p.stages.len() + 1) as f64),
+        num(sink_id),
+    ]));
+
+    obj(vec![
+        ("title", s(title)),
+        ("version", num(1.0)),
+        ("nodes", Value::Arr(nodes)),
+        ("links", Value::Arr(links)),
+    ])
+}
+
+fn group_for(cap_name: &str) -> &'static str {
+    match cap_name {
+        "face-detect" | "face-quality" | "face-embed" => "Biometrics",
+        "gait-embed" => "Biometrics",
+        "object-detect" => "Detection",
+        "database" => "Storage",
+        _ => "Misc",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::caps::CapDescriptor;
+    use crate::json::parse;
+
+    #[test]
+    fn exports_nodes_and_links() {
+        let p = Pipeline::build(vec![
+            (1, CapDescriptor::face_detect()),
+            (2, CapDescriptor::face_embed()),
+        ])
+        .unwrap();
+        let wf = export_workflow(&p, "demo");
+        let nodes = wf.get("nodes").unwrap().as_arr().unwrap();
+        let links = wf.get("links").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), 4); // camera + 2 stages + sink
+        assert_eq!(links.len(), 3); // chain of 3 links
+        // Valid JSON text round-trips.
+        let text = wf.to_json_pretty();
+        assert_eq!(parse(&text).unwrap(), wf);
+    }
+
+    #[test]
+    fn stage_nodes_carry_model_and_group() {
+        let p = Pipeline::build(vec![(5, CapDescriptor::face_detect())]).unwrap();
+        let wf = export_workflow(&p, "x");
+        let nodes = wf.get("nodes").unwrap().as_arr().unwrap();
+        let stage = &nodes[1];
+        assert_eq!(stage.get("model").unwrap().as_str(), Some("retinaface_det"));
+        assert_eq!(stage.get("group").unwrap().as_str(), Some("Biometrics"));
+    }
+
+    #[test]
+    fn empty_pipeline_still_valid_graph() {
+        let wf = export_workflow(&Pipeline::default(), "empty");
+        assert_eq!(wf.get("nodes").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,64 @@
+//! Key management: the operator's keychain for a CHAMP deployment.
+//!
+//! One passphrase derives (deterministically) the rotation key for template
+//! protection, the sealing key for the storage cartridge, and the Paillier
+//! keypair for encrypted score aggregation.  Keys never leave the
+//! orchestrator; cartridges receive only what they need (the rotated
+//! gallery + sealed blob).
+
+use sha2::{Digest, Sha256};
+
+use super::paillier::PaillierPriv;
+use super::rotation::RotationKey;
+use super::seal::SealKey;
+
+/// All key material for one deployment.
+pub struct KeyChain {
+    pub rotation: RotationKey,
+    pub seal: SealKey,
+    pub paillier: PaillierPriv,
+}
+
+fn derive_seed(passphrase: &str, label: &str) -> u64 {
+    let mut h = Sha256::new();
+    h.update(b"champ-keychain-v1");
+    h.update(label.as_bytes());
+    h.update(passphrase.as_bytes());
+    let d = h.finalize();
+    u64::from_le_bytes(d[..8].try_into().unwrap())
+}
+
+impl KeyChain {
+    /// Derive the full chain for a template dimension.
+    pub fn derive(passphrase: &str, template_dim: usize) -> Self {
+        KeyChain {
+            rotation: RotationKey::generate(template_dim, derive_seed(passphrase, "rot")),
+            seal: SealKey::from_passphrase(passphrase),
+            paillier: PaillierPriv::generate(derive_seed(passphrase, "paillier")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::biometric::template::Template;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn derivation_is_deterministic() {
+        let a = KeyChain::derive("pass", 32);
+        let b = KeyChain::derive("pass", 32);
+        let mut rng = Rng::new(1);
+        let t = Template::new(rng.unit_vec(32));
+        assert_eq!(a.rotation.apply(&t).as_slice(), b.rotation.apply(&t).as_slice());
+        assert_eq!(a.paillier.pk.n, b.paillier.pk.n);
+    }
+
+    #[test]
+    fn different_passphrases_different_keys() {
+        let a = KeyChain::derive("pass1", 32);
+        let b = KeyChain::derive("pass2", 32);
+        assert_ne!(a.paillier.pk.n, b.paillier.pk.n);
+    }
+}

@@ -1,0 +1,24 @@
+//! Template-privacy substrate (the VDiSC-inherited capability).
+//!
+//! Three cooperating schemes, each exercising a different part of the
+//! paper's "cryptographically secured biometric datasets" claim:
+//!
+//! * [`rotation`] — orthogonal-transform template protection: the gallery
+//!   is stored and matched in a rotated space; scores are preserved, the
+//!   plaintext templates are never materialized on the storage cartridge.
+//! * [`paillier`] — a toy additively-homomorphic cryptosystem used to
+//!   aggregate match scores under encryption (score fusion across units
+//!   without revealing per-gallery scores).  Toy parameters (64-bit
+//!   modulus): this demonstrates the protocol, not production security.
+//! * [`seal`] — authenticated at-rest sealing (SHA-256-CTR + HMAC) for the
+//!   gallery blob on the storage cartridge's flash.
+
+pub mod keys;
+pub mod paillier;
+pub mod rotation;
+pub mod seal;
+
+pub use keys::KeyChain;
+pub use paillier::{PaillierCipher, PaillierPriv, PaillierPub};
+pub use rotation::RotationKey;
+pub use seal::SealKey;

@@ -1,0 +1,241 @@
+//! Toy Paillier additively-homomorphic encryption.
+//!
+//! Demonstrates the protocol the storage cartridge uses to aggregate match
+//! scores under encryption: Enc(a) * Enc(b) = Enc(a+b).  Parameters are
+//! deliberately small (32-bit primes, u128 arithmetic) — this validates the
+//! *code path* (quantize score -> encrypt -> homomorphic add -> decrypt),
+//! not production security.  DESIGN.md lists this as a documented
+//! substitution for a real HE library.
+
+use crate::util::rng::Rng;
+
+/// Public key (n, n²).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PaillierPub {
+    pub n: u64,
+    pub n2: u128,
+}
+
+/// Private key (λ = lcm(p-1, q-1), μ = λ⁻¹ mod n).
+#[derive(Debug, Clone, Copy)]
+pub struct PaillierPriv {
+    pub pk: PaillierPub,
+    lambda: u64,
+    mu: u64,
+}
+
+/// A ciphertext mod n².
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PaillierCipher(pub u128);
+
+fn mulmod(a: u128, b: u128, m: u128) -> u128 {
+    // Toy parameters guarantee m = n² < 2^64, so residues are < 2^64 and
+    // their product fits u128 exactly.
+    debug_assert!(m <= u64::MAX as u128 + 1);
+    (a % m) * (b % m) % m
+}
+
+fn powmod(mut base: u128, mut exp: u128, m: u128) -> u128 {
+    let mut acc: u128 = 1;
+    base %= m;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = mulmod(acc, base, m);
+        }
+        base = mulmod(base, base, m);
+        exp >>= 1;
+    }
+    acc
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 { a } else { gcd(b, a % b) }
+}
+
+fn lcm(a: u64, b: u64) -> u64 {
+    a / gcd(a, b) * b
+}
+
+/// Modular inverse via extended Euclid.
+fn invmod(a: u64, m: u64) -> Option<u64> {
+    let (mut t, mut newt) = (0i128, 1i128);
+    let (mut r, mut newr) = (m as i128, a as i128);
+    while newr != 0 {
+        let q = r / newr;
+        (t, newt) = (newt, t - q * newt);
+        (r, newr) = (newr, r - q * newr);
+    }
+    if r > 1 {
+        return None;
+    }
+    Some(((t % m as i128 + m as i128) % m as i128) as u64)
+}
+
+fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n % p == 0 {
+            return n == p;
+        }
+    }
+    // Deterministic Miller-Rabin for u64.
+    let d = (n - 1) >> (n - 1).trailing_zeros();
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = powmod(a as u128, d as u128, n as u128) as u64;
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        let mut r = d;
+        while r != n - 1 {
+            x = mulmod(x as u128, x as u128, n as u128) as u64;
+            r <<= 1;
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+fn gen_prime(rng: &mut Rng, bits: u32) -> u64 {
+    loop {
+        let candidate = (rng.next_u64() | 1 | (1 << (bits - 1))) & ((1 << bits) - 1);
+        if is_prime(candidate) {
+            return candidate;
+        }
+    }
+}
+
+impl PaillierPriv {
+    /// Generate a keypair with two 16-bit primes (toy scale): n < 2^32 so
+    /// every intermediate mod-n² product stays inside u128.
+    pub fn generate(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let p = gen_prime(&mut rng, 16);
+        let q = loop {
+            let q = gen_prime(&mut rng, 16);
+            if q != p {
+                break q;
+            }
+        };
+        let n = p * q;
+        let lambda = lcm(p - 1, q - 1);
+        // g = n+1 makes L(g^λ mod n²) = λ mod n, so μ = λ⁻¹ mod n.
+        let mu = invmod(lambda % n, n).expect("λ invertible");
+        PaillierPriv { pk: PaillierPub { n, n2: (n as u128) * (n as u128) }, lambda, mu }
+    }
+
+    pub fn decrypt(&self, c: PaillierCipher) -> u64 {
+        let n = self.pk.n as u128;
+        let u = powmod(c.0, self.lambda as u128, self.pk.n2);
+        let l = ((u - 1) / n) as u64; // L(u) = (u-1)/n
+        mulmod(l as u128, self.mu as u128, n) as u64
+    }
+}
+
+impl PaillierPub {
+    /// Encrypt m in [0, n) with randomness from `rng`.
+    pub fn encrypt(&self, m: u64, rng: &mut Rng) -> PaillierCipher {
+        assert!(m < self.n, "plaintext out of range");
+        let r = loop {
+            let r = rng.range(2, self.n);
+            if gcd(r, self.n) == 1 {
+                break r;
+            }
+        };
+        // g = n+1: g^m = 1 + m*n (mod n²).
+        let gm = (1u128 + (m as u128) * (self.n as u128)) % self.n2;
+        let rn = powmod(r as u128, self.n as u128, self.n2);
+        PaillierCipher(mulmod(gm, rn, self.n2))
+    }
+
+    /// Homomorphic addition: Enc(a) ⊕ Enc(b) = Enc(a + b mod n).
+    pub fn add(&self, a: PaillierCipher, b: PaillierCipher) -> PaillierCipher {
+        PaillierCipher(mulmod(a.0, b.0, self.n2))
+    }
+
+    /// Homomorphic scalar multiply: Enc(a) ^ k = Enc(k·a mod n).
+    pub fn mul_plain(&self, a: PaillierCipher, k: u64) -> PaillierCipher {
+        PaillierCipher(powmod(a.0, k as u128, self.n2))
+    }
+}
+
+/// Quantize a cosine score in [-1,1] to the Paillier plaintext domain.
+pub fn quantize_score(s: f32) -> u64 {
+    ((s.clamp(-1.0, 1.0) + 1.0) * 10_000.0).round() as u64
+}
+
+/// Inverse of [`quantize_score`] after summing `count` scores.
+pub fn dequantize_sum(total: u64, count: u64) -> f32 {
+    (total as f32 / 10_000.0) - count as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let sk = PaillierPriv::generate(42);
+        let mut rng = Rng::new(1);
+        for m in [0u64, 1, 12345, 888_888] {
+            let c = sk.pk.encrypt(m, &mut rng);
+            assert_eq!(sk.decrypt(c), m);
+        }
+    }
+
+    #[test]
+    fn homomorphic_addition_property() {
+        let sk = PaillierPriv::generate(43);
+        prop::check("paillier-add", 3, 20, |rng, _| {
+            let a = rng.range(0, 1 << 20);
+            let b = rng.range(0, 1 << 20);
+            let ca = sk.pk.encrypt(a, rng);
+            let cb = sk.pk.encrypt(b, rng);
+            assert_eq!(sk.decrypt(sk.pk.add(ca, cb)), a + b);
+        });
+    }
+
+    #[test]
+    fn homomorphic_scalar_multiply() {
+        let sk = PaillierPriv::generate(44);
+        let mut rng = Rng::new(2);
+        let c = sk.pk.encrypt(1000, &mut rng);
+        assert_eq!(sk.decrypt(sk.pk.mul_plain(c, 7)), 7000);
+    }
+
+    #[test]
+    fn ciphertexts_are_randomized() {
+        let sk = PaillierPriv::generate(45);
+        let mut rng = Rng::new(3);
+        let c1 = sk.pk.encrypt(5, &mut rng);
+        let c2 = sk.pk.encrypt(5, &mut rng);
+        assert_ne!(c1, c2, "semantic security: same plaintext, fresh randomness");
+        assert_eq!(sk.decrypt(c1), sk.decrypt(c2));
+    }
+
+    #[test]
+    fn score_quantization_roundtrip() {
+        for s in [-1.0f32, -0.25, 0.0, 0.7, 1.0] {
+            let q = quantize_score(s);
+            let back = dequantize_sum(q, 1);
+            assert!((back - s).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn encrypted_score_aggregation() {
+        // Two units report match scores; aggregate without decrypting parts.
+        let sk = PaillierPriv::generate(46);
+        let mut rng = Rng::new(4);
+        let (s1, s2) = (0.83f32, 0.41f32);
+        let c1 = sk.pk.encrypt(quantize_score(s1), &mut rng);
+        let c2 = sk.pk.encrypt(quantize_score(s2), &mut rng);
+        let sum = dequantize_sum(sk.decrypt(sk.pk.add(c1, c2)), 2);
+        assert!((sum - (s1 + s2)).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,165 @@
+//! Orthogonal-rotation template protection.
+//!
+//! A secret orthogonal matrix R protects templates: store t' = R·t.  Inner
+//! products (hence cosine scores) are preserved, so matching runs entirely
+//! in the protected space; recovering t from t' requires R (the key).
+
+use crate::biometric::template::Template;
+use crate::util::rng::Rng;
+
+/// A secret orthogonal matrix (row-major, dim x dim).
+#[derive(Debug, Clone)]
+pub struct RotationKey {
+    dim: usize,
+    m: Vec<f32>,
+}
+
+impl RotationKey {
+    /// Generate via Gram-Schmidt on a seeded Gaussian matrix.
+    pub fn generate(dim: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(dim);
+        while rows.len() < dim {
+            let mut v: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            // Orthogonalize against previous rows.
+            for r in &rows {
+                let dot: f32 = v.iter().zip(r).map(|(a, b)| a * b).sum();
+                for (vi, ri) in v.iter_mut().zip(r) {
+                    *vi -= dot * ri;
+                }
+            }
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if n > 1e-3 {
+                v.iter_mut().for_each(|x| *x /= n);
+                rows.push(v);
+            }
+        }
+        RotationKey { dim, m: rows.into_iter().flatten().collect() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Apply R to a template: out_i = sum_j R[i][j] * t[j].
+    pub fn apply(&self, t: &Template) -> Template {
+        assert_eq!(t.dim(), self.dim, "rotation dim mismatch");
+        let x = t.as_slice();
+        let mut out = vec![0.0f32; self.dim];
+        for i in 0..self.dim {
+            let row = &self.m[i * self.dim..(i + 1) * self.dim];
+            out[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        Template::new(out)
+    }
+
+    /// Apply the inverse (= transpose, since R is orthogonal).
+    pub fn invert(&self, t: &Template) -> Template {
+        assert_eq!(t.dim(), self.dim);
+        let x = t.as_slice();
+        let mut out = vec![0.0f32; self.dim];
+        for j in 0..self.dim {
+            let mut acc = 0.0;
+            for i in 0..self.dim {
+                acc += self.m[i * self.dim + j] * x[i];
+            }
+            out[j] = acc;
+        }
+        Template::new(out)
+    }
+
+    /// Export row-major matrix.
+    pub fn to_matrix(&self) -> Vec<f32> {
+        self.m.clone()
+    }
+
+    /// The operand the `secure_gallery_match` HLO expects: that kernel
+    /// rotates the probe as `p @ M` (row vector times matrix), while
+    /// [`RotationKey::apply`] computes `R p`.  They agree when `M = Rᵀ`.
+    pub fn to_hlo_matrix(&self) -> Vec<f32> {
+        let d = self.dim;
+        let mut out = vec![0.0f32; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                out[j * d + i] = self.m[i * d + j];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn rotation_preserves_cosine() {
+        prop::check("rot-cos", 21, 25, |rng, _| {
+            let key = RotationKey::generate(32, rng.next_u64());
+            let a = Template::new((0..32).map(|_| rng.normal()).collect());
+            let b = Template::new((0..32).map(|_| rng.normal()).collect());
+            let plain = a.cosine(&b);
+            let rot = key.apply(&a).cosine(&key.apply(&b));
+            assert!((plain - rot).abs() < 1e-3, "{plain} vs {rot}");
+        });
+    }
+
+    #[test]
+    fn invert_recovers_template() {
+        let key = RotationKey::generate(64, 5);
+        let mut rng = Rng::new(1);
+        let t = Template::new(rng.unit_vec(64));
+        let back = key.invert(&key.apply(&t));
+        for (a, b) in t.as_slice().iter().zip(back.as_slice()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_actually_hides() {
+        let key = RotationKey::generate(64, 9);
+        let mut rng = Rng::new(2);
+        let t = Template::new(rng.unit_vec(64));
+        let rot = key.apply(&t);
+        let maxdiff = t
+            .as_slice()
+            .iter()
+            .zip(rot.as_slice())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(maxdiff > 0.05, "rotated template too close to plaintext");
+    }
+
+    #[test]
+    fn hlo_matrix_is_transpose() {
+        let key = RotationKey::generate(8, 3);
+        let m = key.to_matrix();
+        let ht = key.to_hlo_matrix();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(m[i * 8 + j], ht[j * 8 + i]);
+            }
+        }
+        // p @ Rᵀ must equal R p.
+        let mut rng = Rng::new(4);
+        let t = Template::new(rng.unit_vec(8));
+        let direct = key.apply(&t);
+        let mut via_hlo = vec![0.0f32; 8];
+        for j in 0..8 {
+            for k in 0..8 {
+                via_hlo[j] += t.as_slice()[k] * ht[k * 8 + j];
+            }
+        }
+        for (a, b) in direct.as_slice().iter().zip(&via_hlo) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn different_seeds_different_keys() {
+        let a = RotationKey::generate(16, 1).to_matrix();
+        let b = RotationKey::generate(16, 2).to_matrix();
+        assert_ne!(a, b);
+    }
+}

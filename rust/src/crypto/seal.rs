@@ -1,0 +1,129 @@
+//! Authenticated at-rest sealing for the storage cartridge's flash.
+//!
+//! SHA-256 in counter mode as the keystream plus an encrypt-then-MAC
+//! HMAC-SHA-256 tag.  (AES-GCM would be the production choice; the sha2
+//! crate is what the offline vendor set provides, and CTR+HMAC is a sound
+//! composition.)
+
+use sha2::{Digest, Sha256};
+
+const TAG_LEN: usize = 32;
+
+/// Symmetric sealing key.
+#[derive(Debug, Clone)]
+pub struct SealKey {
+    enc: [u8; 32],
+    mac: [u8; 32],
+}
+
+fn hkdf_like(passphrase: &str, label: &str) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(b"champ-seal-v1");
+    h.update(label.as_bytes());
+    h.update(passphrase.as_bytes());
+    h.finalize().into()
+}
+
+fn hmac(key: &[u8; 32], data: &[u8]) -> [u8; 32] {
+    // HMAC-SHA256 from first principles (hmac crate version-dance avoided).
+    let mut ipad = [0x36u8; 64];
+    let mut opad = [0x5cu8; 64];
+    for i in 0..32 {
+        ipad[i] ^= key[i];
+        opad[i] ^= key[i];
+    }
+    let mut inner = Sha256::new();
+    inner.update(ipad);
+    inner.update(data);
+    let inner = inner.finalize();
+    let mut outer = Sha256::new();
+    outer.update(opad);
+    outer.update(inner);
+    outer.finalize().into()
+}
+
+impl SealKey {
+    pub fn from_passphrase(passphrase: &str) -> Self {
+        SealKey { enc: hkdf_like(passphrase, "enc"), mac: hkdf_like(passphrase, "mac") }
+    }
+
+    fn keystream_block(&self, counter: u64) -> [u8; 32] {
+        let mut h = Sha256::new();
+        h.update(self.enc);
+        h.update(counter.to_le_bytes());
+        h.finalize().into()
+    }
+
+    fn xor_stream(&self, data: &mut [u8]) {
+        for (i, chunk) in data.chunks_mut(32).enumerate() {
+            let ks = self.keystream_block(i as u64);
+            for (b, k) in chunk.iter_mut().zip(ks.iter()) {
+                *b ^= k;
+            }
+        }
+    }
+
+    /// Seal: ciphertext || tag.
+    pub fn seal(&self, plaintext: &[u8]) -> Vec<u8> {
+        let mut out = plaintext.to_vec();
+        self.xor_stream(&mut out);
+        let tag = hmac(&self.mac, &out);
+        out.extend_from_slice(&tag);
+        out
+    }
+
+    /// Unseal with MAC verification.
+    pub fn unseal(&self, blob: &[u8]) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(blob.len() >= TAG_LEN, "blob too short");
+        let (ct, tag) = blob.split_at(blob.len() - TAG_LEN);
+        let want = hmac(&self.mac, ct);
+        // Constant-time compare.
+        let mut diff = 0u8;
+        for (a, b) in want.iter().zip(tag) {
+            diff |= a ^ b;
+        }
+        anyhow::ensure!(diff == 0, "authentication failed (tampered blob)");
+        let mut out = ct.to_vec();
+        self.xor_stream(&mut out);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let k = SealKey::from_passphrase("operator-key");
+        let msg = b"biometric gallery bytes".to_vec();
+        let blob = k.seal(&msg);
+        assert_ne!(&blob[..msg.len()], &msg[..], "ciphertext differs");
+        assert_eq!(k.unseal(&blob).unwrap(), msg);
+    }
+
+    #[test]
+    fn tamper_detected() {
+        let k = SealKey::from_passphrase("k");
+        let mut blob = k.seal(b"data");
+        blob[0] ^= 1;
+        assert!(k.unseal(&blob).is_err());
+    }
+
+    #[test]
+    fn wrong_key_rejected() {
+        let blob = SealKey::from_passphrase("a").seal(b"data");
+        assert!(SealKey::from_passphrase("b").unseal(&blob).is_err());
+    }
+
+    #[test]
+    fn empty_plaintext_ok() {
+        let k = SealKey::from_passphrase("k");
+        assert_eq!(k.unseal(&k.seal(b"")).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn short_blob_rejected() {
+        assert!(SealKey::from_passphrase("k").unseal(&[0u8; 5]).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Capability identification: what a cartridge consumes and produces.
+//!
+//! On insertion a cartridge reports its **capability ID** (a predefined
+//! code per function — paper §3.2) plus its data format; VDiSK uses the
+//! consumes/produces pair to splice it into the pipeline and to decide
+//! whether a removed stage can be bridged.
+
+/// Predefined capability codes (paper §3.2's cartridge list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CapabilityId {
+    ObjectDetect = 0x01,
+    FaceDetect = 0x02,
+    FaceEmbed = 0x03,
+    FaceQuality = 0x04,
+    GaitEmbed = 0x05,
+    Database = 0x06,
+}
+
+impl CapabilityId {
+    pub fn code(&self) -> u8 {
+        *self as u8
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0x01 => Some(Self::ObjectDetect),
+            0x02 => Some(Self::FaceDetect),
+            0x03 => Some(Self::FaceEmbed),
+            0x04 => Some(Self::FaceQuality),
+            0x05 => Some(Self::GaitEmbed),
+            0x06 => Some(Self::Database),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::ObjectDetect => "object-detect",
+            Self::FaceDetect => "face-detect",
+            Self::FaceEmbed => "face-embed",
+            Self::FaceQuality => "face-quality",
+            Self::GaitEmbed => "gait-embed",
+            Self::Database => "database",
+        }
+    }
+}
+
+/// Message payload kinds flowing on the bus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataKind {
+    /// Raw camera frame.
+    Frame,
+    /// Detections (boxes + labels) riding with their source frame.
+    Detections,
+    /// Cropped face/ROI riding with metadata.
+    FaceCrop,
+    /// Quality-annotated face crop.
+    ScoredFaceCrop,
+    /// Biometric template (embedding).
+    Embedding,
+    /// Gallery match result.
+    MatchResult,
+}
+
+/// What a cartridge advertises during the handshake.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapDescriptor {
+    pub id: CapabilityId,
+    pub consumes: DataKind,
+    pub produces: DataKind,
+    /// Which AOT artifact implements it (key into the manifest).
+    pub model: String,
+    /// True if removing this stage may be bridged by passing its input
+    /// through (only valid when the downstream stage accepts the upstream
+    /// kind — checked by the pipeline builder too).
+    pub pass_through_ok: bool,
+}
+
+impl CapDescriptor {
+    pub fn object_detect() -> Self {
+        CapDescriptor {
+            id: CapabilityId::ObjectDetect,
+            consumes: DataKind::Frame,
+            produces: DataKind::Detections,
+            model: "mobilenet_v2_det".into(),
+            pass_through_ok: false,
+        }
+    }
+
+    pub fn face_detect() -> Self {
+        CapDescriptor {
+            id: CapabilityId::FaceDetect,
+            consumes: DataKind::Frame,
+            produces: DataKind::FaceCrop,
+            model: "retinaface_det".into(),
+            pass_through_ok: false,
+        }
+    }
+
+    /// Quality scoring annotates but does not change payload kind — the
+    /// canonical bridgeable stage (it is the one the paper hot-removes).
+    pub fn face_quality() -> Self {
+        CapDescriptor {
+            id: CapabilityId::FaceQuality,
+            consumes: DataKind::FaceCrop,
+            produces: DataKind::FaceCrop,
+            model: "crfiqa_quality".into(),
+            pass_through_ok: true,
+        }
+    }
+
+    pub fn face_embed() -> Self {
+        CapDescriptor {
+            id: CapabilityId::FaceEmbed,
+            consumes: DataKind::FaceCrop,
+            produces: DataKind::Embedding,
+            model: "facenet_embed".into(),
+            pass_through_ok: false,
+        }
+    }
+
+    pub fn gait_embed() -> Self {
+        CapDescriptor {
+            id: CapabilityId::GaitEmbed,
+            consumes: DataKind::Frame,
+            produces: DataKind::Embedding,
+            model: "gaitset_embed".into(),
+            pass_through_ok: false,
+        }
+    }
+
+    pub fn database() -> Self {
+        CapDescriptor {
+            id: CapabilityId::Database,
+            consumes: DataKind::Embedding,
+            produces: DataKind::MatchResult,
+            model: "secure_gallery_match".into(),
+            pass_through_ok: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capability_codes_roundtrip() {
+        for id in [
+            CapabilityId::ObjectDetect,
+            CapabilityId::FaceDetect,
+            CapabilityId::FaceEmbed,
+            CapabilityId::FaceQuality,
+            CapabilityId::GaitEmbed,
+            CapabilityId::Database,
+        ] {
+            assert_eq!(CapabilityId::from_code(id.code()), Some(id));
+        }
+        assert_eq!(CapabilityId::from_code(0xFF), None);
+    }
+
+    #[test]
+    fn quality_is_the_bridgeable_stage() {
+        let q = CapDescriptor::face_quality();
+        assert!(q.pass_through_ok);
+        assert_eq!(q.consumes, q.produces);
+        assert!(!CapDescriptor::face_embed().pass_through_ok);
+    }
+
+    #[test]
+    fn face_pipeline_types_chain() {
+        let (d, q, e, db) = (
+            CapDescriptor::face_detect(),
+            CapDescriptor::face_quality(),
+            CapDescriptor::face_embed(),
+            CapDescriptor::database(),
+        );
+        assert_eq!(d.produces, q.consumes);
+        assert_eq!(q.produces, e.consumes);
+        assert_eq!(e.produces, db.consumes);
+    }
+}

@@ -1,0 +1,57 @@
+//! Generic FPGA cartridge behaviors: dynamic partial reconfiguration.
+//!
+//! The production CHAMP cartridge is an FPGA that can be *reflashed* to a
+//! different capability in the field (paper §3.2: "a single cartridge type
+//! can be reprogrammed to a different function").  This module models the
+//! reprogramming flow: select a bitstream (capability), pay the DPR time,
+//! come back up advertising the new capability.
+
+use super::caps::CapDescriptor;
+use super::{Cartridge, DeviceKind};
+
+/// A bitstream the FPGA cartridge can be flashed with.
+#[derive(Debug, Clone)]
+pub struct Bitstream {
+    pub cap: CapDescriptor,
+    /// Bitstream size drives the flash time over the bus.
+    pub bytes: u64,
+}
+
+impl Bitstream {
+    pub fn for_cap(cap: CapDescriptor) -> Self {
+        // Partial bitstreams for a mid-size region: ~4 MB.
+        Bitstream { cap, bytes: 4 << 20 }
+    }
+}
+
+/// Reflash an FPGA cartridge with a new capability.  Returns the virtual
+/// time spent (bus push + DPR programming); the cartridge comes back with
+/// the new descriptor and an empty timeline.
+pub fn reflash(cart: &mut Cartridge, bs: Bitstream, bus_bytes_per_us: f64) -> anyhow::Result<u64> {
+    anyhow::ensure!(cart.kind == DeviceKind::Fpga, "only FPGA cartridges reflash");
+    let push_us = (bs.bytes as f64 / bus_bytes_per_us).ceil() as u64;
+    let dpr_us = cart.profile.model_load_us;
+    cart.cap = bs.cap;
+    cart.timeline = crate::bus::clock::Resource::new();
+    Ok(push_us + dpr_us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::caps::CapabilityId;
+
+    #[test]
+    fn reflash_changes_capability() {
+        let mut c = Cartridge::new(9, DeviceKind::Fpga, CapDescriptor::face_detect());
+        let t = reflash(&mut c, Bitstream::for_cap(CapDescriptor::face_embed()), 343.0).unwrap();
+        assert_eq!(c.cap.id, CapabilityId::FaceEmbed);
+        assert!(t >= c.profile.model_load_us);
+    }
+
+    #[test]
+    fn non_fpga_cannot_reflash() {
+        let mut c = Cartridge::new(9, DeviceKind::Ncs2, CapDescriptor::face_detect());
+        assert!(reflash(&mut c, Bitstream::for_cap(CapDescriptor::face_embed()), 343.0).is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! Capability-cartridge device models.
+//!
+//! We have no Movidius/Coral hardware, so each cartridge is a *calibrated
+//! device model* (service time + transfer sizes + power states, see
+//! [`timing`]) wrapped around an optional **real compute backend**: the
+//! PJRT executor running the cartridge's actual AOT-compiled network.
+//! Simulated time and real numerics are orthogonal — benches run
+//! timing-only for determinism; examples and integration tests run the real
+//! HLO and the simulated clock together.
+
+pub mod caps;
+pub mod fpga;
+pub mod storage;
+pub mod timing;
+
+use std::sync::Arc;
+
+use crate::bus::clock::Resource;
+use crate::runtime::Executor;
+
+pub use caps::{CapDescriptor, CapabilityId, DataKind};
+pub use storage::StorageCartridge;
+pub use timing::DeviceProfile;
+
+/// Accelerator silicon families CHAMP has drivers for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// Intel Movidius Neural Compute Stick 2 (Myriad X VPU).
+    Ncs2,
+    /// Google Coral USB (Edge TPU).
+    Coral,
+    /// Generic reprogrammable FPGA cartridge (the envisioned final hw).
+    Fpga,
+    /// Database/storage cartridge.
+    Storage,
+}
+
+/// Numerics backend for a cartridge.
+#[derive(Clone, Default)]
+pub enum Backend {
+    /// Timing model only (benches; deterministic).
+    #[default]
+    Timing,
+    /// Real compute: the cartridge's network runs via PJRT.
+    Real(Arc<Executor>),
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Timing => write!(f, "Timing"),
+            Backend::Real(_) => write!(f, "Real(<executor>)"),
+        }
+    }
+}
+
+/// A capability cartridge plugged into the CHAMP bus.
+#[derive(Debug, Clone)]
+pub struct Cartridge {
+    pub uid: u64,
+    pub kind: DeviceKind,
+    pub cap: CapDescriptor,
+    pub profile: DeviceProfile,
+    /// Per-model service time (see [`timing::service_time_us`]).
+    pub service_us: u64,
+    /// The device's compute timeline (virtual time).
+    pub timeline: Resource,
+    pub backend: Backend,
+}
+
+impl Cartridge {
+    pub fn new(uid: u64, kind: DeviceKind, cap: CapDescriptor) -> Self {
+        let profile = match kind {
+            DeviceKind::Ncs2 => DeviceProfile::ncs2(),
+            DeviceKind::Coral => DeviceProfile::coral(),
+            DeviceKind::Fpga => DeviceProfile::fpga(),
+            DeviceKind::Storage => DeviceProfile::storage(),
+        };
+        let service_us = timing::service_time_us(kind, &cap.model);
+        Cartridge { uid, kind, cap, profile, service_us, timeline: Resource::new(), backend: Backend::Timing }
+    }
+
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Book one inference on the device timeline starting no earlier than
+    /// `ready_us` (input fully transferred).  Returns (start, end).
+    pub fn infer(&mut self, ready_us: u64) -> (u64, u64) {
+        self.timeline.reserve(ready_us, self.service_us)
+    }
+
+    /// Run the real network if a backend is attached.  `inputs` are
+    /// flattened f32 tensors in manifest order; returns flattened outputs.
+    pub fn run_real(&self, inputs: &[Vec<f32>]) -> anyhow::Result<Option<Vec<Vec<f32>>>> {
+        match &self.backend {
+            Backend::Timing => Ok(None),
+            Backend::Real(exe) => Ok(Some(exe.run_f32(inputs)?)),
+        }
+    }
+
+    /// Time to (re)load this cartridge's model after hot-insert: artifact
+    /// transfer over the bus plus on-device compile/flash.
+    pub fn model_load_us(&self) -> u64 {
+        self.profile.model_load_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cart() -> Cartridge {
+        Cartridge::new(1, DeviceKind::Ncs2, CapDescriptor::face_detect())
+    }
+
+    #[test]
+    fn infer_serializes_on_device() {
+        let mut c = cart();
+        let (s1, e1) = c.infer(0);
+        let (s2, _) = c.infer(0);
+        assert_eq!(s1, 0);
+        assert!(s2 >= e1, "device processes one frame at a time");
+    }
+
+    #[test]
+    fn profiles_match_kind() {
+        assert_eq!(cart().profile.t_infer_us, DeviceProfile::ncs2().t_infer_us);
+        let coral = Cartridge::new(2, DeviceKind::Coral, CapDescriptor::object_detect());
+        assert!(coral.profile.t_infer_us < cart().profile.t_infer_us);
+    }
+
+    #[test]
+    fn timing_backend_returns_none() {
+        let c = cart();
+        assert!(c.run_real(&[vec![0.0]]).unwrap().is_none());
+    }
+}

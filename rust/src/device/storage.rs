@@ -1,0 +1,176 @@
+//! Database/storage cartridge: the encrypted biometric gallery.
+//!
+//! "a special module that provides storage ... for holding large reference
+//! databases (faces) that other cartridges can query.  Implements
+//! homomorphic encryption capabilities for template privacy" (paper §3.2).
+//!
+//! Templates are held **protected at rest and during match**: the gallery
+//! is stored under an orthogonal-rotation transform (score-preserving — the
+//! match happens entirely in the rotated space) and sealed on flash with a
+//! stream cipher.  A toy Paillier path exercises additively-homomorphic
+//! score aggregation (see [`crate::crypto::paillier`]).
+
+use crate::biometric::gallery::Gallery;
+use crate::biometric::template::Template;
+use crate::crypto::rotation::RotationKey;
+use crate::crypto::seal::SealKey;
+
+/// Result of a gallery lookup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatchOutcome {
+    pub best_id: String,
+    pub best_score: f32,
+    /// Rank-ordered (id, score) of the top-k.
+    pub topk: Vec<(String, f32)>,
+}
+
+/// The storage cartridge's online state.
+#[derive(Debug, Clone)]
+pub struct StorageCartridge {
+    pub uid: u64,
+    /// Rotated (protected) gallery — plaintext templates never stored.
+    gallery_rot: Gallery,
+    rotation: RotationKey,
+    seal: SealKey,
+    /// Service latency per match, us (drives the virtual clock).
+    pub match_us: u64,
+}
+
+impl StorageCartridge {
+    /// Enroll a plaintext gallery: rotate every template, keep only the
+    /// protected form.
+    pub fn enroll(uid: u64, plaintext: &Gallery, rotation: RotationKey, seal: SealKey) -> Self {
+        let mut gallery_rot = Gallery::new(plaintext.dim());
+        for (id, t) in plaintext.iter() {
+            gallery_rot.add(id.clone(), rotation.apply(t));
+        }
+        StorageCartridge { uid, gallery_rot, rotation, seal, match_us: 2_000 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.gallery_rot.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gallery_rot.len() == 0
+    }
+
+    /// Match a plaintext probe: rotate it on-cartridge, score against the
+    /// protected gallery.  Scores equal plaintext cosine (rotation is
+    /// orthogonal), but no plaintext template is touched.
+    pub fn match_probe(&self, probe: &Template, k: usize) -> Option<MatchOutcome> {
+        let probe_rot = self.rotation.apply(probe);
+        let mut scored: Vec<(String, f32)> = self
+            .gallery_rot
+            .iter()
+            .map(|(id, t)| (id.clone(), probe_rot.cosine(t)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let best = scored.first()?.clone();
+        Some(MatchOutcome { best_id: best.0, best_score: best.1, topk: scored.into_iter().take(k).collect() })
+    }
+
+    /// Serialize the protected gallery sealed for flash storage.
+    pub fn sealed_blob(&self) -> Vec<u8> {
+        let mut plain = Vec::new();
+        for (id, t) in self.gallery_rot.iter() {
+            plain.extend_from_slice(&(id.len() as u32).to_le_bytes());
+            plain.extend_from_slice(id.as_bytes());
+            for v in t.as_slice() {
+                plain.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        self.seal.seal(&plain)
+    }
+
+    /// Restore from a sealed blob (MAC-checked).
+    pub fn unseal_gallery(blob: &[u8], seal: &SealKey, dim: usize) -> anyhow::Result<Gallery> {
+        let plain = seal.unseal(blob)?;
+        let mut g = Gallery::new(dim);
+        let mut i = 0usize;
+        while i < plain.len() {
+            let n = u32::from_le_bytes(plain[i..i + 4].try_into()?) as usize;
+            i += 4;
+            let id = String::from_utf8(plain[i..i + n].to_vec())?;
+            i += n;
+            let mut vals = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                vals.push(f32::from_le_bytes(plain[i..i + 4].try_into()?));
+                i += 4;
+            }
+            g.add(id, Template::new(vals));
+        }
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize) -> (Gallery, StorageCartridge) {
+        let mut rng = Rng::new(7);
+        let mut g = Gallery::new(64);
+        for i in 0..n {
+            g.add(format!("id{i}"), Template::new(rng.unit_vec(64)));
+        }
+        let rot = RotationKey::generate(64, 99);
+        let seal = SealKey::from_passphrase("champ-test");
+        let sc = StorageCartridge::enroll(50, &g, rot, seal);
+        (g, sc)
+    }
+
+    #[test]
+    fn planted_probe_matches_itself() {
+        let (g, sc) = setup(50);
+        let probe = g.get("id7").unwrap().clone();
+        let out = sc.match_probe(&probe, 3).unwrap();
+        assert_eq!(out.best_id, "id7");
+        assert!((out.best_score - 1.0).abs() < 1e-4);
+        assert_eq!(out.topk.len(), 3);
+    }
+
+    #[test]
+    fn noisy_probe_still_rank1() {
+        let (g, sc) = setup(100);
+        let mut rng = Rng::new(1);
+        let base = g.get("id3").unwrap().clone();
+        let noisy: Vec<f32> = base.as_slice().iter().map(|v| v + 0.05 * rng.normal()).collect();
+        let out = sc.match_probe(&Template::new(noisy), 1).unwrap();
+        assert_eq!(out.best_id, "id3");
+    }
+
+    #[test]
+    fn protected_scores_equal_plaintext_scores() {
+        let (g, sc) = setup(30);
+        let probe = g.get("id11").unwrap().clone();
+        let out = sc.match_probe(&probe, 30).unwrap();
+        for (id, s) in &out.topk {
+            let plain = probe.cosine(g.get(id).unwrap());
+            assert!((plain - s).abs() < 1e-4, "{id}: {plain} vs {s}");
+        }
+    }
+
+    #[test]
+    fn sealed_blob_roundtrips_and_authenticates() {
+        let (_, sc) = setup(10);
+        let blob = sc.sealed_blob();
+        let seal = SealKey::from_passphrase("champ-test");
+        let g = StorageCartridge::unseal_gallery(&blob, &seal, 64).unwrap();
+        assert_eq!(g.len(), 10);
+        // Tampering must be detected.
+        let mut bad = blob.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        assert!(StorageCartridge::unseal_gallery(&bad, &seal, 64).is_err());
+    }
+
+    #[test]
+    fn empty_gallery_matches_nothing() {
+        let g = Gallery::new(64);
+        let sc = StorageCartridge::enroll(
+            1, &g, RotationKey::generate(64, 1), SealKey::from_passphrase("x"));
+        assert!(sc.match_probe(&Template::new(vec![0.0; 64]), 1).is_none());
+    }
+}

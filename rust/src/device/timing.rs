@@ -1,0 +1,216 @@
+//! Calibrated device profiles — the constants behind Table 1.
+//!
+//! We do not have the authors' testbed, so per-device service times and
+//! host-stack costs are *fitted* to the single-device throughput the paper
+//! reports (NCS2: 15 FPS, Coral: 25 FPS for MobileNetV2 at 300x300) and to
+//! the decline shape of Table 1.  The decomposition is mechanistic, not a
+//! curve: in the broadcast experiment the steady-state frame period is
+//!
+//! ```text
+//! period(N) = t_infer + t_wire_fill + N * h(N) + t_result
+//! h(N)      = host_txn_us * (1 + host_contention * (N - 1))
+//! ```
+//!
+//! which emerges from the resource reservations in the scheduler (host
+//! submissions serialize; wire hides behind host for these frame sizes;
+//! compute overlaps across devices).  The quadratic host term is the
+//! "host CPU utilization increased with more devices" effect from §4.1 —
+//! OpenVINO's per-URB work inflates sharply under thread contention, the
+//! Edge TPU's leaner stack much less.
+//!
+//! | N | paper NCS2 | model NCS2 | paper Coral | model Coral |
+//! |---|-----------|------------|-------------|-------------|
+//! | 1 | 15        | 15.0       | 25          | 25.1        |
+//! | 2 | 13        | 12.6       | 22          | 21.8        |
+//! | 3 | 10        | 10.0       | 19          | 19.1        |
+//! | 4 | 8         | 7.7        | 17          | 16.9        |
+//! | 5 | 6         | 6.0        | 15          | 15.0        |
+
+/// Calibrated timing + power profile for one cartridge family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    /// On-device inference time for the cartridge's network, us.
+    pub t_infer_us: u64,
+    /// Input tensor bytes shipped per frame (fp16 for NCS2, int8 for Coral).
+    pub input_bytes: u64,
+    /// Result bytes returned per frame.
+    pub output_bytes: u64,
+    /// Host driver cost per transaction at 1 device, us.
+    pub host_txn_us: f64,
+    /// Per-additional-device inflation of the host cost (see module doc).
+    pub host_contention: f64,
+    /// Model (re)load after hot-insert: artifact push + on-device compile.
+    pub model_load_us: u64,
+    /// Active power draw, watts.
+    pub active_w: f64,
+    /// Idle power draw, watts.
+    pub idle_w: f64,
+}
+
+impl DeviceProfile {
+    /// Intel NCS2 running MobileNetV2 via the NCSDK port.
+    /// fp16 300x300x3 input = 540 kB.
+    pub fn ncs2() -> Self {
+        DeviceProfile {
+            t_infer_us: 60_400,
+            input_bytes: 540_000,
+            output_bytes: 8_000,
+            host_txn_us: 4_170.0,
+            host_contention: 1.0,
+            model_load_us: 1_500_000,
+            active_w: 1.8,
+            idle_w: 0.35,
+        }
+    }
+
+    /// Google Coral USB running the quantized MobileNetV2 from the
+    /// TF DeepLab quantization guide.  int8 300x300x3 input = 270 kB.
+    pub fn coral() -> Self {
+        DeviceProfile {
+            t_infer_us: 33_200,
+            input_bytes: 270_000,
+            output_bytes: 4_000,
+            host_txn_us: 5_730.0,
+            host_contention: 0.033,
+            model_load_us: 1_200_000,
+            active_w: 2.0,
+            idle_w: 0.5,
+        }
+    }
+
+    /// Generic FPGA cartridge (the envisioned production module): DPR
+    /// bitstream swap instead of model upload, slightly faster inference.
+    pub fn fpga() -> Self {
+        DeviceProfile {
+            t_infer_us: 25_000,
+            input_bytes: 270_000,
+            output_bytes: 4_000,
+            host_txn_us: 2_000.0,
+            host_contention: 0.1,
+            model_load_us: 3_000_000, // partial-reconfiguration bitstream
+            active_w: 4.0,
+            idle_w: 1.0,
+        }
+    }
+
+    /// Storage/database cartridge: lookups, not inference.
+    pub fn storage() -> Self {
+        DeviceProfile {
+            t_infer_us: 2_000, // encrypted gallery match latency
+            input_bytes: 512,  // one template
+            output_bytes: 64,  // match result
+            host_txn_us: 500.0,
+            host_contention: 0.0,
+            model_load_us: 200_000,
+            active_w: 1.2,
+            idle_w: 0.2,
+        }
+    }
+
+    /// Host cost per transaction with `n` devices managed.
+    pub fn host_time_us(&self, n: usize) -> u64 {
+        let infl = 1.0 + self.host_contention * n.saturating_sub(1) as f64;
+        (self.host_txn_us * infl).round() as u64
+    }
+}
+
+/// Host (orchestrator board) power profile — Jetson-class module.
+#[derive(Debug, Clone, Copy)]
+pub struct HostProfile {
+    pub base_w: f64,
+    /// Extra host power per actively-managed device (USB + CPU threads).
+    pub per_device_w: f64,
+}
+
+impl HostProfile {
+    pub fn orin() -> Self {
+        HostProfile { base_w: 2.2, per_device_w: 0.12 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coral_is_faster_than_ncs2() {
+        assert!(DeviceProfile::coral().t_infer_us < DeviceProfile::ncs2().t_infer_us);
+    }
+
+    #[test]
+    fn ncs2_host_cost_scales_linearly_per_txn() {
+        let p = DeviceProfile::ncs2();
+        assert_eq!(p.host_time_us(1), 4_170);
+        assert_eq!(p.host_time_us(2), 8_340);  // contention=1.0 doubles it
+        assert_eq!(p.host_time_us(5), 20_850);
+    }
+
+    #[test]
+    fn coral_host_cost_nearly_flat() {
+        let p = DeviceProfile::coral();
+        let h1 = p.host_time_us(1);
+        let h5 = p.host_time_us(5);
+        assert!((h5 as f64) < 1.2 * h1 as f64, "{h1} vs {h5}");
+    }
+
+    #[test]
+    fn power_states_ordered() {
+        for p in [DeviceProfile::ncs2(), DeviceProfile::coral(), DeviceProfile::fpga()] {
+            assert!(p.active_w > p.idle_w);
+        }
+    }
+
+    #[test]
+    fn single_device_period_matches_paper_fps() {
+        // period(1) = t_infer + wire_fill + host + result ≈ 1/15 s (NCS2).
+        let p = DeviceProfile::ncs2();
+        let wire = crate::bus::BusProfile::usb3_gen1().wire_time_us(p.input_bytes);
+        let period = p.t_infer_us + wire + p.host_time_us(1);
+        let fps = 1e6 / period as f64;
+        assert!((14.3..15.7).contains(&fps), "NCS2 single-device fps {fps}");
+
+        let c = DeviceProfile::coral();
+        let wire = crate::bus::BusProfile::usb3_gen1().wire_time_us(c.input_bytes);
+        let period = c.t_infer_us + wire + c.host_time_us(1);
+        let fps = 1e6 / period as f64;
+        assert!((24.3..25.7).contains(&fps), "Coral single-device fps {fps}");
+    }
+}
+
+/// Per-(device, model) service time, us.  The MobileNetV2 numbers are the
+/// Table-1 calibration; the face-task numbers come from the paper's §4.2
+/// ("if each stick had a 30 ms latency for its task").
+pub fn service_time_us(kind: crate::device::DeviceKind, model: &str) -> u64 {
+    use crate::device::DeviceKind as K;
+    let base: u64 = match model {
+        "mobilenet_v2_det" | "mobilenet_v2_det_int8" => 60_400,
+        "retinaface_det" => 30_000,
+        "crfiqa_quality" => 30_000,
+        "facenet_embed" => 30_000,
+        "gaitset_embed" => 35_000,
+        "gallery_match" | "secure_gallery_match" => 2_000,
+        _ => 30_000,
+    };
+    // Relative speed of the silicon vs the NCS2 reference.
+    let scale = match kind {
+        K::Ncs2 => 1.0,
+        K::Coral => 0.55,
+        K::Fpga => 0.45,
+        K::Storage => 1.0,
+    };
+    ((base as f64) * scale).round() as u64
+}
+
+/// Streaming-mode handoff cost between pipeline stages (the gRPC-like
+/// message passing path of §4.2 — "extremely fast", ~1.2 ms/hop), as
+/// opposed to the heavyweight per-device async-inference URB path that the
+/// broadcast experiment stresses.
+pub fn stream_handoff_us(kind: crate::device::DeviceKind) -> u64 {
+    use crate::device::DeviceKind as K;
+    match kind {
+        K::Ncs2 => 1_200,
+        K::Coral => 1_000,
+        K::Fpga => 500,
+        K::Storage => 400,
+    }
+}

@@ -1,0 +1,45 @@
+//! # CHAMP — Configurable Hot-swappable Architecture for Machine Perception
+//!
+//! Reproduction of the CS.DC 2025 paper (Brogan, Yohe, Cornett — ORNL).
+//!
+//! CHAMP is an edge AI platform: an orchestrator compute module drives a
+//! multi-drop USB3 bus populated with hot-swappable **capability
+//! cartridges** (accelerator sticks running one network each, plus a
+//! storage cartridge holding an encrypted biometric gallery).  The VDiSK
+//! orchestration layer enumerates cartridges, builds a pipeline in slot
+//! order, routes pub/sub messages between stages, and survives hot-swap
+//! events without losing frames.
+//!
+//! ## Crate layout (three-layer architecture)
+//!
+//! * [`coordinator`] — Layer 3, the paper's contribution: the VDiSK fork
+//!   (registry, pipeline, router, flow control, hot-swap, health, UI export).
+//! * [`runtime`] — PJRT executor: loads the AOT artifacts produced by the
+//!   Python build path (`make artifacts`) and runs them on the request path.
+//! * [`bus`], [`device`] — substrates we do not have hardware for: a
+//!   discrete-event USB3 bus simulator and calibrated NCS2/Coral/FPGA
+//!   cartridge models (see DESIGN.md §Substitutions).
+//! * [`biometric`], [`crypto`] — template galleries, cosine matching, and
+//!   the template-protection schemes (orthogonal rotation + toy Paillier).
+//! * [`power`], [`workload`], [`metrics`], [`config`], [`json`], [`cli`],
+//!   [`util`] — supporting systems.
+//!
+//! Python never runs on the request path: artifacts are compiled once by
+//! `make artifacts` and the `champd` binary is self-contained afterwards.
+
+pub mod biometric;
+pub mod bus;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod crypto;
+pub mod device;
+pub mod json;
+pub mod metrics;
+pub mod power;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,195 @@
+//! champd — the CHAMP leader binary.
+//!
+//! Subcommands:
+//!   run              pipelined run from a config (default config if none)
+//!   sweep            Table-1 broadcast scaling sweep (--kind ncs2|coral)
+//!   hotswap          the §4.2 hot-swap experiment
+//!   power            §4.3 power report over the Table-1 sweep
+//!   export-workflow  dump the ComfyUI-style graph for the live pipeline
+//!   check-artifacts  compile every artifact and run a smoke inference
+//!
+//! `--help` prints this.
+
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::cli;
+use champ::config::SystemConfig;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::coordinator::ui;
+use champ::device::caps::CapDescriptor;
+use champ::device::{Cartridge, DeviceKind};
+use champ::power::PowerModel;
+use champ::runtime::{ExecutorPool, Manifest};
+use champ::workload::traces::MissionTrace;
+use champ::workload::video::VideoSource;
+
+const HELP: &str = "\
+champd — CHAMP orchestrator (paper reproduction)
+
+USAGE: champd <subcommand> [flags]
+
+  run [config.json] [--frames N] [--real-compute]
+  sweep --kind ncs2|coral [--max-devices N] [--frames N]
+  hotswap [--fps F]
+  power [--kind ncs2|coral]
+  export-workflow [config.json]
+  check-artifacts [--dir artifacts]
+";
+
+fn kind_from(name: &str) -> anyhow::Result<DeviceKind> {
+    match name {
+        "ncs2" => Ok(DeviceKind::Ncs2),
+        "coral" => Ok(DeviceKind::Coral),
+        "fpga" => Ok(DeviceKind::Fpga),
+        other => anyhow::bail!("unknown device kind {other:?}"),
+    }
+}
+
+fn cap_from(name: &str) -> anyhow::Result<CapDescriptor> {
+    Ok(match name {
+        "object-detect" => CapDescriptor::object_detect(),
+        "face-detect" => CapDescriptor::face_detect(),
+        "face-quality" => CapDescriptor::face_quality(),
+        "face-embed" => CapDescriptor::face_embed(),
+        "gait-embed" => CapDescriptor::gait_embed(),
+        "database" => CapDescriptor::database(),
+        other => anyhow::bail!("unknown capability {other:?}"),
+    })
+}
+
+fn orchestrator_from_config(cfg: &SystemConfig) -> anyhow::Result<Orchestrator> {
+    let mut o = Orchestrator::new(cfg.bus, cfg.n_slots);
+    for s in &cfg.slots {
+        let kind = if s.kind == "storage" { DeviceKind::Storage } else { kind_from(&s.kind)? };
+        let cart = Cartridge::new(0, kind, cap_from(&s.capability)?);
+        o.plug(SlotId(s.slot), cart)?;
+    }
+    Ok(o)
+}
+
+fn cmd_run(args: &cli::Args) -> anyhow::Result<()> {
+    let cfg = match args.positional.first() {
+        Some(p) => SystemConfig::load(p)?,
+        None => SystemConfig::default(),
+    };
+    let mut o = orchestrator_from_config(&cfg)?;
+    let frames = args.flag_u64("frames", cfg.frames);
+    let mut src = VideoSource::paper_stream(cfg.seed).with_rate_fps(args.flag_f64("fps", 8.0));
+    let rep = o.run_pipelined(&mut src, frames, vec![]);
+    println!("pipeline: {} stages", o.pipeline.len());
+    println!("frames   : {} in / {} out / {} dropped", rep.frames_in, rep.frames_out, rep.frames_dropped);
+    println!("fps      : {:.2}", rep.fps);
+    println!("latency  : mean {:.1} ms, p99 {:.1} ms",
+        rep.latency.mean_us() / 1e3, rep.latency.percentile_us(99.0) as f64 / 1e3);
+    println!("overhead : {:.1}% over pure compute",
+        (rep.latency.mean_us() / rep.compute_us_mean - 1.0) * 100.0);
+    println!("bus      : wire {:.1}% host {:.1}%",
+        rep.wire_utilization * 100.0, rep.host_utilization * 100.0);
+    Ok(())
+}
+
+fn cmd_sweep(args: &cli::Args) -> anyhow::Result<()> {
+    let kind = kind_from(args.flag("kind").unwrap_or("ncs2"))?;
+    let max = args.flag_u64("max-devices", 5) as usize;
+    let frames = args.flag_u64("frames", 60);
+    println!("# of Modules | FPS ({})", args.flag("kind").unwrap_or("ncs2"));
+    for n in 1..=max {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), max.max(6));
+        for i in 0..n {
+            o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))?;
+        }
+        let mut src = VideoSource::paper_stream(7);
+        let rep = o.run_broadcast(&mut src, frames);
+        println!("{n:12} | {:.1}", rep.fps);
+    }
+    Ok(())
+}
+
+fn cmd_hotswap(args: &cli::Args) -> anyhow::Result<()> {
+    let fps = args.flag_f64("fps", 8.0);
+    let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+    o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))?;
+    let quality_uid =
+        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))?;
+    o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed()))?;
+
+    let trace = MissionTrace::hotswap_experiment();
+    let events = trace.to_hotplug_events(quality_uid);
+    let total_frames = (trace.total_run_us() as f64 / 1e6 * fps) as u64;
+    let mut src = VideoSource::paper_stream(3).with_rate_fps(fps);
+    let rep = o.run_pipelined(&mut src, total_frames, events);
+
+    println!("frames: {} in / {} out / {} dropped", rep.frames_in, rep.frames_out, rep.frames_dropped);
+    println!("max buffered during pause: {}", rep.max_buffered);
+    for r in &rep.swap_records {
+        println!("{:?} slot {}: downtime {:.2} s ({:?})",
+            r.kind, r.slot.0, r.downtime_us() as f64 / 1e6, r.action);
+    }
+    Ok(())
+}
+
+fn cmd_power(args: &cli::Args) -> anyhow::Result<()> {
+    let kind = kind_from(args.flag("kind").unwrap_or("ncs2"))?;
+    let pm = PowerModel::default();
+    println!("devices | device W | host W | total W | frames/J");
+    for n in 1..=5 {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        for i in 0..n {
+            o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))?;
+        }
+        let mut src = VideoSource::paper_stream(7);
+        let rep = o.run_broadcast(&mut src, 60);
+        let p = pm.report(&o.device_busy(), rep.elapsed_us, rep.frames_out);
+        println!("{n:7} | {:8.2} | {:6.2} | {:7.2} | {:.3}",
+            p.device_w, p.host_w, p.total_w, p.frames_per_joule);
+    }
+    println!("GPU baseline: {:.0} W", PowerModel::gpu_baseline_w());
+    Ok(())
+}
+
+fn cmd_export_workflow(args: &cli::Args) -> anyhow::Result<()> {
+    let cfg = match args.positional.first() {
+        Some(p) => SystemConfig::load(p)?,
+        None => SystemConfig::default(),
+    };
+    let o = orchestrator_from_config(&cfg)?;
+    println!("{}", ui::export_workflow(&o.pipeline, "CHAMP live pipeline").to_json_pretty());
+    Ok(())
+}
+
+fn cmd_check_artifacts(args: &cli::Args) -> anyhow::Result<()> {
+    let dir = args.flag("dir").unwrap_or("artifacts").to_string();
+    let manifest = Manifest::load(&dir)?;
+    let pool = ExecutorPool::new(manifest)?;
+    let names: Vec<String> = pool.manifest().models.iter().map(|m| m.name.clone()).collect();
+    for name in names {
+        let exe = pool.get(&name)?;
+        let inputs: Vec<Vec<f32>> =
+            exe.meta.inputs.iter().map(|s| vec![0.1f32; s.elements()]).collect();
+        let outs = exe.run_f32(&inputs)?;
+        println!("{name}: OK ({} outputs, first len {})", outs.len(),
+            outs.first().map(|o| o.len()).unwrap_or(0));
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::parse_args(std::env::args().skip(1));
+    if args.switch("help") || args.subcommand.is_none() {
+        print!("{HELP}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "hotswap" => cmd_hotswap(&args),
+        "power" => cmd_power(&args),
+        "export-workflow" => cmd_export_workflow(&args),
+        "check-artifacts" => cmd_check_artifacts(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print!("{HELP}");
+            std::process::exit(2);
+        }
+    }
+}

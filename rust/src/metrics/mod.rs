@@ -1,0 +1,173 @@
+//! Runtime metrics: counters, FPS meters, latency histograms.
+//!
+//! Everything works in *virtual* microseconds so the same instrumentation
+//! serves both simulated (discrete-event) and wall-clock runs.
+
+/// A monotonically increasing counter.
+#[derive(Default, Debug, Clone)]
+pub struct Counter {
+    n: u64,
+}
+
+impl Counter {
+    pub fn inc(&mut self) {
+        self.n += 1;
+    }
+    pub fn add(&mut self, k: u64) {
+        self.n += k;
+    }
+    pub fn get(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Frames-per-second meter over virtual time.
+#[derive(Default, Debug, Clone)]
+pub struct FpsMeter {
+    frames: u64,
+    start_us: Option<u64>,
+    end_us: u64,
+}
+
+impl FpsMeter {
+    pub fn record(&mut self, now_us: u64) {
+        if self.start_us.is_none() {
+            self.start_us = Some(now_us);
+        }
+        self.frames += 1;
+        self.end_us = self.end_us.max(now_us);
+    }
+
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    /// Average FPS over the observed span (frames-1 intervals).
+    pub fn fps(&self) -> f64 {
+        match self.start_us {
+            Some(s) if self.frames > 1 && self.end_us > s => {
+                (self.frames - 1) as f64 * 1e6 / (self.end_us - s) as f64
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// Log-bucketed latency histogram (1us .. ~1000s), plus exact min/max/sum.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: vec![0; 64], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += us;
+        self.min = self.min.min(us);
+        self.max = self.max.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum as f64 / self.count as f64 }
+    }
+
+    pub fn min_us(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate percentile from the log buckets (upper bound of bucket).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target.max(1) {
+                return 1u64 << i;
+            }
+        }
+        self.max
+    }
+}
+
+/// A named bundle of the above, one per pipeline stage / experiment.
+#[derive(Default, Debug, Clone)]
+pub struct StageMetrics {
+    pub processed: Counter,
+    pub dropped: Counter,
+    pub latency: Histogram,
+    pub fps: FpsMeter,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let mut c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn fps_meter_computes_rate() {
+        let mut m = FpsMeter::default();
+        // 11 frames, one every 100ms -> 10 intervals over 1s -> 10 FPS.
+        for i in 0..11u64 {
+            m.record(i * 100_000);
+        }
+        assert!((m.fps() - 10.0).abs() < 1e-9, "{}", m.fps());
+    }
+
+    #[test]
+    fn fps_meter_single_frame_is_zero() {
+        let mut m = FpsMeter::default();
+        m.record(5);
+        assert_eq!(m.fps(), 0.0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::default();
+        for v in [100, 200, 400, 800] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min_us(), 100);
+        assert_eq!(h.max_us(), 800);
+        assert!((h.mean_us() - 375.0).abs() < 1e-9);
+        assert!(h.percentile_us(50.0) >= 200);
+        assert!(h.percentile_us(100.0) >= 800);
+    }
+
+    #[test]
+    fn histogram_empty_safe() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile_us(99.0), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+}

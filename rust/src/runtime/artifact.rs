@@ -1,0 +1,147 @@
+//! Artifact manifest: what the Python AOT step produced.
+
+use std::path::{Path, PathBuf};
+
+use crate::json::{parse, Value};
+
+/// Shape+dtype of one tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = v
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("f32")
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One compiled model's metadata.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub description: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub hlo_bytes: u64,
+}
+
+/// The whole artifacts/ directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = parse(&text)?;
+        let mut models = Vec::new();
+        for m in v
+            .get("models")
+            .and_then(|m| m.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing models[]"))?
+        {
+            let name = m
+                .get("name")
+                .and_then(|s| s.as_str())
+                .ok_or_else(|| anyhow::anyhow!("model missing name"))?
+                .to_string();
+            let file = dir.join(m.get("file").and_then(|s| s.as_str()).unwrap_or(""));
+            let inputs = m
+                .get("inputs")
+                .and_then(|a| a.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = m
+                .get("outputs")
+                .and_then(|a| a.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            models.push(ModelMeta {
+                name,
+                description: m
+                    .get("description")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                file,
+                inputs,
+                outputs,
+                hlo_bytes: m.get("hlo_bytes").and_then(|n| n.as_u64()).unwrap_or(0),
+            });
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelMeta> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        // Allow override for tests / deployments.
+        std::env::var("CHAMP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.len() >= 7, "expected the full zoo");
+        let fe = m.model("facenet_embed").unwrap();
+        assert_eq!(fe.inputs[0].shape, vec![64, 64, 3]);
+        assert_eq!(fe.outputs[0].shape, vec![128]);
+        assert!(fe.file.exists());
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { shape: vec![6, 6, 96], dtype: "f32".into() };
+        assert_eq!(t.elements(), 3456);
+        let scalar = TensorSpec { shape: vec![], dtype: "f32".into() };
+        assert_eq!(scalar.elements(), 1);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load("/nonexistent/champ").is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! Compile-once / execute-many PJRT wrapper.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::artifact::{Manifest, ModelMeta};
+
+/// A compiled model ready to execute.
+pub struct Executor {
+    pub meta: ModelMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Load + compile one artifact on the given client.
+    pub fn compile(client: &xla::PjRtClient, meta: &ModelMeta) -> anyhow::Result<Self> {
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Executor { meta: meta.clone(), exe })
+    }
+
+    /// Execute with flattened f32 inputs (manifest order/shape).  Returns
+    /// flattened f32 outputs; integer outputs are converted to f32.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        self.run_f32_refs(&refs)
+    }
+
+    /// Borrowing variant of [`Executor::run_f32`]: large static operands
+    /// (the match path's gallery and rotation matrices) are passed by
+    /// reference so the caller never clones them per call — the §Perf
+    /// optimization that cut the secure-match path by ~60%.
+    pub fn run_f32_refs(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.meta.inputs.len(),
+            "model {} expects {} inputs, got {}",
+            self.meta.name,
+            self.meta.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, data) in self.meta.inputs.iter().zip(inputs) {
+            anyhow::ensure!(
+                data.len() == spec.elements(),
+                "input size mismatch for {}: want {}, got {}",
+                self.meta.name,
+                spec.elements(),
+                data.len()
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = result.to_tuple()?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.meta.outputs) {
+            let v = match spec.dtype.as_str() {
+                "i32" => lit.to_vec::<i32>()?.into_iter().map(|x| x as f32).collect(),
+                _ => lit.to_vec::<f32>()?,
+            };
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+}
+
+/// Shared pool: one PJRT client, one compiled executable per model, compiled
+/// lazily and cached (model reloads after hot-insert hit the cache).
+pub struct ExecutorPool {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executor>>>,
+}
+
+impl ExecutorPool {
+    pub fn new(manifest: Manifest) -> anyhow::Result<Self> {
+        Ok(ExecutorPool {
+            client: xla::PjRtClient::cpu()?,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Get (compiling if needed) the executor for `model`.
+    pub fn get(&self, model: &str) -> anyhow::Result<Arc<Executor>> {
+        if let Some(e) = self.cache.lock().unwrap().get(model) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .model(model)
+            .ok_or_else(|| anyhow::anyhow!("model {model:?} not in manifest"))?
+            .clone();
+        let exe = Arc::new(Executor::compile(&self.client, &meta)?);
+        self.cache.lock().unwrap().insert(model.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT artifacts and execute them on the request path.
+//!
+//! The Python side (`make artifacts`) lowers every cartridge network to HLO
+//! *text* (see python/compile/aot.py for why text, not serialized protos).
+//! This module compiles those artifacts once on the PJRT CPU client and
+//! executes them with zero Python anywhere near the hot path.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{Manifest, ModelMeta, TensorSpec};
+pub use executor::{Executor, ExecutorPool};

@@ -1,0 +1,46 @@
+//! Minimal property-testing helper (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` seeded random cases and reports the
+//! failing seed so a regression test can pin it.  This gives us the core
+//! proptest workflow (generate -> assert -> reproduce) without the crate.
+
+use super::rng::Rng;
+
+/// Run `prop` for `n` cases seeded 0..n on top of `base_seed`.
+/// Panics with the failing case index on first failure.
+pub fn check<F: FnMut(&mut Rng, u64)>(name: &str, base_seed: u64, n: u64, mut prop: F) {
+    for case in 0..n {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15) ^ case;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed}): {}",
+                e.downcast_ref::<String>().cloned().unwrap_or_else(|| {
+                    e.downcast_ref::<&str>().map(|s| s.to_string())
+                        .unwrap_or_else(|| "<non-string panic>".into())
+                })
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 1, 50, |_, _| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_case() {
+        check("fails", 1, 10, |_, case| assert!(case < 5));
+    }
+}

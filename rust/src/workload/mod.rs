@@ -1,0 +1,15 @@
+//! Workload generators: the synthetic stand-ins for field data.
+//!
+//! The paper's experiments run on live video streams we do not have; these
+//! generators produce deterministic, parameterized equivalents — frame
+//! streams for the bus/throughput experiments, identity datasets for the
+//! biometric accuracy checks, and mission traces (scripted scenario
+//! timelines) for the hot-swap and application demos.
+
+pub mod faces;
+pub mod traces;
+pub mod video;
+
+pub use faces::FaceDataset;
+pub use traces::{MissionTrace, TraceStep};
+pub use video::{Frame, VideoSource};

@@ -1,0 +1,111 @@
+//! Mission traces: scripted scenario timelines for demos & hot-swap tests.
+//!
+//! A trace is the "operator story" from the paper's §5 use cases: run a
+//! pipeline, then at t=X swap cartridge A for B (e.g. debris-detector out,
+//! person-detector in during disaster response).
+
+use crate::bus::hotplug::{HotplugEvent, HotplugKind};
+use crate::bus::topology::SlotId;
+
+/// One step of a mission.
+#[derive(Debug, Clone)]
+pub enum TraceStep {
+    /// Let the pipeline run for this much virtual time.
+    Run { dur_us: u64 },
+    /// Remove the cartridge in `slot`.
+    Remove { slot: SlotId },
+    /// Insert cartridge `uid` into `slot`.
+    Insert { slot: SlotId, uid: u64 },
+}
+
+/// A named scenario.
+#[derive(Debug, Clone)]
+pub struct MissionTrace {
+    pub name: String,
+    pub steps: Vec<TraceStep>,
+}
+
+impl MissionTrace {
+    /// The paper's §4.2 hot-swap experiment: run, yank the middle (quality)
+    /// stage, run degraded, re-insert, run again.
+    pub fn hotswap_experiment() -> Self {
+        MissionTrace {
+            name: "hotswap-4.2".into(),
+            steps: vec![
+                TraceStep::Run { dur_us: 5_000_000 },
+                TraceStep::Remove { slot: SlotId(1) },
+                TraceStep::Run { dur_us: 5_000_000 },
+                TraceStep::Insert { slot: SlotId(1), uid: 0 /* filled by runner */ },
+                TraceStep::Run { dur_us: 5_000_000 },
+            ],
+        }
+    }
+
+    /// Disaster-response scenario (§5): debris detection, then swap to
+    /// person detection when survivors are suspected.
+    pub fn disaster_response() -> Self {
+        MissionTrace {
+            name: "disaster-response".into(),
+            steps: vec![
+                TraceStep::Run { dur_us: 4_000_000 },
+                TraceStep::Remove { slot: SlotId(0) },
+                TraceStep::Insert { slot: SlotId(0), uid: 0 },
+                TraceStep::Run { dur_us: 4_000_000 },
+            ],
+        }
+    }
+
+    /// Convert Remove/Insert steps to a hotplug script with absolute times.
+    pub fn to_hotplug_events(&self, uid_for_insert: u64) -> Vec<HotplugEvent> {
+        let mut t = 0u64;
+        let mut out = Vec::new();
+        for s in &self.steps {
+            match s {
+                TraceStep::Run { dur_us } => t += dur_us,
+                TraceStep::Remove { slot } => {
+                    out.push(HotplugEvent { at_us: t, slot: *slot, kind: HotplugKind::Detach, uid: 0 });
+                }
+                TraceStep::Insert { slot, uid } => {
+                    let u = if *uid == 0 { uid_for_insert } else { *uid };
+                    out.push(HotplugEvent { at_us: t, slot: *slot, kind: HotplugKind::Attach, uid: u });
+                }
+            }
+        }
+        out
+    }
+
+    pub fn total_run_us(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                TraceStep::Run { dur_us } => *dur_us,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hotswap_trace_shape() {
+        let t = MissionTrace::hotswap_experiment();
+        assert_eq!(t.total_run_us(), 15_000_000);
+        let events = t.to_hotplug_events(42);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, HotplugKind::Detach);
+        assert_eq!(events[1].kind, HotplugKind::Attach);
+        assert_eq!(events[1].uid, 42);
+        assert!(events[1].at_us > events[0].at_us);
+    }
+
+    #[test]
+    fn event_times_accumulate_run_durations() {
+        let t = MissionTrace::hotswap_experiment();
+        let events = t.to_hotplug_events(1);
+        assert_eq!(events[0].at_us, 5_000_000);
+        assert_eq!(events[1].at_us, 10_000_000);
+    }
+}

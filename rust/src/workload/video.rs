@@ -1,0 +1,123 @@
+//! Synthetic video source: deterministic frames at a configurable size/rate.
+
+use crate::util::rng::Rng;
+
+/// One camera frame.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub seq: u64,
+    /// Capture timestamp, virtual us.
+    pub ts_us: u64,
+    pub width: usize,
+    pub height: usize,
+    /// Bytes on the bus (RGB8 unless overridden).
+    pub bytes: u64,
+    /// Flattened f32 pixels in [0,1] for real-compute paths; generated
+    /// lazily only at the model's input resolution to keep memory sane.
+    pub pixels: Option<Vec<f32>>,
+}
+
+/// Deterministic frame generator.
+#[derive(Debug, Clone)]
+pub struct VideoSource {
+    pub width: usize,
+    pub height: usize,
+    /// Source frame interval, virtual us (0 = saturating source).
+    pub interval_us: u64,
+    seq: u64,
+    rng: Rng,
+    /// If set, generate pixel data at (h, w, 3) this resolution.
+    pub pixel_res: Option<(usize, usize)>,
+}
+
+impl VideoSource {
+    /// The paper's test stream: 300x300 RGB frames, saturating.
+    pub fn paper_stream(seed: u64) -> Self {
+        VideoSource {
+            width: 300,
+            height: 300,
+            interval_us: 0,
+            seq: 0,
+            rng: Rng::new(seed),
+            pixel_res: None,
+        }
+    }
+
+    pub fn with_rate_fps(mut self, fps: f64) -> Self {
+        self.interval_us = if fps > 0.0 { (1e6 / fps) as u64 } else { 0 };
+        self
+    }
+
+    pub fn with_pixels(mut self, h: usize, w: usize) -> Self {
+        self.pixel_res = Some((h, w));
+        self
+    }
+
+    /// Produce the next frame; `now_us` is when the pipeline asked.
+    /// With a rate limit, the frame timestamp respects the source cadence.
+    pub fn next_frame(&mut self, now_us: u64) -> Frame {
+        let ts = if self.interval_us == 0 { now_us } else { self.seq * self.interval_us };
+        let pixels = self.pixel_res.map(|(h, w)| {
+            (0..h * w * 3).map(|_| self.rng.f32()).collect::<Vec<f32>>()
+        });
+        let f = Frame {
+            seq: self.seq,
+            ts_us: ts.max(now_us.min(ts)),
+            width: self.width,
+            height: self.height,
+            bytes: (self.width * self.height * 3) as u64,
+            pixels,
+        };
+        self.seq += 1;
+        f
+    }
+
+    pub fn frames_emitted(&self) -> u64 {
+        self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_stream_is_300x300_rgb() {
+        let mut v = VideoSource::paper_stream(1);
+        let f = v.next_frame(0);
+        assert_eq!(f.bytes, 270_000);
+        assert!(f.pixels.is_none());
+    }
+
+    #[test]
+    fn sequence_numbers_monotonic() {
+        let mut v = VideoSource::paper_stream(1);
+        let a = v.next_frame(0);
+        let b = v.next_frame(10);
+        assert_eq!(a.seq + 1, b.seq);
+    }
+
+    #[test]
+    fn rate_limited_timestamps() {
+        let mut v = VideoSource::paper_stream(1).with_rate_fps(10.0);
+        v.next_frame(0);
+        let f1 = v.next_frame(0);
+        assert_eq!(f1.ts_us, 100_000);
+    }
+
+    #[test]
+    fn pixels_generated_at_model_res() {
+        let mut v = VideoSource::paper_stream(2).with_pixels(96, 96);
+        let f = v.next_frame(0);
+        let px = f.pixels.unwrap();
+        assert_eq!(px.len(), 96 * 96 * 3);
+        assert!(px.iter().all(|p| (0.0..1.0).contains(p)));
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = VideoSource::paper_stream(7).with_pixels(8, 8);
+        let mut b = VideoSource::paper_stream(7).with_pixels(8, 8);
+        assert_eq!(a.next_frame(0).pixels, b.next_frame(0).pixels);
+    }
+}

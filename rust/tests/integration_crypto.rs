@@ -1,0 +1,74 @@
+//! Integration: the protected-gallery path — keychain, storage cartridge,
+//! sealing, and cross-checking the rust matcher against plaintext truth.
+
+use champ::biometric::matcher::Matcher;
+use champ::biometric::template::Template;
+use champ::crypto::paillier::{dequantize_sum, quantize_score};
+use champ::crypto::KeyChain;
+use champ::device::storage::StorageCartridge;
+use champ::util::rng::Rng;
+use champ::workload::faces::FaceDataset;
+
+#[test]
+fn protected_pipeline_matches_plaintext_decisions() {
+    let data = FaceDataset::generate(200, 2, 128, 0.08, 31);
+    let keys = KeyChain::derive("integration-key", 128);
+    let storage = StorageCartridge::enroll(1, &data.gallery, keys.rotation, keys.seal);
+    let matcher = Matcher::default();
+
+    let mut agree = 0;
+    for (probe, _) in data.probes.iter().take(100) {
+        let plain = matcher.rank(probe, &data.gallery)[0].0.clone();
+        let prot = storage.match_probe(probe, 1).unwrap().best_id;
+        if plain == prot {
+            agree += 1;
+        }
+    }
+    assert_eq!(agree, 100, "protected matching must be decision-identical");
+}
+
+#[test]
+fn sealed_gallery_survives_restart() {
+    let data = FaceDataset::generate(50, 1, 128, 0.05, 32);
+    let keys = KeyChain::derive("restart-key", 128);
+    let storage = StorageCartridge::enroll(1, &data.gallery, keys.rotation, keys.seal);
+    let blob = storage.sealed_blob();
+
+    // "Reboot": derive the same keychain, unseal, verify contents.
+    let keys2 = KeyChain::derive("restart-key", 128);
+    let restored = StorageCartridge::unseal_gallery(&blob, &keys2.seal, 128).unwrap();
+    assert_eq!(restored.len(), 50);
+
+    // Wrong passphrase must fail closed.
+    let bad = KeyChain::derive("wrong-key", 128);
+    assert!(StorageCartridge::unseal_gallery(&blob, &bad.seal, 128).is_err());
+}
+
+#[test]
+fn paillier_aggregates_multi_unit_scores() {
+    // Two CHAMP units report their local best scores encrypted; the
+    // command post aggregates without seeing individual scores.
+    let keys = KeyChain::derive("agg-key", 128);
+    let mut rng = Rng::new(7);
+    let scores = [0.91f32, 0.37f32, 0.78f32];
+    let cts: Vec<_> = scores
+        .iter()
+        .map(|s| keys.paillier.pk.encrypt(quantize_score(*s), &mut rng))
+        .collect();
+    let sum_ct = cts[1..].iter().fold(cts[0], |a, c| keys.paillier.pk.add(a, *c));
+    let total = dequantize_sum(keys.paillier.decrypt(sum_ct), scores.len() as u64);
+    let want: f32 = scores.iter().sum();
+    assert!((total - want).abs() < 1e-2, "{total} vs {want}");
+}
+
+#[test]
+fn rotation_hides_but_preserves_geometry() {
+    let mut rng = Rng::new(9);
+    let keys = KeyChain::derive("geom-key", 64);
+    let a = Template::new(rng.unit_vec(64));
+    let b = Template::new(rng.unit_vec(64));
+    let (ra, rb) = (keys.rotation.apply(&a), keys.rotation.apply(&b));
+    assert!((a.cosine(&b) - ra.cosine(&rb)).abs() < 1e-3);
+    // The rotated template is far from the original.
+    assert!(a.cosine(&ra).abs() < 0.9);
+}

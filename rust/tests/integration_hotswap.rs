@@ -1,0 +1,83 @@
+//! Integration: §4.2 hot-swap through the full orchestrator + bus stack.
+
+use champ::bus::hotplug::{HotplugEvent, HotplugKind};
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::hotswap::SwapAction;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::{Cartridge, DeviceKind};
+use champ::workload::traces::MissionTrace;
+use champ::workload::video::VideoSource;
+
+fn face_rig() -> (Orchestrator, u64) {
+    let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+    o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+    let q = o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
+    o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
+    (o, q)
+}
+
+#[test]
+fn quality_swap_no_frame_loss_and_paper_downtimes() {
+    let (mut o, q) = face_rig();
+    let trace = MissionTrace::hotswap_experiment();
+    let events = trace.to_hotplug_events(q);
+    let fps = 8.0;
+    let frames = (trace.total_run_us() as f64 / 1e6 * fps) as u64;
+    let mut src = VideoSource::paper_stream(5).with_rate_fps(fps);
+    let rep = o.run_pipelined(&mut src, frames, events);
+
+    assert_eq!(rep.frames_dropped, 0);
+    assert_eq!(rep.swap_records.len(), 2);
+    let remove = &rep.swap_records[0];
+    let reinsert = &rep.swap_records[1];
+    assert_eq!(remove.action, SwapAction::Bridged);
+    assert!((300_000..700_000).contains(&remove.downtime_us()));
+    assert!((1_500_000..2_500_000).contains(&reinsert.downtime_us()));
+    // Pipeline restored to 3 stages.
+    assert_eq!(o.pipeline.len(), 3);
+    assert!(rep.max_buffered > 0, "frames must have buffered during the pause");
+}
+
+#[test]
+fn removing_embedder_halts_until_reinserted() {
+    let (mut o, _) = face_rig();
+    let embed_uid = o.pipeline.stages[2].uid;
+    let events = vec![
+        HotplugEvent { at_us: 2_000_000, slot: SlotId(2), kind: HotplugKind::Detach, uid: 0 },
+        HotplugEvent { at_us: 6_000_000, slot: SlotId(2), kind: HotplugKind::Attach, uid: embed_uid },
+    ];
+    let mut src = VideoSource::paper_stream(5).with_rate_fps(8.0);
+    let rep = o.run_pipelined(&mut src, 80, events);
+    assert_eq!(rep.frames_dropped, 0, "halt buffers, reinsert drains");
+    let halt = &rep.swap_records[0];
+    assert_eq!(halt.action, SwapAction::HaltedMissingStage);
+    assert!(halt.resumed_us < u64::MAX, "halt must resolve after re-insert");
+    assert_eq!(o.pipeline.len(), 3);
+}
+
+#[test]
+fn removing_embedder_without_rescue_drops_frames() {
+    let (mut o, _) = face_rig();
+    let events = vec![HotplugEvent {
+        at_us: 2_000_000, slot: SlotId(2), kind: HotplugKind::Detach, uid: 0,
+    }];
+    let mut src = VideoSource::paper_stream(5).with_rate_fps(8.0);
+    let rep = o.run_pipelined(&mut src, 60, events);
+    assert!(rep.frames_dropped > 0, "no operator rescue -> capability lost");
+    assert!(rep.frames_out > 0, "frames before the halt still processed");
+}
+
+#[test]
+fn swap_during_run_keeps_health_registry_consistent() {
+    let (mut o, q) = face_rig();
+    let trace = MissionTrace::hotswap_experiment();
+    let events = trace.to_hotplug_events(q);
+    let frames = 120;
+    let mut src = VideoSource::paper_stream(5).with_rate_fps(8.0);
+    let _ = o.run_pipelined(&mut src, frames, events);
+    assert_eq!(o.registry.len(), 3);
+    assert_eq!(o.topology.occupied().len(), 3);
+    assert_eq!(o.carts.len(), 3);
+}

@@ -1,0 +1,59 @@
+//! Integration: two CHAMP units chained over GbE (paper §3.1).
+
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::link::UnitLink;
+use champ::coordinator::pipeline::{Pipeline, Stage};
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::{Cartridge, DeviceKind};
+use champ::workload::video::VideoSource;
+
+fn unit_a() -> Orchestrator {
+    let mut a = Orchestrator::new(BusProfile::usb3_gen1(), 4);
+    a.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+    a.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
+    a
+}
+
+fn unit_b() -> Orchestrator {
+    let mut b = Orchestrator::new(BusProfile::usb3_gen1(), 4);
+    let cart = Cartridge::new(1, DeviceKind::Ncs2, CapDescriptor::face_embed());
+    b.topology.insert(SlotId(0), 1).unwrap();
+    b.registry.register(1, SlotId(0), cart.cap.clone(), 0);
+    b.pipeline = Pipeline { stages: vec![Stage { uid: 1, cap: cart.cap.clone() }] };
+    b.carts.insert(1, cart);
+    b
+}
+
+#[test]
+fn split_pipeline_latency_close_to_single_unit() {
+    // Single-unit 3-stage baseline.
+    let mut single = unit_a();
+    single
+        .plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed()))
+        .unwrap();
+    let mut src = VideoSource::paper_stream(3).with_rate_fps(6.0);
+    let base = single.run_pipelined(&mut src, 40, vec![]);
+
+    // Split across two units.
+    let (mut a, mut b) = (unit_a(), unit_b());
+    let mut link = UnitLink::gbe();
+    let mut src2 = VideoSource::paper_stream(3).with_rate_fps(6.0);
+    let split = link.run_split(&mut a, &mut b, &mut src2, 40).unwrap();
+
+    let base_ms = base.latency.mean_us() / 1e3;
+    let split_ms = split.latency.mean_us() / 1e3;
+    assert!(split_ms > base_ms, "link crossing must add latency");
+    assert!(split_ms - base_ms < 5.0,
+        "GbE crossing should cost ~ms, got {:.1} vs {:.1}", split_ms, base_ms);
+}
+
+#[test]
+fn link_throughput_tracks_source_rate() {
+    let (mut a, mut b) = (unit_a(), unit_b());
+    let mut link = UnitLink::gbe();
+    let mut src = VideoSource::paper_stream(3).with_rate_fps(6.0);
+    let rep = link.run_split(&mut a, &mut b, &mut src, 60).unwrap();
+    assert!((rep.fps - 6.0).abs() < 0.5, "fps {}", rep.fps);
+}

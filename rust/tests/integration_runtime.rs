@@ -1,0 +1,82 @@
+//! Integration: the PJRT runtime against the built artifacts.
+//!
+//! These tests require `make artifacts`; they skip (cleanly) otherwise so
+//! `cargo test` stays green on a fresh checkout.
+
+use champ::biometric::gallery::Gallery;
+use champ::biometric::matcher::Matcher;
+use champ::biometric::template::Template;
+use champ::runtime::{ExecutorPool, Manifest};
+use champ::util::rng::Rng;
+
+fn pool() -> Option<ExecutorPool> {
+    let m = Manifest::load("artifacts").ok()?;
+    ExecutorPool::new(m).ok()
+}
+
+#[test]
+fn facenet_embedding_is_normalized_and_deterministic() {
+    let Some(pool) = pool() else { return };
+    let exe = pool.get("facenet_embed").unwrap();
+    let mut rng = Rng::new(1);
+    let face: Vec<f32> = (0..64 * 64 * 3).map(|_| rng.f32()).collect();
+    let e1 = exe.run_f32(&[face.clone()]).unwrap().remove(0);
+    let e2 = exe.run_f32(&[face]).unwrap().remove(0);
+    assert_eq!(e1, e2, "same input, same embedding");
+    let norm: f32 = e1.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
+}
+
+#[test]
+fn hlo_gallery_match_agrees_with_rust_matcher() {
+    let Some(pool) = pool() else { return };
+    let exe = pool.get("gallery_match").unwrap();
+    let mut rng = Rng::new(2);
+    let mut gallery = Gallery::new(128);
+    let mut flat = vec![0.0f32; 1024 * 128];
+    for i in 0..1024 {
+        let v = rng.unit_vec(128);
+        flat[i * 128..(i + 1) * 128].copy_from_slice(&v);
+        gallery.add(format!("id{i}"), Template::new(v));
+    }
+    for &planted in &[0usize, 511, 1023] {
+        let probe_v = gallery.get(&format!("id{planted}")).unwrap().clone();
+        let out = exe
+            .run_f32(&[probe_v.as_slice().to_vec(), flat.clone()])
+            .unwrap();
+        let hlo_best = out[1][0] as usize;
+        let rust_best = Matcher::default().rank(&probe_v, &gallery)[0].0.clone();
+        assert_eq!(format!("id{hlo_best}"), rust_best);
+        assert_eq!(hlo_best, planted);
+        assert!((out[2][0] - 1.0).abs() < 1e-4, "self-match score {}", out[2][0]);
+    }
+}
+
+#[test]
+fn quality_output_in_unit_interval() {
+    let Some(pool) = pool() else { return };
+    let exe = pool.get("crfiqa_quality").unwrap();
+    let mut rng = Rng::new(3);
+    for _ in 0..3 {
+        let face: Vec<f32> = (0..64 * 64 * 3).map(|_| rng.f32()).collect();
+        let q = exe.run_f32(&[face]).unwrap()[0][0];
+        assert!((0.0..=1.0).contains(&q), "quality {q}");
+    }
+}
+
+#[test]
+fn executor_pool_caches_compilations() {
+    let Some(pool) = pool() else { return };
+    let a = pool.get("gallery_match").unwrap();
+    let b = pool.get("gallery_match").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert_eq!(pool.compiled_count(), 1);
+}
+
+#[test]
+fn wrong_input_shape_rejected() {
+    let Some(pool) = pool() else { return };
+    let exe = pool.get("crfiqa_quality").unwrap();
+    assert!(exe.run_f32(&[vec![0.0; 10]]).is_err());
+    assert!(exe.run_f32(&[]).is_err());
+}

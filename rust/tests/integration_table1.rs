@@ -1,0 +1,58 @@
+//! Integration: the Table-1 reproduction end-to-end through the public API.
+
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::{Cartridge, DeviceKind};
+use champ::workload::video::VideoSource;
+
+fn sweep(kind: DeviceKind) -> Vec<f64> {
+    (1..=5)
+        .map(|n| {
+            let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+            for i in 0..n {
+                o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))
+                    .unwrap();
+            }
+            let mut src = VideoSource::paper_stream(7);
+            o.run_broadcast(&mut src, 60).fps
+        })
+        .collect()
+}
+
+#[test]
+fn ncs2_sweep_within_one_fps_of_paper() {
+    let paper = [15.0, 13.0, 10.0, 8.0, 6.0];
+    let sim = sweep(DeviceKind::Ncs2);
+    for (i, (p, s)) in paper.iter().zip(&sim).enumerate() {
+        assert!((p - s).abs() <= 1.0, "N={}: paper {p} vs sim {s:.2}", i + 1);
+    }
+}
+
+#[test]
+fn coral_sweep_within_one_fps_of_paper() {
+    let paper = [25.0, 22.0, 19.0, 17.0, 15.0];
+    let sim = sweep(DeviceKind::Coral);
+    for (i, (p, s)) in paper.iter().zip(&sim).enumerate() {
+        assert!((p - s).abs() <= 1.0, "N={}: paper {p} vs sim {s:.2}", i + 1);
+    }
+}
+
+#[test]
+fn decline_is_monotone_and_saturates() {
+    let sim = sweep(DeviceKind::Ncs2);
+    for w in sim.windows(2) {
+        assert!(w[1] < w[0]);
+    }
+    // Diminishing *absolute* throughput means host coordination dominates
+    // beyond 3-4 devices — the paper's saturation observation.
+    let drop_12 = sim[0] - sim[1];
+    let drop_45 = sim[3] - sim[4];
+    assert!(drop_45 < drop_12 * 1.5, "tail should not collapse faster than head");
+}
+
+#[test]
+fn sweep_is_deterministic() {
+    assert_eq!(sweep(DeviceKind::Ncs2), sweep(DeviceKind::Ncs2));
+}

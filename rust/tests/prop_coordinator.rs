@@ -1,0 +1,128 @@
+//! Property tests over coordinator invariants (the proptest substitute:
+//! seeded random cases via util::prop::check — failures report the seed).
+
+use champ::bus::hotplug::{HotplugEvent, HotplugKind};
+use champ::bus::topology::SlotId;
+use champ::bus::usb3::BusProfile;
+use champ::coordinator::pipeline::Pipeline;
+use champ::coordinator::scheduler::Orchestrator;
+use champ::device::caps::CapDescriptor;
+use champ::device::{Cartridge, DeviceKind};
+use champ::util::prop;
+use champ::workload::video::VideoSource;
+
+fn random_kind(rng: &mut champ::util::rng::Rng) -> DeviceKind {
+    match rng.range(0, 3) {
+        0 => DeviceKind::Ncs2,
+        1 => DeviceKind::Coral,
+        _ => DeviceKind::Fpga,
+    }
+}
+
+#[test]
+fn prop_broadcast_fps_declines_with_device_count() {
+    prop::check("fps-monotone", 101, 15, |rng, _| {
+        let kind = random_kind(rng);
+        let frames = 20 + rng.range(0, 30);
+        let mut last = f64::INFINITY;
+        for n in 1..=5 {
+            let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+            for i in 0..n {
+                o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))
+                    .unwrap();
+            }
+            let mut src = VideoSource::paper_stream(rng.next_u64());
+            let fps = o.run_broadcast(&mut src, frames).fps;
+            assert!(fps <= last + 1e-9, "fps must not increase with devices");
+            last = fps;
+        }
+    });
+}
+
+#[test]
+fn prop_pipelined_latency_at_least_sum_of_stages() {
+    prop::check("latency-lower-bound", 102, 20, |rng, _| {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        let kind = random_kind(rng);
+        o.plug(SlotId(0), Cartridge::new(0, kind, CapDescriptor::face_detect())).unwrap();
+        o.plug(SlotId(1), Cartridge::new(0, kind, CapDescriptor::face_quality())).unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, kind, CapDescriptor::face_embed())).unwrap();
+        let fps = 2.0 + rng.f64() * 6.0;
+        let mut src = VideoSource::paper_stream(rng.next_u64()).with_rate_fps(fps);
+        let rep = o.run_pipelined(&mut src, 20, vec![]);
+        // e2e latency can never beat the sum of stage service times.
+        assert!(rep.latency.min_us() as f64 >= rep.compute_us_mean,
+            "min latency {} < compute {}", rep.latency.min_us(), rep.compute_us_mean);
+        // And the handoff overhead stays modest at low rates.
+        assert!(rep.latency.mean_us() < rep.compute_us_mean * 1.3);
+    });
+}
+
+#[test]
+fn prop_hotswap_of_passthrough_stage_never_drops_frames() {
+    prop::check("swap-no-loss", 103, 15, |rng, _| {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+        let q = o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
+        let remove_at = 1_000_000 + rng.range(0, 4_000_000);
+        let reinsert_at = remove_at + 1_000_000 + rng.range(0, 3_000_000);
+        let events = vec![
+            HotplugEvent { at_us: remove_at, slot: SlotId(1), kind: HotplugKind::Detach, uid: 0 },
+            HotplugEvent { at_us: reinsert_at, slot: SlotId(1), kind: HotplugKind::Attach, uid: q },
+        ];
+        let fps = 4.0 + rng.f64() * 8.0;
+        let frames = ((reinsert_at as f64 / 1e6 + 6.0) * fps) as u64;
+        let mut src = VideoSource::paper_stream(rng.next_u64()).with_rate_fps(fps);
+        let rep = o.run_pipelined(&mut src, frames, events);
+        assert_eq!(rep.frames_dropped, 0, "pass-through swap must never drop");
+        assert_eq!(o.pipeline.len(), 3, "pipeline must be restored");
+    });
+}
+
+#[test]
+fn prop_pipeline_build_order_independent_of_plug_order() {
+    prop::check("slot-order", 104, 20, |rng, _| {
+        let caps = [
+            CapDescriptor::face_detect(),
+            CapDescriptor::face_quality(),
+            CapDescriptor::face_embed(),
+        ];
+        // Plug in a random order; pipeline must come out in slot order.
+        let mut order: Vec<usize> = (0..3).collect();
+        for i in (1..3).rev() {
+            let j = rng.range(0, (i + 1) as u64) as usize;
+            order.swap(i, j);
+        }
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        for &slot in &order {
+            o.plug(SlotId(slot as u8), Cartridge::new(0, DeviceKind::Ncs2, caps[slot].clone()))
+                .unwrap();
+        }
+        let names: Vec<&str> = o.pipeline.stages.iter().map(|s| s.cap.id.name()).collect();
+        assert_eq!(names, vec!["face-detect", "face-quality", "face-embed"]);
+    });
+}
+
+#[test]
+fn prop_bridge_then_reinsert_is_identity() {
+    prop::check("bridge-identity", 105, 25, |rng, _| {
+        // Random valid pipeline with a pass-through stage somewhere.
+        let mut stages = vec![
+            (10u64, CapDescriptor::face_detect()),
+            (11, CapDescriptor::face_quality()),
+            (12, CapDescriptor::face_embed()),
+            (13, CapDescriptor::database()),
+        ];
+        if rng.range(0, 2) == 0 {
+            stages.truncate(3);
+        }
+        let p = Pipeline::build(stages).unwrap();
+        let bridged = p.bridge_out(11).unwrap();
+        let pos = p.position_of(11).unwrap();
+        let restored = bridged
+            .insert_at(pos, p.stages[pos].clone())
+            .unwrap();
+        assert_eq!(restored, p);
+    });
+}
