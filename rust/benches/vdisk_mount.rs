@@ -1,0 +1,73 @@
+//! Bench: vdisk persistence baseline — cold mount vs cached reads.
+//!
+//! Cold mount pays the full verify walk (file read + superblock MAC +
+//! whole-image trailer MAC + manifest unseal) plus the first decrypt of
+//! every gallery block; a warm read serves the same blocks from the LRU
+//! cache.  Future sharding/caching PRs regress against these numbers.
+
+mod common;
+
+use champ::biometric::gallery::Gallery;
+use champ::biometric::template::Template;
+use champ::crypto::seal::SealKey;
+use champ::util::rng::Rng;
+use champ::vdisk::{ImageBuilder, MountedImage};
+
+fn gallery(n: usize, dim: usize) -> Gallery {
+    let mut rng = Rng::new(42);
+    let mut g = Gallery::new(dim);
+    for i in 0..n {
+        g.add(format!("id{i:05}"), Template::new(rng.unit_vec(dim)));
+    }
+    g
+}
+
+fn main() {
+    common::header("VDiSK: cold mount vs cached gallery reads (dim 128, 4 KiB blocks)");
+    let dir = std::env::temp_dir().join(format!("champ-bench-vdisk-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let key = SealKey::from_passphrase("bench");
+
+    println!(
+        "{:<9} | {:>10} | {:>13} | {:>13} | {:>13} | {:>8}",
+        "gallery", "image KiB", "mount us", "cold read us", "warm read us", "hit rate"
+    );
+    for &n in &[128usize, 512, 2048] {
+        let path = dir.join(format!("g{n}.vdisk"));
+        let sum = ImageBuilder::new("bench")
+            .gallery(&gallery(n, 128))
+            .write(&path, &key)
+            .unwrap();
+
+        // Cold mount: the verify walk alone (no payload decrypt).
+        let mount = common::time_it(2, 10, || {
+            let img = MountedImage::mount(&path, &key).unwrap();
+            assert_eq!(img.manifest.extents.len(), 1);
+        });
+
+        // Cold read: fresh mount, first full gallery decrypt.
+        let cold = common::time_it(2, 10, || {
+            let img = MountedImage::mount(&path, &key).unwrap();
+            assert!(img.load_gallery().unwrap().len() == n);
+        });
+
+        // Warm read: same mount, blocks served from the LRU cache.
+        let img = MountedImage::mount_with_cache(&path, &key, 4096).unwrap();
+        img.load_gallery().unwrap(); // populate
+        let warm = common::time_it(3, 30, || {
+            assert!(img.load_gallery().unwrap().len() == n);
+        });
+
+        println!(
+            "{:<9} | {:>10} | {:>13.1} | {:>13.1} | {:>13.1} | {:>7.1}%",
+            n,
+            sum.total_len / 1024,
+            mount.mean_us,
+            cold.mean_us - mount.mean_us,
+            warm.mean_us,
+            img.cache_stats().hit_rate() * 100.0
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    println!("vdisk_mount OK");
+}

@@ -62,6 +62,46 @@ impl Gallery {
     pub fn id_at(&self, idx: usize) -> Option<&str> {
         self.entries.get(idx).map(|(i, _)| i.as_str())
     }
+
+    /// Serialize to the flat wire framing used at rest:
+    /// `[u32 id_len][id bytes][dim × f32 LE]` per entry.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * (8 + self.dim * 4));
+        for (id, t) in &self.entries {
+            out.extend_from_slice(&(id.len() as u32).to_le_bytes());
+            out.extend_from_slice(id.as_bytes());
+            for v in t.as_slice() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse bytes produced by [`Gallery::encode`].  Fails (never panics)
+    /// on truncated or oversized framing.
+    pub fn decode(bytes: &[u8], dim: usize) -> anyhow::Result<Gallery> {
+        let mut g = Gallery::new(dim);
+        let mut i = 0usize;
+        while i < bytes.len() {
+            anyhow::ensure!(i + 4 <= bytes.len(), "gallery framing: truncated id length");
+            let n = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()) as usize;
+            i += 4;
+            anyhow::ensure!(i + n <= bytes.len(), "gallery framing: truncated id");
+            let id = String::from_utf8(bytes[i..i + n].to_vec())?;
+            i += n;
+            anyhow::ensure!(i + 4 * dim <= bytes.len(), "gallery framing: truncated template");
+            let mut vals = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                vals.push(f32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()));
+                i += 4;
+            }
+            // Push directly instead of `add`: encode() output cannot contain
+            // duplicate ids, and add()'s linear duplicate scan would make
+            // decoding O(n²) in gallery size.
+            g.entries.push((id, Template::new(vals)));
+        }
+        Ok(g)
+    }
 }
 
 #[cfg(test)]
@@ -96,6 +136,30 @@ mod tests {
         g.add("b".into(), Template::new(vec![3.0, 4.0]));
         assert_eq!(g.to_matrix(), vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(g.id_at(1), Some("b"));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Rng::new(5);
+        let mut g = Gallery::new(16);
+        for i in 0..12 {
+            g.add(format!("person-{i}"), Template::new(rng.unit_vec(16)));
+        }
+        let back = Gallery::decode(&g.encode(), 16).unwrap();
+        assert_eq!(back.len(), g.len());
+        for (id, t) in g.iter() {
+            assert_eq!(back.get(id).unwrap().as_slice(), t.as_slice());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let mut g = Gallery::new(8);
+        g.add("only".into(), Template::new(vec![0.5; 8]));
+        let bytes = g.encode();
+        for cut in [1usize, 5, bytes.len() - 1] {
+            assert!(Gallery::decode(&bytes[..cut], 8).is_err(), "cut {cut} accepted");
+        }
     }
 
     #[test]

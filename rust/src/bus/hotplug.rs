@@ -7,6 +7,9 @@
 //! with the electrical+enumeration latencies the paper reports folded into
 //! [`HotplugKind::latency_us`].
 
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
 use super::topology::SlotId;
 
 /// What happened on the bus.
@@ -44,6 +47,43 @@ impl HotplugEvent {
     /// When the OS notices.
     pub fn visible_at(&self) -> u64 {
         self.at_us + self.kind.latency_us()
+    }
+}
+
+/// What storage medium is physically on each cartridge: uid → image file.
+///
+/// Storage cartridges carry their sealed vdisk image on module flash; the
+/// bay models that binding on the host side.  The coordinator's mount
+/// supervisor consults it on Attach (mount) and the medium travels with
+/// the module on Detach — the registration survives so a re-insert of the
+/// same uid remounts the same image.
+#[derive(Debug, Default, Clone)]
+pub struct MediaBay {
+    media: HashMap<u64, PathBuf>,
+}
+
+impl MediaBay {
+    /// Bind cartridge `uid` to the image at `path` (replaces any previous
+    /// binding — the operator reflashed the module).
+    pub fn insert(&mut self, uid: u64, path: PathBuf) {
+        self.media.insert(uid, path);
+    }
+
+    /// Remove the binding (module retired or wiped).
+    pub fn eject(&mut self, uid: u64) -> Option<PathBuf> {
+        self.media.remove(&uid)
+    }
+
+    pub fn path_of(&self, uid: u64) -> Option<&Path> {
+        self.media.get(&uid).map(PathBuf::as_path)
+    }
+
+    pub fn len(&self) -> usize {
+        self.media.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.media.is_empty()
     }
 }
 
@@ -108,5 +148,20 @@ mod tests {
         let mk = |t| HotplugEvent { at_us: t, slot: SlotId(0), kind: HotplugKind::Detach, uid: 0 };
         let s = HotplugScript::new(vec![mk(500), mk(100)]);
         assert_eq!(s.next_visible(), Some(100 + 20_000));
+    }
+
+    #[test]
+    fn media_bay_binds_and_ejects() {
+        let mut bay = MediaBay::default();
+        assert!(bay.is_empty());
+        bay.insert(7, PathBuf::from("/media/cart7.vdisk"));
+        assert_eq!(bay.path_of(7), Some(Path::new("/media/cart7.vdisk")));
+        assert_eq!(bay.path_of(8), None);
+        // Reflash replaces the binding.
+        bay.insert(7, PathBuf::from("/media/cart7-v2.vdisk"));
+        assert_eq!(bay.len(), 1);
+        assert_eq!(bay.path_of(7), Some(Path::new("/media/cart7-v2.vdisk")));
+        assert_eq!(bay.eject(7), Some(PathBuf::from("/media/cart7-v2.vdisk")));
+        assert!(bay.path_of(7).is_none());
     }
 }

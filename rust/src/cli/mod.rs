@@ -2,6 +2,9 @@
 //!
 //! Supports the subcommand + `--flag value` + `--switch` shape `champd`
 //! needs.  Unknown flags are errors; `--help` text is the caller's job.
+//! A repeated flag follows the conventional "last one wins" rule.
+
+pub mod vdisk;
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -41,9 +44,13 @@ pub fn parse_args<I: IntoIterator<Item = String>>(argv: I) -> Args {
 }
 
 impl Args {
+    /// Value of `--name`.  When the flag is repeated, the last occurrence
+    /// wins (so `champd run --frames 5 --frames 9` runs 9 frames, matching
+    /// every conventional CLI).
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags
             .iter()
+            .rev()
             .find(|(n, _)| n == name)
             .and_then(|(_, v)| v.as_deref())
     }
@@ -96,5 +103,46 @@ mod tests {
     fn switch_before_end() {
         let a = args("run --real-compute");
         assert!(a.switch("real-compute"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_a_switch() {
+        let a = args("run --verbose --frames 5");
+        assert!(a.switch("verbose"));
+        assert_eq!(a.flag("verbose"), None, "switch must not steal the next flag");
+        assert_eq!(a.flag("frames"), Some("5"));
+    }
+
+    #[test]
+    fn repeated_flag_last_wins() {
+        let a = args("run --frames 5 --frames 9");
+        assert_eq!(a.flag("frames"), Some("9"));
+        assert_eq!(a.flag_u64("frames", 0), 9);
+        // A later bare occurrence demotes it to a switch (still last-wins).
+        let b = args("run --frames 5 --frames");
+        assert_eq!(b.flag("frames"), None);
+        assert!(b.switch("frames"));
+    }
+
+    #[test]
+    fn positionals_interleave_with_flags() {
+        let a = args("vdisk pack --out img.vdisk extra");
+        assert_eq!(a.subcommand.as_deref(), Some("vdisk"));
+        assert_eq!(a.positional, vec!["pack", "extra"]);
+        assert_eq!(a.flag("out"), Some("img.vdisk"));
+    }
+
+    #[test]
+    fn negative_number_is_a_value_not_a_flag() {
+        let a = args("run --offset -3");
+        assert_eq!(a.flag("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn empty_argv() {
+        let a = args("");
+        assert_eq!(a.subcommand, None);
+        assert!(a.positional.is_empty());
+        assert!(!a.switch("anything"));
     }
 }

@@ -13,6 +13,7 @@
 use crate::bus::hotplug::HotplugKind;
 use crate::bus::topology::SlotId;
 use crate::device::Cartridge;
+use crate::vdisk::MountSupervisor;
 
 use super::pipeline::{Pipeline, PipelineError, Stage};
 
@@ -64,6 +65,9 @@ pub struct SwapController {
     pub records: Vec<SwapRecord>,
     /// Set when the pipeline is halted for a missing, unbridgeable stage.
     pub halted: bool,
+    /// Cartridge-image lifecycle: media registered per uid is mounted on
+    /// Attach (MAC-verified, fail-closed) and unmounted on Detach.
+    pub mounts: MountSupervisor,
 }
 
 impl SwapController {
@@ -79,6 +83,9 @@ impl SwapController {
         uid: u64,
         pipeline: &Pipeline,
     ) -> Pipeline {
+        // The module's media leaves with it: unmount before rerouting so no
+        // read can land on a yanked image.
+        self.mounts.handle_detach(uid, visible_us);
         let resume = visible_us + BRIDGE_RECONFIG_US;
         match pipeline.bridge_out(uid) {
             Ok(p) => {
@@ -131,6 +138,11 @@ impl SwapController {
         let stage = Stage { uid: cart.uid, cap: cart.cap.clone() };
         let p = pipeline.insert_at(slot_position, stage)?;
         let resume = visible_us + HANDSHAKE_US + cart.model_load_us() + INTEGRATE_RECONFIG_US;
+        // Mount the cartridge's on-module image (if media is registered and
+        // a seal key is installed).  A torn or tampered image is rejected
+        // here — the stage still integrates, but its dataset stays offline
+        // and the rejection is visible in `mounts.events`.
+        self.mounts.handle_attach(cart.uid, visible_us);
         // A successful integration clears a halt (the missing capability —
         // or a compatible replacement — is back).
         if self.halted {
@@ -229,5 +241,52 @@ mod tests {
         let cart = Cartridge::new(9, DeviceKind::Ncs2, CapDescriptor::database());
         // Database consumes Embedding; inserting at position 0 breaks typing.
         assert!(sc.on_attach(0, SlotId(0), &cart, 0, &pipeline()).is_err());
+    }
+
+    #[test]
+    fn swap_cycle_mounts_and_unmounts_media() {
+        use crate::biometric::gallery::Gallery;
+        use crate::biometric::template::Template;
+        use crate::crypto::seal::SealKey;
+        use crate::util::rng::Rng;
+        use crate::vdisk::{ImageBuilder, MountEventKind};
+
+        let dir = std::env::temp_dir().join(format!("champ-swapmnt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("quality.vdisk");
+        let key = SealKey::from_passphrase("swap");
+        let mut rng = Rng::new(1);
+        let mut g = Gallery::new(8);
+        g.add("a".into(), Template::new(rng.unit_vec(8)));
+        ImageBuilder::new("quality-media").gallery(&g).write(&path, &key).unwrap();
+
+        let mut sc = SwapController::new();
+        sc.mounts.set_key(key);
+        sc.mounts.register_media(2, &path);
+
+        // Boot-time attach of the quality cartridge mounts its media.
+        let cart = Cartridge::new(2, DeviceKind::Ncs2, CapDescriptor::face_quality());
+        let two_stage = Pipeline::build(vec![
+            (1, CapDescriptor::face_detect()),
+            (3, CapDescriptor::face_embed()),
+        ])
+        .unwrap();
+        let p = sc.on_attach(0, SlotId(1), &cart, 1, &two_stage).unwrap();
+        assert!(sc.mounts.is_mounted(2));
+
+        // Yank it: the image is unmounted before the pipeline is rerouted.
+        let p2 = sc.on_detach(1_000_000, SlotId(1), 2, &p);
+        assert!(!sc.mounts.is_mounted(2));
+        assert_eq!(p2.len(), 2);
+
+        // Re-insert: remounts the same media.
+        sc.on_attach(5_000_000, SlotId(1), &cart, 1, &p2).unwrap();
+        assert!(sc.mounts.is_mounted(2));
+        let kinds: Vec<_> = sc.mounts.events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![MountEventKind::Mounted, MountEventKind::Unmounted, MountEventKind::Mounted]
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

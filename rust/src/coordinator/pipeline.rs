@@ -22,15 +22,32 @@ pub struct Pipeline {
 }
 
 /// Why a pipeline (re)build failed.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+/// (Manual impls: `thiserror` is not in the vendored dependency set.)
+#[derive(Debug, Clone, PartialEq)]
 pub enum PipelineError {
-    #[error("stage {index} ({name}) consumes {wants:?} but receives {gets:?}")]
     TypeMismatch { index: usize, name: String, wants: DataKind, gets: DataKind },
-    #[error("pipeline must start from a Frame consumer, got {0:?}")]
     BadHead(DataKind),
-    #[error("removing stage {0} breaks the pipeline (not pass-through compatible)")]
     NotBridgeable(usize),
 }
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::TypeMismatch { index, name, wants, gets } => write!(
+                f,
+                "stage {index} ({name}) consumes {wants:?} but receives {gets:?}"
+            ),
+            PipelineError::BadHead(kind) => {
+                write!(f, "pipeline must start from a Frame consumer, got {kind:?}")
+            }
+            PipelineError::NotBridgeable(i) => {
+                write!(f, "removing stage {i} breaks the pipeline (not pass-through compatible)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
 
 impl Pipeline {
     /// Build from (uid, capability) pairs in slot order.

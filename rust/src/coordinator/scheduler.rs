@@ -18,6 +18,7 @@ use std::collections::HashMap;
 
 use crate::bus::clock::SimClock;
 use crate::bus::hotplug::{HotplugEvent, HotplugKind, HotplugScript};
+use crate::crypto::seal::SealKey;
 use crate::bus::topology::{SlotId, Topology};
 use crate::bus::usb3::{BusProfile, Usb3Bus};
 use crate::device::timing::stream_handoff_us;
@@ -127,7 +128,29 @@ impl Orchestrator {
             self.rebuild_pipeline().ok();
             return Err(e);
         }
+        // Boot-time mount of the cartridge's on-module image (no-op unless
+        // media + seal key are registered; a bad image logs a rejection).
+        self.swap.mounts.handle_attach(uid, self.clock.now());
         Ok(uid)
+    }
+
+    /// Install the deployment seal key for cartridge-image mounting.
+    pub fn set_seal_key(&mut self, key: SealKey) {
+        self.swap.mounts.set_key(key);
+    }
+
+    /// Declare that cartridge `uid` carries the vdisk image at `path`;
+    /// mounts immediately if the cartridge is already live.
+    pub fn register_cartridge_media(&mut self, uid: u64, path: impl Into<std::path::PathBuf>) {
+        self.swap.mounts.register_media(uid, path);
+        if self.carts.contains_key(&uid) {
+            self.swap.mounts.handle_attach(uid, self.clock.now());
+        }
+    }
+
+    /// The mounted image for a live cartridge, if any.
+    pub fn mounted_image(&self, uid: u64) -> Option<&std::sync::Arc<crate::vdisk::MountedImage>> {
+        self.swap.mounts.image(uid)
     }
 
     /// Immediate unplug (boot-time reconfiguration; for *live* removal use
@@ -141,6 +164,7 @@ impl Orchestrator {
         self.health.deregister(uid);
         self.flow.deregister(uid);
         self.carts.remove(&uid);
+        self.swap.mounts.handle_detach(uid, self.clock.now());
         self.rebuild_pipeline()?;
         Ok(uid)
     }

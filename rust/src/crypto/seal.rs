@@ -7,7 +7,8 @@
 
 use sha2::{Digest, Sha256};
 
-const TAG_LEN: usize = 32;
+/// HMAC-SHA256 tag length appended to every sealed blob.
+pub const TAG_LEN: usize = 32;
 
 /// Symmetric sealing key.
 #[derive(Debug, Clone)]
@@ -61,6 +62,45 @@ impl SealKey {
                 *b ^= k;
             }
         }
+    }
+
+    /// Derive an independent subkey bound to `tweak`.
+    ///
+    /// Domain separation for multi-blob containers: the CTR keystream of a
+    /// `SealKey` restarts at block 0 for every [`SealKey::seal`] call, so a
+    /// single key must never seal two different blobs.  Containers (the
+    /// vdisk image format) seal each block under `subkey(<unique path>)`,
+    /// which also binds the block to its position — swapping two sealed
+    /// blocks inside an image fails both MACs.
+    pub fn subkey(&self, tweak: &str) -> SealKey {
+        let derive = |base: &[u8; 32], label: &str| -> [u8; 32] {
+            let mut h = Sha256::new();
+            h.update(b"champ-seal-subkey-v1");
+            h.update(label.as_bytes());
+            h.update(base);
+            h.update(tweak.as_bytes());
+            h.finalize().into()
+        };
+        SealKey { enc: derive(&self.enc, "enc"), mac: derive(&self.mac, "mac") }
+    }
+
+    /// Standalone HMAC-SHA256 tag over `data` (integrity without
+    /// confidentiality — superblocks and whole-image trailers).
+    pub fn mac_tag(&self, data: &[u8]) -> [u8; TAG_LEN] {
+        hmac(&self.mac, data)
+    }
+
+    /// Constant-time check of `tag` against [`SealKey::mac_tag`].
+    pub fn verify_tag(&self, data: &[u8], tag: &[u8]) -> bool {
+        let want = hmac(&self.mac, data);
+        if tag.len() != TAG_LEN {
+            return false;
+        }
+        let mut diff = 0u8;
+        for (a, b) in want.iter().zip(tag) {
+            diff |= a ^ b;
+        }
+        diff == 0
     }
 
     /// Seal: ciphertext || tag.
@@ -125,5 +165,59 @@ mod tests {
     #[test]
     fn short_blob_rejected() {
         assert!(SealKey::from_passphrase("k").unseal(&[0u8; 5]).is_err());
+    }
+
+    #[test]
+    fn truncated_ciphertext_fails_closed() {
+        let k = SealKey::from_passphrase("k");
+        let blob = k.seal(b"a message long enough to truncate meaningfully");
+        // Every proper prefix must be rejected — never garbage plaintext.
+        for cut in [1usize, TAG_LEN - 1, TAG_LEN, TAG_LEN + 1, blob.len() - 1] {
+            let t = &blob[..blob.len() - cut];
+            assert!(k.unseal(t).is_err(), "accepted blob truncated by {cut}");
+        }
+    }
+
+    #[test]
+    fn every_bit_flip_fails_closed() {
+        let k = SealKey::from_passphrase("k");
+        let msg = b"fail-closed under any single-bit tamper";
+        let blob = k.seal(msg);
+        for i in 0..blob.len() {
+            for bit in [0u8, 3, 7] {
+                let mut bad = blob.clone();
+                bad[i] ^= 1 << bit;
+                assert!(k.unseal(&bad).is_err(), "byte {i} bit {bit} accepted");
+            }
+        }
+    }
+
+    #[test]
+    fn subkeys_are_independent_and_deterministic() {
+        let k = SealKey::from_passphrase("root");
+        let a = k.subkey("vdisk/x/0/b/0");
+        let b = k.subkey("vdisk/x/0/b/1");
+        let msg = b"same plaintext";
+        // Different tweaks produce different ciphertexts (no keystream reuse).
+        assert_ne!(a.seal(msg), b.seal(msg));
+        // Same tweak re-derives the same key.
+        assert_eq!(k.subkey("vdisk/x/0/b/0").unseal(&a.seal(msg)).unwrap(), msg);
+        // A sibling subkey must not unseal another block's ciphertext.
+        assert!(b.unseal(&a.seal(msg)).is_err());
+        // Nor must the root key.
+        assert!(k.unseal(&a.seal(msg)).is_err());
+    }
+
+    #[test]
+    fn mac_tag_verifies_and_rejects() {
+        let k = SealKey::from_passphrase("k");
+        let tag = k.mac_tag(b"image body");
+        assert!(k.verify_tag(b"image body", &tag));
+        assert!(!k.verify_tag(b"image bodY", &tag));
+        assert!(!k.verify_tag(b"image body", &tag[..31]));
+        let mut bad = tag;
+        bad[0] ^= 1;
+        assert!(!k.verify_tag(b"image body", &bad));
+        assert!(!SealKey::from_passphrase("other").verify_tag(b"image body", &tag));
     }
 }

@@ -10,10 +10,15 @@
 //! stream cipher.  A toy Paillier path exercises additively-homomorphic
 //! score aggregation (see [`crate::crypto::paillier`]).
 
+use std::path::Path;
+
 use crate::biometric::gallery::Gallery;
 use crate::biometric::template::Template;
 use crate::crypto::rotation::RotationKey;
 use crate::crypto::seal::SealKey;
+use crate::vdisk::{ImageBuilder, ImageSummary, MountedImage};
+
+use super::caps::CapabilityId;
 
 /// Result of a gallery lookup.
 #[derive(Debug, Clone, PartialEq)]
@@ -47,6 +52,12 @@ impl StorageCartridge {
         StorageCartridge { uid, gallery_rot, rotation, seal, match_us: 2_000 }
     }
 
+    /// Restore from an already-protected gallery (the vdisk load path: the
+    /// image stores rotated templates, so no re-rotation happens here).
+    pub fn from_rotated(uid: u64, gallery_rot: Gallery, rotation: RotationKey, seal: SealKey) -> Self {
+        StorageCartridge { uid, gallery_rot, rotation, seal, match_us: 2_000 }
+    }
+
     pub fn len(&self) -> usize {
         self.gallery_rot.len()
     }
@@ -70,37 +81,58 @@ impl StorageCartridge {
         Some(MatchOutcome { best_id: best.0, best_score: best.1, topk: scored.into_iter().take(k).collect() })
     }
 
-    /// Serialize the protected gallery sealed for flash storage.
+    /// Serialize the protected gallery sealed for flash storage (single
+    /// sealed blob; the durable container form is
+    /// [`StorageCartridge::persist_to_image`]).
     pub fn sealed_blob(&self) -> Vec<u8> {
-        let mut plain = Vec::new();
-        for (id, t) in self.gallery_rot.iter() {
-            plain.extend_from_slice(&(id.len() as u32).to_le_bytes());
-            plain.extend_from_slice(id.as_bytes());
-            for v in t.as_slice() {
-                plain.extend_from_slice(&v.to_le_bytes());
-            }
-        }
-        self.seal.seal(&plain)
+        self.seal.seal(&self.gallery_rot.encode())
     }
 
     /// Restore from a sealed blob (MAC-checked).
     pub fn unseal_gallery(blob: &[u8], seal: &SealKey, dim: usize) -> anyhow::Result<Gallery> {
-        let plain = seal.unseal(blob)?;
-        let mut g = Gallery::new(dim);
-        let mut i = 0usize;
-        while i < plain.len() {
-            let n = u32::from_le_bytes(plain[i..i + 4].try_into()?) as usize;
-            i += 4;
-            let id = String::from_utf8(plain[i..i + n].to_vec())?;
-            i += n;
-            let mut vals = Vec::with_capacity(dim);
-            for _ in 0..dim {
-                vals.push(f32::from_le_bytes(plain[i..i + 4].try_into()?));
-                i += 4;
-            }
-            g.add(id, Template::new(vals));
-        }
-        Ok(g)
+        Gallery::decode(&seal.unseal(blob)?, dim)
+    }
+
+    /// Pack the protected gallery into a vdisk cartridge image at `path`
+    /// (atomic publish).  The image stores only rotated templates — the
+    /// rotation and seal keys never leave the orchestrator.
+    pub fn persist_to_image(&self, path: impl AsRef<Path>, label: &str) -> anyhow::Result<ImageSummary> {
+        ImageBuilder::new(label)
+            .cap(CapabilityId::Database)
+            .gallery(&self.gallery_rot)
+            .write(path, &self.seal)
+            .map_err(Into::into)
+    }
+
+    /// Mount the image at `path` (fail-closed on tamper/torn writes) and
+    /// restore a cartridge that matches identically to the one that was
+    /// persisted.
+    pub fn load_from_image(
+        uid: u64,
+        path: impl AsRef<Path>,
+        rotation: RotationKey,
+        seal: SealKey,
+    ) -> anyhow::Result<Self> {
+        let img = MountedImage::mount(path, &seal)?;
+        Self::load_from_mounted(uid, &img, rotation, seal)
+    }
+
+    /// Restore from an image something else already mounted (the hot-swap
+    /// path: the coordinator's mount supervisor owns the mount).
+    pub fn load_from_mounted(
+        uid: u64,
+        img: &MountedImage,
+        rotation: RotationKey,
+        seal: SealKey,
+    ) -> anyhow::Result<Self> {
+        let gallery_rot = img.load_gallery()?;
+        anyhow::ensure!(
+            gallery_rot.dim() == rotation.dim(),
+            "image gallery dim {} != rotation key dim {}",
+            gallery_rot.dim(),
+            rotation.dim()
+        );
+        Ok(Self::from_rotated(uid, gallery_rot, rotation, seal))
     }
 }
 
@@ -164,6 +196,53 @@ mod tests {
         let mid = bad.len() / 2;
         bad[mid] ^= 0xFF;
         assert!(StorageCartridge::unseal_gallery(&bad, &seal, 64).is_err());
+    }
+
+    #[test]
+    fn image_persist_survives_power_cycle() {
+        let dir = std::env::temp_dir().join(format!("champ-storage-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gallery.vdisk");
+        let (g, sc) = setup(40);
+        sc.persist_to_image(&path, "unit-1 gallery").unwrap();
+
+        // "Power cycle": fresh keys derived from the same secrets.
+        let restored = StorageCartridge::load_from_image(
+            51,
+            &path,
+            RotationKey::generate(64, 99),
+            SealKey::from_passphrase("champ-test"),
+        )
+        .unwrap();
+        assert_eq!(restored.len(), 40);
+        let probe = g.get("id7").unwrap().clone();
+        let before = sc.match_probe(&probe, 3).unwrap();
+        let after = restored.match_probe(&probe, 3).unwrap();
+        assert_eq!(before, after, "match results must be identical after reload");
+
+        // Wrong passphrase fails closed at mount.
+        assert!(StorageCartridge::load_from_image(
+            51,
+            &path,
+            RotationKey::generate(64, 99),
+            SealKey::from_passphrase("wrong"),
+        )
+        .is_err());
+
+        // A flipped byte makes the image unmountable.
+        let mut bad = std::fs::read(&path).unwrap();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        let err = StorageCartridge::load_from_image(
+            51,
+            &path,
+            RotationKey::generate(64, 99),
+            SealKey::from_passphrase("champ-test"),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("tamper"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

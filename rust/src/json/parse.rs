@@ -3,12 +3,20 @@
 use super::Value;
 
 /// Parse failure with byte offset context.
-#[derive(Debug, thiserror::Error)]
-#[error("JSON parse error at byte {at}: {msg}")]
+/// (Manual impls: `thiserror` is not in the vendored dependency set.)
+#[derive(Debug)]
 pub struct ParseError {
     pub at: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "JSON parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct P<'a> {
     b: &'a [u8],

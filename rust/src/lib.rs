@@ -21,6 +21,9 @@
 //!   cartridge models (see DESIGN.md §Substitutions).
 //! * [`biometric`], [`crypto`] — template galleries, cosine matching, and
 //!   the template-protection schemes (orthogonal rotation + toy Paillier).
+//! * [`vdisk`] — sealed, block-structured cartridge images: the on-module
+//!   container format (superblock + sealed extents + manifest + trailer
+//!   MAC) with a mount/unmount lifecycle wired into hot-swap.
 //! * [`power`], [`workload`], [`metrics`], [`config`], [`json`], [`cli`],
 //!   [`util`] — supporting systems.
 //!
@@ -39,6 +42,7 @@ pub mod metrics;
 pub mod power;
 pub mod runtime;
 pub mod util;
+pub mod vdisk;
 pub mod workload;
 
 /// Crate-wide result type.

@@ -7,6 +7,7 @@
 //!   power            §4.3 power report over the Table-1 sweep
 //!   export-workflow  dump the ComfyUI-style graph for the live pipeline
 //!   check-artifacts  compile every artifact and run a smoke inference
+//!   vdisk            pack / inspect / verify sealed cartridge images
 //!
 //! `--help` prints this.
 
@@ -34,6 +35,10 @@ USAGE: champd <subcommand> [flags]
   power [--kind ncs2|coral]
   export-workflow [config.json]
   check-artifacts [--dir artifacts]
+  vdisk pack --out img.vdisk [--key K] [--label L] [--gallery N] [--dim D]
+             [--seed S] [--artifacts DIR] [--block-size B]
+  vdisk inspect img.vdisk [--key K]
+  vdisk verify img.vdisk [--key K]
 ";
 
 fn kind_from(name: &str) -> anyhow::Result<DeviceKind> {
@@ -186,6 +191,7 @@ fn main() -> anyhow::Result<()> {
         "power" => cmd_power(&args),
         "export-workflow" => cmd_export_workflow(&args),
         "check-artifacts" => cmd_check_artifacts(&args),
+        "vdisk" => cli::vdisk::run(&args),
         other => {
             eprintln!("unknown subcommand {other:?}\n");
             print!("{HELP}");

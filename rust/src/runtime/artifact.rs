@@ -3,6 +3,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::json::{parse, Value};
+use crate::vdisk::MountedImage;
 
 /// Shape+dtype of one tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -103,6 +104,65 @@ impl Manifest {
         self.models.iter().find(|m| m.name == name)
     }
 
+    /// Gather an artifacts directory as `(name, bytes)` pairs — the
+    /// `manifest.json` plus every model file it references — ready for
+    /// [`crate::vdisk::ImageBuilder::artifact`].
+    pub fn collect_artifact_files(dir: impl AsRef<Path>) -> anyhow::Result<Vec<(String, Vec<u8>)>> {
+        let dir = dir.as_ref();
+        let m = Manifest::load(dir)?;
+        let mut out =
+            vec![("manifest.json".to_string(), std::fs::read(dir.join("manifest.json"))?)];
+        for model in &m.models {
+            // Extent names are flat; a manifest referencing files in
+            // subdirectories would pack fine but break on reload (the
+            // spilled layout is flat), so refuse it up front.
+            anyhow::ensure!(
+                model.file.parent() == Some(dir),
+                "model {} references {:?} outside the artifacts directory — \
+                 only flat artifact layouts can be packed into an image",
+                model.name,
+                model.file
+            );
+            let fname = model
+                .file
+                .file_name()
+                .and_then(|n| n.to_str())
+                .ok_or_else(|| anyhow::anyhow!("model {} has no file name", model.name))?
+                .to_string();
+            if out.iter().any(|(n, _)| *n == fname) {
+                continue; // two models sharing one (identical) artifact file
+            }
+            let bytes = std::fs::read(&model.file)?;
+            out.push((fname, bytes));
+        }
+        Ok(out)
+    }
+
+    /// Load the AOT artifact set carried on a mounted cartridge image:
+    /// artifact extents are spilled (decrypted) into `spill_dir`, then
+    /// loaded exactly like an on-disk artifacts directory.  The image is
+    /// MAC-verified at mount, so everything spilled here is authentic.
+    pub fn load_from_image(img: &MountedImage, spill_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let spill = spill_dir.as_ref();
+        std::fs::create_dir_all(spill)?;
+        let names = img.artifact_names();
+        anyhow::ensure!(
+            names.iter().any(|n| n == "manifest.json"),
+            "image {:?} carries no artifact manifest.json",
+            img.label()
+        );
+        for name in &names {
+            // Extent names are flat file names; refuse anything that could
+            // escape the spill directory.
+            anyhow::ensure!(
+                !name.contains('/') && !name.contains('\\') && !name.starts_with('.'),
+                "artifact extent name {name:?} is not a flat file name"
+            );
+            std::fs::write(spill.join(name), img.read_extent(name)?)?;
+        }
+        Manifest::load(spill)
+    }
+
     /// Default artifacts location relative to the repo root.
     pub fn default_dir() -> PathBuf {
         // Allow override for tests / deployments.
@@ -143,5 +203,43 @@ mod tests {
     #[test]
     fn missing_manifest_errors() {
         assert!(Manifest::load("/nonexistent/champ").is_err());
+    }
+
+    #[test]
+    fn artifacts_roundtrip_through_an_image() {
+        use crate::crypto::seal::SealKey;
+        use crate::vdisk::{ImageBuilder, MountedImage};
+
+        let base = std::env::temp_dir().join(format!("champ-art-{}", std::process::id()));
+        let src = base.join("artifacts");
+        std::fs::create_dir_all(&src).unwrap();
+        let hlo = "HloModule toy\nENTRY e { ROOT c = f32[] constant(1) }\n";
+        std::fs::write(src.join("toy.hlo"), hlo).unwrap();
+        std::fs::write(
+            src.join("manifest.json"),
+            "{\"models\": [{\"name\": \"toy\", \"file\": \"toy.hlo\", \
+             \"inputs\": [{\"shape\": [4], \"dtype\": \"f32\"}], \
+             \"outputs\": [{\"shape\": [], \"dtype\": \"f32\"}], \"hlo_bytes\": 10}]}",
+        )
+        .unwrap();
+
+        // Pack the artifact set into an image.
+        let key = SealKey::from_passphrase("art");
+        let mut b = ImageBuilder::new("artifact-cart");
+        for (name, bytes) in Manifest::collect_artifact_files(&src).unwrap() {
+            b = b.artifact(&name, bytes);
+        }
+        let img_path = base.join("cart.vdisk");
+        b.write(&img_path, &key).unwrap();
+
+        // Mount and load the manifest out of the image.
+        let img = MountedImage::mount(&img_path, &key).unwrap();
+        let spill = base.join("spill");
+        let m = Manifest::load_from_image(&img, &spill).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.inputs[0].shape, vec![4]);
+        assert_eq!(std::fs::read_to_string(&toy.file).unwrap(), hlo, "bytes identical");
+        std::fs::remove_dir_all(&base).ok();
     }
 }

@@ -4,6 +4,10 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::artifact::{Manifest, ModelMeta};
+// PJRT bindings: the offline build links the in-tree stub.  Swap this
+// import for the real `xla` crate when a PJRT build is available
+// (see DESIGN.md §Substitutions).
+use super::xla_shim as xla;
 
 /// A compiled model ready to execute.
 pub struct Executor {

@@ -7,6 +7,7 @@
 
 pub mod artifact;
 pub mod executor;
+pub mod xla_shim;
 
 pub use artifact::{Manifest, ModelMeta, TensorSpec};
 pub use executor::{Executor, ExecutorPool};

@@ -1,0 +1,164 @@
+//! LRU cache over decrypted blocks (and anything else keyable).
+//!
+//! Unsealing a block costs a CTR pass plus an HMAC; the hot path (repeated
+//! gallery scans, artifact re-reads after a hot-swap) hits the same blocks
+//! over and over, so [`MountedImage`](super::MountedImage) keeps the most
+//! recently used plaintext blocks here.  Recency is a monotone tick per
+//! access; eviction scans for the minimum, which is plenty below a few
+//! thousand resident blocks.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Hit/miss/eviction counters (monotone since creation).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub inserts: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A bounded least-recently-used map.
+#[derive(Debug, Clone)]
+pub struct LruCache<K, V> {
+    cap: usize,
+    tick: u64,
+    map: HashMap<K, (V, u64)>,
+    stats: CacheStats,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// Capacity in entries (clamped to >= 1).
+    pub fn new(cap: usize) -> Self {
+        LruCache { cap: cap.max(1), tick: 0, map: HashMap::new(), stats: CacheStats::default() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Look up `k`, refreshing its recency.  Counts a hit or a miss.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(k) {
+            Some(entry) => {
+                entry.1 = tick;
+                self.stats.hits += 1;
+                Some(&entry.0)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert `k`, evicting the least recently used entry if at capacity.
+    pub fn put(&mut self, k: K, v: V) {
+        self.tick += 1;
+        if !self.map.contains_key(&k) && self.map.len() >= self.cap {
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(key, _)| key.clone())
+            {
+                self.map.remove(&victim);
+                self.stats.evictions += 1;
+            }
+        }
+        self.stats.inserts += 1;
+        self.map.insert(k, (v, self.tick));
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_and_counts() {
+        let mut c: LruCache<u32, String> = LruCache::new(2);
+        assert!(c.get(&1).is_none());
+        c.put(1, "a".into());
+        assert_eq!(c.get(&1).map(String::as_str), Some("a"));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        c.get(&1); // 2 is now LRU
+        c.put(3, 30);
+        assert!(c.get(&2).is_none(), "LRU entry must be evicted");
+        assert!(c.get(&1).is_some());
+        assert!(c.get(&3).is_some());
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn overwrite_does_not_evict() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        c.put(1, 11);
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.get(&1), Some(&11));
+        assert_eq!(c.get(&2), Some(&20));
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut c: LruCache<u32, u32> = LruCache::new(0);
+        c.put(1, 10);
+        assert_eq!(c.capacity(), 1);
+        assert_eq!(c.len(), 1);
+        c.put(2, 20);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&1).is_none());
+    }
+
+    #[test]
+    fn hit_rate() {
+        let mut c: LruCache<u32, u32> = LruCache::new(4);
+        c.put(1, 1);
+        c.get(&1);
+        c.get(&1);
+        c.get(&9);
+        assert!((c.stats().hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(LruCache::<u32, u32>::new(1).stats().hit_rate(), 0.0);
+    }
+}

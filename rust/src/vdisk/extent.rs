@@ -1,0 +1,298 @@
+//! Extents: named payloads chopped into fixed-size sealed blocks.
+//!
+//! Plaintext is split into `block_size` chunks; each chunk is sealed
+//! (CTR+HMAC, see [`crate::crypto::seal`]) under a subkey tweaked by
+//! `(image_uid, extent index, block index)`.  Per-block sealing keeps the
+//! CTR keystream single-use, localizes tamper detection, and lets the
+//! mounted reader decrypt only the blocks a request touches — with the LRU
+//! cache absorbing repeats.
+
+use crate::crypto::seal::{SealKey, TAG_LEN};
+use crate::json::{self, Value};
+
+use super::{block_tweak, VdiskError};
+
+/// What an extent holds (drives the typed readers on a mounted image).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExtentKind {
+    /// Rotation-protected biometric gallery (wire framing of
+    /// [`crate::biometric::gallery::Gallery::encode`]).
+    Gallery,
+    /// An AOT artifact file (HLO text or `manifest.json`).
+    Artifact,
+    /// Uninterpreted bytes.
+    Blob,
+}
+
+impl ExtentKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExtentKind::Gallery => "gallery",
+            ExtentKind::Artifact => "artifact",
+            ExtentKind::Blob => "blob",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "gallery" => Some(ExtentKind::Gallery),
+            "artifact" => Some(ExtentKind::Artifact),
+            "blob" => Some(ExtentKind::Blob),
+            _ => None,
+        }
+    }
+}
+
+/// Directory entry for one extent (lives in the sealed manifest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExtentMeta {
+    pub name: String,
+    pub kind: ExtentKind,
+    /// Absolute file offset of the first sealed block.
+    pub offset: u64,
+    /// Plaintext payload length.
+    pub plain_len: u64,
+    /// On-disk length (= plain_len + TAG_LEN per block).
+    pub sealed_len: u64,
+    /// Number of sealed blocks.
+    pub blocks: u32,
+}
+
+impl ExtentMeta {
+    /// Blocks needed for `plain_len` bytes at `block_size`.
+    pub fn block_count(plain_len: u64, block_size: u32) -> u32 {
+        if plain_len == 0 {
+            0
+        } else {
+            ((plain_len + block_size as u64 - 1) / block_size as u64) as u32
+        }
+    }
+
+    /// On-disk size of a payload: plaintext plus one tag per block.
+    pub fn sealed_size(plain_len: u64, block_size: u32) -> u64 {
+        plain_len + TAG_LEN as u64 * Self::block_count(plain_len, block_size) as u64
+    }
+
+    /// Plaintext bytes in block `b`.
+    pub fn plain_block_len(&self, b: u32, block_size: u32) -> u64 {
+        let bs = block_size as u64;
+        let start = b as u64 * bs;
+        debug_assert!(start < self.plain_len || self.plain_len == 0);
+        (self.plain_len - start.min(self.plain_len)).min(bs)
+    }
+
+    /// `(absolute file offset, sealed length)` of block `b`.
+    pub fn sealed_block_range(&self, b: u32, block_size: u32) -> (u64, u64) {
+        let off = self.offset + b as u64 * (block_size as u64 + TAG_LEN as u64);
+        (off, self.plain_block_len(b, block_size) + TAG_LEN as u64)
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("kind", json::s(self.kind.name())),
+            ("offset", json::num(self.offset as f64)),
+            ("plain_len", json::num(self.plain_len as f64)),
+            ("sealed_len", json::num(self.sealed_len as f64)),
+            ("blocks", json::num(self.blocks as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self, VdiskError> {
+        let str_field = |k: &str| -> Result<String, VdiskError> {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| VdiskError::Corrupt(format!("extent missing {k:?}")))
+        };
+        let num_field = |k: &str| -> Result<u64, VdiskError> {
+            v.get(k)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| VdiskError::Corrupt(format!("extent missing {k:?}")))
+        };
+        let kind_name = str_field("kind")?;
+        let kind = ExtentKind::from_name(&kind_name)
+            .ok_or_else(|| VdiskError::Corrupt(format!("unknown extent kind {kind_name:?}")))?;
+        Ok(ExtentMeta {
+            name: str_field("name")?,
+            kind,
+            offset: num_field("offset")?,
+            plain_len: num_field("plain_len")?,
+            sealed_len: num_field("sealed_len")?,
+            blocks: num_field("blocks")? as u32,
+        })
+    }
+
+    /// Geometry self-consistency (checked at mount before any reads).
+    pub fn validate(&self, block_size: u32) -> Result<(), VdiskError> {
+        let want_blocks = Self::block_count(self.plain_len, block_size);
+        let want_sealed = Self::sealed_size(self.plain_len, block_size);
+        if self.blocks != want_blocks || self.sealed_len != want_sealed {
+            return Err(VdiskError::Corrupt(format!(
+                "extent {:?}: geometry mismatch (blocks {} vs {}, sealed {} vs {})",
+                self.name, self.blocks, want_blocks, self.sealed_len, want_sealed
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Seal `data` into the concatenated block stream for extent `extent_idx`.
+pub fn seal_blocks(
+    key: &SealKey,
+    image_uid: u64,
+    extent_idx: usize,
+    data: &[u8],
+    block_size: u32,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ExtentMeta::sealed_size(data.len() as u64, block_size) as usize);
+    for (b, chunk) in data.chunks(block_size as usize).enumerate() {
+        let sub = key.subkey(&block_tweak(image_uid, extent_idx, b as u32));
+        out.extend_from_slice(&sub.seal(chunk));
+    }
+    out
+}
+
+/// Unseal one block out of the raw image bytes.
+pub fn unseal_block(
+    key: &SealKey,
+    image_uid: u64,
+    extent_idx: usize,
+    meta: &ExtentMeta,
+    block_idx: u32,
+    block_size: u32,
+    raw: &[u8],
+) -> Result<Vec<u8>, VdiskError> {
+    if block_idx >= meta.blocks {
+        return Err(VdiskError::Corrupt(format!(
+            "block {} out of range for extent {:?} ({} blocks)",
+            block_idx, meta.name, meta.blocks
+        )));
+    }
+    let (off, len) = meta.sealed_block_range(block_idx, block_size);
+    let (start, end) = (off as usize, (off + len) as usize);
+    if end > raw.len() {
+        return Err(VdiskError::Torn { expected: end as u64, actual: raw.len() as u64 });
+    }
+    key.subkey(&block_tweak(image_uid, extent_idx, block_idx))
+        .unseal(&raw[start..end])
+        .map_err(|_| VdiskError::Tamper("extent block"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_arithmetic() {
+        assert_eq!(ExtentMeta::block_count(0, 4096), 0);
+        assert_eq!(ExtentMeta::block_count(1, 4096), 1);
+        assert_eq!(ExtentMeta::block_count(4096, 4096), 1);
+        assert_eq!(ExtentMeta::block_count(4097, 4096), 2);
+        assert_eq!(ExtentMeta::sealed_size(0, 4096), 0);
+        assert_eq!(ExtentMeta::sealed_size(4096, 4096), 4096 + 32);
+        assert_eq!(ExtentMeta::sealed_size(5000, 4096), 5000 + 64);
+    }
+
+    fn meta(plain_len: u64, bs: u32) -> ExtentMeta {
+        ExtentMeta {
+            name: "t".into(),
+            kind: ExtentKind::Blob,
+            offset: 128,
+            plain_len,
+            sealed_len: ExtentMeta::sealed_size(plain_len, bs),
+            blocks: ExtentMeta::block_count(plain_len, bs),
+        }
+    }
+
+    #[test]
+    fn block_ranges_tile_the_extent() {
+        let bs = 100u32;
+        let m = meta(250, bs);
+        assert_eq!(m.blocks, 3);
+        let (o0, l0) = m.sealed_block_range(0, bs);
+        let (o1, l1) = m.sealed_block_range(1, bs);
+        let (o2, l2) = m.sealed_block_range(2, bs);
+        assert_eq!((o0, l0), (128, 132));
+        assert_eq!((o1, l1), (128 + 132, 132));
+        assert_eq!((o2, l2), (128 + 264, 50 + 32));
+        assert_eq!(o2 + l2 - m.offset, m.sealed_len);
+    }
+
+    #[test]
+    fn seal_unseal_blocks_roundtrip() {
+        let key = SealKey::from_passphrase("ext");
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let bs = 256u32;
+        let sealed = seal_blocks(&key, 42, 0, &data, bs);
+        let mut m = meta(data.len() as u64, bs);
+        m.offset = 0;
+        assert_eq!(sealed.len() as u64, m.sealed_len);
+        let mut back = Vec::new();
+        for b in 0..m.blocks {
+            back.extend(unseal_block(&key, 42, 0, &m, b, bs, &sealed).unwrap());
+        }
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn blocks_bound_to_position_and_image() {
+        let key = SealKey::from_passphrase("ext");
+        let data = vec![7u8; 100];
+        let bs = 50u32;
+        let sealed = seal_blocks(&key, 1, 0, &data, bs);
+        let mut m = meta(100, bs);
+        m.offset = 0;
+        // Swap the two sealed blocks: both must now fail their MACs.
+        let half = sealed.len() / 2;
+        let mut swapped = sealed[half..].to_vec();
+        swapped.extend_from_slice(&sealed[..half]);
+        for b in 0..2 {
+            assert!(matches!(
+                unseal_block(&key, 1, 0, &m, b, bs, &swapped),
+                Err(VdiskError::Tamper(_))
+            ));
+        }
+        // Same bytes presented as a different image uid: also rejected.
+        assert!(matches!(
+            unseal_block(&key, 2, 0, &m, 0, bs, &sealed),
+            Err(VdiskError::Tamper(_))
+        ));
+        // And as a different extent index.
+        assert!(matches!(
+            unseal_block(&key, 1, 1, &m, 0, bs, &sealed),
+            Err(VdiskError::Tamper(_))
+        ));
+    }
+
+    #[test]
+    fn truncated_raw_is_torn() {
+        let key = SealKey::from_passphrase("ext");
+        let data = vec![1u8; 300];
+        let bs = 128u32;
+        let sealed = seal_blocks(&key, 9, 0, &data, bs);
+        let mut m = meta(300, bs);
+        m.offset = 0;
+        assert!(matches!(
+            unseal_block(&key, 9, 0, &m, 2, bs, &sealed[..sealed.len() - 1]),
+            Err(VdiskError::Torn { .. })
+        ));
+    }
+
+    #[test]
+    fn meta_json_roundtrip() {
+        let m = meta(5000, 4096);
+        let back = ExtentMeta::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        assert!(back.validate(4096).is_ok());
+        assert!(back.validate(1024).is_err());
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [ExtentKind::Gallery, ExtentKind::Artifact, ExtentKind::Blob] {
+            assert_eq!(ExtentKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(ExtentKind::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,298 @@
+//! Packing cartridge images: layout computation, sealing, atomic publish.
+//!
+//! `ImageBuilder` accumulates named payloads, then [`ImageBuilder::write`]
+//! seals everything and publishes the file via *temp + atomic rename* — a
+//! cartridge yanked mid-pack leaves only a `.tmp` turd, never a half-image
+//! at the destination path.  Belt-and-braces, the trailer MAC means even a
+//! byte-for-byte prefix copy of an image (the torn state a non-atomic
+//! writer could leave) is rejected at mount.
+
+use std::path::{Path, PathBuf};
+
+use sha2::{Digest, Sha256};
+
+use crate::biometric::gallery::Gallery;
+use crate::crypto::seal::{SealKey, TAG_LEN};
+use crate::device::caps::CapabilityId;
+
+use super::extent::{seal_blocks, ExtentKind, ExtentMeta};
+use super::manifest::ImageManifest;
+use super::superblock::{Superblock, FORMAT_VERSION, SB_LEN};
+use super::{manifest_tweak, trailer_tweak, VdiskError};
+
+/// Default plaintext bytes per sealed block.
+pub const DEFAULT_BLOCK_SIZE: u32 = 4096;
+/// Reserved name of the gallery extent.
+pub const GALLERY_EXTENT: &str = "gallery";
+
+/// What [`ImageBuilder::write`] produced.
+#[derive(Debug, Clone)]
+pub struct ImageSummary {
+    pub path: PathBuf,
+    pub image_uid: u64,
+    pub total_len: u64,
+    pub block_size: u32,
+    pub extents: Vec<ExtentMeta>,
+}
+
+/// Accumulates extents and writes a sealed image.
+#[derive(Debug, Clone)]
+pub struct ImageBuilder {
+    label: String,
+    block_size: u32,
+    caps: Vec<CapabilityId>,
+    gallery_dim: u32,
+    extents: Vec<(String, ExtentKind, Vec<u8>)>,
+}
+
+impl ImageBuilder {
+    pub fn new(label: &str) -> Self {
+        ImageBuilder {
+            label: label.to_string(),
+            block_size: DEFAULT_BLOCK_SIZE,
+            caps: Vec::new(),
+            gallery_dim: 0,
+            extents: Vec::new(),
+        }
+    }
+
+    /// Plaintext block size (clamped to >= 64 bytes).
+    pub fn block_size(mut self, bs: u32) -> Self {
+        self.block_size = bs.max(64);
+        self
+    }
+
+    /// Advertise a capability in the superblock mask + manifest.
+    pub fn cap(mut self, cap: CapabilityId) -> Self {
+        if !self.caps.contains(&cap) {
+            self.caps.push(cap);
+        }
+        self
+    }
+
+    /// Add the (already rotation-protected) gallery extent.
+    pub fn gallery(mut self, g: &Gallery) -> Self {
+        self.gallery_dim = g.dim() as u32;
+        self.extents.push((GALLERY_EXTENT.to_string(), ExtentKind::Gallery, g.encode()));
+        self
+    }
+
+    /// Add an AOT artifact file (name is the image-internal path).
+    pub fn artifact(mut self, name: &str, bytes: Vec<u8>) -> Self {
+        self.extents.push((name.to_string(), ExtentKind::Artifact, bytes));
+        self
+    }
+
+    /// Add uninterpreted bytes.
+    pub fn blob(mut self, name: &str, bytes: Vec<u8>) -> Self {
+        self.extents.push((name.to_string(), ExtentKind::Blob, bytes));
+        self
+    }
+
+    pub fn extent_count(&self) -> usize {
+        self.extents.len()
+    }
+
+    /// Deterministic image identity: digest of label + extent contents.
+    /// Masked to 53 bits so it survives the JSON number path losslessly.
+    fn derive_uid(&self) -> u64 {
+        let mut h = Sha256::new();
+        h.update(b"champ-vdisk-uid-v1");
+        h.update(self.label.as_bytes());
+        for (name, kind, data) in &self.extents {
+            h.update(name.as_bytes());
+            h.update([kind.name().len() as u8]);
+            h.update((data.len() as u64).to_le_bytes());
+            h.update(data);
+        }
+        let d = h.finalize();
+        u64::from_le_bytes(d[..8].try_into().unwrap()) & ((1u64 << 53) - 1)
+    }
+
+    /// Assemble the full image in memory (superblock | extents | sealed
+    /// manifest | trailer MAC).  Exposed for tests that need torn copies.
+    pub fn build_bytes(&self, key: &SealKey) -> Result<(Vec<u8>, ImageSummary), VdiskError> {
+        for (i, (name, _, _)) in self.extents.iter().enumerate() {
+            if self.extents.iter().skip(i + 1).any(|(n, _, _)| n == name) {
+                return Err(VdiskError::Corrupt(format!("duplicate extent name {name:?}")));
+            }
+        }
+        let image_uid = self.derive_uid();
+        let payload_off = SB_LEN as u64;
+
+        let mut metas = Vec::with_capacity(self.extents.len());
+        let mut payload = Vec::new();
+        let mut off = payload_off;
+        for (i, (name, kind, data)) in self.extents.iter().enumerate() {
+            let sealed = seal_blocks(key, image_uid, i, data, self.block_size);
+            let meta = ExtentMeta {
+                name: name.clone(),
+                kind: *kind,
+                offset: off,
+                plain_len: data.len() as u64,
+                sealed_len: sealed.len() as u64,
+                blocks: ExtentMeta::block_count(data.len() as u64, self.block_size),
+            };
+            off += sealed.len() as u64;
+            payload.extend_from_slice(&sealed);
+            metas.push(meta);
+        }
+
+        let manifest = ImageManifest {
+            format_version: FORMAT_VERSION,
+            label: self.label.clone(),
+            image_uid,
+            caps: self.caps.iter().map(|c| c.name().to_string()).collect(),
+            gallery_dim: self.gallery_dim,
+            extents: metas.clone(),
+        };
+        let manifest_plain = manifest.to_json().to_json_pretty();
+        let sealed_manifest =
+            key.subkey(&manifest_tweak(image_uid)).seal(manifest_plain.as_bytes());
+
+        let manifest_off = off;
+        let total_len = manifest_off + sealed_manifest.len() as u64 + TAG_LEN as u64;
+        let sb = Superblock {
+            version: FORMAT_VERSION,
+            block_size: self.block_size,
+            image_uid,
+            caps_mask: Superblock::mask_of(&self.caps),
+            gallery_dim: self.gallery_dim,
+            extent_count: self.extents.len() as u32,
+            manifest_off,
+            manifest_len: sealed_manifest.len() as u64,
+            payload_off,
+            total_len,
+        };
+
+        let mut img = Vec::with_capacity(total_len as usize);
+        img.extend_from_slice(&sb.encode(key));
+        img.extend_from_slice(&payload);
+        img.extend_from_slice(&sealed_manifest);
+        let trailer = key.subkey(&trailer_tweak(image_uid)).mac_tag(&img);
+        img.extend_from_slice(&trailer);
+        debug_assert_eq!(img.len() as u64, total_len);
+
+        let summary = ImageSummary {
+            path: PathBuf::new(),
+            image_uid,
+            total_len,
+            block_size: self.block_size,
+            extents: metas,
+        };
+        Ok((img, summary))
+    }
+
+    /// Seal and publish the image at `path` (temp file + atomic rename).
+    pub fn write(&self, path: impl AsRef<Path>, key: &SealKey) -> Result<ImageSummary, VdiskError> {
+        let path = path.as_ref();
+        let (img, mut summary) = self.build_bytes(key)?;
+        let tmp = tmp_path(path);
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&img)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        summary.path = path.to_path_buf();
+        Ok(summary)
+    }
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::biometric::template::Template;
+    use crate::util::rng::Rng;
+
+    fn small_gallery(n: usize, dim: usize) -> Gallery {
+        let mut rng = Rng::new(11);
+        let mut g = Gallery::new(dim);
+        for i in 0..n {
+            g.add(format!("id{i}"), Template::new(rng.unit_vec(dim)));
+        }
+        g
+    }
+
+    #[test]
+    fn build_layout_is_consistent() {
+        let key = SealKey::from_passphrase("img");
+        let (img, sum) = ImageBuilder::new("test")
+            .cap(CapabilityId::Database)
+            .gallery(&small_gallery(10, 32))
+            .blob("notes", b"hello".to_vec())
+            .block_size(256)
+            .build_bytes(&key)
+            .unwrap();
+        assert_eq!(img.len() as u64, sum.total_len);
+        assert_eq!(sum.extents.len(), 2);
+        assert_eq!(sum.extents[0].offset, SB_LEN as u64);
+        assert_eq!(
+            sum.extents[1].offset,
+            sum.extents[0].offset + sum.extents[0].sealed_len
+        );
+        // Superblock parses back with the same geometry.
+        let sb = Superblock::decode(&img, &key).unwrap();
+        assert_eq!(sb.total_len, sum.total_len);
+        assert_eq!(sb.extent_count, 2);
+        assert_eq!(sb.block_size, 256);
+        assert_eq!(sb.gallery_dim, 32);
+    }
+
+    #[test]
+    fn uid_is_content_addressed() {
+        let key = SealKey::from_passphrase("img");
+        let a = ImageBuilder::new("x").blob("b", vec![1, 2, 3]);
+        let (_, s1) = a.build_bytes(&key).unwrap();
+        let (_, s2) = a.build_bytes(&key).unwrap();
+        assert_eq!(s1.image_uid, s2.image_uid, "same content, same uid");
+        let (_, s3) = ImageBuilder::new("x").blob("b", vec![1, 2, 4]).build_bytes(&key).unwrap();
+        assert_ne!(s1.image_uid, s3.image_uid, "different content, different uid");
+        assert!(s1.image_uid < (1u64 << 53));
+    }
+
+    #[test]
+    fn duplicate_extent_names_rejected() {
+        let key = SealKey::from_passphrase("img");
+        let r = ImageBuilder::new("x")
+            .blob("same", vec![1])
+            .blob("same", vec![2])
+            .build_bytes(&key);
+        assert!(matches!(r, Err(VdiskError::Corrupt(_))));
+    }
+
+    #[test]
+    fn write_publishes_atomically() {
+        let key = SealKey::from_passphrase("img");
+        let dir = std::env::temp_dir().join(format!("champ-img-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cart.vdisk");
+        let sum = ImageBuilder::new("atomic")
+            .blob("b", vec![9; 100])
+            .write(&path, &key)
+            .unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), sum.total_len);
+        assert!(
+            !tmp_path(&path).exists(),
+            "temp file must be renamed away on success"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_image_is_valid() {
+        let key = SealKey::from_passphrase("img");
+        let (img, sum) = ImageBuilder::new("empty").build_bytes(&key).unwrap();
+        assert_eq!(sum.extents.len(), 0);
+        let sb = Superblock::decode(&img, &key).unwrap();
+        assert_eq!(sb.extent_count, 0);
+        assert_eq!(sb.manifest_off, SB_LEN as u64);
+    }
+}

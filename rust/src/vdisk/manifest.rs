@@ -1,0 +1,173 @@
+//! The sealed image directory: a JSON document (via [`crate::json`])
+//! naming every extent, sealed as a single blob under the manifest tweak.
+//!
+//! The manifest duplicates the superblock's geometry-critical fields
+//! (version, uid, extent count); mount cross-checks them so a spliced
+//! superblock/manifest pair from two images cannot be passed off as one.
+
+use crate::json::{self, Value};
+
+use super::extent::ExtentMeta;
+use super::VdiskError;
+
+/// Parsed image manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageManifest {
+    pub format_version: u32,
+    /// Operator-facing name of the cartridge image.
+    pub label: String,
+    pub image_uid: u64,
+    /// Capability names ([`crate::device::caps::CapabilityId::name`]).
+    pub caps: Vec<String>,
+    /// Template dimension of the gallery extent (0 if none).
+    pub gallery_dim: u32,
+    pub extents: Vec<ExtentMeta>,
+}
+
+impl ImageManifest {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("format_version", json::num(self.format_version as f64)),
+            ("label", json::s(&self.label)),
+            ("image_uid", json::num(self.image_uid as f64)),
+            (
+                "caps",
+                Value::Arr(self.caps.iter().map(|c| json::s(c)).collect()),
+            ),
+            ("gallery_dim", json::num(self.gallery_dim as f64)),
+            (
+                "extents",
+                Value::Arr(self.extents.iter().map(|e| e.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self, VdiskError> {
+        let num = |k: &str| -> Result<u64, VdiskError> {
+            v.get(k)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| VdiskError::Corrupt(format!("manifest missing {k:?}")))
+        };
+        let label = v
+            .get("label")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| VdiskError::Corrupt("manifest missing \"label\"".into()))?
+            .to_string();
+        let caps = v
+            .get("caps")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| VdiskError::Corrupt("manifest missing \"caps\"".into()))?
+            .iter()
+            .map(|c| {
+                c.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| VdiskError::Corrupt("non-string cap".into()))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let extents = v
+            .get("extents")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| VdiskError::Corrupt("manifest missing \"extents\"".into()))?
+            .iter()
+            .map(ExtentMeta::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ImageManifest {
+            format_version: num("format_version")? as u32,
+            label,
+            image_uid: num("image_uid")?,
+            caps,
+            gallery_dim: num("gallery_dim")? as u32,
+            extents,
+        })
+    }
+
+    /// Parse from sealed-then-unsealed plaintext bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, VdiskError> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| VdiskError::Corrupt("manifest is not UTF-8".into()))?;
+        let v = json::parse(text)
+            .map_err(|e| VdiskError::Corrupt(format!("manifest JSON: {e}")))?;
+        Self::from_json(&v)
+    }
+
+    pub fn find(&self, name: &str) -> Option<(usize, &ExtentMeta)> {
+        self.extents.iter().enumerate().find(|(_, e)| e.name == name)
+    }
+
+    /// Names of all extents of one kind, in image order.
+    pub fn names_of_kind(&self, kind: super::ExtentKind) -> Vec<&str> {
+        self.extents
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.name.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ExtentKind;
+    use super::*;
+
+    fn manifest() -> ImageManifest {
+        ImageManifest {
+            format_version: 1,
+            label: "unit-7 gallery".into(),
+            image_uid: 77,
+            caps: vec!["database".into()],
+            gallery_dim: 128,
+            extents: vec![
+                ExtentMeta {
+                    name: "gallery".into(),
+                    kind: ExtentKind::Gallery,
+                    offset: 128,
+                    plain_len: 1000,
+                    sealed_len: 1032,
+                    blocks: 1,
+                },
+                ExtentMeta {
+                    name: "artifacts/manifest.json".into(),
+                    kind: ExtentKind::Artifact,
+                    offset: 1160,
+                    plain_len: 64,
+                    sealed_len: 96,
+                    blocks: 1,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = manifest();
+        let text = m.to_json().to_json_pretty();
+        let back = ImageManifest::from_bytes(text.as_bytes()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn find_and_kind_filters() {
+        let m = manifest();
+        assert_eq!(m.find("gallery").unwrap().0, 0);
+        assert!(m.find("nope").is_none());
+        assert_eq!(m.names_of_kind(ExtentKind::Artifact), vec!["artifacts/manifest.json"]);
+        assert!(m.names_of_kind(ExtentKind::Blob).is_empty());
+    }
+
+    #[test]
+    fn garbage_bytes_rejected() {
+        assert!(matches!(
+            ImageManifest::from_bytes(b"{not json"),
+            Err(VdiskError::Corrupt(_))
+        ));
+        assert!(matches!(
+            ImageManifest::from_bytes(&[0xFF, 0xFE]),
+            Err(VdiskError::Corrupt(_))
+        ));
+        // Valid JSON, missing fields.
+        assert!(matches!(
+            ImageManifest::from_bytes(b"{\"label\": \"x\"}"),
+            Err(VdiskError::Corrupt(_))
+        ));
+    }
+}

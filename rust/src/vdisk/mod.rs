@@ -1,0 +1,130 @@
+//! VDiSK cartridge images: the sealed, block-structured on-disk container
+//! that makes a storage cartridge *durable* (paper §3.2: cartridges carry
+//! "cryptographically secured biometric datasets" on the module itself).
+//!
+//! An image file holds everything a cartridge needs to come back after a
+//! power cycle or a hot-swap: the rotation-protected gallery, AOT model
+//! artifacts, and arbitrary blobs — each stored as a sealed extent.
+//!
+//! ## On-disk layout (format v1; DESIGN.md §VDiSK image layout)
+//!
+//! ```text
+//! +-----------------------------+ 0
+//! | superblock (96 B + 32 B MAC)|  plaintext geometry: version, caps,
+//! +-----------------------------+ 128      block size, offsets, total_len
+//! | extent 0: sealed blocks     |  each block sealed under a per-block
+//! | extent 1: sealed blocks     |  subkey (encrypt-then-MAC, CTR+HMAC)
+//! | ...                         |
+//! +-----------------------------+ manifest_off
+//! | sealed JSON manifest        |  names/kinds/offsets of every extent
+//! +-----------------------------+ total_len - 32
+//! | trailer: HMAC(whole image)  |  one MAC over everything before it
+//! +-----------------------------+ total_len
+//! ```
+//!
+//! Fail-closed properties the integration tests pin down:
+//! * any single flipped bit anywhere → mount fails with [`VdiskError::Tamper`];
+//! * a torn write (detach mid-pack) → [`VdiskError::Torn`] — and the
+//!   builder writes via temp-file + atomic rename so a yanked pack never
+//!   leaves a half-image at the destination path;
+//! * block subkeys bind ciphertext to (image uid, extent, block), so
+//!   splicing sealed blocks between or within images also fails the MAC.
+//!
+//! Module map: [`superblock`] (fixed header), [`extent`] (block framing +
+//! sealing), [`manifest`] (sealed JSON directory), [`image`] (the packer),
+//! [`mount`] (verify-then-read lifecycle + hot-swap supervisor), [`cache`]
+//! (LRU over decrypted blocks so repeated gallery/artifact reads are fast).
+
+pub mod cache;
+pub mod extent;
+pub mod image;
+pub mod manifest;
+pub mod mount;
+pub mod superblock;
+
+pub use cache::{CacheStats, LruCache};
+pub use extent::{ExtentKind, ExtentMeta};
+pub use image::{ImageBuilder, ImageSummary};
+pub use manifest::ImageManifest;
+pub use mount::{MountEvent, MountEventKind, MountSupervisor, MountedImage};
+pub use superblock::{Superblock, FORMAT_VERSION};
+
+/// Everything that can go wrong opening or reading a cartridge image.
+#[derive(Debug)]
+pub enum VdiskError {
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+    /// The file does not start with the vdisk magic.
+    BadMagic,
+    /// Image written by a newer (or corrupted) format revision.
+    UnsupportedVersion(u32),
+    /// The file is shorter/longer than the superblock says: a torn write
+    /// (e.g. the cartridge was yanked mid-pack) or a truncated copy.
+    Torn { expected: u64, actual: u64 },
+    /// A MAC failed: the named region has been tampered with.
+    Tamper(&'static str),
+    /// Structurally invalid metadata (manifest JSON, extent geometry).
+    Corrupt(String),
+    /// No extent with the requested name.
+    MissingExtent(String),
+}
+
+impl std::fmt::Display for VdiskError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VdiskError::Io(e) => write!(f, "vdisk io error: {e}"),
+            VdiskError::BadMagic => write!(f, "not a vdisk image (bad magic)"),
+            VdiskError::UnsupportedVersion(v) => {
+                write!(f, "unsupported vdisk format version {v}")
+            }
+            VdiskError::Torn { expected, actual } => write!(
+                f,
+                "torn image: superblock claims {expected} bytes, file has {actual} \
+                 (half-written or truncated)"
+            ),
+            VdiskError::Tamper(what) => {
+                write!(f, "tamper detected: {what} failed MAC verification")
+            }
+            VdiskError::Corrupt(why) => write!(f, "corrupt image metadata: {why}"),
+            VdiskError::MissingExtent(name) => write!(f, "no extent named {name:?}"),
+        }
+    }
+}
+
+impl std::error::Error for VdiskError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            VdiskError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for VdiskError {
+    fn from(e: std::io::Error) -> Self {
+        VdiskError::Io(e)
+    }
+}
+
+impl VdiskError {
+    /// True for the classes a mount must reject as integrity failures
+    /// (rather than wrong-usage errors).
+    pub fn is_integrity_failure(&self) -> bool {
+        matches!(self, VdiskError::Tamper(_) | VdiskError::Torn { .. } | VdiskError::BadMagic)
+    }
+}
+
+/// Subkey tweak for the sealed manifest of image `uid`.
+pub(crate) fn manifest_tweak(image_uid: u64) -> String {
+    format!("vdisk/{image_uid}/manifest")
+}
+
+/// Subkey tweak for the whole-image trailer MAC of image `uid`.
+pub(crate) fn trailer_tweak(image_uid: u64) -> String {
+    format!("vdisk/{image_uid}/trailer")
+}
+
+/// Subkey tweak binding a sealed block to (image, extent, block).
+pub(crate) fn block_tweak(image_uid: u64, extent_idx: usize, block_idx: u32) -> String {
+    format!("vdisk/{image_uid}/ext/{extent_idx}/blk/{block_idx}")
+}

@@ -1,0 +1,463 @@
+//! Mount/unmount lifecycle: verify-then-read access to a cartridge image.
+//!
+//! `mount` makes one sequential pass over the file (superblock MAC, length
+//! check against the superblock's `total_len`, whole-image trailer MAC,
+//! sealed-manifest open + cross-check) and fails closed before a single
+//! payload byte is interpreted.  After that, reads decrypt lazily per
+//! block through the LRU cache.
+//!
+//! [`MountSupervisor`] is the coordinator-facing half: it tracks which
+//! cartridge carries which image file (the [`MediaBay`]), mounts on
+//! Attach, unmounts on Detach, and logs every outcome — a yanked,
+//! half-written image shows up as a `Rejected` event, never as a mount.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::biometric::gallery::Gallery;
+use crate::bus::hotplug::MediaBay;
+use crate::crypto::seal::{SealKey, TAG_LEN};
+
+use super::cache::{CacheStats, LruCache};
+use super::extent::{unseal_block, ExtentKind};
+use super::image::GALLERY_EXTENT;
+use super::manifest::ImageManifest;
+use super::superblock::{Superblock, SB_LEN};
+use super::{manifest_tweak, trailer_tweak, VdiskError};
+
+/// Default decrypted-block cache capacity (blocks, not bytes).
+pub const DEFAULT_CACHE_BLOCKS: usize = 64;
+
+/// A verified, readable cartridge image.
+pub struct MountedImage {
+    pub superblock: Superblock,
+    pub manifest: ImageManifest,
+    path: PathBuf,
+    key: SealKey,
+    raw: Vec<u8>,
+    cache: Mutex<LruCache<(u32, u32), Arc<Vec<u8>>>>,
+}
+
+impl std::fmt::Debug for MountedImage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MountedImage")
+            .field("path", &self.path)
+            .field("image_uid", &self.superblock.image_uid)
+            .field("label", &self.manifest.label)
+            .field("extents", &self.manifest.extents.len())
+            .field("total_len", &self.superblock.total_len)
+            .finish()
+    }
+}
+
+impl MountedImage {
+    /// Mount with the default cache size.
+    pub fn mount(path: impl AsRef<Path>, key: &SealKey) -> Result<Self, VdiskError> {
+        Self::mount_with_cache(path, key, DEFAULT_CACHE_BLOCKS)
+    }
+
+    /// Mount with an explicit decrypted-block cache capacity.
+    pub fn mount_with_cache(
+        path: impl AsRef<Path>,
+        key: &SealKey,
+        cache_blocks: usize,
+    ) -> Result<Self, VdiskError> {
+        let path = path.as_ref().to_path_buf();
+        let raw = std::fs::read(&path)?;
+        let sb = Superblock::decode(&raw, key)?;
+        if raw.len() as u64 != sb.total_len {
+            return Err(VdiskError::Torn { expected: sb.total_len, actual: raw.len() as u64 });
+        }
+        if sb.total_len < (SB_LEN + TAG_LEN) as u64 {
+            return Err(VdiskError::Corrupt("superblock total_len too small".into()));
+        }
+        // Whole-image trailer: one MAC over everything before it.  This is
+        // what rejects a half-written image that was torn *after* the
+        // superblock landed, and any flipped byte the regional MACs cover.
+        let body_end = raw.len() - TAG_LEN;
+        if !key
+            .subkey(&trailer_tweak(sb.image_uid))
+            .verify_tag(&raw[..body_end], &raw[body_end..])
+        {
+            return Err(VdiskError::Tamper("image trailer"));
+        }
+        // Sealed manifest.
+        let (mo, ml) = (sb.manifest_off as usize, sb.manifest_len as usize);
+        if mo < SB_LEN || mo.checked_add(ml).map_or(true, |end| end > body_end) {
+            return Err(VdiskError::Corrupt("manifest range outside image".into()));
+        }
+        let plain = key
+            .subkey(&manifest_tweak(sb.image_uid))
+            .unseal(&raw[mo..mo + ml])
+            .map_err(|_| VdiskError::Tamper("manifest"))?;
+        let manifest = ImageManifest::from_bytes(&plain)?;
+        // Superblock/manifest cross-checks: a spliced pair must not mount.
+        if manifest.image_uid != sb.image_uid
+            || manifest.format_version != sb.version
+            || manifest.extents.len() != sb.extent_count as usize
+            || manifest.gallery_dim != sb.gallery_dim
+        {
+            return Err(VdiskError::Corrupt("superblock/manifest mismatch".into()));
+        }
+        // Extent geometry must tile [payload_off, manifest_off).
+        for e in &manifest.extents {
+            e.validate(sb.block_size)?;
+            let end = e.offset.checked_add(e.sealed_len);
+            if e.offset < sb.payload_off || end.map_or(true, |x| x > sb.manifest_off) {
+                return Err(VdiskError::Corrupt(format!(
+                    "extent {:?} outside payload region",
+                    e.name
+                )));
+            }
+        }
+        Ok(MountedImage {
+            superblock: sb,
+            manifest,
+            path,
+            key: key.clone(),
+            raw,
+            cache: Mutex::new(LruCache::new(cache_blocks)),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn image_uid(&self) -> u64 {
+        self.superblock.image_uid
+    }
+
+    pub fn label(&self) -> &str {
+        &self.manifest.label
+    }
+
+    /// Decrypt (or cache-hit) one block of one extent.
+    pub fn read_block(&self, extent_idx: usize, block: u32) -> Result<Arc<Vec<u8>>, VdiskError> {
+        let meta = self
+            .manifest
+            .extents
+            .get(extent_idx)
+            .ok_or_else(|| VdiskError::Corrupt(format!("no extent index {extent_idx}")))?;
+        let cache_key = (extent_idx as u32, block);
+        if let Some(hit) = self.cache.lock().unwrap().get(&cache_key) {
+            return Ok(hit.clone());
+        }
+        let plain = unseal_block(
+            &self.key,
+            self.superblock.image_uid,
+            extent_idx,
+            meta,
+            block,
+            self.superblock.block_size,
+            &self.raw,
+        )?;
+        let arc = Arc::new(plain);
+        self.cache.lock().unwrap().put(cache_key, arc.clone());
+        Ok(arc)
+    }
+
+    /// Read a whole extent by name (assembled from cached blocks).
+    pub fn read_extent(&self, name: &str) -> Result<Vec<u8>, VdiskError> {
+        let (idx, meta) = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| VdiskError::MissingExtent(name.to_string()))?;
+        let mut out = Vec::with_capacity(meta.plain_len as usize);
+        for b in 0..meta.blocks {
+            out.extend_from_slice(&self.read_block(idx, b)?);
+        }
+        Ok(out)
+    }
+
+    /// Decode the gallery extent (rotation-protected templates).
+    pub fn load_gallery(&self) -> Result<Gallery, VdiskError> {
+        let bytes = self.read_extent(GALLERY_EXTENT)?;
+        Gallery::decode(&bytes, self.superblock.gallery_dim as usize)
+            .map_err(|e| VdiskError::Corrupt(format!("gallery extent: {e}")))
+    }
+
+    /// Names of the artifact extents carried on this image.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .names_of_kind(ExtentKind::Artifact)
+            .into_iter()
+            .map(str::to_string)
+            .collect()
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().unwrap().stats()
+    }
+}
+
+/// What happened to a cartridge's media at a lifecycle edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MountEventKind {
+    Mounted,
+    /// Mount refused (tamper/torn/corrupt); detail carries the error.
+    Rejected,
+    Unmounted,
+}
+
+/// One entry in the supervisor's lifecycle log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MountEvent {
+    pub uid: u64,
+    pub at_us: u64,
+    pub kind: MountEventKind,
+    pub detail: String,
+}
+
+/// Coordinator-side mount table: media registry + live mounts + event log.
+#[derive(Debug, Clone, Default)]
+pub struct MountSupervisor {
+    key: Option<SealKey>,
+    /// Which image file is physically on each cartridge (by uid).
+    pub bay: MediaBay,
+    mounted: HashMap<u64, Arc<MountedImage>>,
+    pub events: Vec<MountEvent>,
+}
+
+impl MountSupervisor {
+    pub fn with_key(key: SealKey) -> Self {
+        MountSupervisor { key: Some(key), ..Default::default() }
+    }
+
+    /// Install (or rotate) the deployment seal key.
+    pub fn set_key(&mut self, key: SealKey) {
+        self.key = Some(key);
+    }
+
+    pub fn has_key(&self) -> bool {
+        self.key.is_some()
+    }
+
+    /// Declare that cartridge `uid` carries the image at `path`.
+    pub fn register_media(&mut self, uid: u64, path: impl Into<PathBuf>) {
+        self.bay.insert(uid, path.into());
+    }
+
+    /// Attach edge: mount the cartridge's media if it has any and a key is
+    /// installed.  A failed verification logs `Rejected` and mounts nothing.
+    pub fn handle_attach(&mut self, uid: u64, at_us: u64) -> Option<Arc<MountedImage>> {
+        // Remount semantics: if the uid is already mounted (operator
+        // reflash, repeated registration) the old mount is released first
+        // so the event log stays pairwise balanced.
+        self.handle_detach(uid, at_us);
+        let key = self.key.as_ref()?;
+        let path = self.bay.path_of(uid)?.to_path_buf();
+        match MountedImage::mount(&path, key) {
+            Ok(img) => {
+                let img = Arc::new(img);
+                self.events.push(MountEvent {
+                    uid,
+                    at_us,
+                    kind: MountEventKind::Mounted,
+                    detail: format!("{} ({} extents)", img.label(), img.manifest.extents.len()),
+                });
+                self.mounted.insert(uid, img.clone());
+                Some(img)
+            }
+            Err(e) => {
+                self.events.push(MountEvent {
+                    uid,
+                    at_us,
+                    kind: MountEventKind::Rejected,
+                    detail: e.to_string(),
+                });
+                None
+            }
+        }
+    }
+
+    /// Detach edge: drop the mount (the media leaves with the module; its
+    /// bay registration stays so a re-insert can remount).
+    pub fn handle_detach(&mut self, uid: u64, at_us: u64) {
+        if self.mounted.remove(&uid).is_some() {
+            self.events.push(MountEvent {
+                uid,
+                at_us,
+                kind: MountEventKind::Unmounted,
+                detail: String::new(),
+            });
+        }
+    }
+
+    pub fn is_mounted(&self, uid: u64) -> bool {
+        self.mounted.contains_key(&uid)
+    }
+
+    pub fn image(&self, uid: u64) -> Option<&Arc<MountedImage>> {
+        self.mounted.get(&uid)
+    }
+
+    pub fn mounted_count(&self) -> usize {
+        self.mounted.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::image::ImageBuilder;
+    use super::*;
+    use crate::biometric::template::Template;
+    use crate::device::caps::CapabilityId;
+    use crate::util::rng::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("champ-mnt-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn gallery(n: usize, dim: usize) -> Gallery {
+        let mut rng = Rng::new(3);
+        let mut g = Gallery::new(dim);
+        for i in 0..n {
+            g.add(format!("id{i}"), Template::new(rng.unit_vec(dim)));
+        }
+        g
+    }
+
+    fn build(dir: &Path, key: &SealKey) -> PathBuf {
+        let path = dir.join("cart.vdisk");
+        ImageBuilder::new("mount-test")
+            .cap(CapabilityId::Database)
+            .gallery(&gallery(20, 16))
+            .blob("config", b"{\"fps\": 8}".to_vec())
+            .block_size(128)
+            .write(&path, key)
+            .unwrap();
+        path
+    }
+
+    #[test]
+    fn mount_and_read_roundtrip() {
+        let key = SealKey::from_passphrase("mnt");
+        let dir = tmp_dir("rt");
+        let path = build(&dir, &key);
+        let img = MountedImage::mount(&path, &key).unwrap();
+        assert_eq!(img.label(), "mount-test");
+        let g = img.load_gallery().unwrap();
+        assert_eq!(g.len(), 20);
+        assert_eq!(img.read_extent("config").unwrap(), b"{\"fps\": 8}");
+        assert!(matches!(
+            img.read_extent("missing"),
+            Err(VdiskError::MissingExtent(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repeated_reads_hit_the_cache() {
+        let key = SealKey::from_passphrase("mnt");
+        let dir = tmp_dir("cache");
+        let path = build(&dir, &key);
+        let img = MountedImage::mount(&path, &key).unwrap();
+        let a = img.read_extent("gallery").unwrap();
+        let cold = img.cache_stats();
+        assert_eq!(cold.hits, 0);
+        assert!(cold.misses > 0);
+        let b = img.read_extent("gallery").unwrap();
+        assert_eq!(a, b);
+        let warm = img.cache_stats();
+        assert_eq!(warm.misses, cold.misses, "second read must not miss");
+        assert_eq!(warm.hits, cold.misses, "every block served from cache");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_key_rejected() {
+        let key = SealKey::from_passphrase("mnt");
+        let dir = tmp_dir("wrongkey");
+        let path = build(&dir, &key);
+        let r = MountedImage::mount(&path, &SealKey::from_passphrase("other"));
+        assert!(matches!(r, Err(VdiskError::Tamper(_))), "{r:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flipped_bytes_rejected() {
+        let key = SealKey::from_passphrase("mnt");
+        let dir = tmp_dir("flip");
+        let path = build(&dir, &key);
+        let good = std::fs::read(&path).unwrap();
+        // Sample across the whole file (superblock, extents, manifest,
+        // trailer); the integration test does the exhaustive sweep.
+        for i in (0..good.len()).step_by(7) {
+            let mut bad = good.clone();
+            bad[i] ^= 0x20;
+            let p = dir.join("bad.vdisk");
+            std::fs::write(&p, &bad).unwrap();
+            let e = MountedImage::mount(&p, &key).expect_err(&format!("byte {i} accepted"));
+            assert!(
+                e.is_integrity_failure() || matches!(e, VdiskError::UnsupportedVersion(_)),
+                "byte {i}: unexpected class {e:?}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_image_is_torn_or_tampered() {
+        let key = SealKey::from_passphrase("mnt");
+        let dir = tmp_dir("torn");
+        let path = build(&dir, &key);
+        let good = std::fs::read(&path).unwrap();
+        for keep in [0usize, 1, 64, 128, 200, good.len() - 33, good.len() - 1] {
+            let p = dir.join("torn.vdisk");
+            std::fs::write(&p, &good[..keep]).unwrap();
+            let e = MountedImage::mount(&p, &key).expect_err(&format!("prefix {keep} accepted"));
+            assert!(e.is_integrity_failure(), "prefix {keep}: {e:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn supervisor_lifecycle() {
+        let key = SealKey::from_passphrase("sup");
+        let dir = tmp_dir("sup");
+        let path = build(&dir, &key);
+        let mut sup = MountSupervisor::with_key(key.clone());
+        sup.register_media(7, &path);
+
+        // No media for uid 8: attach is a no-op.
+        assert!(sup.handle_attach(8, 100).is_none());
+        assert!(sup.events.is_empty());
+
+        // Attach mounts; detach unmounts; re-attach remounts.
+        assert!(sup.handle_attach(7, 200).is_some());
+        assert!(sup.is_mounted(7));
+        assert_eq!(sup.mounted_count(), 1);
+        sup.handle_detach(7, 300);
+        assert!(!sup.is_mounted(7));
+        assert!(sup.handle_attach(7, 400).is_some());
+        let kinds: Vec<_> = sup.events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![MountEventKind::Mounted, MountEventKind::Unmounted, MountEventKind::Mounted]
+        );
+
+        // Tampered media: attach is rejected and nothing is mounted.
+        let mut bad = std::fs::read(&path).unwrap();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        let bad_path = dir.join("bad.vdisk");
+        std::fs::write(&bad_path, &bad).unwrap();
+        sup.handle_detach(7, 500);
+        sup.register_media(7, &bad_path);
+        assert!(sup.handle_attach(7, 600).is_none());
+        assert!(!sup.is_mounted(7));
+        let last = sup.events.last().unwrap();
+        assert_eq!(last.kind, MountEventKind::Rejected);
+        assert!(last.detail.contains("tamper"), "{}", last.detail);
+
+        // No key installed: attach never mounts.
+        let mut keyless = MountSupervisor::default();
+        keyless.register_media(1, &path);
+        assert!(keyless.handle_attach(1, 0).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

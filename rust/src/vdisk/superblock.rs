@@ -1,0 +1,224 @@
+//! The fixed-size image header: plaintext geometry under an HMAC.
+//!
+//! The superblock is readable without the seal key (an operator can ask
+//! "what is this stick?" — version, capability mask, sizes), but it carries
+//! its own MAC so any edit is caught the moment a key is presented, before
+//! the whole-image trailer pass even starts.
+
+use crate::crypto::seal::SealKey;
+use crate::device::caps::CapabilityId;
+
+use super::VdiskError;
+
+/// File magic, byte 0.
+pub const MAGIC: [u8; 8] = *b"CHAMPVDK";
+/// Current container format revision.
+pub const FORMAT_VERSION: u32 = 1;
+/// Plaintext header bytes (fields + reserved padding).
+pub const SB_HEADER_LEN: usize = 96;
+/// Total superblock size on disk: header + 32-byte MAC.
+pub const SB_LEN: usize = 128;
+/// Subkey tweak for the superblock MAC.
+pub const SB_TWEAK: &str = "vdisk/superblock";
+
+/// Parsed superblock fields.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Superblock {
+    pub version: u32,
+    /// Plaintext bytes per sealed block.
+    pub block_size: u32,
+    /// Image identity; bound into every subkey tweak.
+    pub image_uid: u64,
+    /// Bit per [`CapabilityId::code`] the cartridge advertises.
+    pub caps_mask: u32,
+    /// Template dimension of the gallery extent (0 if none).
+    pub gallery_dim: u32,
+    pub extent_count: u32,
+    /// Absolute offset of the sealed manifest.
+    pub manifest_off: u64,
+    /// Sealed manifest length.
+    pub manifest_len: u64,
+    /// Absolute offset of the first extent (== SB_LEN in v1).
+    pub payload_off: u64,
+    /// Whole file length including the 32-byte trailer.
+    pub total_len: u64,
+}
+
+impl Superblock {
+    /// Capability bitmask for a cap set.
+    pub fn mask_of(caps: &[CapabilityId]) -> u32 {
+        caps.iter().fold(0u32, |m, c| m | (1u32 << c.code()))
+    }
+
+    /// Decode the bitmask back to capability ids.
+    pub fn caps(&self) -> Vec<CapabilityId> {
+        (0u8..32)
+            .filter(|b| self.caps_mask & (1u32 << b) != 0)
+            .filter_map(CapabilityId::from_code)
+            .collect()
+    }
+
+    /// Serialize: 96 header bytes followed by the MAC.
+    pub fn encode(&self, key: &SealKey) -> [u8; SB_LEN] {
+        let mut out = [0u8; SB_LEN];
+        out[0..8].copy_from_slice(&MAGIC);
+        out[8..12].copy_from_slice(&self.version.to_le_bytes());
+        out[12..16].copy_from_slice(&self.block_size.to_le_bytes());
+        out[16..24].copy_from_slice(&self.image_uid.to_le_bytes());
+        out[24..28].copy_from_slice(&self.caps_mask.to_le_bytes());
+        out[28..32].copy_from_slice(&self.gallery_dim.to_le_bytes());
+        out[32..36].copy_from_slice(&self.extent_count.to_le_bytes());
+        // out[36..40] reserved
+        out[40..48].copy_from_slice(&self.manifest_off.to_le_bytes());
+        out[48..56].copy_from_slice(&self.manifest_len.to_le_bytes());
+        out[56..64].copy_from_slice(&self.payload_off.to_le_bytes());
+        out[64..72].copy_from_slice(&self.total_len.to_le_bytes());
+        // out[72..96] reserved
+        let tag = key.subkey(SB_TWEAK).mac_tag(&out[..SB_HEADER_LEN]);
+        out[SB_HEADER_LEN..SB_LEN].copy_from_slice(&tag);
+        out
+    }
+
+    /// Parse the plaintext fields **without** MAC verification — for
+    /// `vdisk inspect` when no key is presented.  Anything read this way
+    /// is unauthenticated; never act on it beyond display.
+    pub fn peek(bytes: &[u8]) -> Result<Self, VdiskError> {
+        Self::parse(bytes, None)
+    }
+
+    /// Parse and MAC-verify the leading superblock of `bytes`.
+    pub fn decode(bytes: &[u8], key: &SealKey) -> Result<Self, VdiskError> {
+        Self::parse(bytes, Some(key))
+    }
+
+    fn parse(bytes: &[u8], key: Option<&SealKey>) -> Result<Self, VdiskError> {
+        if bytes.len() < SB_LEN {
+            return Err(VdiskError::Torn { expected: SB_LEN as u64, actual: bytes.len() as u64 });
+        }
+        if bytes[0..8] != MAGIC {
+            return Err(VdiskError::BadMagic);
+        }
+        let u32_at = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let u64_at = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+        let version = u32_at(8);
+        if version != FORMAT_VERSION {
+            return Err(VdiskError::UnsupportedVersion(version));
+        }
+        if let Some(key) = key {
+            if !key
+                .subkey(SB_TWEAK)
+                .verify_tag(&bytes[..SB_HEADER_LEN], &bytes[SB_HEADER_LEN..SB_LEN])
+            {
+                return Err(VdiskError::Tamper("superblock"));
+            }
+        }
+        Ok(Superblock {
+            version,
+            block_size: u32_at(12),
+            image_uid: u64_at(16),
+            caps_mask: u32_at(24),
+            gallery_dim: u32_at(28),
+            extent_count: u32_at(32),
+            manifest_off: u64_at(40),
+            manifest_len: u64_at(48),
+            payload_off: u64_at(56),
+            total_len: u64_at(64),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sb() -> Superblock {
+        Superblock {
+            version: FORMAT_VERSION,
+            block_size: 4096,
+            image_uid: 0xDEAD_BEEF,
+            caps_mask: Superblock::mask_of(&[CapabilityId::Database, CapabilityId::FaceEmbed]),
+            gallery_dim: 128,
+            extent_count: 3,
+            manifest_off: 10_000,
+            manifest_len: 512,
+            payload_off: SB_LEN as u64,
+            total_len: 10_544,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let key = SealKey::from_passphrase("sb");
+        let enc = sb().encode(&key);
+        assert_eq!(Superblock::decode(&enc, &key).unwrap(), sb());
+    }
+
+    #[test]
+    fn caps_mask_roundtrip() {
+        let caps = sb().caps();
+        assert!(caps.contains(&CapabilityId::Database));
+        assert!(caps.contains(&CapabilityId::FaceEmbed));
+        assert_eq!(caps.len(), 2);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let key = SealKey::from_passphrase("sb");
+        let mut enc = sb().encode(&key);
+        enc[0] ^= 0xFF;
+        assert!(matches!(Superblock::decode(&enc, &key), Err(VdiskError::BadMagic)));
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let key = SealKey::from_passphrase("sb");
+        let mut s = sb();
+        s.version = 99;
+        let enc = s.encode(&key);
+        assert!(matches!(
+            Superblock::decode(&enc, &key),
+            Err(VdiskError::UnsupportedVersion(99))
+        ));
+    }
+
+    #[test]
+    fn any_field_flip_fails_mac() {
+        let key = SealKey::from_passphrase("sb");
+        let enc = sb().encode(&key);
+        for i in 8..SB_LEN {
+            // (skip magic: that path errs as BadMagic, tested above)
+            let mut bad = enc;
+            bad[i] ^= 0x01;
+            match Superblock::decode(&bad, &key) {
+                Err(VdiskError::Tamper(_)) | Err(VdiskError::UnsupportedVersion(_)) => {}
+                other => panic!("byte {i}: expected tamper/version error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn peek_reads_fields_without_key() {
+        let enc = sb().encode(&SealKey::from_passphrase("whatever"));
+        let peeked = Superblock::peek(&enc).unwrap();
+        assert_eq!(peeked, sb());
+    }
+
+    #[test]
+    fn wrong_key_fails_mac() {
+        let enc = sb().encode(&SealKey::from_passphrase("a"));
+        assert!(matches!(
+            Superblock::decode(&enc, &SealKey::from_passphrase("b")),
+            Err(VdiskError::Tamper(_))
+        ));
+    }
+
+    #[test]
+    fn short_buffer_is_torn() {
+        let key = SealKey::from_passphrase("sb");
+        let enc = sb().encode(&key);
+        assert!(matches!(
+            Superblock::decode(&enc[..SB_LEN - 1], &key),
+            Err(VdiskError::Torn { .. })
+        ));
+    }
+}

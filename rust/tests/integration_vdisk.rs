@@ -1,0 +1,188 @@
+//! Integration: the full vdisk persistence loop.
+//!
+//! Packs a gallery+artifact image through the *CLI code path*, mounts it,
+//! runs a match and an executor-manifest load, unmounts, remounts, and
+//! proves the results are identical.  Then the fail-closed half: every
+//! single flipped byte makes mount fail, and a detach mid-write (torn
+//! prefix) never yields a mountable half-image.
+
+use std::path::{Path, PathBuf};
+
+use champ::cli::{self, vdisk as cli_vdisk};
+use champ::crypto::seal::SealKey;
+use champ::crypto::KeyChain;
+use champ::device::storage::StorageCartridge;
+use champ::runtime::Manifest;
+use champ::vdisk::{ImageBuilder, MountEventKind, MountSupervisor, MountedImage, VdiskError};
+use champ::workload::faces::FaceDataset;
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("champ-ivdisk-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A minimal but real artifacts directory (manifest.json + HLO text).
+fn fake_artifacts(dir: &Path) -> PathBuf {
+    let art = dir.join("artifacts");
+    std::fs::create_dir_all(&art).unwrap();
+    std::fs::write(
+        art.join("toy_embed.hlo"),
+        "HloModule toy_embed\nENTRY e { ROOT c = f32[128] constant({...}) }\n",
+    )
+    .unwrap();
+    std::fs::write(
+        art.join("manifest.json"),
+        "{\"models\": [{\"name\": \"toy_embed\", \"file\": \"toy_embed.hlo\", \
+         \"inputs\": [{\"shape\": [64, 64, 3], \"dtype\": \"f32\"}], \
+         \"outputs\": [{\"shape\": [128], \"dtype\": \"f32\"}], \"hlo_bytes\": 42}]}",
+    )
+    .unwrap();
+    art
+}
+
+fn cli_args(s: &str) -> cli::Args {
+    cli::parse_args(s.split_whitespace().map(String::from))
+}
+
+/// Pack via the exact code path `champd vdisk pack` runs.
+fn pack_via_cli(dir: &Path, gallery: usize, dim: usize, key: &str) -> PathBuf {
+    let art = fake_artifacts(dir);
+    let out = dir.join("cart.vdisk");
+    let argv = format!(
+        "vdisk pack --out {} --gallery {gallery} --dim {dim} --seed 9 --key {key} \
+         --label mission-cart --artifacts {} --block-size 512",
+        out.display(),
+        art.display()
+    );
+    cli_vdisk::run(&cli_args(&argv)).unwrap();
+    out
+}
+
+#[test]
+fn full_loop_pack_mount_match_unmount_remount() {
+    let dir = tmp("loop");
+    let out = pack_via_cli(&dir, 50, 64, "mission-key");
+
+    // The probe set: same deterministic dataset the packer enrolled.
+    let data = FaceDataset::generate(50, 0, 64, 0.05, 9);
+    let probe = data.gallery.get("subject-0007").unwrap().clone();
+
+    // Mount #1: match + executor (artifact manifest) load.
+    let keys = KeyChain::derive("mission-key", 64);
+    let sc1 =
+        StorageCartridge::load_from_image(1, &out, keys.rotation.clone(), keys.seal.clone())
+            .unwrap();
+    assert_eq!(sc1.len(), 50);
+    let m1 = sc1.match_probe(&probe, 5).unwrap();
+    assert_eq!(m1.best_id, "subject-0007", "planted probe must match itself");
+    assert!((m1.best_score - 1.0).abs() < 1e-3);
+
+    let img1 = MountedImage::mount(&out, &keys.seal).unwrap();
+    let man1 = Manifest::load_from_image(&img1, dir.join("spill1")).unwrap();
+    let hlo1 = std::fs::read(&man1.model("toy_embed").unwrap().file).unwrap();
+
+    // Unmount everything (drop is unmount for directly-held images).
+    drop(img1);
+    drop(sc1);
+
+    // Remount with freshly re-derived keys: identical results.
+    let keys2 = KeyChain::derive("mission-key", 64);
+    let sc2 =
+        StorageCartridge::load_from_image(2, &out, keys2.rotation.clone(), keys2.seal.clone())
+            .unwrap();
+    let m2 = sc2.match_probe(&probe, 5).unwrap();
+    assert_eq!(m1, m2, "match outcome must be identical after unmount/remount");
+
+    let img2 = MountedImage::mount(&out, &keys2.seal).unwrap();
+    let man2 = Manifest::load_from_image(&img2, dir.join("spill2")).unwrap();
+    let hlo2 = std::fs::read(&man2.model("toy_embed").unwrap().file).unwrap();
+    assert_eq!(hlo1, hlo2, "artifact bytes must be identical after remount");
+    assert_eq!(
+        std::fs::read(dir.join("artifacts").join("toy_embed.hlo")).unwrap(),
+        hlo2,
+        "artifact bytes must survive the pack→mount loop unchanged"
+    );
+    assert_eq!(man1.models.len(), man2.models.len());
+
+    // The CLI verifier agrees the image is healthy.
+    let report = cli_vdisk::verify(out.to_str().unwrap(), "mission-key").unwrap();
+    assert!(report.contains("OK"), "{report}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_flipped_byte_anywhere_fails_mount() {
+    let dir = tmp("flip");
+    // Small image so the exhaustive sweep stays fast.
+    let out = pack_via_cli(&dir, 4, 8, "flip-key");
+    let seal = SealKey::from_passphrase("flip-key");
+    let good = std::fs::read(&out).unwrap();
+    MountedImage::mount(&out, &seal).expect("pristine image must mount");
+
+    let bad_path = dir.join("bad.vdisk");
+    for i in 0..good.len() {
+        let mut bad = good.clone();
+        bad[i] ^= 0x01;
+        std::fs::write(&bad_path, &bad).unwrap();
+        match MountedImage::mount(&bad_path, &seal) {
+            Ok(_) => panic!("flipped byte {i}/{} mounted successfully", good.len()),
+            Err(e) => assert!(
+                e.is_integrity_failure() || matches!(e, VdiskError::UnsupportedVersion(_)),
+                "byte {i}: unexpected error class {e:?}"
+            ),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn detach_mid_write_never_yields_a_mountable_half_image() {
+    let dir = tmp("torn");
+    let out = pack_via_cli(&dir, 4, 8, "torn-key");
+    let seal = SealKey::from_passphrase("torn-key");
+    let good = std::fs::read(&out).unwrap();
+
+    // A detach at any point mid-write leaves some strict prefix of the
+    // image bytes.  None of them may mount.
+    let torn_path = dir.join("torn.vdisk");
+    for keep in 0..good.len() {
+        std::fs::write(&torn_path, &good[..keep]).unwrap();
+        let e = MountedImage::mount(&torn_path, &seal)
+            .expect_err(&format!("prefix of {keep}/{} bytes mounted", good.len()));
+        assert!(e.is_integrity_failure(), "prefix {keep}: {e:?}");
+    }
+
+    // The packer itself cannot be torn into a half-image at the final
+    // path: it stages into `<name>.tmp` and renames only when complete.
+    let staged = dir.join("staged.vdisk");
+    assert!(!staged.exists());
+    ImageBuilder::new("atomic").blob("b", vec![1; 64]).write(&staged, &seal).unwrap();
+    assert!(staged.exists());
+    assert!(!dir.join("staged.vdisk.tmp").exists(), "no staging turd after success");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hotswap_supervisor_rejects_half_image_on_attach() {
+    let dir = tmp("sup");
+    let out = pack_via_cli(&dir, 6, 8, "sup-key");
+    let good = std::fs::read(&out).unwrap();
+    // The module was yanked while its image was being rewritten: what is
+    // left on flash is a prefix.
+    let half = dir.join("half.vdisk");
+    std::fs::write(&half, &good[..good.len() / 2]).unwrap();
+
+    let mut sup = MountSupervisor::with_key(SealKey::from_passphrase("sup-key"));
+    sup.register_media(3, &half);
+    assert!(sup.handle_attach(3, 1_000).is_none(), "half-image must not mount");
+    assert!(!sup.is_mounted(3));
+    let ev = sup.events.last().unwrap();
+    assert_eq!(ev.kind, MountEventKind::Rejected);
+
+    // Operator reflashes the module with the intact image: mounts fine.
+    sup.register_media(3, &out);
+    assert!(sup.handle_attach(3, 2_000).is_some());
+    assert!(sup.is_mounted(3));
+    std::fs::remove_dir_all(&dir).ok();
+}
