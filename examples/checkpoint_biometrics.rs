@@ -139,7 +139,8 @@ fn main() -> anyhow::Result<()> {
     println!("rank-1: {rank1}/{attempted} ({:.1}%), quality-gated: {gated}",
         100.0 * rank1 as f64 / attempted.max(1) as f64);
     println!("max |plaintext-protected| score diff across matchers: {score_diff_max:.2e}");
-    println!("per-stage wall-clock mean: detect {:.1} ms, quality {:.1} ms, embed {:.1} ms, match {:.1} ms",
+    println!(
+        "per-stage wall-clock mean: detect {:.1} ms, quality {:.1} ms, embed {:.1} ms, match {:.1} ms",
         stage_ms[0] / PROBES as f64, stage_ms[1] / PROBES as f64,
         stage_ms[2] / PROBES as f64, stage_ms[3] / PROBES as f64);
     assert!(rank1 as f64 / attempted.max(1) as f64 > 0.9, "rank-1 accuracy collapsed");

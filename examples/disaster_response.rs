@@ -15,7 +15,8 @@ use champ::workload::video::VideoSource;
 fn main() -> anyhow::Result<()> {
     // Phase 1: debris survey with an object-detection bitstream.
     let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 4);
-    let uid = o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Fpga, CapDescriptor::object_detect()))?;
+    let uid =
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Fpga, CapDescriptor::object_detect()))?;
     let mut drone = VideoSource::paper_stream(21).with_rate_fps(10.0);
     let rep1 = o.run_pipelined(&mut drone, 50, vec![]);
     println!("phase 1 (debris survey): {:.1} fps, mean latency {:.1} ms",

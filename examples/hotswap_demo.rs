@@ -17,7 +17,8 @@ use champ::workload::video::VideoSource;
 fn main() -> anyhow::Result<()> {
     let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
     o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))?;
-    let quality = o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))?;
+    let quality =
+        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))?;
     o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed()))?;
 
     println!("T+0.0s  pipeline up: face-detect -> face-quality -> face-embed");

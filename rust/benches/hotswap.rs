@@ -18,10 +18,13 @@ fn main() {
         "src FPS", "remove s", "reinsert s", "dropped", "max buffered");
     for fps in [4.0, 8.0, 12.0] {
         let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
-        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))
+            .unwrap();
         let quality =
-            o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
-        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
+            o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))
+                .unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed()))
+            .unwrap();
 
         let trace = MissionTrace::hotswap_experiment();
         let events = trace.to_hotplug_events(quality);

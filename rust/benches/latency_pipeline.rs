@@ -17,9 +17,12 @@ fn main() {
         "src FPS", "mean ms", "p99 ms", "compute ms", "overhead");
     for fps in [4.0, 8.0, 10.0] {
         let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
-        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
-        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
-        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))
+            .unwrap();
+        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))
+            .unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed()))
+            .unwrap();
         let mut src = VideoSource::paper_stream(3).with_rate_fps(fps);
         let rep = o.run_pipelined(&mut src, 60, vec![]);
         let overhead = rep.latency.mean_us() / rep.compute_us_mean - 1.0;

@@ -23,8 +23,8 @@ fn main() {
     for n in 1..=5usize {
         let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
         for i in 0..n {
-            o.plug(SlotId(i as u8), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::object_detect()))
-                .unwrap();
+            let cart = Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::object_detect());
+            o.plug(SlotId(i as u8), cart).unwrap();
         }
         let mut src = VideoSource::paper_stream(7);
         let rep = o.run_broadcast(&mut src, 60);

@@ -1,31 +1,47 @@
 //! Bench: paper Table 1 — inference throughput scaling with 1..5 USB3
 //! neural accelerators running MobileNetV2, broadcast dispatch.
 //!
-//! Regenerates the table for both device families and prints paper-reported
-//! values alongside for comparison.  Deterministic (virtual time).
+//! Two parts:
+//! 1. the paper reproduction (synchronous barrier, per-frame FPS exactly
+//!    as Table 1 reports it);
+//! 2. the event-driven engine's scaling curve (aggregate inference
+//!    throughput): near-linear growth 1→4 accelerators with visible
+//!    saturation at 5 on `usb3_gen1`, and ≥ the barrier baseline at every
+//!    point — the paper's headline claim, now produced by overlapped
+//!    dispatch rather than by the barrier artifact.
+//!
+//! Deterministic (virtual time).
 
 mod common;
 
-use champ::bus::topology::SlotId;
-use champ::bus::usb3::BusProfile;
+use champ::cli::bench::rack as bench_rack;
+use champ::coordinator::engine::EngineConfig;
 use champ::coordinator::scheduler::Orchestrator;
-use champ::device::caps::CapDescriptor;
-use champ::device::{Cartridge, DeviceKind};
+use champ::device::DeviceKind;
 use champ::workload::video::VideoSource;
 
 const PAPER_NCS2: [f64; 5] = [15.0, 13.0, 10.0, 8.0, 6.0];
 const PAPER_CORAL: [f64; 5] = [25.0, 22.0, 19.0, 17.0, 15.0];
 
+fn rack(kind: DeviceKind, n: usize) -> Orchestrator {
+    bench_rack(kind, n).unwrap()
+}
+
 fn sweep(kind: DeviceKind) -> Vec<f64> {
     (1..=5)
         .map(|n| {
-            let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
-            for i in 0..n {
-                o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))
-                    .unwrap();
-            }
             let mut src = VideoSource::paper_stream(7);
-            o.run_broadcast(&mut src, 60).fps
+            rack(kind, n).run_broadcast(&mut src, 60).fps
+        })
+        .collect()
+}
+
+fn engine_sweep(kind: DeviceKind, batch: u32) -> Vec<f64> {
+    (1..=5)
+        .map(|n| {
+            let src = VideoSource::paper_stream(7);
+            let cfg = EngineConfig::batched(batch).with_warmup(10);
+            rack(kind, n).run_broadcast_engine(&src, 80, cfg, vec![]).fps
         })
         .collect()
 }
@@ -53,5 +69,37 @@ fn main() {
     for w in coral.windows(2) {
         assert!(w[1] < w[0], "Coral FPS must decline with device count");
     }
+
+    common::header("Event-driven engine: aggregate throughput (completions/s)");
+    println!("{:<12} | {:>12} | {:>12} | {:>12} | {:>12}",
+        "# of Modules", "NCS2 barrier", "NCS2 engine", "Coral barrier", "Coral engine");
+    let eng_ncs2 = engine_sweep(DeviceKind::Ncs2, 1);
+    let eng_coral = engine_sweep(DeviceKind::Coral, 1);
+    for n in 0..5 {
+        let scale = (n + 1) as f64;
+        println!("{:<12} | {:>12.1} | {:>12.1} | {:>12.1} | {:>12.1}",
+            n + 1, ncs2[n] * scale, eng_ncs2[n], coral[n] * scale, eng_coral[n]);
+    }
+    // Near-linear growth 1→4, then the quadratic host term saturates the
+    // 5th NCS2 device.
+    for (name, eng) in [("NCS2", &eng_ncs2), ("Coral", &eng_coral)] {
+        for w in eng.windows(2).take(3) {
+            assert!(w[1] > w[0], "{name} engine FPS must grow 1→4: {eng:?}");
+        }
+    }
+    assert!(eng_ncs2[4] < eng_ncs2[3],
+        "NCS2 must show visible saturation at 5 accelerators: {eng_ncs2:?}");
+    // Batched/overlapped dispatch beats the barrier at every point.
+    for n in 0..5 {
+        let scale = (n + 1) as f64;
+        assert!(eng_ncs2[n] >= ncs2[n] * scale * 0.99,
+            "NCS2 n={}: engine {:.1} < barrier {:.1}", n + 1, eng_ncs2[n], ncs2[n] * scale);
+        assert!(eng_coral[n] >= coral[n] * scale * 0.99,
+            "Coral n={}: engine {:.1} < barrier {:.1}", n + 1, eng_coral[n], coral[n] * scale);
+    }
+    // Batching amortizes the host bottleneck where it binds (NCS2 @ 5).
+    let b4 = engine_sweep(DeviceKind::Ncs2, 4);
+    assert!(b4[4] > eng_ncs2[4],
+        "batch=4 must lift the host-bound point: {:.1} vs {:.1}", b4[4], eng_ncs2[4]);
     println!("table1_scaling OK");
 }

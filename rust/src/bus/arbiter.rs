@@ -6,6 +6,12 @@
 //! arbiter is deliberately policy-pluggable: the paper's §6 floats
 //! peer-to-peer and re-routable topologies, which the ablation bench
 //! exercises via [`Policy::PeerToPeer`].
+//!
+//! The dispatch engine consults a stateful [`Arbiter`] whenever the shared
+//! wire frees up: the set of cartridges with a transfer ready at that
+//! instant is passed to [`Arbiter::grant`], which rotates through slots via
+//! [`grant_order`].  Saturation behavior in the scaling sweep therefore
+//! emerges from these grants, not from host-side booking order.
 
 use super::topology::SlotId;
 
@@ -18,6 +24,78 @@ pub enum Policy {
     /// directly; host only sees first input and final output.  Modeled as
     /// a second, independent wire segment between neighbours.
     PeerToPeer,
+}
+
+/// Which physical segment carries a transfer under a given policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Segment {
+    /// The shared host-mediated wire (arbitrated, serializes).
+    HostWire,
+    /// A direct neighbour-to-neighbour link (per-pair, no host hop).
+    PeerLink,
+}
+
+impl Policy {
+    /// Segment for a transfer from `from` to `to` (`None` = the host /
+    /// orchestrator side).  Peer links exist only between physically
+    /// adjacent slots; everything else rides the shared wire.
+    pub fn segment(&self, from: Option<SlotId>, to: Option<SlotId>) -> Segment {
+        match self {
+            Policy::RoundRobin => Segment::HostWire,
+            Policy::PeerToPeer => match (from, to) {
+                (Some(a), Some(b)) if a.0.abs_diff(b.0) == 1 => Segment::PeerLink,
+                _ => Segment::HostWire,
+            },
+        }
+    }
+}
+
+/// Stateful round-robin grant engine over [`grant_order`].
+///
+/// Remembers the last grantee so fairness holds across calls even when the
+/// pending set changes between grants (devices come and go mid-run).
+#[derive(Debug, Clone)]
+pub struct Arbiter {
+    pub policy: Policy,
+    last: Option<SlotId>,
+}
+
+impl Arbiter {
+    pub fn new(policy: Policy) -> Self {
+        Arbiter { policy, last: None }
+    }
+
+    /// Pick the next slot to occupy the shared wire from the set of slots
+    /// with a transfer pending.  Round-robin: the rotation continues from
+    /// the last grantee even if it is no longer pending.
+    pub fn grant(&mut self, pending: &[SlotId]) -> Option<SlotId> {
+        let mut slots: Vec<SlotId> = pending.to_vec();
+        slots.sort_unstable();
+        slots.dedup();
+        if slots.is_empty() {
+            return None;
+        }
+        // Anchor the rotation: the last grantee if it is pending again,
+        // otherwise the highest pending slot below it (so grant_order
+        // resumes at the first pending slot *after* `last`, wrapping).
+        let anchor = self.last.and_then(|l| {
+            if slots.contains(&l) {
+                Some(l)
+            } else {
+                slots.iter().rev().find(|&&s| s < l).copied()
+            }
+        });
+        let pick = grant_order(&slots, anchor).first().copied();
+        if let Some(p) = pick {
+            self.last = Some(p);
+        }
+        pick
+    }
+
+    /// The last slot granted the wire, if any.
+    pub fn last_grant(&self) -> Option<SlotId> {
+        self.last
+    }
 }
 
 /// Round-robin grant order starting after `last`: slots are visited in
@@ -60,5 +138,47 @@ mod tests {
     fn unknown_last_starts_from_zero() {
         let slots = vec![SlotId(3), SlotId(4)];
         assert_eq!(grant_order(&slots, Some(SlotId(9))), slots);
+    }
+
+    #[test]
+    fn arbiter_rotates_fairly() {
+        let mut a = Arbiter::new(Policy::RoundRobin);
+        let all = [SlotId(0), SlotId(1), SlotId(2)];
+        assert_eq!(a.grant(&all), Some(SlotId(0)));
+        assert_eq!(a.grant(&all), Some(SlotId(1)));
+        assert_eq!(a.grant(&all), Some(SlotId(2)));
+        assert_eq!(a.grant(&all), Some(SlotId(0)), "rotation wraps");
+    }
+
+    #[test]
+    fn arbiter_resumes_past_missing_grantee() {
+        let mut a = Arbiter::new(Policy::RoundRobin);
+        assert_eq!(a.grant(&[SlotId(0), SlotId(1), SlotId(2)]), Some(SlotId(0)));
+        // Slot 0 granted; now only 1 and 2 pending -> 1 is next in rotation.
+        assert_eq!(a.grant(&[SlotId(1), SlotId(2)]), Some(SlotId(1)));
+        // Slot 1 vanished from pending; rotation continues after it.
+        assert_eq!(a.grant(&[SlotId(0), SlotId(2)]), Some(SlotId(2)));
+        assert_eq!(a.grant(&[SlotId(0), SlotId(2)]), Some(SlotId(0)));
+    }
+
+    #[test]
+    fn arbiter_single_pending_always_granted() {
+        let mut a = Arbiter::new(Policy::RoundRobin);
+        for _ in 0..3 {
+            assert_eq!(a.grant(&[SlotId(4)]), Some(SlotId(4)));
+        }
+        assert_eq!(a.grant(&[]), None);
+        assert_eq!(a.last_grant(), Some(SlotId(4)));
+    }
+
+    #[test]
+    fn peer_segment_only_between_adjacent_slots() {
+        let p = Policy::PeerToPeer;
+        assert_eq!(p.segment(Some(SlotId(1)), Some(SlotId(2))), Segment::PeerLink);
+        assert_eq!(p.segment(Some(SlotId(2)), Some(SlotId(1))), Segment::PeerLink);
+        assert_eq!(p.segment(Some(SlotId(0)), Some(SlotId(2))), Segment::HostWire);
+        assert_eq!(p.segment(None, Some(SlotId(0))), Segment::HostWire);
+        assert_eq!(p.segment(Some(SlotId(3)), None), Segment::HostWire);
+        assert_eq!(Policy::RoundRobin.segment(Some(SlotId(1)), Some(SlotId(2))), Segment::HostWire);
     }
 }

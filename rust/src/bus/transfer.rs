@@ -63,4 +63,14 @@ mod tests {
     fn zero_byte_transfer_is_one_token() {
         assert_eq!(Transfer::new(0, Direction::HostToDevice, 0).segments(), vec![0]);
     }
+
+    #[test]
+    fn coalesced_batch_still_splits_into_segments() {
+        // The engine coalesces a batch of frames into one logical transfer
+        // (see coordinator::messages::BatchEnvelope); past the URB cap it
+        // still pays per-segment overheads.
+        let t = Transfer::new(4 * 270_000, Direction::HostToDevice, 12);
+        assert_eq!(t.segments().len(), 2);
+        assert_eq!(t.segments().iter().sum::<u64>(), 1_080_000);
+    }
 }

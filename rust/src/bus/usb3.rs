@@ -1,6 +1,9 @@
 //! USB3 bus bandwidth & overhead model.
 
+use std::collections::HashMap;
+
 use super::clock::Resource;
+use super::topology::SlotId;
 
 /// Static characteristics of a bus generation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -62,9 +65,19 @@ impl BusProfile {
         self.line_rate_gbps * self.efficiency * 1e9 / 8.0 / 1e6
     }
 
-    /// Wire time for a payload of `bytes`.
+    /// Wire time for a payload of `bytes` riding one bulk transaction.
     pub fn wire_time_us(&self, bytes: u64) -> u64 {
         (bytes as f64 / self.bytes_per_us()).ceil() as u64 + self.per_txn_us
+    }
+
+    /// Wire time for a bulk payload that may exceed the URB segment cap
+    /// ([`super::transfer::MAX_SEGMENT_BYTES`]): every segment pays the
+    /// per-transaction overhead.  The dispatch engine books coalesced
+    /// batches through this, so oversized batches are not undercharged.
+    pub fn bulk_time_us(&self, bytes: u64) -> u64 {
+        let cap = super::transfer::MAX_SEGMENT_BYTES;
+        let segments = ((bytes + cap - 1) / cap).max(1);
+        (bytes as f64 / self.bytes_per_us()).ceil() as u64 + self.per_txn_us * segments
     }
 
     /// Host driver efficiency relative to the USB3 reference stack: a
@@ -80,19 +93,29 @@ impl BusProfile {
     }
 }
 
-/// The shared bus: one wire resource + one host-controller resource.
+/// The shared bus: one wire resource + one host-controller resource, plus
+/// (for the §6 peer-to-peer policy) one private segment per adjacent pair.
 #[derive(Debug, Clone)]
 pub struct Usb3Bus {
     pub profile: BusProfile,
     pub wire: Resource,
     pub host: Resource,
+    /// §6 future-bus mode: independent neighbour-to-neighbour segments,
+    /// created lazily the first time a pair exchanges a tensor.
+    peer_links: HashMap<(SlotId, SlotId), Resource>,
     /// Number of devices the host stack is currently juggling.
     active_devices: usize,
 }
 
 impl Usb3Bus {
     pub fn new(profile: BusProfile) -> Self {
-        Usb3Bus { profile, wire: Resource::new(), host: Resource::new(), active_devices: 0 }
+        Usb3Bus {
+            profile,
+            wire: Resource::new(),
+            host: Resource::new(),
+            peer_links: HashMap::new(),
+            active_devices: 0,
+        }
     }
 
     pub fn set_active_devices(&mut self, n: usize) {
@@ -113,6 +136,26 @@ impl Usb3Bus {
         self.wire.reserve(host_done, wire_cost)
     }
 
+    /// Book a direct neighbour transfer ([`super::arbiter::Policy::PeerToPeer`])
+    /// on the pair's private segment: no host hop, no shared-wire grant.
+    /// Transfers over the *same* pair still serialize.
+    pub fn peer_transfer(
+        &mut self,
+        a: SlotId,
+        b: SlotId,
+        earliest_us: u64,
+        bytes: u64,
+    ) -> (u64, u64) {
+        let key = if a <= b { (a, b) } else { (b, a) };
+        let cost = self.profile.bulk_time_us(bytes);
+        self.peer_links.entry(key).or_default().reserve(earliest_us, cost)
+    }
+
+    /// Total busy time across all peer segments.
+    pub fn peer_busy_us(&self) -> u64 {
+        self.peer_links.values().map(Resource::busy_us).sum()
+    }
+
     /// Wire utilization over `[0, now]`.
     pub fn wire_utilization(&self, now_us: u64) -> f64 {
         self.wire.utilization(now_us)
@@ -120,6 +163,14 @@ impl Usb3Bus {
 
     pub fn host_utilization(&self, now_us: u64) -> f64 {
         self.host.utilization(now_us)
+    }
+
+    /// Mean utilization of the peer segments in use over `[0, now]`.
+    pub fn peer_utilization(&self, now_us: u64) -> f64 {
+        if self.peer_links.is_empty() || now_us == 0 {
+            return 0.0;
+        }
+        self.peer_busy_us() as f64 / (self.peer_links.len() as u64 * now_us) as f64
     }
 }
 
@@ -164,5 +215,32 @@ mod tests {
         let usb = BusProfile::usb3_gen1().wire_time_us(270_000);
         let pcie = BusProfile::pcie_gen3_x1().wire_time_us(270_000);
         assert!(pcie < usb);
+    }
+
+    #[test]
+    fn bulk_time_charges_every_segment() {
+        let p = BusProfile::usb3_gen1();
+        // Below the URB cap: identical to a single transaction.
+        assert_eq!(p.bulk_time_us(270_000), p.wire_time_us(270_000));
+        assert_eq!(p.bulk_time_us(0), p.wire_time_us(0));
+        // 2.16 MB batch spans 3 segments: two extra per-txn overheads.
+        let bytes = 8 * 270_000;
+        assert_eq!(p.bulk_time_us(bytes), p.wire_time_us(bytes) + 2 * p.per_txn_us);
+    }
+
+    #[test]
+    fn peer_pairs_are_independent_but_serialize_within_a_pair() {
+        let mut bus = Usb3Bus::new(BusProfile::usb3_gen1());
+        let (s1, e1) = bus.peer_transfer(SlotId(0), SlotId(1), 0, 24_576);
+        // Reverse direction uses the same segment: must queue.
+        let (s2, _) = bus.peer_transfer(SlotId(1), SlotId(0), 0, 24_576);
+        assert_eq!(s1, 0);
+        assert!(s2 >= e1, "same pair serializes");
+        // A different pair is a different segment: starts immediately.
+        let (s3, _) = bus.peer_transfer(SlotId(1), SlotId(2), 0, 24_576);
+        assert_eq!(s3, 0);
+        // And none of it touches the shared wire.
+        assert_eq!(bus.wire.busy_us(), 0);
+        assert!(bus.peer_busy_us() > 0);
     }
 }

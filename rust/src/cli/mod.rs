@@ -4,6 +4,7 @@
 //! needs.  Unknown flags are errors; `--help` text is the caller's job.
 //! A repeated flag follows the conventional "last one wins" rule.
 
+pub mod bench;
 pub mod vdisk;
 
 /// Parsed command line.

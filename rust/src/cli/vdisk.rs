@@ -87,7 +87,8 @@ pub fn inspect(path: &str, passphrase: Option<&str>) -> anyhow::Result<String> {
             let raw = std::fs::read(path)?;
             let sb = Superblock::peek(&raw)?;
             writeln!(out, "{path}: vdisk image (superblock UNVERIFIED — no key)")?;
-            writeln!(out, "  format v{}  block {} B  total {} B", sb.version, sb.block_size, sb.total_len)?;
+            writeln!(out, "  format v{}  block {} B  total {} B",
+                sb.version, sb.block_size, sb.total_len)?;
             writeln!(out, "  image uid {:#x}", sb.image_uid)?;
             let caps: Vec<&str> = sb.caps().iter().map(|c| c.name()).collect();
             writeln!(out, "  caps: [{}]  gallery dim {}  extents {}",

@@ -1,0 +1,137 @@
+//! Deterministic completion queue — the dispatch engine's event heap.
+//!
+//! The engine advances virtual time by popping the *earliest* completion
+//! (bus transfer done, inference done, handoff done) and immediately
+//! refilling whatever resource just freed.  Ties are broken by insertion
+//! order so runs are bit-for-bit reproducible regardless of payload type:
+//! two completions at the same microsecond pop in the order they were
+//! scheduled, exactly like a hardware completion ring.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled completion.
+#[derive(Debug, Clone)]
+pub struct Completion<T> {
+    pub at_us: u64,
+    /// Insertion sequence — the FIFO tie-break.
+    order: u64,
+    pub payload: T,
+}
+
+impl<T> PartialEq for Completion<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_us == other.at_us && self.order == other.order
+    }
+}
+
+impl<T> Eq for Completion<T> {}
+
+// BinaryHeap is a max-heap; invert the ordering so the earliest completion
+// (and, within a tick, the first-scheduled one) surfaces first.
+impl<T> Ord for Completion<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at_us
+            .cmp(&self.at_us)
+            .then_with(|| other.order.cmp(&self.order))
+    }
+}
+
+impl<T> PartialOrd for Completion<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap of pending completions over virtual time.
+#[derive(Debug, Clone)]
+pub struct CompletionQueue<T> {
+    heap: BinaryHeap<Completion<T>>,
+    pushed: u64,
+}
+
+impl<T> Default for CompletionQueue<T> {
+    fn default() -> Self {
+        CompletionQueue { heap: BinaryHeap::new(), pushed: 0 }
+    }
+}
+
+impl<T> CompletionQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `payload` to complete at `at_us`.
+    pub fn push(&mut self, at_us: u64, payload: T) {
+        let order = self.pushed;
+        self.pushed += 1;
+        self.heap.push(Completion { at_us, order, payload });
+    }
+
+    /// Pop the earliest completion (FIFO within a tick).
+    pub fn pop(&mut self) -> Option<Completion<T>> {
+        self.heap.pop()
+    }
+
+    /// Time of the next completion without consuming it.
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|c| c.at_us)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = CompletionQueue::new();
+        q.push(300, "c");
+        q.push(100, "a");
+        q.push(200, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|c| c.payload)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_pop_fifo() {
+        let mut q = CompletionQueue::new();
+        q.push(50, 1);
+        q.push(50, 2);
+        q.push(50, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|c| c.payload)).collect();
+        assert_eq!(order, vec![1, 2, 3], "same-tick completions keep insertion order");
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut q = CompletionQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(7, ());
+        assert_eq!(q.peek_time(), Some(7));
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+        q.pop();
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = CompletionQueue::new();
+        q.push(10, "x");
+        q.push(30, "z");
+        assert_eq!(q.pop().unwrap().at_us, 10);
+        q.push(20, "y");
+        assert_eq!(q.pop().unwrap().payload, "y");
+        assert_eq!(q.pop().unwrap().payload, "z");
+    }
+}

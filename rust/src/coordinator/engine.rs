@@ -1,0 +1,989 @@
+//! Event-driven batched dispatch engine — the successor to the synchronous
+//! per-frame barrier in [`super::scheduler`].
+//!
+//! The barrier loop (`run_broadcast`) completes every frame on every device
+//! before the next frame is distributed, so the slowest device gates the
+//! whole rack and "saturation" is an artifact of the barrier.  This engine
+//! instead runs a single virtual-time completion queue:
+//!
+//! * each cartridge gets a **bounded in-flight window** (credits from
+//!   [`CreditFlow`]): up to `window` batches may be anywhere between host
+//!   submission and result return;
+//! * frames are dispatched in **batches** ([`BatchEnvelope`]): one host
+//!   transaction and one wire transaction carry `batch` frames, amortizing
+//!   the per-URB host cost that dominates the Table-1 roll-off;
+//! * all shared-wire occupancy is granted by [`Arbiter`]
+//!   (round-robin over slots with a transfer pending), so bus saturation
+//!   emerges from grants on the shared USB3 segment rather than from
+//!   host-side booking order;
+//! * [`Policy::PeerToPeer`] moves intermediate pipeline tensors onto
+//!   private neighbour links (§6 ablation) — the host wire then carries
+//!   only first input and final output.
+//!
+//! The loop pops the earliest completion (host prep done, transfer done,
+//! inference done) and immediately refills whatever just freed: broadcast
+//! mode overlaps input transfers with compute, pipelined mode streams
+//! batches hop-to-hop with credit-chained backpressure and no global
+//! synchronization.  Broadcast mode additionally survives scripted
+//! hot-plug: a detached cartridge's in-flight work is cancelled (counted
+//! as dropped, never double-completed) and a re-attached cartridge resumes
+//! at its own frame cursor.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use crate::bus::arbiter::{Arbiter, Policy, Segment};
+use crate::bus::hotplug::{HotplugEvent, HotplugKind, HotplugScript};
+use crate::bus::topology::SlotId;
+use crate::device::timing::stream_handoff_us;
+use crate::device::Cartridge;
+use crate::metrics::{FpsMeter, Histogram};
+use crate::workload::video::VideoSource;
+
+use super::completion::CompletionQueue;
+use super::flow::CreditFlow;
+use super::messages::{output_bytes, BatchEnvelope};
+use super::scheduler::Orchestrator;
+
+/// Tuning knobs for the dispatch engine.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Frames coalesced per dispatch (one host txn + one wire txn each).
+    pub batch: u32,
+    /// In-flight batches allowed per cartridge (credit window).
+    pub window: u32,
+    /// Wire arbitration policy.
+    pub policy: Policy,
+    /// Completions excluded from the FPS measurement (steady-state cutoff
+    /// so short CI runs do not report startup transients or 0).
+    pub warmup: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { batch: 1, window: 2, policy: Policy::RoundRobin, warmup: 0 }
+    }
+}
+
+impl EngineConfig {
+    /// Batched dispatch with the default double-buffered window.
+    pub fn batched(batch: u32) -> Self {
+        EngineConfig { batch: batch.max(1), ..Default::default() }
+    }
+
+    pub fn with_window(mut self, window: u32) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_warmup(mut self, warmup: u64) -> Self {
+        self.warmup = warmup;
+        self
+    }
+}
+
+/// What an engine run produced.
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    pub frames_in: u64,
+    /// Device-frame dispatches (broadcast: up to `frames × devices`).
+    pub dispatched: u64,
+    /// Device-frame completions that returned a result.
+    pub results_out: u64,
+    /// Device-frames cancelled by hot-detach while in flight.
+    pub dropped: u64,
+    /// Frames for which every dispatched copy completed.
+    pub frames_out: u64,
+    /// Aggregate completion throughput (results/s past warmup).
+    pub fps: f64,
+    /// Dispatch→result latency per device-frame.
+    pub latency: Histogram,
+    /// Shared-wire busy fraction over the run horizon.
+    pub bus_utilization: f64,
+    pub host_utilization: f64,
+    /// Mean busy fraction of the §6 peer links (0 unless PeerToPeer).
+    pub peer_utilization: f64,
+    pub elapsed_us: u64,
+    pub throttle_events: u64,
+    /// Per-device frame seqs in completion order (uid-sorted), for
+    /// order/exactly-once verification.
+    pub per_device: Vec<(u64, Vec<u64>)>,
+}
+
+/// Which leg of its journey a wire request is on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Leg {
+    /// Broadcast: host → device input tensor.
+    Input,
+    /// Broadcast: device → host result.
+    Result,
+    /// Pipelined: handoff into stage `BatchState::stage`.
+    Hop,
+    /// Pipelined: final stage → host result.
+    Tail,
+}
+
+/// A batch in flight.
+#[derive(Debug, Clone, Copy)]
+struct BatchState {
+    env: BatchEnvelope,
+    /// When the batch entered the engine (for dispatch→result latency).
+    dispatched_us: u64,
+    /// Pipelined mode: stage index this batch is entering.
+    stage: usize,
+}
+
+/// A transfer waiting for (or riding) the shared wire.
+#[derive(Debug, Clone, Copy)]
+struct WireReq {
+    uid: u64,
+    epoch: u64,
+    slot: SlotId,
+    bytes: u64,
+    ready_us: u64,
+    leg: Leg,
+    b: BatchState,
+}
+
+/// Completion-queue payloads.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Host finished preparing a submission; input transfer is eligible.
+    HostDone { uid: u64, epoch: u64, b: BatchState },
+    /// A wire (or peer-link) transfer finished.
+    XferDone { req: WireReq },
+    /// A device finished computing a batch.
+    InferDone { uid: u64, epoch: u64, b: BatchState },
+    /// A rate-limited source produced the frames a device waits on.
+    SourceReady { uid: u64, epoch: u64 },
+    /// Pipelined head: the next source batch is fully captured.
+    HeadReady,
+}
+
+/// Per-cartridge engine state (broadcast) / per-stage log (pipelined).
+#[derive(Debug, Clone)]
+struct DevState {
+    slot: SlotId,
+    /// Bumped on detach so stale completions are recognized and ignored.
+    epoch: u64,
+    live: bool,
+    /// Next frame seq this device will be handed.
+    next_seq: u64,
+    in_flight_frames: u64,
+    /// Frame seqs in completion order.
+    completed: Vec<u64>,
+    waiting_source: bool,
+}
+
+impl DevState {
+    fn new(slot: SlotId) -> Self {
+        DevState {
+            slot,
+            epoch: 0,
+            live: true,
+            next_seq: 0,
+            in_flight_frames: 0,
+            completed: Vec::new(),
+            waiting_source: false,
+        }
+    }
+}
+
+/// Run-wide accounting.
+#[derive(Debug, Clone)]
+struct RunStats {
+    dispatched: u64,
+    results: u64,
+    dropped: u64,
+    latency: Histogram,
+    meter: FpsMeter,
+    /// seq → (copies dispatched, copies completed).
+    per_seq: HashMap<u64, (u32, u32)>,
+    last_done: u64,
+}
+
+impl RunStats {
+    fn new(warmup: u64) -> Self {
+        RunStats {
+            dispatched: 0,
+            results: 0,
+            dropped: 0,
+            latency: Histogram::default(),
+            meter: FpsMeter::with_warmup(warmup),
+            per_seq: HashMap::new(),
+            last_done: 0,
+        }
+    }
+}
+
+/// Mutable engine state, bundled so `Orchestrator` methods can borrow it
+/// alongside the bus/cartridge substrate without aliasing.
+struct EngineState {
+    q: CompletionQueue<Ev>,
+    arbiter: Arbiter,
+    flow: CreditFlow,
+    pending: Vec<WireReq>,
+    devs: BTreeMap<u64, DevState>,
+    spares: HashMap<u64, Cartridge>,
+    st: RunStats,
+    frames: u64,
+    batch: u32,
+    /// Source frame interval (0 = saturating).
+    interval: u64,
+    // ---- pipelined-mode extras ----
+    /// Pipeline stages in order: (uid, slot, handoff_us, out_bytes/frame).
+    stages: Vec<(u64, SlotId, u64, u64)>,
+    /// Batches that finished stage k-1 and wait for a stage-k credit
+    /// (they still hold the k-1 credit: chained backpressure).
+    blocked: Vec<VecDeque<BatchState>>,
+    /// Pipelined head cursor.
+    head_seq: u64,
+    head_waiting: bool,
+    frame_bytes: u64,
+}
+
+fn min_opt(a: Option<u64>, b: Option<u64>) -> Option<u64> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.min(y)),
+        (x, None) => x,
+        (None, y) => y,
+    }
+}
+
+fn fresh(devs: &BTreeMap<u64, DevState>, uid: u64, epoch: u64) -> bool {
+    devs.get(&uid).map(|d| d.live && d.epoch == epoch).unwrap_or(false)
+}
+
+impl EngineState {
+    fn new(cfg: &EngineConfig, frames: u64, interval: u64) -> Self {
+        EngineState {
+            q: CompletionQueue::new(),
+            arbiter: Arbiter::new(cfg.policy),
+            flow: CreditFlow::new(cfg.window.max(1)),
+            pending: Vec::new(),
+            devs: BTreeMap::new(),
+            spares: HashMap::new(),
+            st: RunStats::new(cfg.warmup),
+            frames,
+            batch: cfg.batch.max(1),
+            interval,
+            stages: Vec::new(),
+            blocked: Vec::new(),
+            head_seq: 0,
+            head_waiting: false,
+            frame_bytes: 0,
+        }
+    }
+}
+
+impl Orchestrator {
+    // ------------------------------------------------------------ broadcast
+
+    /// Event-driven broadcast run: every live cartridge processes every
+    /// frame, but nothing waits on a global barrier — transfers overlap
+    /// compute, batches amortize host transactions, and the arbiter grants
+    /// the shared wire.  `source` supplies the frame cadence
+    /// (`interval_us`); payload sizes come from the device profiles,
+    /// exactly as in the barrier baseline.
+    ///
+    /// Scripted hot-plug events are honored: a detached cartridge's
+    /// in-flight frames are dropped (never completed twice) and a
+    /// re-attached cartridge resumes from its own cursor.
+    pub fn run_broadcast_engine(
+        &mut self,
+        source: &VideoSource,
+        frames: u64,
+        cfg: EngineConfig,
+        events: Vec<HotplugEvent>,
+    ) -> EngineReport {
+        let start = self.clock.now();
+        let mut script = HotplugScript::new(events);
+        let mut s = EngineState::new(&cfg, frames, source.interval_us);
+
+        for (slot, uid, _) in self.registry.in_slot_order() {
+            s.flow.register(uid);
+            s.devs.insert(uid, DevState::new(slot));
+        }
+
+        // Initial fill: breadth-first in slot order so host submissions
+        // serialize fairly from the first tick.
+        let uids: Vec<u64> = self.registry.in_slot_order().iter().map(|(_, u, _)| *u).collect();
+        for _ in 0..s.flow.window() {
+            for &uid in &uids {
+                self.dispatch_next(&mut s, uid, start, 1);
+            }
+        }
+
+        loop {
+            let hp_next = script.next_visible();
+            self.grant_wire(&mut s, hp_next);
+            let next_ev = s.q.peek_time();
+            match (next_ev, hp_next) {
+                (None, None) => break,
+                (Some(te), Some(th)) if th < te => {
+                    self.clock.advance_to(th);
+                    self.apply_hotplug_engine(&mut s, &mut script, th);
+                }
+                (None, Some(th)) => {
+                    self.clock.advance_to(th);
+                    self.apply_hotplug_engine(&mut s, &mut script, th);
+                }
+                (Some(_), _) => {
+                    let c = s.q.pop().unwrap();
+                    self.clock.advance_to(c.at_us);
+                    self.handle_broadcast_ev(&mut s, c.at_us, c.payload);
+                }
+            }
+        }
+
+        self.clock.advance_to(s.st.last_done);
+        self.finish_report(s, start, frames)
+    }
+
+    /// Dispatch up to `limit` batches to `uid`, bounded by credits, the
+    /// frame budget, and the source cadence.
+    fn dispatch_next(&mut self, s: &mut EngineState, uid: u64, now: u64, limit: u32) {
+        let n_live = self.carts.len();
+        let Some(cart) = self.carts.get(&uid) else { return };
+        let input_bytes = cart.profile.input_bytes;
+        let host_raw = cart.profile.host_time_us(n_live);
+        let Some(dev) = s.devs.get_mut(&uid) else { return };
+        if !dev.live {
+            return;
+        }
+        for _ in 0..limit {
+            if dev.next_seq >= s.frames {
+                return;
+            }
+            let count = (s.frames - dev.next_seq).min(s.batch as u64) as u32;
+            // The whole batch must exist before it can be coalesced: gate
+            // on the capture time of its last frame.
+            let last_ts = (dev.next_seq + count as u64 - 1).saturating_mul(s.interval);
+            if last_ts > now {
+                if !dev.waiting_source {
+                    dev.waiting_source = true;
+                    s.q.push(last_ts, Ev::SourceReady { uid, epoch: dev.epoch });
+                }
+                return;
+            }
+            if !s.flow.try_acquire(uid) {
+                return;
+            }
+            let env = BatchEnvelope::new(dev.next_seq, count, input_bytes);
+            dev.next_seq += count as u64;
+            dev.in_flight_frames += count as u64;
+            s.st.dispatched += count as u64;
+            for seq in env.seqs() {
+                s.st.per_seq.entry(seq).or_insert((0, 0)).0 += 1;
+            }
+            // One host transaction per *batch* — this is the amortization
+            // batching buys (a leaner bus generation also cuts host cost).
+            let host_cost =
+                (host_raw as f64 * self.bus.profile.host_efficiency()).round() as u64;
+            let (_, host_done) = self.bus.host.reserve(now, host_cost);
+            let b = BatchState { env, dispatched_us: now, stage: 0 };
+            s.q.push(host_done, Ev::HostDone { uid, epoch: dev.epoch, b });
+        }
+    }
+
+    /// Grant the shared wire while no earlier event could change the
+    /// pending set at the grant instant.  Requests are chosen by the
+    /// round-robin arbiter over slots ready at the decision point.
+    fn grant_wire(&mut self, s: &mut EngineState, hp_next: Option<u64>) {
+        loop {
+            s.pending
+                .retain(|r| fresh(&s.devs, r.uid, r.epoch));
+            if s.pending.is_empty() {
+                return;
+            }
+            let free = self.bus.wire.next_free();
+            let min_ready = s.pending.iter().map(|r| r.ready_us).min().unwrap();
+            let decision = free.max(min_ready);
+            let info = min_opt(s.q.peek_time(), hp_next);
+            if info.map(|t| t < decision).unwrap_or(false) {
+                // Something happens before the wire's next grant instant;
+                // process it first — it may add a competing transfer.
+                return;
+            }
+            let cands: Vec<SlotId> = s
+                .pending
+                .iter()
+                .filter(|r| r.ready_us <= decision)
+                .map(|r| r.slot)
+                .collect();
+            let Some(slot) = s.arbiter.grant(&cands) else { return };
+            let idx = s
+                .pending
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.slot == slot && r.ready_us <= decision)
+                .min_by_key(|&(i, r)| (r.ready_us, i))
+                .map(|(i, _)| i)
+                .unwrap();
+            let req = s.pending.remove(idx);
+            let cost = self.bus.profile.bulk_time_us(req.bytes);
+            let (_, end) = self.bus.wire.reserve(req.ready_us, cost);
+            s.q.push(end, Ev::XferDone { req });
+        }
+    }
+
+    fn handle_broadcast_ev(&mut self, s: &mut EngineState, at: u64, ev: Ev) {
+        match ev {
+            Ev::HostDone { uid, epoch, b } => {
+                if !fresh(&s.devs, uid, epoch) {
+                    return;
+                }
+                let slot = s.devs[&uid].slot;
+                s.pending.push(WireReq {
+                    uid,
+                    epoch,
+                    slot,
+                    bytes: b.env.wire_bytes(),
+                    ready_us: at,
+                    leg: Leg::Input,
+                    b,
+                });
+            }
+            Ev::XferDone { req } => {
+                if !fresh(&s.devs, req.uid, req.epoch) {
+                    return;
+                }
+                match req.leg {
+                    Leg::Input => {
+                        let Some(cart) = self.carts.get_mut(&req.uid) else { return };
+                        let dur = cart.service_us * req.b.env.count as u64;
+                        let (_, done) = cart.timeline.reserve(at, dur);
+                        s.q.push(done, Ev::InferDone { uid: req.uid, epoch: req.epoch, b: req.b });
+                    }
+                    Leg::Result => {
+                        let count = req.b.env.count as u64;
+                        let dev = s.devs.get_mut(&req.uid).unwrap();
+                        dev.in_flight_frames = dev.in_flight_frames.saturating_sub(count);
+                        let lat = at.saturating_sub(req.b.dispatched_us);
+                        for seq in req.b.env.seqs() {
+                            dev.completed.push(seq);
+                            if let Some(e) = s.st.per_seq.get_mut(&seq) {
+                                e.1 += 1;
+                            }
+                            s.st.latency.record(lat);
+                            s.st.meter.record(at);
+                        }
+                        s.st.results += count;
+                        s.st.last_done = s.st.last_done.max(at);
+                        s.flow.release(req.uid);
+                        self.health.beat(req.uid, at);
+                        let m = self.stage_metrics.entry(req.uid).or_default();
+                        m.processed.add(count);
+                        m.latency.record(lat);
+                        let w = s.flow.window();
+                        self.dispatch_next(s, req.uid, at, w);
+                    }
+                    Leg::Hop | Leg::Tail => unreachable!("pipelined legs in broadcast run"),
+                }
+            }
+            Ev::InferDone { uid, epoch, b } => {
+                if !fresh(&s.devs, uid, epoch) {
+                    return;
+                }
+                let out = self.carts[&uid].profile.output_bytes * b.env.count as u64;
+                let slot = s.devs[&uid].slot;
+                s.pending.push(WireReq {
+                    uid,
+                    epoch,
+                    slot,
+                    bytes: out,
+                    ready_us: at,
+                    leg: Leg::Result,
+                    b,
+                });
+            }
+            Ev::SourceReady { uid, epoch } => {
+                if !fresh(&s.devs, uid, epoch) {
+                    return;
+                }
+                s.devs.get_mut(&uid).unwrap().waiting_source = false;
+                let w = s.flow.window();
+                self.dispatch_next(s, uid, at, w);
+            }
+            Ev::HeadReady => unreachable!("pipelined head event in broadcast run"),
+        }
+    }
+
+    /// Engine-mode hot-plug: same registry/topology bookkeeping as the
+    /// scheduler, plus in-flight cancellation and cursor-preserving
+    /// re-attach.
+    fn apply_hotplug_engine(
+        &mut self,
+        s: &mut EngineState,
+        script: &mut HotplugScript,
+        now: u64,
+    ) {
+        for ev in script.due(now) {
+            match ev.kind {
+                HotplugKind::Detach => {
+                    let Some(uid) = self.topology.remove(ev.slot) else { continue };
+                    self.registry.deregister(uid);
+                    self.health.deregister(uid);
+                    self.flow.deregister(uid);
+                    if let Some(c) = self.carts.remove(&uid) {
+                        s.spares.insert(uid, c);
+                    }
+                    self.bus.set_active_devices(self.carts.len());
+                    s.flow.deregister(uid);
+                    s.pending.retain(|r| r.uid != uid);
+                    if let Some(d) = s.devs.get_mut(&uid) {
+                        d.live = false;
+                        d.epoch += 1;
+                        d.waiting_source = false;
+                        s.st.dropped += d.in_flight_frames;
+                        d.in_flight_frames = 0;
+                    }
+                }
+                HotplugKind::Attach => {
+                    let Some(cart) = s.spares.remove(&ev.uid) else { continue };
+                    let uid = cart.uid;
+                    let slot = ev.slot;
+                    if self.topology.insert(slot, uid).is_err() {
+                        s.spares.insert(uid, cart);
+                        continue;
+                    }
+                    self.registry.register(uid, slot, cart.cap.clone(), now);
+                    self.health.register(uid, now);
+                    self.flow.register(uid);
+                    self.carts.insert(uid, cart);
+                    self.bus.set_active_devices(self.carts.len());
+                    s.flow.register(uid);
+                    let d = s.devs.entry(uid).or_insert_with(|| DevState::new(slot));
+                    d.live = true;
+                    d.slot = slot;
+                    d.waiting_source = false;
+                    let w = s.flow.window();
+                    self.dispatch_next(s, uid, now, w);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ pipelined
+
+    /// Event-driven pipelined run: batches stream hop-to-hop with
+    /// credit-chained backpressure (a batch leaves stage *k* only when
+    /// stage *k+1* grants a credit, so in-flight depth per stage is bounded
+    /// by `window` all the way back to the source).  Under
+    /// [`Policy::PeerToPeer`] intermediate hops between adjacent slots ride
+    /// private peer links and skip the host entirely.
+    pub fn run_pipelined_engine(
+        &mut self,
+        source: &VideoSource,
+        frames: u64,
+        cfg: EngineConfig,
+    ) -> EngineReport {
+        let start = self.clock.now();
+        let mut s = EngineState::new(&cfg, frames, source.interval_us);
+        s.frame_bytes = (source.width * source.height * 3) as u64;
+
+        if self.pipeline.is_runnable().is_err() || self.pipeline.stages.is_empty() {
+            return self.finish_report(s, start, frames);
+        }
+        let stage_list: Vec<(u64, crate::device::caps::DataKind)> =
+            self.pipeline.stages.iter().map(|st| (st.uid, st.cap.produces)).collect();
+        for (uid, produces) in stage_list {
+            let slot = self.registry.slot(uid).unwrap_or(SlotId(0));
+            let kind = self.carts[&uid].kind;
+            s.stages.push((uid, slot, stream_handoff_us(kind), output_bytes(produces)));
+            s.blocked.push(VecDeque::new());
+            s.flow.register(uid);
+            s.devs.insert(uid, DevState::new(slot));
+        }
+
+        self.refill_head(&mut s, start);
+        loop {
+            self.grant_wire(&mut s, None);
+            let Some(c) = s.q.pop() else { break };
+            self.clock.advance_to(c.at_us);
+            self.handle_pipelined_ev(&mut s, c.at_us, c.payload);
+        }
+        debug_assert!(s.blocked.iter().all(VecDeque::is_empty), "batches stuck in backpressure");
+
+        self.clock.advance_to(s.st.last_done);
+        self.finish_report(s, start, frames)
+    }
+
+    /// Pull source batches into the head stage while credits allow.
+    fn refill_head(&mut self, s: &mut EngineState, now: u64) {
+        loop {
+            if s.head_seq >= s.frames {
+                return;
+            }
+            let count = (s.frames - s.head_seq).min(s.batch as u64) as u32;
+            let last_ts = (s.head_seq + count as u64 - 1).saturating_mul(s.interval);
+            if last_ts > now {
+                if !s.head_waiting {
+                    s.head_waiting = true;
+                    s.q.push(last_ts, Ev::HeadReady);
+                }
+                return;
+            }
+            let head_uid = s.stages[0].0;
+            if !s.flow.try_acquire(head_uid) {
+                return;
+            }
+            let env = BatchEnvelope::new(s.head_seq, count, s.frame_bytes);
+            s.head_seq += count as u64;
+            s.st.dispatched += count as u64;
+            for seq in env.seqs() {
+                s.st.per_seq.entry(seq).or_insert((0, 0)).0 += 1;
+            }
+            let b = BatchState { env, dispatched_us: now, stage: 0 };
+            self.hop_into(s, None, 0, b, now);
+        }
+    }
+
+    /// Book the transfer that carries `b` into stage `to` (`from` = `None`
+    /// means the orchestrator/source side).
+    fn hop_into(
+        &mut self,
+        s: &mut EngineState,
+        from: Option<usize>,
+        to: usize,
+        b: BatchState,
+        at: u64,
+    ) {
+        let (uid, slot, handoff_us, _) = s.stages[to];
+        let from_slot = from.map(|i| s.stages[i].1);
+        match s.arbiter.policy.segment(from_slot, Some(slot)) {
+            Segment::PeerLink => {
+                // Direct neighbour link: no host routing work, no shared
+                // wire — only the pair's private segment serializes.
+                let (_, end) =
+                    self.bus.peer_transfer(from_slot.unwrap(), slot, at, b.env.wire_bytes());
+                let req = WireReq {
+                    uid,
+                    epoch: 0,
+                    slot,
+                    bytes: b.env.wire_bytes(),
+                    ready_us: at,
+                    leg: Leg::Hop,
+                    b,
+                };
+                s.q.push(end, Ev::XferDone { req });
+            }
+            Segment::HostWire => {
+                // Streaming handoff: host routing latency, then the shared
+                // wire under arbitration.
+                s.pending.push(WireReq {
+                    uid,
+                    epoch: 0,
+                    slot,
+                    bytes: b.env.wire_bytes(),
+                    ready_us: at + handoff_us,
+                    leg: Leg::Hop,
+                    b,
+                });
+            }
+        }
+    }
+
+    /// A credit at stage `k` was freed: admit the oldest blocked batch (it
+    /// releases its stage-`k-1` credit in turn), or refill the head.
+    fn stage_release(&mut self, s: &mut EngineState, k: usize, at: u64) {
+        let uid = s.stages[k].0;
+        s.flow.release(uid);
+        if let Some(b) = s.blocked[k].pop_front() {
+            let ok = s.flow.try_acquire(uid);
+            debug_assert!(ok);
+            self.hop_into(s, Some(k - 1), k, b, at);
+            self.stage_release(s, k - 1, at);
+        } else if k == 0 {
+            self.refill_head(s, at);
+        }
+    }
+
+    fn handle_pipelined_ev(&mut self, s: &mut EngineState, at: u64, ev: Ev) {
+        match ev {
+            Ev::XferDone { req } => match req.leg {
+                Leg::Hop => {
+                    let Some(cart) = self.carts.get_mut(&req.uid) else { return };
+                    let dur = cart.service_us * req.b.env.count as u64;
+                    let (_, done) = cart.timeline.reserve(at, dur);
+                    s.q.push(done, Ev::InferDone { uid: req.uid, epoch: 0, b: req.b });
+                }
+                Leg::Tail => {
+                    let count = req.b.env.count as u64;
+                    let lat = at.saturating_sub(req.b.dispatched_us);
+                    for seq in req.b.env.seqs() {
+                        if let Some(e) = s.st.per_seq.get_mut(&seq) {
+                            e.1 += 1;
+                        }
+                        s.st.latency.record(lat);
+                        s.st.meter.record(at);
+                    }
+                    s.st.results += count;
+                    s.st.last_done = s.st.last_done.max(at);
+                    let last = s.stages.len() - 1;
+                    self.stage_release(s, last, at);
+                }
+                Leg::Input | Leg::Result => {
+                    unreachable!("broadcast legs in pipelined run")
+                }
+            },
+            Ev::InferDone { uid, b, .. } => {
+                let k = b.stage;
+                let dev = s.devs.get_mut(&uid).unwrap();
+                dev.completed.extend(b.env.seqs());
+                self.health.beat(uid, at);
+                let m = self.stage_metrics.entry(uid).or_default();
+                m.processed.add(b.env.count as u64);
+                // The batch leaves stage k carrying k's output kind.
+                let out_env = BatchEnvelope::new(b.env.first_seq, b.env.count, s.stages[k].3);
+                let b_out =
+                    BatchState { env: out_env, dispatched_us: b.dispatched_us, stage: k + 1 };
+                if k + 1 < s.stages.len() {
+                    let next_uid = s.stages[k + 1].0;
+                    if s.flow.try_acquire(next_uid) {
+                        self.hop_into(s, Some(k), k + 1, b_out, at);
+                        self.stage_release(s, k, at);
+                    } else {
+                        // Backpressure: wait for a downstream credit while
+                        // still holding this stage's credit.
+                        s.blocked[k + 1].push_back(b_out);
+                    }
+                } else {
+                    let (uid_k, slot_k, _, _) = s.stages[k];
+                    s.pending.push(WireReq {
+                        uid: uid_k,
+                        epoch: 0,
+                        slot: slot_k,
+                        bytes: b_out.env.wire_bytes(),
+                        ready_us: at,
+                        leg: Leg::Tail,
+                        b: b_out,
+                    });
+                }
+            }
+            Ev::HeadReady => {
+                s.head_waiting = false;
+                self.refill_head(s, at);
+            }
+            Ev::HostDone { .. } | Ev::SourceReady { .. } => {
+                unreachable!("broadcast events in pipelined run")
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- reports
+
+    fn finish_report(&mut self, s: EngineState, start: u64, frames: u64) -> EngineReport {
+        let elapsed = s.st.last_done.saturating_sub(start);
+        let mut fps = s.st.meter.fps();
+        if fps == 0.0 && s.st.results > 0 && elapsed > 0 {
+            // Too few post-warmup completions for an interval estimate
+            // (1-frame CI smoke runs): fall back to the whole-run average.
+            fps = s.st.results as f64 * 1e6 / elapsed as f64;
+        }
+        let frames_out =
+            s.st.per_seq.values().filter(|(d, c)| *d > 0 && d == c).count() as u64;
+        let now = self.clock.now();
+        EngineReport {
+            frames_in: frames,
+            dispatched: s.st.dispatched,
+            results_out: s.st.results,
+            dropped: s.st.dropped,
+            frames_out,
+            fps,
+            latency: s.st.latency,
+            bus_utilization: self.bus.wire_utilization(now),
+            host_utilization: self.bus.host_utilization(now),
+            peer_utilization: self.bus.peer_utilization(now),
+            elapsed_us: elapsed,
+            throttle_events: s.flow.throttle_events,
+            per_device: s.devs.into_iter().map(|(uid, d)| (uid, d.completed)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::usb3::BusProfile;
+    use crate::device::caps::CapDescriptor;
+    use crate::device::DeviceKind;
+
+    fn rack(n: usize, kind: DeviceKind) -> Orchestrator {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        for i in 0..n {
+            o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))
+                .unwrap();
+        }
+        o
+    }
+
+    fn engine_fps(n: usize, kind: DeviceKind, batch: u32, frames: u64) -> f64 {
+        let mut o = rack(n, kind);
+        let src = VideoSource::paper_stream(7);
+        o.run_broadcast_engine(&src, frames, EngineConfig::batched(batch).with_warmup(10), vec![])
+            .fps
+    }
+
+    #[test]
+    fn single_device_completes_every_frame_in_order() {
+        let mut o = rack(1, DeviceKind::Ncs2);
+        let src = VideoSource::paper_stream(1);
+        let rep =
+            o.run_broadcast_engine(&src, 30, EngineConfig::default().with_warmup(5), vec![]);
+        assert_eq!(rep.dispatched, 30);
+        assert_eq!(rep.results_out, 30);
+        assert_eq!(rep.frames_out, 30);
+        assert_eq!(rep.dropped, 0);
+        let (_, seqs) = &rep.per_device[0];
+        assert_eq!(*seqs, (0..30).collect::<Vec<u64>>());
+        // Overlapped single-NCS2 steady state: one service time per frame.
+        assert!((15.5..17.5).contains(&rep.fps), "fps {}", rep.fps);
+    }
+
+    #[test]
+    fn engine_at_least_matches_barrier_throughput() {
+        for n in [1usize, 3, 5] {
+            let mut barrier = rack(n, DeviceKind::Ncs2);
+            let mut src = VideoSource::paper_stream(7);
+            let agg = barrier.run_broadcast(&mut src, 60).fps * n as f64;
+            let eng = engine_fps(n, DeviceKind::Ncs2, 1, 60);
+            assert!(eng >= agg * 0.99, "n={n}: engine {eng:.1} vs barrier aggregate {agg:.1}");
+        }
+    }
+
+    #[test]
+    fn ncs2_scaling_grows_to_four_then_saturates() {
+        let fps: Vec<f64> =
+            (1..=5).map(|n| engine_fps(n, DeviceKind::Ncs2, 1, 80)).collect();
+        for w in fps.windows(2).take(3) {
+            assert!(w[1] > w[0] * 1.05, "expected growth, got {fps:?}");
+        }
+        // The quadratic host term saturates the 5th device (§4.1).
+        assert!(fps[4] < fps[3] * 0.95, "expected saturation at 5, got {fps:?}");
+    }
+
+    #[test]
+    fn batching_amortizes_the_host_bottleneck() {
+        let b1 = engine_fps(5, DeviceKind::Ncs2, 1, 80);
+        let b4 = engine_fps(5, DeviceKind::Ncs2, 4, 80);
+        assert!(b4 > b1 * 1.2, "batch=4 {b4:.1} should beat batch=1 {b1:.1} at 5 devices");
+    }
+
+    #[test]
+    fn hot_detach_cancels_in_flight_exactly_once() {
+        let mut o = rack(3, DeviceKind::Ncs2);
+        let src = VideoSource::paper_stream(1);
+        let events = vec![HotplugEvent {
+            at_us: 200_000,
+            slot: SlotId(1),
+            kind: HotplugKind::Detach,
+            uid: 0,
+        }];
+        let rep =
+            o.run_broadcast_engine(&src, 40, EngineConfig::default(), events);
+        assert_eq!(rep.dispatched, rep.results_out + rep.dropped, "every dispatch accounted once");
+        assert!(rep.dropped > 0, "detach mid-run must cancel in-flight work");
+        assert!(rep.results_out < 3 * 40);
+        for (uid, seqs) in &rep.per_device {
+            for w in seqs.windows(2) {
+                assert!(w[1] > w[0], "device {uid} results reordered: {seqs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rate_limited_source_paces_the_engine() {
+        let mut o = rack(1, DeviceKind::Coral);
+        let src = VideoSource::paper_stream(1).with_rate_fps(10.0);
+        let rep =
+            o.run_broadcast_engine(&src, 12, EngineConfig::default(), vec![]);
+        assert_eq!(rep.results_out, 12);
+        // Frame 11 is only captured at t=1.1s; the run cannot end before.
+        assert!(rep.elapsed_us >= 1_100_000, "elapsed {}", rep.elapsed_us);
+    }
+
+    #[test]
+    fn batched_dispatch_waits_for_the_batch_to_exist() {
+        let mut o = rack(1, DeviceKind::Coral);
+        let src = VideoSource::paper_stream(1).with_rate_fps(10.0);
+        let rep =
+            o.run_broadcast_engine(&src, 8, EngineConfig::batched(4), vec![]);
+        assert_eq!(rep.results_out, 8);
+        // Second batch [4..8) is complete only at t=700ms.
+        assert!(rep.elapsed_us >= 700_000, "elapsed {}", rep.elapsed_us);
+    }
+
+    fn face_stack() -> Orchestrator {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))
+            .unwrap();
+        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))
+            .unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed()))
+            .unwrap();
+        o
+    }
+
+    #[test]
+    fn pipelined_engine_streams_without_global_sync() {
+        let mut o = face_stack();
+        let src = VideoSource::paper_stream(3);
+        let rep = o.run_pipelined_engine(&src, 40, EngineConfig::default().with_warmup(5));
+        assert_eq!(rep.results_out, 40);
+        assert_eq!(rep.frames_out, 40);
+        // Head-stage bound: ~one 30ms service per frame despite 3 stages.
+        assert!((28.0..36.0).contains(&rep.fps), "fps {}", rep.fps);
+        // Every stage saw every frame, in order.
+        for (uid, seqs) in &rep.per_device {
+            assert_eq!(seqs.len(), 40, "stage {uid} missed frames");
+            for w in seqs.windows(2) {
+                assert!(w[1] > w[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn peer_to_peer_cuts_pipeline_latency() {
+        let mut host = face_stack();
+        let src = VideoSource::paper_stream(3);
+        let rep_host = host.run_pipelined_engine(&src, 30, EngineConfig::default());
+        let mut p2p = face_stack();
+        let rep_p2p = p2p.run_pipelined_engine(
+            &src,
+            30,
+            EngineConfig::default().with_policy(Policy::PeerToPeer),
+        );
+        assert!(
+            rep_p2p.latency.mean_us() < rep_host.latency.mean_us(),
+            "p2p {} vs host {}",
+            rep_p2p.latency.mean_us(),
+            rep_host.latency.mean_us()
+        );
+        assert!(rep_p2p.peer_utilization > 0.0);
+        assert_eq!(rep_p2p.results_out, 30);
+    }
+
+    #[test]
+    fn empty_pipeline_reports_zeros() {
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        let src = VideoSource::paper_stream(1);
+        let rep = o.run_pipelined_engine(&src, 10, EngineConfig::default());
+        assert_eq!(rep.results_out, 0);
+        assert_eq!(rep.fps, 0.0);
+    }
+
+    #[test]
+    fn zero_frames_is_a_clean_noop() {
+        let mut o = rack(2, DeviceKind::Ncs2);
+        let src = VideoSource::paper_stream(1);
+        let rep = o.run_broadcast_engine(&src, 0, EngineConfig::default(), vec![]);
+        assert_eq!(rep.dispatched, 0);
+        assert_eq!(rep.results_out, 0);
+        assert_eq!(rep.fps, 0.0);
+    }
+}

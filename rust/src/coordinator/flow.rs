@@ -57,6 +57,16 @@ impl CreditFlow {
     pub fn available(&self, uid: u64) -> u32 {
         self.credits.get(&uid).copied().unwrap_or(0)
     }
+
+    /// The per-stage in-flight window size (credits when fully idle).
+    pub fn window(&self) -> u32 {
+        self.max_credits
+    }
+
+    /// Units currently in flight at `uid` (consumed credits).
+    pub fn in_flight(&self, uid: u64) -> u32 {
+        self.credits.get(&uid).map(|c| self.max_credits - c).unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -96,5 +106,19 @@ mod tests {
         f.register(1);
         f.deregister(1);
         assert!(!f.try_acquire(1));
+    }
+
+    #[test]
+    fn in_flight_tracks_consumed_credits() {
+        let mut f = CreditFlow::new(3);
+        f.register(1);
+        assert_eq!(f.window(), 3);
+        assert_eq!(f.in_flight(1), 0);
+        assert!(f.try_acquire(1));
+        assert!(f.try_acquire(1));
+        assert_eq!(f.in_flight(1), 2);
+        f.release(1);
+        assert_eq!(f.in_flight(1), 1);
+        assert_eq!(f.in_flight(99), 0, "unknown stage has nothing in flight");
     }
 }

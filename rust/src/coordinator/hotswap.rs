@@ -119,7 +119,9 @@ impl SwapController {
                     .cloned()
                     .map(|s| (s.uid, s.cap))
                     .collect::<Vec<_>>();
-                Pipeline { stages: stages.into_iter().map(|(uid, cap)| Stage { uid, cap }).collect() }
+                Pipeline {
+                    stages: stages.into_iter().map(|(uid, cap)| Stage { uid, cap }).collect(),
+                }
             }
         }
     }

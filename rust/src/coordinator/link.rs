@@ -74,7 +74,8 @@ impl UnitLink {
             let frame = source.next_frame(t_cursor);
             let gate = frame.ts_us.max(t_cursor);
             // Unit A chain.
-            let (a_done, a_msg) = chain_through(a, Message::frame(frame.seq, frame.bytes, gate), gate);
+            let (a_done, a_msg) =
+                chain_through(a, Message::frame(frame.seq, frame.bytes, gate), gate);
             // Cross the link.
             let wire = self.link_profile.wire_time_us(a_msg.bytes);
             let (ls, le) = self.link.reserve(a_done, wire);
@@ -133,8 +134,10 @@ mod tests {
 
     fn unit_a() -> Orchestrator {
         let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 4);
-        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
-        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))
+            .unwrap();
+        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))
+            .unwrap();
         o
     }
 
@@ -177,7 +180,8 @@ mod tests {
         let mut a = unit_a();
         // Unit B that consumes Frames can't chain after A's FaceCrop output.
         let mut b = Orchestrator::new(BusProfile::usb3_gen1(), 4);
-        b.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+        b.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))
+            .unwrap();
         let mut link = UnitLink::gbe();
         let mut src = VideoSource::paper_stream(3);
         assert!(link.run_split(&mut a, &mut b, &mut src, 2).is_err());

@@ -36,6 +36,34 @@ impl Message {
     }
 }
 
+/// A contiguous run of frames coalesced into one bus transaction — the
+/// dispatch engine's batching unit.  One envelope costs one host
+/// transaction and one per-transaction wire overhead regardless of
+/// `count`, which is exactly the amortization the batched engine exploits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchEnvelope {
+    pub first_seq: u64,
+    pub count: u32,
+    /// Payload bytes per frame (the envelope's wire size is the product).
+    pub bytes_per_frame: u64,
+}
+
+impl BatchEnvelope {
+    pub fn new(first_seq: u64, count: u32, bytes_per_frame: u64) -> Self {
+        BatchEnvelope { first_seq, count, bytes_per_frame }
+    }
+
+    /// Total payload on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        self.bytes_per_frame * self.count as u64
+    }
+
+    /// The frame sequence numbers riding in this envelope, in order.
+    pub fn seqs(&self) -> std::ops::Range<u64> {
+        self.first_seq..self.first_seq + self.count as u64
+    }
+}
+
 /// Wire size of a stage's output by kind: intermediate tensors are far
 /// smaller than raw frames — this asymmetry is why pipelined mode scales
 /// better than broadcast (paper §4.1's closing observation).
@@ -67,5 +95,15 @@ mod tests {
     fn intermediate_tensors_smaller_than_frames() {
         assert!(output_bytes(DataKind::FaceCrop) < output_bytes(DataKind::Frame));
         assert!(output_bytes(DataKind::Embedding) < output_bytes(DataKind::FaceCrop));
+    }
+
+    #[test]
+    fn batch_envelope_seqs_and_bytes() {
+        let b = BatchEnvelope::new(8, 4, 270_000);
+        assert_eq!(b.seqs().collect::<Vec<_>>(), vec![8, 9, 10, 11]);
+        assert_eq!(b.wire_bytes(), 1_080_000);
+        let single = BatchEnvelope::new(0, 1, 512);
+        assert_eq!(single.wire_bytes(), 512);
+        assert_eq!(single.seqs().count(), 1);
     }
 }

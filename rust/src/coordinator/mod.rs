@@ -7,17 +7,21 @@
 //! keeps the pipeline alive through hot-swap events.
 //!
 //! Module map:
-//! * [`registry`]  — capability handshake + zeroconf-style announcements
-//! * [`pipeline`]  — pipeline graph construction + bridge/rebuild rules
-//! * [`messages`]  — bus message framing (seq, kind, fragmentation)
-//! * [`router`]    — pub/sub topic routing between stages
-//! * [`flow`]      — credit-based flow control / backpressure
-//! * [`hotswap`]   — the pause/buffer/reconfigure/resume state machine
-//! * [`scheduler`] — the orchestrator main loop over virtual time
-//! * [`health`]    — heartbeat monitoring + operator alerts
-//! * [`ui`]        — ComfyUI-style workflow graph export (paper Fig. 3)
-//! * [`link`]      — multi-unit CHAMP chaining over Ethernet (§3.1)
+//! * [`registry`]   — capability handshake + zeroconf-style announcements
+//! * [`pipeline`]   — pipeline graph construction + bridge/rebuild rules
+//! * [`messages`]   — bus message framing (seq, kind, batching)
+//! * [`router`]     — pub/sub topic routing between stages
+//! * [`flow`]       — credit-based flow control / backpressure
+//! * [`hotswap`]    — the pause/buffer/reconfigure/resume state machine
+//! * [`scheduler`]  — orchestrator state + the synchronous barrier baseline
+//! * [`completion`] — deterministic completion queue (event heap)
+//! * [`engine`]     — event-driven batched dispatch engine
+//! * [`health`]     — heartbeat monitoring + operator alerts
+//! * [`ui`]         — ComfyUI-style workflow graph export (paper Fig. 3)
+//! * [`link`]       — multi-unit CHAMP chaining over Ethernet (§3.1)
 
+pub mod completion;
+pub mod engine;
 pub mod flow;
 pub mod health;
 pub mod hotswap;
@@ -29,6 +33,7 @@ pub mod router;
 pub mod scheduler;
 pub mod ui;
 
+pub use engine::{EngineConfig, EngineReport};
 pub use pipeline::{Pipeline, Stage};
 pub use registry::Registry;
 pub use scheduler::{DispatchMode, Orchestrator, RunReport};

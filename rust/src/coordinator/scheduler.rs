@@ -1,4 +1,5 @@
-//! The orchestrator main loop: frames through cartridges over virtual time.
+//! The orchestrator: owns the substrate (bus, cartridges, pipeline) and
+//! the *synchronous baseline* loops over virtual time.
 //!
 //! Two dispatch modes, matching the paper's experiments:
 //!
@@ -9,6 +10,13 @@
 //! * [`DispatchMode::Pipelined`] — real deployments (§4.2): cartridges form
 //!   a processing chain; stages overlap across frames; per-hop handoffs use
 //!   the streaming (gRPC-like) path.
+//!
+//! The *primary* dispatch path is no longer here: the event-driven batched
+//! engine in [`super::engine`] replaces the per-frame barrier with a
+//! completion-queue loop (bounded in-flight windows, batch dispatch,
+//! arbiter-granted wire).  [`Orchestrator::run_broadcast`] is kept as the
+//! Table-1 reproduction and as the barrier baseline the engine is measured
+//! against (`champd bench scaling` emits both curves).
 //!
 //! All timing flows through the bus/device [`Resource`] reservations, so
 //! throughput and latency *emerge* from the substrate model rather than
@@ -193,6 +201,12 @@ impl Orchestrator {
     // ----------------------------------------------------------- broadcast
 
     /// §4.1 / Table 1: synchronous broadcast of each frame to all devices.
+    ///
+    /// This is the *barrier baseline*: the next frame is distributed only
+    /// after every device returned a result, so the slowest device gates
+    /// the rack.  The event-driven engine
+    /// ([`Orchestrator::run_broadcast_engine`]) overlaps transfers with
+    /// compute and must beat this at every device count.
     pub fn run_broadcast(&mut self, source: &mut VideoSource, frames: u64) -> RunReport {
         let uids = self.accel_uids();
         let n = uids.len();
@@ -530,9 +544,12 @@ mod tests {
     fn pipelined_latency_is_sum_plus_small_overhead() {
         // Paper §4.2: 3 stages x 30ms -> ~95-100ms end to end.
         let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
-        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
-        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
-        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))
+            .unwrap();
+        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))
+            .unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed()))
+            .unwrap();
         let mut src = VideoSource::paper_stream(1).with_rate_fps(8.0);
         let rep = o.run_pipelined(&mut src, 40, vec![]);
         let mean_ms = rep.latency.mean_us() / 1000.0;
@@ -545,9 +562,12 @@ mod tests {
     #[test]
     fn pipeline_order_follows_slots() {
         let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
-        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
-        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
-        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed()))
+            .unwrap();
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))
+            .unwrap();
+        o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))
+            .unwrap();
         let names: Vec<&str> = o.pipeline.stages.iter().map(|s| s.cap.id.name()).collect();
         assert_eq!(names, vec!["face-detect", "face-quality", "face-embed"]);
     }
@@ -555,7 +575,8 @@ mod tests {
     #[test]
     fn incompatible_plug_rejected() {
         let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
-        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))
+            .unwrap();
         // Database right after detector: FaceCrop != Embedding.
         let res = o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::database()));
         assert!(res.is_err());

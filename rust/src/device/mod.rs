@@ -77,7 +77,15 @@ impl Cartridge {
             DeviceKind::Storage => DeviceProfile::storage(),
         };
         let service_us = timing::service_time_us(kind, &cap.model);
-        Cartridge { uid, kind, cap, profile, service_us, timeline: Resource::new(), backend: Backend::Timing }
+        Cartridge {
+            uid,
+            kind,
+            cap,
+            profile,
+            service_us,
+            timeline: Resource::new(),
+            backend: Backend::Timing,
+        }
     }
 
     pub fn with_backend(mut self, backend: Backend) -> Self {

@@ -54,7 +54,12 @@ impl StorageCartridge {
 
     /// Restore from an already-protected gallery (the vdisk load path: the
     /// image stores rotated templates, so no re-rotation happens here).
-    pub fn from_rotated(uid: u64, gallery_rot: Gallery, rotation: RotationKey, seal: SealKey) -> Self {
+    pub fn from_rotated(
+        uid: u64,
+        gallery_rot: Gallery,
+        rotation: RotationKey,
+        seal: SealKey,
+    ) -> Self {
         StorageCartridge { uid, gallery_rot, rotation, seal, match_us: 2_000 }
     }
 
@@ -78,7 +83,11 @@ impl StorageCartridge {
             .collect();
         scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         let best = scored.first()?.clone();
-        Some(MatchOutcome { best_id: best.0, best_score: best.1, topk: scored.into_iter().take(k).collect() })
+        Some(MatchOutcome {
+            best_id: best.0,
+            best_score: best.1,
+            topk: scored.into_iter().take(k).collect(),
+        })
     }
 
     /// Serialize the protected gallery sealed for flash storage (single
@@ -96,7 +105,11 @@ impl StorageCartridge {
     /// Pack the protected gallery into a vdisk cartridge image at `path`
     /// (atomic publish).  The image stores only rotated templates — the
     /// rotation and seal keys never leave the orchestrator.
-    pub fn persist_to_image(&self, path: impl AsRef<Path>, label: &str) -> anyhow::Result<ImageSummary> {
+    pub fn persist_to_image(
+        &self,
+        path: impl AsRef<Path>,
+        label: &str,
+    ) -> anyhow::Result<ImageSummary> {
         ImageBuilder::new(label)
             .cap(CapabilityId::Database)
             .gallery(&self.gallery_rot)

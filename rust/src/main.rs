@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run              pipelined run from a config (default config if none)
 //!   sweep            Table-1 broadcast scaling sweep (--kind ncs2|coral)
+//!   bench            bench telemetry (scaling -> BENCH_scaling.json + guard)
 //!   hotswap          the §4.2 hot-swap experiment
 //!   power            §4.3 power report over the Table-1 sweep
 //!   export-workflow  dump the ComfyUI-style graph for the live pipeline
@@ -15,6 +16,7 @@ use champ::bus::topology::SlotId;
 use champ::bus::usb3::BusProfile;
 use champ::cli;
 use champ::config::SystemConfig;
+use champ::coordinator::engine::EngineConfig;
 use champ::coordinator::scheduler::Orchestrator;
 use champ::coordinator::ui;
 use champ::device::caps::CapDescriptor;
@@ -30,7 +32,10 @@ champd — CHAMP orchestrator (paper reproduction)
 USAGE: champd <subcommand> [flags]
 
   run [config.json] [--frames N] [--real-compute]
-  sweep --kind ncs2|coral [--max-devices N] [--frames N]
+  sweep --kind ncs2|coral [--max-devices N] [--frames N] [--engine barrier|batched]
+        [--batch B]
+  bench scaling [--frames N] [--max-devices N] [--out PATH] [--baseline PATH]
+        [--tolerance PCT] [--no-guard]
   hotswap [--fps F]
   power [--kind ncs2|coral]
   export-workflow [config.json]
@@ -82,7 +87,8 @@ fn cmd_run(args: &cli::Args) -> anyhow::Result<()> {
     let mut src = VideoSource::paper_stream(cfg.seed).with_rate_fps(args.flag_f64("fps", 8.0));
     let rep = o.run_pipelined(&mut src, frames, vec![]);
     println!("pipeline: {} stages", o.pipeline.len());
-    println!("frames   : {} in / {} out / {} dropped", rep.frames_in, rep.frames_out, rep.frames_dropped);
+    println!("frames   : {} in / {} out / {} dropped",
+        rep.frames_in, rep.frames_out, rep.frames_dropped);
     println!("fps      : {:.2}", rep.fps);
     println!("latency  : mean {:.1} ms, p99 {:.1} ms",
         rep.latency.mean_us() / 1e3, rep.latency.percentile_us(99.0) as f64 / 1e3);
@@ -97,15 +103,40 @@ fn cmd_sweep(args: &cli::Args) -> anyhow::Result<()> {
     let kind = kind_from(args.flag("kind").unwrap_or("ncs2"))?;
     let max = args.flag_u64("max-devices", 5) as usize;
     let frames = args.flag_u64("frames", 60);
-    println!("# of Modules | FPS ({})", args.flag("kind").unwrap_or("ncs2"));
-    for n in 1..=max {
-        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), max.max(6));
-        for i in 0..n {
-            o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))?;
+    let batch = args.flag_u64("batch", 1) as u32;
+    let barrier_only = args.flag("engine") == Some("barrier");
+    let rack = |n: usize| cli::bench::rack(kind, n);
+    if barrier_only {
+        println!("# of Modules | FPS ({})", args.flag("kind").unwrap_or("ncs2"));
+        for n in 1..=max {
+            let mut o = rack(n)?;
+            let mut src = VideoSource::paper_stream(7);
+            let rep = o.run_broadcast(&mut src, frames);
+            println!("{n:12} | {:.1}", rep.fps);
         }
+        return Ok(());
+    }
+    // Primary path: the event-driven engine, with the barrier baseline
+    // alongside (per-frame rate = the paper's Table-1 column; aggregate =
+    // device-completions/s, the scaling quantity).
+    println!(
+        "# of Modules | barrier FPS | barrier agg | engine agg (batch={batch}, {})",
+        args.flag("kind").unwrap_or("ncs2")
+    );
+    for n in 1..=max {
+        let mut o = rack(n)?;
         let mut src = VideoSource::paper_stream(7);
-        let rep = o.run_broadcast(&mut src, frames);
-        println!("{n:12} | {:.1}", rep.fps);
+        let bar = o.run_broadcast(&mut src, frames);
+        let mut o = rack(n)?;
+        let src = VideoSource::paper_stream(7);
+        let cfg = EngineConfig::batched(batch).with_warmup((frames / 10).clamp(2, 20));
+        let eng = o.run_broadcast_engine(&src, frames, cfg, vec![]);
+        println!(
+            "{n:12} | {:11.1} | {:11.1} | {:.1}",
+            bar.fps,
+            bar.fps * n as f64,
+            eng.fps
+        );
     }
     Ok(())
 }
@@ -124,7 +155,8 @@ fn cmd_hotswap(args: &cli::Args) -> anyhow::Result<()> {
     let mut src = VideoSource::paper_stream(3).with_rate_fps(fps);
     let rep = o.run_pipelined(&mut src, total_frames, events);
 
-    println!("frames: {} in / {} out / {} dropped", rep.frames_in, rep.frames_out, rep.frames_dropped);
+    println!("frames: {} in / {} out / {} dropped",
+        rep.frames_in, rep.frames_out, rep.frames_dropped);
     println!("max buffered during pause: {}", rep.max_buffered);
     for r in &rep.swap_records {
         println!("{:?} slot {}: downtime {:.2} s ({:?})",
@@ -187,6 +219,7 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand.as_deref().unwrap() {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
+        "bench" => cli::bench::run(&args),
         "hotswap" => cmd_hotswap(&args),
         "power" => cmd_power(&args),
         "export-workflow" => cmd_export_workflow(&args),

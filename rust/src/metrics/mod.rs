@@ -1,7 +1,10 @@
-//! Runtime metrics: counters, FPS meters, latency histograms.
+//! Runtime metrics: counters, FPS meters, latency histograms, and the
+//! [`report`] module that serializes bench telemetry (`BENCH_*.json`).
 //!
 //! Everything works in *virtual* microseconds so the same instrumentation
 //! serves both simulated (discrete-event) and wall-clock runs.
+
+pub mod report;
 
 /// A monotonically increasing counter.
 #[derive(Default, Debug, Clone)]
@@ -22,15 +25,34 @@ impl Counter {
 }
 
 /// Frames-per-second meter over virtual time.
+///
+/// The rate is measured over the `frames-1` intervals between recorded
+/// completions, so a single recorded frame has no rate (0.0) — callers
+/// measuring short runs should use a warmup cutoff
+/// ([`FpsMeter::with_warmup`]) and fall back to a whole-run average when
+/// fewer than two post-warmup frames exist.
 #[derive(Default, Debug, Clone)]
 pub struct FpsMeter {
     frames: u64,
     start_us: Option<u64>,
     end_us: u64,
+    /// Leading records excluded from the measurement (startup transient).
+    warmup: u64,
+    skipped: u64,
 }
 
 impl FpsMeter {
+    /// A meter that ignores the first `warmup` records, so the reported
+    /// rate reflects steady state rather than pipeline fill.
+    pub fn with_warmup(warmup: u64) -> Self {
+        FpsMeter { warmup, ..Default::default() }
+    }
+
     pub fn record(&mut self, now_us: u64) {
+        if self.skipped < self.warmup {
+            self.skipped += 1;
+            return;
+        }
         if self.start_us.is_none() {
             self.start_us = Some(now_us);
         }
@@ -38,6 +60,7 @@ impl FpsMeter {
         self.end_us = self.end_us.max(now_us);
     }
 
+    /// Frames measured (post-warmup).
     pub fn frames(&self) -> u64 {
         self.frames
     }
@@ -145,8 +168,50 @@ mod tests {
 
     #[test]
     fn fps_meter_single_frame_is_zero() {
+        // A lone frame spans no interval: the meter reports 0 and callers
+        // (the bench sweep) must fall back to a whole-run average.
         let mut m = FpsMeter::default();
         m.record(5);
+        assert_eq!(m.frames(), 1);
+        assert_eq!(m.fps(), 0.0);
+    }
+
+    #[test]
+    fn fps_meter_two_frames_one_interval() {
+        let mut m = FpsMeter::default();
+        m.record(0);
+        m.record(200_000); // one 200ms interval -> 5 FPS
+        assert_eq!(m.frames(), 2);
+        assert!((m.fps() - 5.0).abs() < 1e-9, "{}", m.fps());
+    }
+
+    #[test]
+    fn fps_meter_warmup_cuts_startup_transient() {
+        let mut m = FpsMeter::with_warmup(2);
+        // Two slow startup frames, then a steady 10 FPS tail.
+        m.record(0);
+        m.record(500_000);
+        for i in 0..5u64 {
+            m.record(1_000_000 + i * 100_000);
+        }
+        assert_eq!(m.frames(), 5, "warmup frames excluded");
+        assert!((m.fps() - 10.0).abs() < 1e-9, "{}", m.fps());
+        // Without the cutoff the transient drags the rate down.
+        let mut raw = FpsMeter::default();
+        raw.record(0);
+        raw.record(500_000);
+        for i in 0..5u64 {
+            raw.record(1_000_000 + i * 100_000);
+        }
+        assert!(raw.fps() < 5.0);
+    }
+
+    #[test]
+    fn fps_meter_warmup_longer_than_run_reports_zero() {
+        let mut m = FpsMeter::with_warmup(10);
+        m.record(0);
+        m.record(100);
+        assert_eq!(m.frames(), 0);
         assert_eq!(m.fps(), 0.0);
     }
 

@@ -1,0 +1,260 @@
+//! Bench telemetry reports — the `BENCH_*.json` files CI consumes.
+//!
+//! `champd bench scaling` runs the 1..N-accelerator sweep and serializes a
+//! [`BenchReport`] to `BENCH_scaling.json`.  CI uploads the file as an
+//! artifact (the perf trajectory future PRs diff against) and fails the
+//! build when any record regresses more than a tolerance below the
+//! checked-in baseline (`rust/benches/common/scaling_baseline.json`).
+//!
+//! Schema (v1):
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "commit": "<sha or 'unknown'>",
+//!   "records": [
+//!     { "mode": "batched", "device": "ncs2", "n_accel": 5, "batch": 1,
+//!       "fps": 47.9, "bus_utilization": 0.07,
+//!       "p50_us": 131072, "p99_us": 262144 }
+//!   ]
+//! }
+//! ```
+//!
+//! `fps` is *aggregate inference throughput* (device-frame completions per
+//! second): in broadcast mode a frame that lands on five accelerators
+//! counts five completions, which is the quantity that scales near-linearly
+//! until the bus saturates (paper §4.1, Table 1).
+
+use std::path::Path;
+
+use crate::json::{self, Value};
+
+/// One point of the scaling sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingRecord {
+    /// Dispatch mode: `"barrier"` (legacy baseline) or `"batched"` (engine).
+    pub mode: String,
+    /// Device family: `"ncs2"` or `"coral"`.
+    pub device: String,
+    pub n_accel: usize,
+    pub batch: u32,
+    /// Aggregate inference throughput (completions/s).
+    pub fps: f64,
+    /// Shared-wire busy fraction.
+    pub bus_utilization: f64,
+    /// Dispatch→result latency percentiles, virtual us.
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl ScalingRecord {
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("mode", json::s(&self.mode)),
+            ("device", json::s(&self.device)),
+            ("n_accel", json::num(self.n_accel as f64)),
+            ("batch", json::num(self.batch as f64)),
+            ("fps", json::num(self.fps)),
+            ("bus_utilization", json::num(self.bus_utilization)),
+            ("p50_us", json::num(self.p50_us as f64)),
+            ("p99_us", json::num(self.p99_us as f64)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Option<ScalingRecord> {
+        Some(ScalingRecord {
+            mode: v.get("mode")?.as_str()?.to_string(),
+            device: v.get("device")?.as_str()?.to_string(),
+            n_accel: v.get("n_accel")?.as_usize()?,
+            batch: v.get("batch")?.as_u64()? as u32,
+            fps: v.get("fps")?.as_f64()?,
+            bus_utilization: v.get("bus_utilization").and_then(Value::as_f64).unwrap_or(0.0),
+            p50_us: v.get("p50_us").and_then(Value::as_u64).unwrap_or(0),
+            p99_us: v.get("p99_us").and_then(Value::as_u64).unwrap_or(0),
+        })
+    }
+
+    /// The (mode, device, n_accel, batch) identity of this point.
+    pub fn key(&self) -> (String, String, usize, u32) {
+        (self.mode.clone(), self.device.clone(), self.n_accel, self.batch)
+    }
+}
+
+/// A full bench telemetry file.
+#[derive(Debug, Clone, Default)]
+pub struct BenchReport {
+    pub commit: String,
+    pub records: Vec<ScalingRecord>,
+}
+
+pub const SCHEMA_VERSION: u64 = 1;
+
+impl BenchReport {
+    pub fn new(commit: impl Into<String>) -> Self {
+        BenchReport { commit: commit.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: ScalingRecord) {
+        self.records.push(r);
+    }
+
+    pub fn find(
+        &self,
+        mode: &str,
+        device: &str,
+        n_accel: usize,
+        batch: u32,
+    ) -> Option<&ScalingRecord> {
+        self.records.iter().find(|r| {
+            r.mode == mode && r.device == device && r.n_accel == n_accel && r.batch == batch
+        })
+    }
+
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("schema", json::num(SCHEMA_VERSION as f64)),
+            ("commit", json::s(&self.commit)),
+            ("records", Value::Arr(self.records.iter().map(ScalingRecord::to_value).collect())),
+        ])
+    }
+
+    pub fn to_json_pretty(&self) -> String {
+        self.to_value().to_json_pretty()
+    }
+
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let commit =
+            v.get("commit").and_then(Value::as_str).unwrap_or("unknown").to_string();
+        let mut records = Vec::new();
+        for r in v.get("records").and_then(Value::as_arr).unwrap_or(&[]) {
+            records.push(
+                ScalingRecord::from_value(r)
+                    .ok_or_else(|| anyhow::anyhow!("malformed scaling record: {}", r.to_json()))?,
+            );
+        }
+        Ok(BenchReport { commit, records })
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json_pretty() + "\n")?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("bad bench JSON: {e:?}"))?;
+        Self::from_value(&v)
+    }
+
+    /// Regression guard: every baseline record must be present in `self`
+    /// with `fps >= baseline * (1 - tolerance)`.  Returns one message per
+    /// violation (empty = gate passes).
+    pub fn check_against(&self, baseline: &BenchReport, tolerance: f64) -> Vec<String> {
+        let mut violations = Vec::new();
+        for b in &baseline.records {
+            match self.find(&b.mode, &b.device, b.n_accel, b.batch) {
+                None => violations.push(format!(
+                    "missing record {}/{} n={} batch={} (baseline {:.1} FPS)",
+                    b.mode, b.device, b.n_accel, b.batch, b.fps
+                )),
+                Some(cur) => {
+                    let floor = b.fps * (1.0 - tolerance);
+                    if cur.fps < floor {
+                        violations.push(format!(
+                            "{}/{} n={} batch={}: {:.1} FPS < floor {:.1} (baseline {:.1}, tol {:.0}%)",
+                            b.mode, b.device, b.n_accel, b.batch,
+                            cur.fps, floor, b.fps, tolerance * 100.0
+                        ));
+                    }
+                }
+            }
+        }
+        violations
+    }
+}
+
+/// Best-effort commit id for the report: `$GITHUB_SHA` in CI, `git
+/// rev-parse` locally, `"unknown"` otherwise.
+pub fn current_commit() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(mode: &str, n: usize, fps: f64) -> ScalingRecord {
+        ScalingRecord {
+            mode: mode.into(),
+            device: "ncs2".into(),
+            n_accel: n,
+            batch: 1,
+            fps,
+            bus_utilization: 0.05,
+            p50_us: 65_536,
+            p99_us: 131_072,
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let mut rep = BenchReport::new("deadbeef");
+        rep.push(record("batched", 5, 47.9));
+        rep.push(record("barrier", 5, 30.0));
+        let back = BenchReport::parse(&rep.to_json_pretty()).unwrap();
+        assert_eq!(back.commit, "deadbeef");
+        assert_eq!(back.records, rep.records);
+        assert!(back.find("batched", "ncs2", 5, 1).is_some());
+        assert!(back.find("batched", "coral", 5, 1).is_none());
+    }
+
+    #[test]
+    fn guard_passes_at_or_above_floor() {
+        let mut baseline = BenchReport::new("base");
+        baseline.push(record("batched", 5, 50.0));
+        let mut cur = BenchReport::new("cur");
+        cur.push(record("batched", 5, 45.1)); // -9.8% with 10% tolerance
+        assert!(cur.check_against(&baseline, 0.10).is_empty());
+    }
+
+    #[test]
+    fn guard_flags_regressions_and_missing_records() {
+        let mut baseline = BenchReport::new("base");
+        baseline.push(record("batched", 5, 50.0));
+        baseline.push(record("barrier", 5, 30.0));
+        let mut cur = BenchReport::new("cur");
+        cur.push(record("batched", 5, 40.0)); // -20%: regression
+        let v = cur.check_against(&baseline, 0.10);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().any(|m| m.contains("40.0 FPS")));
+        assert!(v.iter().any(|m| m.contains("missing record")));
+    }
+
+    #[test]
+    fn malformed_record_is_an_error() {
+        assert!(BenchReport::parse(r#"{"records": [{"mode": "x"}]}"#).is_err());
+        assert!(BenchReport::parse("not json").is_err());
+    }
+
+    #[test]
+    fn commit_is_never_empty() {
+        assert!(!current_commit().is_empty());
+    }
+}

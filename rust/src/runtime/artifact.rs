@@ -142,7 +142,10 @@ impl Manifest {
     /// artifact extents are spilled (decrypted) into `spill_dir`, then
     /// loaded exactly like an on-disk artifacts directory.  The image is
     /// MAC-verified at mount, so everything spilled here is authentic.
-    pub fn load_from_image(img: &MountedImage, spill_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+    pub fn load_from_image(
+        img: &MountedImage,
+        spill_dir: impl AsRef<Path>,
+    ) -> anyhow::Result<Self> {
         let spill = spill_dir.as_ref();
         std::fs::create_dir_all(spill)?;
         let names = img.artifact_names();

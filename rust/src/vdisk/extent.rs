@@ -145,7 +145,8 @@ pub fn seal_blocks(
     data: &[u8],
     block_size: u32,
 ) -> Vec<u8> {
-    let mut out = Vec::with_capacity(ExtentMeta::sealed_size(data.len() as u64, block_size) as usize);
+    let sealed_len = ExtentMeta::sealed_size(data.len() as u64, block_size) as usize;
+    let mut out = Vec::with_capacity(sealed_len);
     for (b, chunk) in data.chunks(block_size as usize).enumerate() {
         let sub = key.subkey(&block_tweak(image_uid, extent_idx, b as u32));
         out.extend_from_slice(&sub.seal(chunk));

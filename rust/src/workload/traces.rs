@@ -63,11 +63,15 @@ impl MissionTrace {
             match s {
                 TraceStep::Run { dur_us } => t += dur_us,
                 TraceStep::Remove { slot } => {
-                    out.push(HotplugEvent { at_us: t, slot: *slot, kind: HotplugKind::Detach, uid: 0 });
+                    out.push(HotplugEvent {
+                        at_us: t, slot: *slot, kind: HotplugKind::Detach, uid: 0,
+                    });
                 }
                 TraceStep::Insert { slot, uid } => {
                     let u = if *uid == 0 { uid_for_insert } else { *uid };
-                    out.push(HotplugEvent { at_us: t, slot: *slot, kind: HotplugKind::Attach, uid: u });
+                    out.push(HotplugEvent {
+                        at_us: t, slot: *slot, kind: HotplugKind::Attach, uid: u,
+                    });
                 }
             }
         }

@@ -13,7 +13,8 @@ use champ::workload::video::VideoSource;
 fn face_rig() -> (Orchestrator, u64) {
     let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
     o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
-    let q = o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
+    let q = o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))
+        .unwrap();
     o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
     (o, q)
 }
@@ -46,7 +47,9 @@ fn removing_embedder_halts_until_reinserted() {
     let embed_uid = o.pipeline.stages[2].uid;
     let events = vec![
         HotplugEvent { at_us: 2_000_000, slot: SlotId(2), kind: HotplugKind::Detach, uid: 0 },
-        HotplugEvent { at_us: 6_000_000, slot: SlotId(2), kind: HotplugKind::Attach, uid: embed_uid },
+        HotplugEvent {
+            at_us: 6_000_000, slot: SlotId(2), kind: HotplugKind::Attach, uid: embed_uid,
+        },
     ];
     let mut src = VideoSource::paper_stream(5).with_rate_fps(8.0);
     let rep = o.run_pipelined(&mut src, 80, events);

@@ -4,6 +4,7 @@
 use champ::bus::hotplug::{HotplugEvent, HotplugKind};
 use champ::bus::topology::SlotId;
 use champ::bus::usb3::BusProfile;
+use champ::coordinator::engine::EngineConfig;
 use champ::coordinator::pipeline::Pipeline;
 use champ::coordinator::scheduler::Orchestrator;
 use champ::device::caps::CapDescriptor;
@@ -62,9 +63,13 @@ fn prop_pipelined_latency_at_least_sum_of_stages() {
 fn prop_hotswap_of_passthrough_stage_never_drops_frames() {
     prop::check("swap-no-loss", 103, 15, |rng, _| {
         let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
-        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect())).unwrap();
-        let q = o.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality())).unwrap();
-        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed())).unwrap();
+        o.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))
+            .unwrap();
+        let q = o
+            .plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))
+            .unwrap();
+        o.plug(SlotId(2), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_embed()))
+            .unwrap();
         let remove_at = 1_000_000 + rng.range(0, 4_000_000);
         let reinsert_at = remove_at + 1_000_000 + rng.range(0, 3_000_000);
         let events = vec![
@@ -101,6 +106,95 @@ fn prop_pipeline_build_order_independent_of_plug_order() {
         }
         let names: Vec<&str> = o.pipeline.stages.iter().map(|s| s.cap.id.name()).collect();
         assert_eq!(names, vec!["face-detect", "face-quality", "face-embed"]);
+    });
+}
+
+#[test]
+fn prop_engine_completions_ordered_and_exactly_once_under_hotplug() {
+    // The dispatch engine completes out of order across devices (that is
+    // the point), but per device the result stream must stay in dispatch
+    // order, and every dispatched frame must be accounted exactly once —
+    // completed or cancelled-by-detach, never both, never twice — under
+    // random batch/window configs and random hotplug scripts.
+    prop::check("engine-exactly-once", 106, 12, |rng, _| {
+        let kind = random_kind(rng);
+        let n = 1 + rng.range(0, 5) as usize;
+        let batch = 1 + rng.range(0, 4) as u32;
+        let window = 1 + rng.range(0, 3) as u32;
+        let frames = 10 + rng.range(0, 30);
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        let mut uids = Vec::new();
+        for i in 0..n {
+            uids.push(
+                o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))
+                    .unwrap(),
+            );
+        }
+        let mut events = Vec::new();
+        let hotplug = rng.range(0, 2) == 0;
+        if hotplug {
+            let victim = rng.range(0, n as u64) as usize;
+            let t1 = 100_000 + rng.range(0, 2_000_000);
+            events.push(HotplugEvent {
+                at_us: t1,
+                slot: SlotId(victim as u8),
+                kind: HotplugKind::Detach,
+                uid: 0,
+            });
+            if rng.range(0, 2) == 0 {
+                events.push(HotplugEvent {
+                    at_us: t1 + 500_000 + rng.range(0, 2_000_000),
+                    slot: SlotId(victim as u8),
+                    kind: HotplugKind::Attach,
+                    uid: uids[victim],
+                });
+            }
+        }
+        let src = VideoSource::paper_stream(rng.next_u64());
+        let cfg = EngineConfig::batched(batch).with_window(window);
+        let rep = o.run_broadcast_engine(&src, frames, cfg, events);
+
+        assert_eq!(rep.dispatched, rep.results_out + rep.dropped,
+            "dispatch accounting must balance");
+        let total: usize = rep.per_device.iter().map(|(_, s)| s.len()).sum();
+        assert_eq!(total as u64, rep.results_out);
+        for (uid, seqs) in &rep.per_device {
+            for w in seqs.windows(2) {
+                assert!(w[1] > w[0],
+                    "device {uid} completions reordered or duplicated: {seqs:?}");
+            }
+        }
+        if !hotplug {
+            assert_eq!(rep.results_out, frames * n as u64, "no frame may be lost");
+            assert_eq!(rep.frames_out, frames);
+            assert_eq!(rep.dropped, 0);
+        }
+    });
+}
+
+#[test]
+fn prop_engine_aggregate_never_below_barrier() {
+    // Overlapped, credit-windowed dispatch must dominate the synchronous
+    // barrier at every device count, for every device family.
+    prop::check("engine-vs-barrier", 107, 8, |rng, _| {
+        let kind = random_kind(rng);
+        let n = 1 + rng.range(0, 5) as usize;
+        let frames = 30 + rng.range(0, 30);
+        let build = |kind, n: usize| {
+            let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+            for i in 0..n {
+                o.plug(SlotId(i as u8), Cartridge::new(0, kind, CapDescriptor::object_detect()))
+                    .unwrap();
+            }
+            o
+        };
+        let mut src = VideoSource::paper_stream(rng.next_u64());
+        let barrier_agg = build(kind, n).run_broadcast(&mut src, frames).fps * n as f64;
+        let src = VideoSource::paper_stream(rng.next_u64());
+        let cfg = EngineConfig::batched(1).with_warmup(5);
+        let engine = build(kind, n).run_broadcast_engine(&src, frames, cfg, vec![]).fps;
+        assert!(engine >= barrier_agg * 0.98,
+            "{kind:?} n={n}: engine {engine:.1} < barrier {barrier_agg:.1}");
     });
 }
 
