@@ -78,18 +78,20 @@ fn main() -> anyhow::Result<()> {
     let storage = StorageCartridge::enroll(99, &gallery, keys.rotation, keys.seal);
     let rot_matrix = KeyChain::derive("checkpoint-alpha", DIM).rotation.to_hlo_matrix();
     // Rotated gallery matrix for the secure-match HLO (G=1024 capacity,
-    // zero-padded — scores for empty rows are ~0 and never win).
+    // zero-padded — scores for empty rows are ~0 and never win).  The
+    // bulk rotation rotates the whole SoA matrix in one pass.
     let rot_key = KeyChain::derive("checkpoint-alpha", DIM).rotation;
+    let rot_index = rot_key.apply_index(gallery.index());
     let mut gal_rot = vec![0.0f32; 1024 * DIM];
-    for (i, (_, t)) in gallery.iter().enumerate() {
-        gal_rot[i * DIM..(i + 1) * DIM].copy_from_slice(rot_key.apply(t).as_slice());
-    }
+    gal_rot[..rot_index.len() * DIM].copy_from_slice(rot_index.data());
 
     // ---- Probe loop: detect -> quality -> embed -> secure match. --------
     let mut rank1 = 0usize;
     let mut gated = 0usize;
     let mut score_diff_max = 0.0f32;
     let mut stage_ms = [0.0f64; 4];
+    let mut batch_probes: Vec<Template> = Vec::with_capacity(PROBES);
+    let mut batch_expect: Vec<String> = Vec::with_capacity(PROBES);
     for p in 0..PROBES {
         let true_id = p * (GALLERY_IDS / PROBES);
         let probe_face = noisy(&base_faces[true_id], &mut rng, 0.02);
@@ -124,16 +126,36 @@ fn main() -> anyhow::Result<()> {
         let best_score = out[2][0];
 
         // Cross-check the HLO's decision against the rust-side protected
-        // matcher (independent implementation).
-        let rust_out = storage.match_probe(&Template::new(emb), 1).unwrap();
+        // matcher (independent implementation, SoA index scan).
+        let probe_t = Template::new(emb);
+        let rust_out = storage.match_probe(&probe_t, 1).unwrap();
         let hlo_id = gallery.id_at(best_idx).unwrap_or("<pad>");
         score_diff_max = score_diff_max.max((rust_out.best_score - best_score).abs());
         assert_eq!(rust_out.best_id, hlo_id, "HLO and rust matchers disagree");
+        batch_probes.push(probe_t);
+        batch_expect.push(rust_out.best_id.clone());
 
         if hlo_id == format!("subject-{true_id:04}") {
             rank1 += 1;
         }
     }
+    // Batched identification: one gallery pass for the whole probe set
+    // (the path the dispatch engine uses to amortize a batch envelope).
+    let t = Instant::now();
+    let batched = storage.match_batch(&batch_probes, 1);
+    let batch_ms = t.elapsed().as_secs_f64() * 1e3;
+    for (out, expect) in batched.iter().zip(&batch_expect) {
+        assert_eq!(
+            out.as_ref().map(|o| o.best_id.as_str()),
+            Some(expect.as_str()),
+            "batched match must agree with per-probe match"
+        );
+    }
+    println!(
+        "batched match: {} probes in {batch_ms:.1} ms (one gallery pass, decisions identical)",
+        batch_probes.len()
+    );
+
     let attempted = PROBES - gated;
     println!("\n--- accuracy (real compute) ---");
     println!("rank-1: {rank1}/{attempted} ({:.1}%), quality-gated: {gated}",

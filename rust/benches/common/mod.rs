@@ -21,7 +21,7 @@ pub fn time_it<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> WallStats
         f();
         us.push(t0.elapsed().as_secs_f64() * 1e6);
     }
-    us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    us.sort_by(|a, b| a.total_cmp(b));
     let mean = us.iter().sum::<f64>() / us.len() as f64;
     let p95_idx = ((us.len() as f64 * 0.95) as usize).min(us.len() - 1);
     WallStats { mean_us: mean, p50_us: us[us.len() / 2], p95_us: us[p95_idx], min_us: us[0] }

@@ -1,14 +1,17 @@
 //! Bench: encrypted template matching (paper §2.3/§3.1 claim + §6 future
 //! work on "privacy-preserving template encryption and matching inline").
 //!
-//! Wall-clock cost of the storage cartridge's match paths over gallery
-//! sizes: plaintext cosine, rotation-protected cosine, and Paillier
-//! encrypted-score aggregation.
+//! Wall-clock cost of the match paths over gallery sizes: the legacy
+//! plaintext AoS scan (naive), the SoA index engine (f32 top-k, i8
+//! quantized, shard-parallel), rotation-protected matching on the storage
+//! cartridge (which rides the same index), and Paillier encrypted-score
+//! aggregation.  `champd bench match` is the gated telemetry version of
+//! the naive/soa columns; this bench is the quick side-by-side table.
 
 mod common;
 
 use champ::biometric::gallery::Gallery;
-use champ::biometric::matcher::Matcher;
+use champ::biometric::matcher::rank_naive_aos;
 use champ::biometric::template::Template;
 use champ::crypto::paillier::{quantize_score, PaillierPriv};
 use champ::crypto::rotation::RotationKey;
@@ -26,20 +29,36 @@ fn gallery(n: usize, dim: usize, seed: u64) -> Gallery {
 }
 
 fn main() {
-    common::header("Encrypted matching: plaintext vs rotation-protected vs Paillier");
-    println!("{:<9} | {:>15} | {:>15} | {:>18}",
-        "gallery", "plaintext us", "rotated us", "paillier-agg us");
+    common::header("Matching: naive AoS vs SoA index (f32/i8/sharded) vs rotated vs Paillier");
+    println!(
+        "{:<9} | {:>10} | {:>8} | {:>8} | {:>10} | {:>10} | {:>15}",
+        "gallery", "naive us", "soa us", "i8 us", "sharded us", "rotated us", "paillier-agg us"
+    );
     let dim = 128;
     for &n in &[128usize, 512, 1024, 4096] {
         let g = gallery(n, dim, 1);
         let rot = RotationKey::generate(dim, 2);
         let sc = StorageCartridge::enroll(1, &g, rot, SealKey::from_passphrase("k"));
-        let probe = g.get("id7").unwrap().clone();
-        let m = Matcher::default();
+        let probe = g.get("id7").unwrap();
+        let entries = g.to_entries();
+        let idx = g.index();
+        let quant = idx.quantize();
 
-        let plain = common::time_it(3, 20, || {
-            let r = m.rank(&probe, &g);
+        let naive = common::time_it(3, 20, || {
+            let r = rank_naive_aos(&probe, &entries);
             assert_eq!(r[0].0, "id7");
+        });
+        let soa = common::time_it(3, 20, || {
+            let top = idx.top_k(probe.as_slice(), 1);
+            assert_eq!(idx.id_of(top[0].0), "id7");
+        });
+        let i8_scan = common::time_it(3, 20, || {
+            let top = quant.top_k(probe.as_slice(), 1);
+            assert_eq!(idx.id_of(top[0].0), "id7");
+        });
+        let sharded = common::time_it(3, 20, || {
+            let top = idx.top_k_sharded(probe.as_slice(), 1, 4);
+            assert_eq!(idx.id_of(top[0].0), "id7");
         });
         let rotated = common::time_it(3, 20, || {
             let out = sc.match_probe(&probe, 1).unwrap();
@@ -56,8 +75,11 @@ fn main() {
             let sum = parts[1..].iter().fold(parts[0], |acc, c| sk.pk.add(acc, *c));
             let _ = sk.decrypt(sum);
         });
-        println!("{:<9} | {:>15.1} | {:>15.1} | {:>18.1}",
-            n, plain.mean_us, rotated.mean_us, paillier.mean_us);
+        println!(
+            "{:<9} | {:>10.1} | {:>8.1} | {:>8.1} | {:>10.1} | {:>10.1} | {:>15.1}",
+            n, naive.mean_us, soa.mean_us, i8_scan.mean_us, sharded.mean_us, rotated.mean_us,
+            paillier.mean_us
+        );
     }
     println!("encrypted_match OK");
 }

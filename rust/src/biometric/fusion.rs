@@ -57,12 +57,7 @@ mod tests {
         let face = ModalityScores { name: "face".into(), weight: 0.6, scores: vec![0.9, 0.8, 0.1] };
         let gait = ModalityScores { name: "gait".into(), weight: 0.4, scores: vec![0.2, 0.9, 0.1] };
         let fused = fuse(&[face, gait]).unwrap();
-        let best = fused
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
+        let best = fused.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
         assert_eq!(best, 1);
     }
 

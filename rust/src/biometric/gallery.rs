@@ -1,106 +1,135 @@
 //! Identity gallery: id -> template store.
+//!
+//! Since the match-engine refactor the gallery *is* a thin facade over
+//! [`GalleryIndex`] — the flat structure-of-arrays layout is the only
+//! template storage in the system.  Enrollment is O(dim) amortized (hash
+//! upsert, not the old linear duplicate scan), decoding goes straight
+//! into the SoA matrix with no intermediate `Vec<(String, Template)>`,
+//! and every scoring path (plaintext matcher, storage cartridge, HLO
+//! cross-checks) scans the same contiguous rows.
 
+use super::index::GalleryIndex;
 use super::template::Template;
 
-/// An ordered gallery of enrolled identities.
+/// An ordered gallery of enrolled identities (SoA-backed).
 #[derive(Debug, Clone)]
 pub struct Gallery {
-    dim: usize,
-    entries: Vec<(String, Template)>,
+    index: GalleryIndex,
 }
 
 impl Gallery {
     pub fn new(dim: usize) -> Self {
-        Gallery { dim, entries: Vec::new() }
+        Gallery { index: GalleryIndex::new(dim) }
+    }
+
+    /// Wrap an already-built index (bulk paths: decode, rotation).
+    pub fn from_index(index: GalleryIndex) -> Self {
+        Gallery { index }
+    }
+
+    /// The scoring engine view of this gallery.
+    pub fn index(&self) -> &GalleryIndex {
+        &self.index
     }
 
     pub fn dim(&self) -> usize {
-        self.dim
+        self.index.dim()
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.index.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.index.is_empty()
     }
 
-    /// Enroll (replaces an existing id).
+    /// Enroll (replaces an existing id).  Amortized O(dim) — enrollment
+    /// loops are linear in gallery size now, not quadratic.
     pub fn add(&mut self, id: String, t: Template) {
-        assert_eq!(t.dim(), self.dim, "template dim mismatch");
-        if let Some(e) = self.entries.iter_mut().find(|(i, _)| *i == id) {
-            e.1 = t;
-        } else {
-            self.entries.push((id, t));
-        }
+        assert_eq!(t.dim(), self.dim(), "template dim mismatch");
+        self.index.upsert(id, t.as_slice());
     }
 
+    /// Remove an id, preserving enrollment order of the rest.
     pub fn remove(&mut self, id: &str) -> bool {
-        let before = self.entries.len();
-        self.entries.retain(|(i, _)| i != id);
-        self.entries.len() != before
+        self.index.remove(id)
     }
 
-    pub fn get(&self, id: &str) -> Option<&Template> {
-        self.entries.iter().find(|(i, _)| i == id).map(|(_, t)| t)
+    /// Owned template copy for `id` (templates live as SoA rows; use
+    /// [`Gallery::row`] for the zero-copy view).
+    pub fn get(&self, id: &str) -> Option<Template> {
+        self.index.template(id)
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = &(String, Template)> {
-        self.entries.iter()
+    /// Zero-copy row view for `id`.
+    pub fn row(&self, id: &str) -> Option<&[f32]> {
+        self.index.row_of(id).map(|r| self.index.row(r))
+    }
+
+    /// `(id, row)` pairs in enrollment order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &[f32])> {
+        self.index.iter()
+    }
+
+    /// Materialize the legacy array-of-structs form.  Only the naive
+    /// reference matcher and benches that measure the old layout use this.
+    pub fn to_entries(&self) -> Vec<(String, Template)> {
+        self.iter().map(|(id, row)| (id.to_string(), Template::new(row.to_vec()))).collect()
     }
 
     /// Flatten to a row-major matrix (for feeding the gallery_match HLO).
+    /// The SoA index already *is* that matrix; this clones it.
     pub fn to_matrix(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.len() * self.dim);
-        for (_, t) in &self.entries {
-            out.extend_from_slice(t.as_slice());
-        }
-        out
+        self.index.data().to_vec()
     }
 
     pub fn id_at(&self, idx: usize) -> Option<&str> {
-        self.entries.get(idx).map(|(i, _)| i.as_str())
+        (idx < self.len()).then(|| self.index.id_of(idx))
     }
 
     /// Serialize to the flat wire framing used at rest:
     /// `[u32 id_len][id bytes][dim × f32 LE]` per entry.
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.len() * (8 + self.dim * 4));
-        for (id, t) in &self.entries {
+        let dim = self.dim();
+        let mut out = Vec::with_capacity(self.len() * (8 + dim * 4));
+        for (id, row) in self.iter() {
             out.extend_from_slice(&(id.len() as u32).to_le_bytes());
             out.extend_from_slice(id.as_bytes());
-            for v in t.as_slice() {
+            for v in row {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
         out
     }
 
-    /// Parse bytes produced by [`Gallery::encode`].  Fails (never panics)
-    /// on truncated or oversized framing.
+    /// Parse bytes produced by [`Gallery::encode`] straight into the SoA
+    /// index (no per-entry Template allocation).  Fails (never panics) on
+    /// truncated or oversized framing.
     pub fn decode(bytes: &[u8], dim: usize) -> anyhow::Result<Gallery> {
-        let mut g = Gallery::new(dim);
+        // Row-count guess for preallocation; ids make records bigger, so
+        // this only ever over-reserves by the id bytes.
+        let guess = bytes.len() / (4 + 4 * dim.max(1));
+        let mut index = GalleryIndex::with_capacity(dim, guess);
+        let mut vals = vec![0.0f32; dim];
         let mut i = 0usize;
         while i < bytes.len() {
             anyhow::ensure!(i + 4 <= bytes.len(), "gallery framing: truncated id length");
             let n = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()) as usize;
             i += 4;
             anyhow::ensure!(i + n <= bytes.len(), "gallery framing: truncated id");
-            let id = String::from_utf8(bytes[i..i + n].to_vec())?;
+            let id = std::str::from_utf8(&bytes[i..i + n])?;
             i += n;
             anyhow::ensure!(i + 4 * dim <= bytes.len(), "gallery framing: truncated template");
-            let mut vals = Vec::with_capacity(dim);
-            for _ in 0..dim {
-                vals.push(f32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()));
+            for v in vals.iter_mut() {
+                *v = f32::from_le_bytes(bytes[i..i + 4].try_into().unwrap());
                 i += 4;
             }
-            // Push directly instead of `add`: encode() output cannot contain
-            // duplicate ids, and add()'s linear duplicate scan would make
-            // decoding O(n²) in gallery size.
-            g.entries.push((id, Template::new(vals)));
+            // Hash upsert: O(1) duplicate handling, so hostile framings
+            // with repeated ids collapse instead of multiplying rows.
+            index.upsert(id, &vals);
         }
-        Ok(g)
+        Ok(Gallery { index })
     }
 }
 
@@ -127,6 +156,7 @@ mod tests {
         g.add("x".into(), Template::new(vec![0.0, 1.0]));
         assert_eq!(g.len(), 1);
         assert_eq!(g.get("x").unwrap().as_slice(), &[0.0, 1.0]);
+        assert_eq!(g.row("x").unwrap(), &[0.0, 1.0]);
     }
 
     #[test]
@@ -136,6 +166,7 @@ mod tests {
         g.add("b".into(), Template::new(vec![3.0, 4.0]));
         assert_eq!(g.to_matrix(), vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(g.id_at(1), Some("b"));
+        assert_eq!(g.id_at(2), None);
     }
 
     #[test]
@@ -147,9 +178,11 @@ mod tests {
         }
         let back = Gallery::decode(&g.encode(), 16).unwrap();
         assert_eq!(back.len(), g.len());
-        for (id, t) in g.iter() {
-            assert_eq!(back.get(id).unwrap().as_slice(), t.as_slice());
+        for (id, row) in g.iter() {
+            assert_eq!(back.row(id).unwrap(), row);
         }
+        // Row order (and therefore the SoA matrix) survives the roundtrip.
+        assert_eq!(back.to_matrix(), g.to_matrix());
     }
 
     #[test]
@@ -160,6 +193,31 @@ mod tests {
         for cut in [1usize, 5, bytes.len() - 1] {
             assert!(Gallery::decode(&bytes[..cut], 8).is_err(), "cut {cut} accepted");
         }
+    }
+
+    #[test]
+    fn decode_collapses_duplicate_ids() {
+        let mut a = Gallery::new(2);
+        a.add("x".into(), Template::new(vec![1.0, 0.0]));
+        let mut b = Gallery::new(2);
+        b.add("x".into(), Template::new(vec![0.0, 1.0]));
+        let mut bytes = a.encode();
+        bytes.extend_from_slice(&b.encode());
+        let g = Gallery::decode(&bytes, 2).unwrap();
+        assert_eq!(g.len(), 1, "duplicate ids must collapse, last wins");
+        assert_eq!(g.row("x").unwrap(), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn remove_keeps_enrollment_order() {
+        let mut g = Gallery::new(2);
+        for (i, v) in [[1.0, 0.0], [0.0, 1.0], [1.0, 1.0]].iter().enumerate() {
+            g.add(format!("p{i}"), Template::new(v.to_vec()));
+        }
+        assert!(g.remove("p1"));
+        assert_eq!(g.id_at(0), Some("p0"));
+        assert_eq!(g.id_at(1), Some("p2"));
+        assert_eq!(g.to_matrix(), vec![1.0, 0.0, 1.0, 1.0]);
     }
 
     #[test]

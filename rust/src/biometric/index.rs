@@ -1,0 +1,645 @@
+//! The match engine: a structure-of-arrays gallery index.
+//!
+//! The identification workload (paper §2.3: querying the storage
+//! cartridge's protected gallery) is throughput-critical at the
+//! million-identity scale the ROADMAP targets, and the original
+//! `Vec<(String, Template)>` scan paid for its layout on every probe:
+//! pointer-chasing per row, both norms recomputed per pair, a `String`
+//! clone per candidate, and a full `sort` when only the top-k is needed.
+//!
+//! [`GalleryIndex`] is the one scoring path for the whole system now:
+//!
+//! * **SoA layout** — one contiguous row-major `f32` matrix plus a
+//!   parallel `inv_norms` array, so a gallery pass is a linear streaming
+//!   read the prefetcher can keep ahead of.
+//! * **Blocked dot kernel** — fixed-width lane accumulators
+//!   (`chunks_exact(LANES)`) shaped so LLVM autovectorizes the inner
+//!   product without `-ffast-math`.
+//! * **Bounded-heap top-k** — a k-entry min-heap over a
+//!   [`f32::total_cmp`] total order (NaN-safe; ties break toward the
+//!   lower row, matching a stable descending sort of the full score
+//!   list).  No full sort, no id clones on the scan path.
+//! * **i8 quantized scan** ([`QuantIndex`]) — per-row-scaled symmetric
+//!   quantization of the *normalized* rows; scores are `i32` dot
+//!   products rescaled once per row (paper §6 future work).  Agreement
+//!   with the f32 path is bounded by the property suite.
+//! * **Shard-parallel scan** — contiguous row ranges fanned across
+//!   `std::thread` scoped workers, merged under the same total order, so
+//!   the result is bit-identical to the single-shard scan.
+//! * **Multi-probe batch scoring** — one pass over the gallery serves a
+//!   whole frame batch: rows are walked in cache-sized blocks with all
+//!   probes scored per block, which is what lets the dispatch engine
+//!   amortize a gallery pass across a batch envelope.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::template::Template;
+
+/// Norm regularizer (matches [`Template::cosine`]'s denominator floor).
+const NORM_EPS: f32 = 1e-8;
+
+/// Lane count of the blocked kernels (8 f32 = one AVX2 register).
+const LANES: usize = 8;
+
+/// Rows per block in the batch scan: 256 rows x 128 dim x 4 B = 128 KiB,
+/// sized to stay resident in L2 while every probe of a batch scores it.
+const BATCH_ROW_BLOCK: usize = 256;
+
+/// Galleries below this size are scanned on the calling thread even by
+/// the auto-sharding entry points (thread spawn costs more than the scan).
+pub const SHARD_MIN_ROWS: usize = 1 << 16;
+
+/// Blocked inner product: `LANES` independent accumulators so the
+/// floating-point reduction order is fixed by the code (deterministic
+/// across optimization levels) yet wide enough to autovectorize.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for l in 0..LANES {
+            lanes[l] += xa[l] * xb[l];
+        }
+    }
+    let mut acc: f32 = lanes.iter().sum();
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Blocked i8 inner product with i32 accumulators (no overflow up to
+/// dim 130k: each product is <= 127^2 and i32 holds ~133k of those).
+#[inline]
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0i32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for l in 0..LANES {
+            lanes[l] += xa[l] as i32 * xb[l] as i32;
+        }
+    }
+    let mut acc: i32 = lanes.iter().sum();
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += *x as i32 * *y as i32;
+    }
+    acc
+}
+
+#[inline]
+fn inv_norm_of(v: &[f32]) -> f32 {
+    1.0 / dot_f32(v, v).sqrt().max(NORM_EPS)
+}
+
+/// A scored row.  The ordering is the engine's single source of truth:
+/// higher score wins; equal scores prefer the lower row (= enrollment
+/// order, exactly what a stable descending sort produces); NaN is ordered
+/// by `total_cmp`, so a NaN probe degrades results instead of panicking.
+#[derive(Debug, Clone, Copy)]
+struct Cand {
+    score: f32,
+    row: usize,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Greater = better: higher score, then *lower* row index.
+        self.score.total_cmp(&other.score).then_with(|| other.row.cmp(&self.row))
+    }
+}
+
+/// Bounded min-heap of the k best candidates seen so far.
+struct TopK {
+    k: usize,
+    heap: BinaryHeap<std::cmp::Reverse<Cand>>,
+}
+
+impl TopK {
+    fn new(k: usize) -> Self {
+        TopK { k, heap: BinaryHeap::with_capacity(k.saturating_add(1)) }
+    }
+
+    #[inline]
+    fn offer(&mut self, score: f32, row: usize) {
+        if self.k == 0 {
+            return;
+        }
+        let c = Cand { score, row };
+        if self.heap.len() < self.k {
+            self.heap.push(std::cmp::Reverse(c));
+        } else if let Some(worst) = self.heap.peek() {
+            if c > worst.0 {
+                self.heap.pop();
+                self.heap.push(std::cmp::Reverse(c));
+            }
+        }
+    }
+
+    /// Best-first drain.
+    fn into_sorted(self) -> Vec<Cand> {
+        let mut v: Vec<Cand> = self.heap.into_iter().map(|r| r.0).collect();
+        v.sort_by(|a, b| b.cmp(a));
+        v
+    }
+}
+
+/// Flat structure-of-arrays gallery index: the system's scoring engine.
+#[derive(Debug, Clone, Default)]
+pub struct GalleryIndex {
+    dim: usize,
+    /// Interned ids in row order (enrollment order).
+    ids: Vec<String>,
+    /// id -> row for O(1) upsert/lookup (the enrollment-loop fix).
+    id_to_row: HashMap<String, usize>,
+    /// Row-major `len() x dim` matrix, contiguous.
+    data: Vec<f32>,
+    /// Precomputed `1 / max(norm, eps)` per row.
+    inv_norms: Vec<f32>,
+}
+
+impl GalleryIndex {
+    pub fn new(dim: usize) -> Self {
+        GalleryIndex { dim, ..Default::default() }
+    }
+
+    pub fn with_capacity(dim: usize, rows: usize) -> Self {
+        GalleryIndex {
+            dim,
+            ids: Vec::with_capacity(rows),
+            id_to_row: HashMap::with_capacity(rows),
+            data: Vec::with_capacity(rows * dim),
+            inv_norms: Vec::with_capacity(rows),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// The raw row-major matrix (len x dim).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Insert or replace `id`'s template vector; returns its row.
+    /// Amortized O(dim): the duplicate check is one hash lookup, not the
+    /// linear scan the legacy gallery paid per enrollment.
+    pub fn upsert(&mut self, id: impl Into<String>, v: &[f32]) -> usize {
+        assert_eq!(v.len(), self.dim, "template dim mismatch");
+        let id = id.into();
+        match self.id_to_row.get(&id) {
+            Some(&row) => {
+                self.data[row * self.dim..(row + 1) * self.dim].copy_from_slice(v);
+                self.inv_norms[row] = inv_norm_of(v);
+                row
+            }
+            None => {
+                let row = self.ids.len();
+                self.ids.push(id.clone());
+                self.id_to_row.insert(id, row);
+                self.data.extend_from_slice(v);
+                self.inv_norms.push(inv_norm_of(v));
+                row
+            }
+        }
+    }
+
+    /// Remove `id`, preserving the enrollment order of the other rows
+    /// (O(n·dim) memmove — removal is rare; scans are the hot path).
+    pub fn remove(&mut self, id: &str) -> bool {
+        let Some(row) = self.id_to_row.remove(id) else { return false };
+        self.ids.remove(row);
+        self.inv_norms.remove(row);
+        self.data.drain(row * self.dim..(row + 1) * self.dim);
+        for r in self.id_to_row.values_mut() {
+            if *r > row {
+                *r -= 1;
+            }
+        }
+        true
+    }
+
+    pub fn row_of(&self, id: &str) -> Option<usize> {
+        self.id_to_row.get(id).copied()
+    }
+
+    /// Panics if `row >= len()` (slice indexing), like any row accessor.
+    pub fn row(&self, row: usize) -> &[f32] {
+        &self.data[row * self.dim..(row + 1) * self.dim]
+    }
+
+    pub fn id_of(&self, row: usize) -> &str {
+        &self.ids[row]
+    }
+
+    /// Owned template copy of `id`'s row, if enrolled.
+    pub fn template(&self, id: &str) -> Option<Template> {
+        self.row_of(id).map(|r| Template::new(self.row(r).to_vec()))
+    }
+
+    /// `(id, row-slice)` in enrollment order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &[f32])> {
+        self.ids.iter().map(String::as_str).zip(self.data.chunks_exact(self.dim.max(1)))
+    }
+
+    // ---- scoring ---------------------------------------------------------
+
+    /// Cosine score of `probe` against every row, appended to `out` in row
+    /// order (clamped to [-1, 1]; NaN probes yield NaN scores, not panics).
+    pub fn scores_into(&self, probe: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(probe.len(), self.dim, "probe dim mismatch");
+        let ip = inv_norm_of(probe);
+        out.reserve(self.len());
+        for r in 0..self.len() {
+            let s = dot_f32(self.row(r), probe) * self.inv_norms[r] * ip;
+            out.push(s.clamp(-1.0, 1.0));
+        }
+    }
+
+    /// Full ranking (row, score), best first, ties toward the lower row.
+    /// Equivalent to the naive scan + stable descending sort, without the
+    /// per-pair norm recomputation or id clones.
+    pub fn rank_rows(&self, probe: &[f32]) -> Vec<(usize, f32)> {
+        let mut scores = Vec::new();
+        self.scores_into(probe, &mut scores);
+        let mut order: Vec<(usize, f32)> = scores.into_iter().enumerate().collect();
+        order.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        order
+    }
+
+    /// Top-k rows by cosine score via a bounded heap: one gallery pass,
+    /// O(n log k), no full sort.  Exactly the first k of [`Self::rank_rows`].
+    pub fn top_k(&self, probe: &[f32], k: usize) -> Vec<(usize, f32)> {
+        self.top_k_range(probe, k, 0, self.len())
+            .into_iter()
+            .map(|c| (c.row, c.score))
+            .collect()
+    }
+
+    fn top_k_range(&self, probe: &[f32], k: usize, lo: usize, hi: usize) -> Vec<Cand> {
+        assert_eq!(probe.len(), self.dim, "probe dim mismatch");
+        let ip = inv_norm_of(probe);
+        let mut top = TopK::new(k);
+        for r in lo..hi {
+            let s = (dot_f32(self.row(r), probe) * self.inv_norms[r] * ip).clamp(-1.0, 1.0);
+            top.offer(s, r);
+        }
+        top.into_sorted()
+    }
+
+    /// Shard the row range across `shards` scoped worker threads and merge
+    /// the per-shard top-k under the same total order.  Bit-identical to
+    /// [`Self::top_k`] for any shard count.
+    pub fn top_k_sharded(&self, probe: &[f32], k: usize, shards: usize) -> Vec<(usize, f32)> {
+        let n = self.len();
+        let shards = shards.max(1).min(n.max(1));
+        if shards <= 1 {
+            return self.top_k(probe, k);
+        }
+        let chunk = n.div_ceil(shards);
+        let mut all: Vec<Cand> = Vec::with_capacity(shards * k.min(chunk));
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(shards);
+            for si in 0..shards {
+                let lo = si * chunk;
+                let hi = ((si + 1) * chunk).min(n);
+                if lo >= hi {
+                    continue;
+                }
+                handles.push(scope.spawn(move || self.top_k_range(probe, k, lo, hi)));
+            }
+            for h in handles {
+                all.extend(h.join().expect("shard worker panicked"));
+            }
+        });
+        all.sort_by(|a, b| b.cmp(a));
+        all.truncate(k.min(n));
+        all.into_iter().map(|c| (c.row, c.score)).collect()
+    }
+
+    /// Top-k with automatic shard selection: large galleries fan out over
+    /// the available cores, small ones stay on the calling thread.
+    pub fn top_k_auto(&self, probe: &[f32], k: usize) -> Vec<(usize, f32)> {
+        if self.len() < SHARD_MIN_ROWS {
+            return self.top_k(probe, k);
+        }
+        self.top_k_sharded(probe, k, default_shards())
+    }
+
+    /// Score a whole probe batch in one gallery pass: rows are walked in
+    /// L2-sized blocks and every probe scores the hot block before the
+    /// scan moves on, so the gallery is streamed from memory once per
+    /// *batch* instead of once per probe.
+    pub fn top_k_batch(&self, probes: &[&[f32]], k: usize) -> Vec<Vec<(usize, f32)>> {
+        for p in probes {
+            assert_eq!(p.len(), self.dim, "probe dim mismatch");
+        }
+        let inv_probe: Vec<f32> = probes.iter().map(|p| inv_norm_of(p)).collect();
+        let mut tops: Vec<TopK> = (0..probes.len()).map(|_| TopK::new(k)).collect();
+        let n = self.len();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + BATCH_ROW_BLOCK).min(n);
+            for (pi, probe) in probes.iter().enumerate() {
+                let ip = inv_probe[pi];
+                let top = &mut tops[pi];
+                for r in lo..hi {
+                    let s = (dot_f32(self.row(r), probe) * self.inv_norms[r] * ip)
+                        .clamp(-1.0, 1.0);
+                    top.offer(s, r);
+                }
+            }
+            lo = hi;
+        }
+        tops.into_iter()
+            .map(|t| t.into_sorted().into_iter().map(|c| (c.row, c.score)).collect())
+            .collect()
+    }
+
+    /// Build the i8 scan companion (per-row scales; see [`QuantIndex`]).
+    pub fn quantize(&self) -> QuantIndex {
+        let n = self.len();
+        let mut codes = vec![0i8; n * self.dim];
+        let mut scales = vec![0.0f32; n];
+        let mut normed = vec![0.0f32; self.dim];
+        for r in 0..n {
+            let row = self.row(r);
+            let inv = self.inv_norms[r];
+            let mut max_abs = 0.0f32;
+            for (d, x) in normed.iter_mut().zip(row) {
+                *d = x * inv;
+                max_abs = max_abs.max(d.abs());
+            }
+            if max_abs <= 0.0 || !max_abs.is_finite() {
+                continue; // zero (or degenerate) row: codes stay 0, score 0
+            }
+            let scale = max_abs / 127.0;
+            scales[r] = scale;
+            for (c, x) in codes[r * self.dim..(r + 1) * self.dim].iter_mut().zip(&normed) {
+                *c = (x / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantIndex { dim: self.dim, codes, scales }
+    }
+}
+
+/// i8-quantized shadow of a [`GalleryIndex`] (paper §6: "quantization to
+/// reduce template size and match cost").
+///
+/// Rows are L2-normalized before quantization, so the integer dot product
+/// rescaled by the two scales approximates cosine directly: 4x smaller
+/// scan footprint and an integer inner loop.  Row numbering matches the
+/// parent index; ranking agreement is bounded by the property suite
+/// (rank-1 agreement >= 99% on unit-vector workloads).
+#[derive(Debug, Clone)]
+pub struct QuantIndex {
+    dim: usize,
+    /// Row-major i8 codes of the normalized rows.
+    codes: Vec<i8>,
+    /// Per-row dequant scale (code * scale ~ normalized component).
+    scales: Vec<f32>,
+}
+
+impl QuantIndex {
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn len(&self) -> usize {
+        self.scales.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scales.is_empty()
+    }
+
+    /// Bytes per enrolled row (the footprint win vs 4·dim for f32).
+    pub fn bytes_per_row(&self) -> usize {
+        self.dim + std::mem::size_of::<f32>()
+    }
+
+    /// Quantize a probe the same way the rows were (normalize, per-probe
+    /// scale), returning `(codes, scale)`.
+    pub fn quantize_probe(&self, probe: &[f32]) -> (Vec<i8>, f32) {
+        assert_eq!(probe.len(), self.dim, "probe dim mismatch");
+        let inv = inv_norm_of(probe);
+        let normed: Vec<f32> = probe.iter().map(|x| x * inv).collect();
+        let max_abs = normed.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        if max_abs <= 0.0 || !max_abs.is_finite() {
+            return (vec![0i8; self.dim], 0.0);
+        }
+        let scale = max_abs / 127.0;
+        let codes =
+            normed.iter().map(|x| (x / scale).round().clamp(-127.0, 127.0) as i8).collect();
+        (codes, scale)
+    }
+
+    /// Top-k over the integer scan path.  Scores are approximate cosine
+    /// (clamped), rank ties break identically to the f32 engine.
+    pub fn top_k(&self, probe: &[f32], k: usize) -> Vec<(usize, f32)> {
+        let (codes, pscale) = self.quantize_probe(probe);
+        let mut top = TopK::new(k);
+        for r in 0..self.len() {
+            let q = dot_i8(&self.codes[r * self.dim..(r + 1) * self.dim], &codes);
+            let s = (q as f32 * self.scales[r] * pscale).clamp(-1.0, 1.0);
+            top.offer(s, r);
+        }
+        top.into_sorted().into_iter().map(|c| (c.row, c.score)).collect()
+    }
+}
+
+/// Worker count for the auto-sharded scan: the machine's parallelism,
+/// capped so a match burst cannot oversubscribe the orchestrator.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn index(n: usize, dim: usize, seed: u64) -> GalleryIndex {
+        let mut rng = Rng::new(seed);
+        let mut idx = GalleryIndex::with_capacity(dim, n);
+        for i in 0..n {
+            idx.upsert(format!("id{i}"), &rng.unit_vec(dim));
+        }
+        idx
+    }
+
+    #[test]
+    fn blocked_dot_matches_sequential() {
+        let mut rng = Rng::new(1);
+        for dim in [1usize, 7, 8, 9, 31, 64, 128, 133] {
+            let a: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            let seq: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let blk = dot_f32(&a, &b);
+            assert!((seq - blk).abs() < 1e-4 * (1.0 + seq.abs()), "dim {dim}: {seq} vs {blk}");
+        }
+    }
+
+    #[test]
+    fn upsert_replaces_and_interns() {
+        let mut idx = GalleryIndex::new(2);
+        assert_eq!(idx.upsert("a", &[1.0, 0.0]), 0);
+        assert_eq!(idx.upsert("b", &[0.0, 1.0]), 1);
+        assert_eq!(idx.upsert("a", &[0.5, 0.5]), 0, "re-enroll keeps the row");
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx.row(0), &[0.5, 0.5]);
+        assert_eq!(idx.row_of("b"), Some(1));
+        assert_eq!(idx.id_of(1), "b");
+    }
+
+    #[test]
+    fn remove_preserves_order_and_map() {
+        let mut idx = index(5, 4, 3);
+        assert!(idx.remove("id2"));
+        assert!(!idx.remove("id2"));
+        assert_eq!(idx.len(), 4);
+        let ids: Vec<&str> = idx.iter().map(|(i, _)| i).collect();
+        assert_eq!(ids, vec!["id0", "id1", "id3", "id4"]);
+        for (r, id) in ids.iter().enumerate() {
+            assert_eq!(idx.row_of(id), Some(r), "{id}");
+            assert_eq!(idx.id_of(r), *id);
+        }
+        assert_eq!(idx.data().len(), 4 * 4);
+    }
+
+    #[test]
+    fn self_probe_is_rank_one() {
+        let idx = index(64, 32, 7);
+        for r in [0usize, 13, 63] {
+            let top = idx.top_k(idx.row(r), 3);
+            assert_eq!(top[0].0, r);
+            assert!((top[0].1 - 1.0).abs() < 1e-4);
+            assert_eq!(top.len(), 3);
+        }
+    }
+
+    #[test]
+    fn top_k_is_prefix_of_rank_rows() {
+        let idx = index(50, 16, 9);
+        let mut rng = Rng::new(10);
+        let probe = rng.unit_vec(16);
+        let full = idx.rank_rows(&probe);
+        for k in [0usize, 1, 3, 10, 50, 80] {
+            let top = idx.top_k(&probe, k);
+            assert_eq!(top.len(), k.min(50));
+            assert_eq!(&full[..top.len()], &top[..], "k={k}");
+        }
+    }
+
+    #[test]
+    fn ties_break_toward_enrollment_order() {
+        let mut idx = GalleryIndex::new(2);
+        // Three identical rows: scores are exactly equal, so the ranking
+        // must surface them in enrollment order.
+        for i in 0..3 {
+            idx.upsert(format!("dup{i}"), &[0.6, 0.8]);
+        }
+        idx.upsert("far", &[-0.6, 0.8]);
+        let top = idx.top_k(&[0.6, 0.8], 4);
+        let rows: Vec<usize> = top.iter().map(|&(r, _)| r).collect();
+        assert_eq!(rows, vec![0, 1, 2, 3]);
+        assert_eq!(idx.rank_rows(&[0.6, 0.8])[..4], top[..]);
+    }
+
+    #[test]
+    fn sharded_is_bit_identical_to_single() {
+        let idx = index(101, 24, 11);
+        let mut rng = Rng::new(12);
+        let probe = rng.unit_vec(24);
+        let single = idx.top_k(&probe, 7);
+        for shards in [2usize, 3, 5, 16, 200] {
+            assert_eq!(idx.top_k_sharded(&probe, 7, shards), single, "{shards} shards");
+        }
+        assert_eq!(idx.top_k_auto(&probe, 7), single);
+    }
+
+    #[test]
+    fn batch_equals_per_probe() {
+        let idx = index(300, 16, 13);
+        let mut rng = Rng::new(14);
+        let probes: Vec<Vec<f32>> = (0..9).map(|_| rng.unit_vec(16)).collect();
+        let refs: Vec<&[f32]> = probes.iter().map(Vec::as_slice).collect();
+        let batch = idx.top_k_batch(&refs, 5);
+        assert_eq!(batch.len(), 9);
+        for (p, got) in refs.iter().zip(&batch) {
+            assert_eq!(*got, idx.top_k(p, 5));
+        }
+    }
+
+    #[test]
+    fn quantized_rank1_on_clean_probes() {
+        let idx = index(200, 64, 15);
+        let q = idx.quantize();
+        assert_eq!(q.len(), 200);
+        assert!(q.bytes_per_row() < 64 * 4);
+        for r in [0usize, 50, 199] {
+            let top = q.top_k(idx.row(r), 1);
+            assert_eq!(top[0].0, r, "quantized self-probe must stay rank-1");
+            assert!(top[0].1 > 0.98, "score {}", top[0].1);
+        }
+    }
+
+    #[test]
+    fn nan_probe_degrades_instead_of_panicking() {
+        let idx = index(10, 8, 17);
+        let probe = vec![f32::NAN; 8];
+        let full = idx.rank_rows(&probe);
+        assert_eq!(full.len(), 10);
+        let top = idx.top_k(&probe, 3);
+        assert_eq!(top.len(), 3);
+        // NaN scores sort deterministically (total_cmp), ties by row.
+        assert!(top[0].1.is_nan());
+    }
+
+    #[test]
+    fn zero_and_empty_edges() {
+        let idx = GalleryIndex::new(4);
+        assert!(idx.top_k(&[1.0, 0.0, 0.0, 0.0], 5).is_empty());
+        assert!(idx.rank_rows(&[1.0, 0.0, 0.0, 0.0]).is_empty());
+        assert!(idx.quantize().top_k(&[1.0, 0.0, 0.0, 0.0], 1).is_empty());
+
+        let mut idx = GalleryIndex::new(4);
+        idx.upsert("zero", &[0.0; 4]);
+        let top = idx.top_k(&[1.0, 0.0, 0.0, 0.0], 1);
+        assert_eq!(top[0], (0, 0.0), "zero row scores 0, like Template::cosine");
+        let qtop = idx.quantize().top_k(&[1.0, 0.0, 0.0, 0.0], 1);
+        assert_eq!(qtop[0], (0, 0.0));
+    }
+
+    #[test]
+    fn template_roundtrip() {
+        let idx = index(4, 8, 19);
+        let t = idx.template("id2").unwrap();
+        assert_eq!(t.as_slice(), idx.row(2));
+        assert!(idx.template("ghost").is_none());
+    }
+}

@@ -1,7 +1,15 @@
 //! Host-side cosine matcher + evaluation metrics.
 //!
-//! The storage cartridge does protected matching; this plaintext matcher is
-//! the *baseline* (and the verifier for the HLO gallery_match artifact).
+//! The storage cartridge does protected matching; this plaintext matcher
+//! is the *baseline* (and the verifier for the HLO gallery_match
+//! artifact).  Since the match-engine refactor every public entry point
+//! here is a thin wrapper over [`GalleryIndex`] — same SoA scan the
+//! cartridge uses — while [`rank_naive_aos`] preserves the original
+//! array-of-structs algorithm as the reference oracle the property suite
+//! and `champd bench match` compare the engine against.
+//!
+//! All score ordering uses [`f32::total_cmp`] (descending): a NaN probe
+//! degrades its scores instead of panicking the match loop.
 
 use super::gallery::Gallery;
 use super::template::Template;
@@ -19,23 +27,41 @@ impl Default for Matcher {
 }
 
 impl Matcher {
-    /// Score probe against every gallery entry, sorted descending.
+    /// Score probe against every gallery entry, sorted descending (ties
+    /// keep enrollment order).  Full ranking with materialized ids — use
+    /// [`Matcher::top_k`] on the hot path to skip the id clones and sort.
     pub fn rank(&self, probe: &Template, gallery: &Gallery) -> Vec<(String, f32)> {
-        let mut scored: Vec<(String, f32)> = gallery
-            .iter()
-            .map(|(id, t)| (id.clone(), probe.cosine(t)))
-            .collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        scored
+        let idx = gallery.index();
+        idx.rank_rows(probe.as_slice())
+            .into_iter()
+            .map(|(r, s)| (idx.id_of(r).to_string(), s))
+            .collect()
     }
 
-    /// Best match above threshold, if any.
-    pub fn identify(&self, probe: &Template, gallery: &Gallery) -> Option<(String, f32)> {
-        self.rank(probe, gallery)
-            .into_iter()
-            .next()
-            .filter(|(_, s)| *s >= self.threshold)
+    /// Top-k `(row, score)` via the bounded-heap engine: no full sort, no
+    /// id clones.  Rows map to ids with [`Gallery::id_at`].
+    pub fn top_k(&self, probe: &Template, gallery: &Gallery, k: usize) -> Vec<(usize, f32)> {
+        gallery.index().top_k_auto(probe.as_slice(), k)
     }
+
+    /// Best match above threshold, if any (one bounded-heap pass).
+    pub fn identify(&self, probe: &Template, gallery: &Gallery) -> Option<(String, f32)> {
+        let idx = gallery.index();
+        let (row, score) = idx.top_k_auto(probe.as_slice(), 1).into_iter().next()?;
+        (score >= self.threshold).then(|| (idx.id_of(row).to_string(), score))
+    }
+}
+
+/// The pre-index algorithm, kept verbatim as the reference oracle: scan
+/// an array-of-structs gallery, clone every id, recompute both norms per
+/// pair ([`Template::cosine`]), stable-sort all n scores descending.
+/// `bench match` measures it as the `naive` variant; the property suite
+/// proves the engine ranks identically.
+pub fn rank_naive_aos(probe: &Template, entries: &[(String, Template)]) -> Vec<(String, f32)> {
+    let mut scored: Vec<(String, f32)> =
+        entries.iter().map(|(id, t)| (id.clone(), probe.cosine(t))).collect();
+    scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+    scored
 }
 
 /// Rank of `true_id` in a scored list (1 = top).  None if absent.
@@ -43,18 +69,19 @@ pub fn rank_of(scored: &[(String, f32)], true_id: &str) -> Option<usize> {
     scored.iter().position(|(id, _)| id == true_id).map(|p| p + 1)
 }
 
-/// Rank-1 identification rate over (probe, true_id) trials.
+/// Rank-1 identification rate over (probe, true_id) trials: one bounded
+/// top-1 scan per trial — no ranking allocation, no id clones.
 pub fn rank1_rate(trials: &[(Template, String)], gallery: &Gallery) -> f64 {
     if trials.is_empty() {
         return 0.0;
     }
-    let m = Matcher::default();
+    let idx = gallery.index();
     let hits = trials
         .iter()
         .filter(|(p, id)| {
-            m.rank(p, gallery)
+            idx.top_k(p.as_slice(), 1)
                 .first()
-                .map(|(best, _)| best == id)
+                .map(|&(row, _)| idx.id_of(row) == id.as_str())
                 .unwrap_or(false)
         })
         .count();
@@ -79,7 +106,8 @@ mod tests {
     fn identify_planted() {
         let g = gallery(100, 5);
         let m = Matcher::default();
-        let (id, s) = m.identify(g.get("id42").unwrap(), &g).unwrap();
+        let probe = g.get("id42").unwrap();
+        let (id, s) = m.identify(&probe, &g).unwrap();
         assert_eq!(id, "id42");
         assert!(s > 0.99);
     }
@@ -101,10 +129,24 @@ mod tests {
     }
 
     #[test]
+    fn top_k_agrees_with_rank_prefix() {
+        let g = gallery(60, 7);
+        let m = Matcher::default();
+        let mut rng = Rng::new(8);
+        let probe = Template::new(rng.unit_vec(64));
+        let full = m.rank(&probe, &g);
+        let top = m.top_k(&probe, &g, 5);
+        for (i, &(row, s)) in top.iter().enumerate() {
+            assert_eq!(g.id_at(row).unwrap(), full[i].0);
+            assert_eq!(s, full[i].1);
+        }
+    }
+
+    #[test]
     fn rank1_rate_perfect_on_clean_probes() {
         let g = gallery(30, 8);
         let trials: Vec<(Template, String)> = (0..30)
-            .map(|i| (g.get(&format!("id{i}")).unwrap().clone(), format!("id{i}")))
+            .map(|i| (g.get(&format!("id{i}")).unwrap(), format!("id{i}")))
             .collect();
         assert_eq!(rank1_rate(&trials, &g), 1.0);
     }
@@ -117,9 +159,8 @@ mod tests {
             .map(|i| {
                 let id = format!("id{i}");
                 let noisy: Vec<f32> = g
-                    .get(&id)
+                    .row(&id)
                     .unwrap()
-                    .as_slice()
                     .iter()
                     .map(|v| v + 0.08 * rng.normal())
                     .collect();
@@ -127,5 +168,27 @@ mod tests {
             })
             .collect();
         assert!(rank1_rate(&trials, &g) > 0.95);
+    }
+
+    #[test]
+    fn nan_probe_never_panics() {
+        // Regression: the old `partial_cmp(..).unwrap()` sort panicked on
+        // NaN scores; `total_cmp` must rank them deterministically.
+        let g = gallery(20, 11);
+        let m = Matcher::default();
+        for probe in [
+            Template::new(vec![f32::NAN; 64]),
+            Template::new({
+                let mut v = vec![0.1f32; 64];
+                v[7] = f32::NAN;
+                v
+            }),
+        ] {
+            let ranked = m.rank(&probe, &g);
+            assert_eq!(ranked.len(), 20, "all entries still ranked");
+            assert!(m.identify(&probe, &g).is_none(), "NaN scores never clear threshold");
+            let naive = rank_naive_aos(&probe, &g.to_entries());
+            assert_eq!(naive.len(), 20, "reference path is NaN-safe too");
+        }
     }
 }

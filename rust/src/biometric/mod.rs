@@ -8,10 +8,12 @@
 
 pub mod fusion;
 pub mod gallery;
+pub mod index;
 pub mod matcher;
 pub mod quality;
 pub mod template;
 
 pub use gallery::Gallery;
+pub use index::{GalleryIndex, QuantIndex};
 pub use matcher::{rank_of, Matcher};
 pub use template::Template;

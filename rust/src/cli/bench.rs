@@ -7,7 +7,14 @@
 //! against the checked-in baseline.  CI runs this on every PR and uploads
 //! the JSON as the perf trajectory artifact.
 //!
-//! Flags:
+//! `champd bench match` sweeps the gallery match engine over gallery
+//! sizes and scan variants (`naive` legacy AoS, `soa` index, `soa-i8`
+//! quantized, `sharded` thread-parallel), writes `BENCH_match.json`, and
+//! gates both against the committed floor file and the engine's speedup
+//! contract (SoA >= 5x naive at >= 100k identities; sharded >= 2x SoA at
+//! >= 1M).
+//!
+//! Flags (scaling):
 //!   --frames N        source frames per point (default 200)
 //!   --max-devices N   sweep 1..=N accelerators (default 5)
 //!   --out PATH        output JSON (default BENCH_scaling.json)
@@ -15,20 +22,48 @@
 //!                     benches/common/scaling_baseline.json, embedded)
 //!   --tolerance PCT   allowed FPS drop below baseline (default 10)
 //!   --no-guard        write telemetry but skip the regression gate
+//!
+//! Flags (match):
+//!   --sizes LIST      gallery sizes, k/m suffixes ok (default 1k,10k,100k)
+//!   --dim D           embedding dimension (default 128)
+//!   --probes N        probes timed per point (default 32)
+//!   --k K             top-k retrieved per probe (default 10)
+//!   --out/--baseline/--tolerance/--no-guard as above
+//!                     (defaults BENCH_match.json / match_baseline.json)
 
+use std::time::Instant;
+
+use crate::biometric::index::{default_shards, GalleryIndex};
+use crate::biometric::matcher::rank_naive_aos;
+use crate::biometric::template::Template;
 use crate::bus::topology::SlotId;
 use crate::bus::usb3::BusProfile;
 use crate::coordinator::engine::EngineConfig;
 use crate::coordinator::scheduler::Orchestrator;
 use crate::device::caps::CapDescriptor;
 use crate::device::{Cartridge, DeviceKind};
-use crate::metrics::report::{current_commit, BenchReport, ScalingRecord};
+use crate::metrics::report::{
+    current_commit, BenchReport, MatchRecord, MatchReport, ScalingRecord,
+};
+use crate::util::rng::Rng;
 use crate::workload::video::VideoSource;
 
 use super::Args;
 
 /// The committed perf floor (see `benches/common/scaling_baseline.json`).
 const DEFAULT_BASELINE: &str = include_str!("../../benches/common/scaling_baseline.json");
+
+/// Committed match-engine floors (very conservative: they catch perf
+/// collapses, not runner-to-runner noise; the speedup *ratios* are the
+/// machine-independent gate).
+const DEFAULT_MATCH_BASELINE: &str = include_str!("../../benches/common/match_baseline.json");
+
+/// The naive AoS scan is only measured up to this size — beyond it the
+/// legacy path is too slow to time in CI (and that is the point).
+const NAIVE_MAX_ROWS: usize = 100_000;
+
+/// Gallery size at which the sharded-vs-single speedup gate applies.
+const SHARD_GATE_ROWS: usize = 1_000_000;
 
 /// Batch sizes the sweep exercises for the engine path.
 const BATCHES: [u32; 3] = [1, 4, 8];
@@ -147,12 +182,240 @@ fn run_scaling(args: &Args) -> anyhow::Result<()> {
     }
 }
 
+// ---- `bench match`: the gallery match engine sweep ----------------------
+
+/// Parse `"1k,10k,100k,1m"`-style size lists.
+pub fn parse_sizes(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let (digits, mult) = match tok.as_bytes().last() {
+            Some(b'k') | Some(b'K') => (&tok[..tok.len() - 1], 1_000usize),
+            Some(b'm') | Some(b'M') => (&tok[..tok.len() - 1], 1_000_000usize),
+            _ => (tok, 1),
+        };
+        let n: usize = digits
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad gallery size {tok:?} (use e.g. 10k, 1m)"))?;
+        anyhow::ensure!(n > 0, "gallery size must be positive: {tok:?}");
+        out.push(n * mult);
+    }
+    anyhow::ensure!(!out.is_empty(), "no gallery sizes given");
+    Ok(out)
+}
+
+/// Wall-clock one scan variant: warm up, then time `probes` calls.
+/// Returns (probes/s, p50 us, p99 us).
+fn time_variant<F: FnMut(usize)>(probes: usize, mut scan: F) -> (f64, u64, u64) {
+    for i in 0..probes.min(2) {
+        scan(i);
+    }
+    let mut lat_us: Vec<f64> = Vec::with_capacity(probes);
+    let t_all = Instant::now();
+    for i in 0..probes {
+        let t = Instant::now();
+        scan(i);
+        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let total_s = t_all.elapsed().as_secs_f64().max(1e-9);
+    lat_us.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| {
+        lat_us[((lat_us.len() as f64 * p / 100.0) as usize).min(lat_us.len() - 1)] as u64
+    };
+    (probes as f64 / total_s, pct(50.0), pct(99.0))
+}
+
+/// Run the match-engine sweep and assemble the telemetry report.
+///
+/// Probes are noisy copies of enrolled identities (the identification
+/// workload), regenerated per gallery size from a fixed seed.
+pub fn match_report(
+    sizes: &[usize],
+    dim: usize,
+    probes: usize,
+    k: usize,
+) -> anyhow::Result<MatchReport> {
+    anyhow::ensure!(dim > 0 && probes > 0 && k > 0, "dim/probes/k must be positive");
+    let mut report = MatchReport::new(current_commit());
+    for &n in sizes {
+        // Enrollment goes through the SoA upsert path — linear, so even
+        // the 1M point builds in seconds.
+        let mut rng = Rng::new(0x6d61_7463u64 ^ n as u64);
+        let mut idx = GalleryIndex::with_capacity(dim, n);
+        for i in 0..n {
+            idx.upsert(format!("id{i}"), &rng.unit_vec(dim));
+        }
+        let probe_set: Vec<Template> = (0..probes)
+            .map(|p| {
+                let base = idx.row((p * n.max(1) / probes.max(1)) % n.max(1));
+                Template::new(base.iter().map(|v| v + 0.05 * rng.normal()).collect())
+            })
+            .collect();
+
+        let mut push = |variant: &str, (pps, p50, p99): (f64, u64, u64)| {
+            report.push(MatchRecord {
+                gallery_size: n,
+                dim,
+                variant: variant.into(),
+                probes_per_s: pps,
+                p50_us: p50,
+                p99_us: p99,
+            });
+        };
+
+        if n <= NAIVE_MAX_ROWS {
+            // The legacy layout, materialized once outside the timer.
+            let entries: Vec<(String, Template)> = (0..n)
+                .map(|r| (idx.id_of(r).to_string(), Template::new(idx.row(r).to_vec())))
+                .collect();
+            push(
+                "naive",
+                time_variant(probes, |p| {
+                    let r = rank_naive_aos(&probe_set[p], &entries);
+                    assert_eq!(r.len(), n);
+                }),
+            );
+        }
+
+        push(
+            "soa",
+            time_variant(probes, |p| {
+                assert!(!idx.top_k(probe_set[p].as_slice(), k).is_empty());
+            }),
+        );
+
+        let quant = idx.quantize();
+        push(
+            "soa-i8",
+            time_variant(probes, |p| {
+                assert!(!quant.top_k(probe_set[p].as_slice(), k).is_empty());
+            }),
+        );
+
+        let shards = default_shards();
+        push(
+            "sharded",
+            time_variant(probes, |p| {
+                assert!(!idx.top_k_sharded(probe_set[p].as_slice(), k, shards).is_empty());
+            }),
+        );
+    }
+    Ok(report)
+}
+
+fn print_match_table(report: &MatchReport) {
+    println!(
+        "{:<9} {:>5} {:<8} | {:>11} {:>9} {:>9}",
+        "gallery", "dim", "variant", "probes/s", "p50 ms", "p99 ms"
+    );
+    for r in &report.records {
+        println!(
+            "{:<9} {:>5} {:<8} | {:>11.1} {:>9.2} {:>9.2}",
+            r.gallery_size,
+            r.dim,
+            r.variant,
+            r.probes_per_s,
+            r.p50_us as f64 / 1e3,
+            r.p99_us as f64 / 1e3
+        );
+    }
+}
+
+/// The machine-independent speedup contract (printed always; enforced
+/// unless `--no-guard`).  Returns violation messages.
+fn match_speedup_gate(report: &MatchReport, dim: usize) -> Vec<String> {
+    let mut violations = Vec::new();
+    let sizes: Vec<usize> = {
+        let mut s: Vec<usize> = report.records.iter().map(|r| r.gallery_size).collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    };
+    for &n in &sizes {
+        let soa = report.find(n, dim, "soa").map(|r| r.probes_per_s);
+        if let (Some(naive), Some(soa)) =
+            (report.find(n, dim, "naive").map(|r| r.probes_per_s), soa)
+        {
+            let ratio = soa / naive.max(1e-9);
+            println!("speedup soa/naive @ {n}: {ratio:.1}x");
+            if n >= NAIVE_MAX_ROWS && ratio < 5.0 {
+                violations.push(format!(
+                    "soa only {ratio:.1}x naive at {n} identities (contract: >= 5x)"
+                ));
+            }
+        }
+        if let (Some(soa), Some(sharded)) =
+            (soa, report.find(n, dim, "sharded").map(|r| r.probes_per_s))
+        {
+            let ratio = sharded / soa.max(1e-9);
+            println!("speedup sharded/soa @ {n}: {ratio:.2}x");
+            if n >= SHARD_GATE_ROWS && ratio < 2.0 {
+                violations.push(format!(
+                    "sharded only {ratio:.1}x single-shard at {n} identities (contract: >= 2x)"
+                ));
+            }
+        }
+    }
+    violations
+}
+
+fn run_match(args: &Args) -> anyhow::Result<()> {
+    let sizes = parse_sizes(args.flag("sizes").unwrap_or("1k,10k,100k"))?;
+    let dim = args.flag_u64("dim", 128) as usize;
+    let probes = args.flag_u64("probes", 32) as usize;
+    let k = args.flag_u64("k", 10) as usize;
+    let out = args.flag("out").unwrap_or("BENCH_match.json").to_string();
+    let tolerance = args.flag_f64("tolerance", 10.0) / 100.0;
+
+    let report = match_report(&sizes, dim, probes.max(1), k.max(1))?;
+    print_match_table(&report);
+    report.write(&out)?;
+    println!("\nwrote {out} ({} records, commit {})", report.records.len(), report.commit);
+
+    let mut violations = match_speedup_gate(&report, dim);
+    if args.switch("no-guard") {
+        return Ok(());
+    }
+    let baseline = match args.flag("baseline") {
+        Some(p) => MatchReport::load(p)?,
+        None => MatchReport::parse(DEFAULT_MATCH_BASELINE)?,
+    };
+    // Only gate baseline points the sweep actually ran (a small CI sweep
+    // must not fail on the committed 1M floors).
+    let mut scoped = MatchReport::new(baseline.commit.clone());
+    for r in &baseline.records {
+        if sizes.contains(&r.gallery_size) && r.dim == dim {
+            scoped.push(r.clone());
+        }
+    }
+    // A guard that gates nothing must not read as a pass.
+    anyhow::ensure!(
+        !scoped.records.is_empty(),
+        "no baseline records cover this sweep (sizes {sizes:?}, dim {dim}); \
+         add floors to the baseline or pass --no-guard"
+    );
+    violations.extend(report.check_against(&scoped, tolerance));
+    if violations.is_empty() {
+        println!(
+            "match guard OK ({} baseline records, tolerance {:.0}%)",
+            scoped.records.len(),
+            tolerance * 100.0
+        );
+        Ok(())
+    } else {
+        for v in &violations {
+            eprintln!("REGRESSION: {v}");
+        }
+        anyhow::bail!("{} match-engine regression(s)", violations.len())
+    }
+}
+
 /// Entry point for `champd bench <what>`.
 pub fn run(args: &Args) -> anyhow::Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("scaling") => run_scaling(args),
+        Some("match") => run_match(args),
         other => anyhow::bail!(
-            "unknown bench target {other:?}; available: scaling"
+            "unknown bench target {other:?}; available: scaling, match"
         ),
     }
 }
@@ -181,6 +444,50 @@ mod tests {
         let baseline = BenchReport::parse(DEFAULT_BASELINE).unwrap();
         let violations = report.check_against(&baseline, 0.10);
         assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn parse_sizes_accepts_suffixes() {
+        assert_eq!(parse_sizes("1k,10k,100k").unwrap(), vec![1_000, 10_000, 100_000]);
+        assert_eq!(parse_sizes("1m").unwrap(), vec![1_000_000]);
+        assert_eq!(parse_sizes(" 512 , 2K ").unwrap(), vec![512, 2_000]);
+        assert!(parse_sizes("").is_err());
+        assert!(parse_sizes("10q").is_err());
+        assert!(parse_sizes("0").is_err());
+    }
+
+    #[test]
+    fn embedded_match_baseline_parses() {
+        let b = MatchReport::parse(DEFAULT_MATCH_BASELINE).unwrap();
+        assert!(!b.records.is_empty());
+        // The CI sweep's sizes are all floored, every variant.
+        for n in [1_000usize, 10_000, 100_000] {
+            for variant in ["naive", "soa", "soa-i8", "sharded"] {
+                assert!(b.find(n, 128, variant).is_some(), "{variant}@{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn match_report_smoke_sweep() {
+        // Tiny sweep: every variant present, sane numbers, schema roundtrip.
+        let report = match_report(&[300], 32, 4, 5).unwrap();
+        for variant in ["naive", "soa", "soa-i8", "sharded"] {
+            let r = report.find(300, 32, variant).unwrap_or_else(|| panic!("{variant} missing"));
+            assert!(r.probes_per_s > 0.0, "{variant}: {}", r.probes_per_s);
+            assert!(r.p50_us <= r.p99_us, "{variant}");
+        }
+        let back = MatchReport::parse(&report.to_json_pretty()).unwrap();
+        assert_eq!(back.records.len(), report.records.len());
+    }
+
+    #[test]
+    fn naive_variant_skipped_beyond_cap() {
+        // 100k naive is the cap; the sweep logic drops it above that.  Use
+        // a tiny "cap" stand-in by checking the predicate directly so the
+        // test stays fast.
+        assert!(100_000 <= NAIVE_MAX_ROWS);
+        assert!(100_001 > NAIVE_MAX_ROWS);
     }
 
     #[test]

@@ -62,10 +62,7 @@ pub fn pack(opts: &PackOptions) -> anyhow::Result<ImageSummary> {
     // Rotate every template before it reaches the builder: the image holds
     // only the protected gallery (keys stay on the orchestrator).
     let data = FaceDataset::generate(opts.gallery, 0, opts.dim, 0.05, opts.seed);
-    let mut rotated = Gallery::new(opts.dim);
-    for (id, t) in data.gallery.iter() {
-        rotated.add(id.clone(), keys.rotation.apply(t));
-    }
+    let rotated = Gallery::from_index(keys.rotation.apply_index(data.gallery.index()));
     let mut b = ImageBuilder::new(&opts.label)
         .cap(CapabilityId::Database)
         .block_size(opts.block_size)

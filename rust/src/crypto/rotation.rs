@@ -4,6 +4,7 @@
 //! products (hence cosine scores) are preserved, so matching runs entirely
 //! in the protected space; recovering t from t' requires R (the key).
 
+use crate::biometric::index::GalleryIndex;
 use crate::biometric::template::Template;
 use crate::util::rng::Rng;
 
@@ -41,16 +42,37 @@ impl RotationKey {
         self.dim
     }
 
-    /// Apply R to a template: out_i = sum_j R[i][j] * t[j].
-    pub fn apply(&self, t: &Template) -> Template {
-        assert_eq!(t.dim(), self.dim, "rotation dim mismatch");
-        let x = t.as_slice();
-        let mut out = vec![0.0f32; self.dim];
+    /// The shared rotation kernel: out_i = sum_j R[i][j] * x[j].  Both the
+    /// per-template and the bulk (matrix) paths go through this, so their
+    /// results are bit-identical — the property suite asserts exact
+    /// equality between them.
+    fn apply_into(&self, x: &[f32], out: &mut [f32]) {
         for i in 0..self.dim {
             let row = &self.m[i * self.dim..(i + 1) * self.dim];
             out[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
         }
+    }
+
+    /// Apply R to a template: out_i = sum_j R[i][j] * t[j].
+    pub fn apply(&self, t: &Template) -> Template {
+        assert_eq!(t.dim(), self.dim, "rotation dim mismatch");
+        let mut out = vec![0.0f32; self.dim];
+        self.apply_into(t.as_slice(), &mut out);
         Template::new(out)
+    }
+
+    /// Bulk-apply R to every row of a gallery index (the enrollment and
+    /// pack paths): rotates the whole SoA matrix in place of n separate
+    /// `Template` round-trips, preserving ids and row order.
+    pub fn apply_index(&self, idx: &GalleryIndex) -> GalleryIndex {
+        assert_eq!(idx.dim(), self.dim, "rotation dim mismatch");
+        let mut out = GalleryIndex::with_capacity(self.dim, idx.len());
+        let mut buf = vec![0.0f32; self.dim];
+        for (id, row) in idx.iter() {
+            self.apply_into(row, &mut buf);
+            out.upsert(id, &buf);
+        }
+        out
     }
 
     /// Apply the inverse (= transpose, since R is orthogonal).
@@ -153,6 +175,23 @@ mod tests {
         }
         for (a, b) in direct.as_slice().iter().zip(&via_hlo) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bulk_apply_is_bit_identical_to_per_template() {
+        let key = RotationKey::generate(32, 6);
+        let mut rng = Rng::new(8);
+        let mut idx = GalleryIndex::new(32);
+        for i in 0..20 {
+            idx.upsert(format!("id{i}"), &rng.unit_vec(32));
+        }
+        let rotated = key.apply_index(&idx);
+        assert_eq!(rotated.len(), idx.len());
+        for (r, (id, row)) in idx.iter().enumerate() {
+            assert_eq!(rotated.id_of(r), id, "row order preserved");
+            let one = key.apply(&Template::new(row.to_vec()));
+            assert_eq!(rotated.row(r), one.as_slice(), "{id}: bulk != per-template");
         }
     }
 

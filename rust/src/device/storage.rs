@@ -43,12 +43,11 @@ pub struct StorageCartridge {
 
 impl StorageCartridge {
     /// Enroll a plaintext gallery: rotate every template, keep only the
-    /// protected form.
+    /// protected form.  The rotation runs in bulk over the SoA matrix
+    /// ([`RotationKey::apply_index`]) — one pass, no per-template
+    /// `Template` round-trips.
     pub fn enroll(uid: u64, plaintext: &Gallery, rotation: RotationKey, seal: SealKey) -> Self {
-        let mut gallery_rot = Gallery::new(plaintext.dim());
-        for (id, t) in plaintext.iter() {
-            gallery_rot.add(id.clone(), rotation.apply(t));
-        }
+        let gallery_rot = Gallery::from_index(rotation.apply_index(plaintext.index()));
         StorageCartridge { uid, gallery_rot, rotation, seal, match_us: 2_000 }
     }
 
@@ -72,21 +71,44 @@ impl StorageCartridge {
     }
 
     /// Match a plaintext probe: rotate it on-cartridge, score against the
-    /// protected gallery.  Scores equal plaintext cosine (rotation is
-    /// orthogonal), but no plaintext template is touched.
+    /// protected gallery via the SoA index (bounded-heap top-k, sharded
+    /// across threads for large galleries).  Scores equal plaintext
+    /// cosine (rotation is orthogonal), but no plaintext template is
+    /// touched.
     pub fn match_probe(&self, probe: &Template, k: usize) -> Option<MatchOutcome> {
         let probe_rot = self.rotation.apply(probe);
-        let mut scored: Vec<(String, f32)> = self
-            .gallery_rot
-            .iter()
-            .map(|(id, t)| (id.clone(), probe_rot.cosine(t)))
-            .collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        let best = scored.first()?.clone();
+        let idx = self.gallery_rot.index();
+        let top = idx.top_k_auto(probe_rot.as_slice(), k.max(1));
+        Self::outcome_from(idx, top, k)
+    }
+
+    /// Match a whole probe batch in one gallery pass (the dispatch
+    /// engine's amortization path: a batch envelope of embeddings costs
+    /// one streaming scan of the protected matrix, not one per frame).
+    pub fn match_batch(&self, probes: &[Template], k: usize) -> Vec<Option<MatchOutcome>> {
+        let rotated: Vec<Template> = probes.iter().map(|p| self.rotation.apply(p)).collect();
+        let refs: Vec<&[f32]> = rotated.iter().map(Template::as_slice).collect();
+        let idx = self.gallery_rot.index();
+        idx.top_k_batch(&refs, k.max(1))
+            .into_iter()
+            .map(|top| Self::outcome_from(idx, top, k))
+            .collect()
+    }
+
+    fn outcome_from(
+        idx: &crate::biometric::index::GalleryIndex,
+        top: Vec<(usize, f32)>,
+        k: usize,
+    ) -> Option<MatchOutcome> {
+        let &(best_row, best_score) = top.first()?;
         Some(MatchOutcome {
-            best_id: best.0,
-            best_score: best.1,
-            topk: scored.into_iter().take(k).collect(),
+            best_id: idx.id_of(best_row).to_string(),
+            best_score,
+            topk: top
+                .into_iter()
+                .take(k)
+                .map(|(r, s)| (idx.id_of(r).to_string(), s))
+                .collect(),
         })
     }
 
@@ -195,6 +217,26 @@ mod tests {
             let plain = probe.cosine(g.get(id).unwrap());
             assert!((plain - s).abs() < 1e-4, "{id}: {plain} vs {s}");
         }
+    }
+
+    #[test]
+    fn batch_match_equals_per_probe() {
+        let (g, sc) = setup(60);
+        let probes: Vec<Template> =
+            (0..8).map(|i| g.get(&format!("id{}", i * 7)).unwrap()).collect();
+        let batch = sc.match_batch(&probes, 3);
+        assert_eq!(batch.len(), 8);
+        for (p, out) in probes.iter().zip(batch) {
+            assert_eq!(out, sc.match_probe(p, 3), "batch and single must agree");
+        }
+        // Empty gallery: a batch still returns one (empty) slot per probe.
+        let empty = StorageCartridge::enroll(
+            2,
+            &Gallery::new(64),
+            RotationKey::generate(64, 5),
+            SealKey::from_passphrase("y"),
+        );
+        assert_eq!(empty.match_batch(&probes, 1), vec![None; 8]);
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   run              pipelined run from a config (default config if none)
 //!   sweep            Table-1 broadcast scaling sweep (--kind ncs2|coral)
-//!   bench            bench telemetry (scaling -> BENCH_scaling.json + guard)
+//!   bench            bench telemetry (scaling -> BENCH_scaling.json,
+//!                    match -> BENCH_match.json, each with a regression guard)
 //!   hotswap          the §4.2 hot-swap experiment
 //!   power            §4.3 power report over the Table-1 sweep
 //!   export-workflow  dump the ComfyUI-style graph for the live pipeline
@@ -36,6 +37,8 @@ USAGE: champd <subcommand> [flags]
         [--batch B]
   bench scaling [--frames N] [--max-devices N] [--out PATH] [--baseline PATH]
         [--tolerance PCT] [--no-guard]
+  bench match [--sizes 1k,10k,100k[,1m]] [--dim D] [--probes N] [--k K]
+        [--out PATH] [--baseline PATH] [--tolerance PCT] [--no-guard]
   hotswap [--fps F]
   power [--kind ncs2|coral]
   export-workflow [config.json]

@@ -24,6 +24,24 @@
 //! second): in broadcast mode a frame that lands on five accelerators
 //! counts five completions, which is the quantity that scales near-linearly
 //! until the bus saturates (paper §4.1, Table 1).
+//!
+//! `champd bench match` writes the companion `BENCH_match.json`
+//! ([`MatchReport`], schema v1): wall-clock identification throughput of
+//! the gallery match engine per (gallery_size, dim, variant), where
+//! `variant` is one of `naive` (legacy AoS scan + full sort), `soa`
+//! (SoA index, bounded-heap top-k), `soa-i8` (quantized scan), `sharded`
+//! (thread-parallel SoA scan):
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "commit": "<sha or 'unknown'>",
+//!   "records": [
+//!     { "gallery_size": 100000, "dim": 128, "variant": "soa",
+//!       "probes_per_s": 310.5, "p50_us": 3100, "p99_us": 4800 }
+//!   ]
+//! }
+//! ```
 
 use std::path::Path;
 
@@ -177,6 +195,136 @@ impl BenchReport {
     }
 }
 
+/// One point of the match-engine sweep (`BENCH_match.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatchRecord {
+    /// Enrolled identities scanned per probe.
+    pub gallery_size: usize,
+    /// Embedding dimension.
+    pub dim: usize,
+    /// Scan path: `"naive"`, `"soa"`, `"soa-i8"`, or `"sharded"`.
+    pub variant: String,
+    /// Identification throughput (probes scored per second).
+    pub probes_per_s: f64,
+    /// Per-probe latency percentiles, wall-clock us.
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl MatchRecord {
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("gallery_size", json::num(self.gallery_size as f64)),
+            ("dim", json::num(self.dim as f64)),
+            ("variant", json::s(&self.variant)),
+            ("probes_per_s", json::num(self.probes_per_s)),
+            ("p50_us", json::num(self.p50_us as f64)),
+            ("p99_us", json::num(self.p99_us as f64)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Option<MatchRecord> {
+        Some(MatchRecord {
+            gallery_size: v.get("gallery_size")?.as_usize()?,
+            dim: v.get("dim")?.as_usize()?,
+            variant: v.get("variant")?.as_str()?.to_string(),
+            probes_per_s: v.get("probes_per_s")?.as_f64()?,
+            p50_us: v.get("p50_us").and_then(Value::as_u64).unwrap_or(0),
+            p99_us: v.get("p99_us").and_then(Value::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// The match-engine telemetry file (`BENCH_match.json`, schema v1).
+#[derive(Debug, Clone, Default)]
+pub struct MatchReport {
+    pub commit: String,
+    pub records: Vec<MatchRecord>,
+}
+
+impl MatchReport {
+    pub fn new(commit: impl Into<String>) -> Self {
+        MatchReport { commit: commit.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: MatchRecord) {
+        self.records.push(r);
+    }
+
+    pub fn find(&self, gallery_size: usize, dim: usize, variant: &str) -> Option<&MatchRecord> {
+        self.records
+            .iter()
+            .find(|r| r.gallery_size == gallery_size && r.dim == dim && r.variant == variant)
+    }
+
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("schema", json::num(SCHEMA_VERSION as f64)),
+            ("commit", json::s(&self.commit)),
+            ("records", Value::Arr(self.records.iter().map(MatchRecord::to_value).collect())),
+        ])
+    }
+
+    pub fn to_json_pretty(&self) -> String {
+        self.to_value().to_json_pretty()
+    }
+
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let commit =
+            v.get("commit").and_then(Value::as_str).unwrap_or("unknown").to_string();
+        let mut records = Vec::new();
+        for r in v.get("records").and_then(Value::as_arr).unwrap_or(&[]) {
+            records.push(
+                MatchRecord::from_value(r)
+                    .ok_or_else(|| anyhow::anyhow!("malformed match record: {}", r.to_json()))?,
+            );
+        }
+        Ok(MatchReport { commit, records })
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json_pretty() + "\n")?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("bad bench JSON: {e:?}"))?;
+        Self::from_value(&v)
+    }
+
+    /// Regression guard, mirroring [`BenchReport::check_against`]: every
+    /// baseline point must be present with
+    /// `probes_per_s >= baseline * (1 - tolerance)`.  Baseline floors are
+    /// committed conservatively (they catch collapses, not machine noise).
+    pub fn check_against(&self, baseline: &MatchReport, tolerance: f64) -> Vec<String> {
+        let mut violations = Vec::new();
+        for b in &baseline.records {
+            match self.find(b.gallery_size, b.dim, &b.variant) {
+                None => violations.push(format!(
+                    "missing record {}@{}x{} (baseline {:.1} probes/s)",
+                    b.variant, b.gallery_size, b.dim, b.probes_per_s
+                )),
+                Some(cur) => {
+                    let floor = b.probes_per_s * (1.0 - tolerance);
+                    if cur.probes_per_s < floor {
+                        violations.push(format!(
+                            "{}@{}x{}: {:.1} probes/s < floor {:.1} (baseline {:.1}, tol {:.0}%)",
+                            b.variant, b.gallery_size, b.dim,
+                            cur.probes_per_s, floor, b.probes_per_s, tolerance * 100.0
+                        ));
+                    }
+                }
+            }
+        }
+        violations
+    }
+}
+
 /// Best-effort commit id for the report: `$GITHUB_SHA` in CI, `git
 /// rev-parse` locally, `"unknown"` otherwise.
 pub fn current_commit() -> String {
@@ -256,5 +404,50 @@ mod tests {
     #[test]
     fn commit_is_never_empty() {
         assert!(!current_commit().is_empty());
+    }
+
+    fn match_record(variant: &str, n: usize, pps: f64) -> MatchRecord {
+        MatchRecord {
+            gallery_size: n,
+            dim: 128,
+            variant: variant.into(),
+            probes_per_s: pps,
+            p50_us: 1_000,
+            p99_us: 2_000,
+        }
+    }
+
+    #[test]
+    fn match_report_roundtrips_through_json() {
+        let mut rep = MatchReport::new("cafe");
+        rep.push(match_record("naive", 100_000, 25.0));
+        rep.push(match_record("soa", 100_000, 300.0));
+        let back = MatchReport::parse(&rep.to_json_pretty()).unwrap();
+        assert_eq!(back.commit, "cafe");
+        assert_eq!(back.records, rep.records);
+        assert!(back.find(100_000, 128, "soa").is_some());
+        assert!(back.find(100_000, 64, "soa").is_none());
+        assert!(back.find(100_000, 128, "soa-i8").is_none());
+    }
+
+    #[test]
+    fn match_guard_mirrors_scaling_guard() {
+        let mut baseline = MatchReport::new("base");
+        baseline.push(match_record("soa", 10_000, 100.0));
+        baseline.push(match_record("naive", 10_000, 10.0));
+        let mut cur = MatchReport::new("cur");
+        cur.push(match_record("soa", 10_000, 91.0)); // -9%: inside tolerance
+        let v = cur.check_against(&baseline, 0.10);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("missing record naive"));
+        cur.push(match_record("naive", 10_000, 8.0)); // -20%: regression
+        let v = cur.check_against(&baseline, 0.10);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("8.0 probes/s"));
+    }
+
+    #[test]
+    fn malformed_match_record_is_an_error() {
+        assert!(MatchReport::parse(r#"{"records": [{"variant": "soa"}]}"#).is_err());
     }
 }

@@ -25,7 +25,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     // Nearest-rank definition: the smallest value with at least p% of the
     // sample at or below it.
     let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;

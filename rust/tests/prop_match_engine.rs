@@ -1,0 +1,212 @@
+//! Property suite: the SoA match engine is semantically identical to the
+//! naive reference path it replaced.
+//!
+//! The engine and the reference compute floating-point sums in different
+//! orders (blocked lanes vs sequential), so individual scores may differ
+//! in the last bits.  The equivalence contract is therefore:
+//!
+//! * rank order matches wherever scores are separated beyond float noise,
+//!   and the score at every rank agrees within `SCORE_EPS`;
+//! * *exact* ties (duplicate templates) break identically — enrollment
+//!   order — in both paths;
+//! * within the engine, top-k / sharded / batch paths are bit-identical
+//!   to the single-threaded full ranking;
+//! * the bulk rotation is bit-identical to per-template rotation.
+
+use champ::biometric::gallery::Gallery;
+use champ::biometric::index::GalleryIndex;
+use champ::biometric::matcher::{rank_naive_aos, Matcher};
+use champ::biometric::template::Template;
+use champ::crypto::rotation::RotationKey;
+use champ::util::prop;
+use champ::util::rng::Rng;
+
+/// Reference-vs-engine scores may differ by reduction order; anything
+/// closer than this is a tie for ordering purposes.
+const SCORE_EPS: f32 = 1e-4;
+
+fn random_gallery(rng: &mut Rng, n: usize, dim: usize) -> Gallery {
+    let mut g = Gallery::new(dim);
+    for i in 0..n {
+        g.add(format!("id{i}"), Template::new(rng.unit_vec(dim)));
+    }
+    g
+}
+
+/// Assert the engine ranking equals the reference ranking: the score
+/// ladder must agree at every rank, and ids may differ at a rank only
+/// when the two swapped entries are a genuine near-tie — their *naive*
+/// scores within eps of each other.
+fn assert_rank_equiv(naive: &[(String, f32)], engine: &[(String, f32)]) {
+    assert_eq!(naive.len(), engine.len());
+    let naive_score: std::collections::HashMap<&str, f32> =
+        naive.iter().map(|(id, s)| (id.as_str(), *s)).collect();
+    for (i, (n, e)) in naive.iter().zip(engine).enumerate() {
+        assert!(
+            (n.1 - e.1).abs() < SCORE_EPS,
+            "rank {i}: score ladder diverged ({} {} vs {} {})",
+            n.0,
+            n.1,
+            e.0,
+            e.1
+        );
+        if n.0 != e.0 {
+            let swapped = naive_score[e.0.as_str()];
+            assert!(
+                (swapped - n.1).abs() < SCORE_EPS,
+                "rank {i}: {} displaced {} without a near-tie (naive scores {} vs {})",
+                e.0,
+                n.0,
+                swapped,
+                n.1
+            );
+        }
+    }
+}
+
+#[test]
+fn soa_ranking_matches_naive_reference() {
+    let m = Matcher::default();
+    prop::check("soa-vs-naive", 101, 30, |rng, case| {
+        let n = 1 + (rng.next_u64() % 64) as usize;
+        let dim = 8 + 8 * (rng.next_u64() % 8) as usize;
+        let g = random_gallery(rng, n, dim);
+        let probe = if case % 3 == 0 {
+            // Every third case probes an enrolled identity (exact hits).
+            g.get(&format!("id{}", rng.next_u64() as usize % n)).unwrap()
+        } else {
+            Template::new(rng.unit_vec(dim))
+        };
+        let naive = rank_naive_aos(&probe, &g.to_entries());
+        let engine = m.rank(&probe, &g);
+        assert_rank_equiv(&naive, &engine);
+    });
+}
+
+#[test]
+fn exact_ties_break_identically_in_both_paths() {
+    // Duplicate templates score exactly equal within each path, so both
+    // must surface them in enrollment order — id-for-id.
+    let m = Matcher::default();
+    prop::check("tie-break", 103, 20, |rng, _| {
+        let dim = 16;
+        let base = rng.unit_vec(dim);
+        let mut g = Gallery::new(dim);
+        for i in 0..4 {
+            g.add(format!("dup{i}"), Template::new(base.clone()));
+        }
+        for i in 0..6 {
+            g.add(format!("other{i}"), Template::new(rng.unit_vec(dim)));
+        }
+        let probe = Template::new(rng.unit_vec(dim));
+        let naive = rank_naive_aos(&probe, &g.to_entries());
+        let engine = m.rank(&probe, &g);
+        assert_rank_equiv(&naive, &engine);
+        // The exactly-tied duplicate group must appear in enrollment
+        // order — dup0 before dup1 before dup2... — in BOTH paths.
+        for ranked in [&naive, &engine] {
+            let dups: Vec<&str> = ranked
+                .iter()
+                .filter(|(id, _)| id.starts_with("dup"))
+                .map(|(id, _)| id.as_str())
+                .collect();
+            assert_eq!(dups, vec!["dup0", "dup1", "dup2", "dup3"], "tie order broke");
+        }
+    });
+}
+
+#[test]
+fn top_k_equals_full_sort_prefix() {
+    prop::check("topk-prefix", 107, 30, |rng, _| {
+        let n = 1 + (rng.next_u64() % 100) as usize;
+        let g = random_gallery(rng, n, 24);
+        let probe = rng.unit_vec(24);
+        let full = g.index().rank_rows(&probe);
+        for k in [1usize, 2, 5, n, n + 3] {
+            let top = g.index().top_k(&probe, k);
+            assert_eq!(top.len(), k.min(n));
+            assert_eq!(&full[..top.len()], &top[..], "k={k}");
+        }
+    });
+}
+
+#[test]
+fn sharded_and_batch_are_bit_identical_to_single() {
+    prop::check("shard-batch", 109, 20, |rng, _| {
+        let n = 10 + (rng.next_u64() % 300) as usize;
+        let g = random_gallery(rng, n, 32);
+        let idx = g.index();
+        let probes: Vec<Vec<f32>> = (0..5).map(|_| rng.unit_vec(32)).collect();
+        let refs: Vec<&[f32]> = probes.iter().map(Vec::as_slice).collect();
+        let k = 1 + (rng.next_u64() % 8) as usize;
+        let singles: Vec<Vec<(usize, f32)>> = refs.iter().map(|p| idx.top_k(p, k)).collect();
+        for shards in [2usize, 3, 8] {
+            for (p, want) in refs.iter().zip(&singles) {
+                assert_eq!(&idx.top_k_sharded(p, k, shards), want, "{shards} shards");
+            }
+        }
+        assert_eq!(idx.top_k_batch(&refs, k), singles, "batch pass must equal per-probe");
+    });
+}
+
+#[test]
+fn quantized_rank1_agreement_at_least_99_percent() {
+    // The §6 quantized scan: per-row-scaled i8 over normalized unit
+    // vectors.  On the identification workload (noisy copies of enrolled
+    // identities) rank-1 decisions must agree with the f32 engine on
+    // >= 99% of probes.
+    let mut rng = Rng::new(211);
+    let dim = 128;
+    let n = 500;
+    let mut idx = GalleryIndex::with_capacity(dim, n);
+    for i in 0..n {
+        idx.upsert(format!("id{i}"), &rng.unit_vec(dim));
+    }
+    let quant = idx.quantize();
+    let probes = 300;
+    let mut agree = 0;
+    for p in 0..probes {
+        let base = idx.row(p * n / probes);
+        let noisy: Vec<f32> = base.iter().map(|v| v + 0.05 * rng.normal()).collect();
+        let f = idx.top_k(&noisy, 1)[0].0;
+        let q = quant.top_k(&noisy, 1)[0].0;
+        if f == q {
+            agree += 1;
+        }
+    }
+    let rate = agree as f64 / probes as f64;
+    assert!(rate >= 0.99, "i8 rank-1 agreement {rate:.3} < 0.99");
+}
+
+#[test]
+fn bulk_rotation_is_bit_identical_to_per_template() {
+    prop::check("bulk-rotate", 113, 15, |rng, _| {
+        let dim = 32;
+        let n = 1 + (rng.next_u64() % 40) as usize;
+        let g = random_gallery(rng, n, dim);
+        let key = RotationKey::generate(dim, rng.next_u64());
+        let bulk = key.apply_index(g.index());
+        assert_eq!(bulk.len(), n);
+        for (r, (id, row)) in g.iter().enumerate() {
+            assert_eq!(bulk.id_of(r), id);
+            let one = key.apply(&Template::new(row.to_vec()));
+            assert_eq!(bulk.row(r), one.as_slice(), "{id}: bulk rotation drifted");
+        }
+    });
+}
+
+#[test]
+fn engine_scores_match_template_cosine() {
+    // The SoA score at every rank is the same cosine Template::cosine
+    // computes, up to reduction-order noise.
+    prop::check("score-agree", 127, 20, |rng, _| {
+        let n = 1 + (rng.next_u64() % 30) as usize;
+        let g = random_gallery(rng, n, 48);
+        let probe = Template::new(rng.unit_vec(48));
+        for (row, score) in g.index().rank_rows(probe.as_slice()) {
+            let id = g.id_at(row).unwrap();
+            let direct = probe.cosine(&g.get(id).unwrap());
+            assert!((direct - score).abs() < SCORE_EPS, "{id}: {direct} vs {score}");
+        }
+    });
+}
