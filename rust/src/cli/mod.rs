@@ -5,6 +5,7 @@
 //! A repeated flag follows the conventional "last one wins" rule.
 
 pub mod bench;
+pub mod serve;
 pub mod vdisk;
 
 /// Parsed command line.

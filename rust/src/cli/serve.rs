@@ -1,0 +1,321 @@
+//! `champd serve` — drive the multi-tenant serving layer and write
+//! `BENCH_serve.json`.
+//!
+//! Runs the admission-controlled serving session over one or all mission
+//! profiles at a configured overload factor, prints the per-class SLO
+//! table plus the power figure of merit, writes the telemetry file
+//! ([`crate::metrics::report::ServeReport`], schema v1), and enforces the
+//! goodput regression guard against the committed baseline
+//! (`rust/benches/common/serve_baseline.json`).
+//!
+//! Flags:
+//!   --profile P       checkpoint | watchlist | disaster | all (default all)
+//!   --overload F      offered load vs calibrated capacity (default 2.0)
+//!   --frames N        offered requests per profile (default 200)
+//!   --seed S          traffic seed (default 7; same seed => bit-identical
+//!                     report)
+//!   --batch B         max coalesced requests per dispatch (default 2)
+//!   --window W        in-flight pipeline batches (default 2)
+//!   --gallery N       enrolled identities (default 10000)
+//!   --dim D           embedding dimension (default 128)
+//!   --k K             top-k per identify probe (default 10)
+//!   --trace           apply the profile's mission trace (disaster: the §5
+//!                     mid-run cartridge swap) as hot-plug events
+//!   --out PATH        output JSON (default BENCH_serve.json)
+//!   --baseline PATH   baseline JSON (default: the committed floors)
+//!   --tolerance PCT   allowed goodput drop below baseline (default 10)
+//!   --no-guard        write telemetry but skip the regression gate
+
+use crate::bus::hotplug::HotplugEvent;
+use crate::metrics::report::{current_commit, ServePowerRecord, ServeRecord, ServeReport};
+use crate::serve::session::{ServeConfig, ServeOutcome, ServeSession};
+use crate::serve::traffic::MissionProfile;
+use crate::workload::traces::MissionTrace;
+
+use super::Args;
+
+/// Committed goodput floors (very conservative: they catch collapses in
+/// the serving path, not run-to-run noise).
+const DEFAULT_BASELINE: &str = include_str!("../../benches/common/serve_baseline.json");
+
+/// Resolve `--profile`.
+fn profiles_from(name: &str) -> anyhow::Result<Vec<MissionProfile>> {
+    if name == "all" {
+        return Ok(MissionProfile::all());
+    }
+    MissionProfile::by_name(name).map(|p| vec![p]).ok_or_else(|| {
+        anyhow::anyhow!("unknown profile {name:?}; use checkpoint|watchlist|disaster|all")
+    })
+}
+
+/// The hot-plug script a profile runs under `--trace`: the disaster
+/// profile replays the §5 mid-mission cartridge swap on the pipeline
+/// head; the other profiles have no scripted swap.
+pub fn trace_events_for(profile: &MissionProfile) -> Vec<HotplugEvent> {
+    if profile.name == "disaster" {
+        // uid is resolved by slot inside the session; any marker works.
+        MissionTrace::disaster_response().to_hotplug_events(1)
+    } else {
+        Vec::new()
+    }
+}
+
+/// Build the session config for one profile from CLI-level knobs.
+pub fn config_for(profile: MissionProfile, args: &Args) -> ServeConfig {
+    let mut cfg = ServeConfig::new(profile);
+    cfg.seed = args.flag_u64("seed", 7);
+    cfg.requests = args.flag_u64("frames", 200).max(1);
+    cfg.overload = args.flag_f64("overload", 2.0);
+    cfg.batch = args.flag_u64("batch", 2) as u32;
+    cfg.window = args.flag_u64("window", 2) as u32;
+    cfg.gallery = args.flag_u64("gallery", 10_000) as usize;
+    cfg.dim = args.flag_u64("dim", 128) as usize;
+    cfg.k = args.flag_u64("k", 10) as usize;
+    cfg
+}
+
+/// Run the serving sweep and assemble the telemetry report.  Returns the
+/// report plus the raw outcomes (one per profile, same order).
+pub fn serve_report(
+    configs: Vec<ServeConfig>,
+    with_trace: bool,
+) -> anyhow::Result<(ServeReport, Vec<(MissionProfile, ServeOutcome)>)> {
+    anyhow::ensure!(!configs.is_empty(), "no profiles to serve");
+    let seed = configs[0].seed;
+    let mut report = ServeReport::new(current_commit(), seed);
+    let mut outcomes = Vec::new();
+    for cfg in configs {
+        let profile = cfg.profile.clone();
+        let overload = cfg.overload;
+        let events = if with_trace { trace_events_for(&profile) } else { Vec::new() };
+        let out = ServeSession::new(cfg)?.run(events);
+        anyhow::ensure!(
+            out.accounting_ok,
+            "{}: terminal accounting violated (offered != completed + shed)",
+            profile.name
+        );
+        for c in &out.classes {
+            report.push(ServeRecord {
+                profile: profile.name.to_string(),
+                class: c.name.to_string(),
+                kind: c.kind.as_str().to_string(),
+                priority: c.priority,
+                overload,
+                offered: c.offered,
+                completed: c.completed,
+                shed: c.shed,
+                requeued: c.requeued,
+                shed_rate: c.shed_rate,
+                deadline_miss_rate: c.deadline_miss_rate,
+                goodput_rps: c.goodput_rps,
+                p50_us: c.p50_us,
+                p99_us: c.p99_us,
+            });
+        }
+        report.push_power(ServePowerRecord {
+            profile: profile.name.to_string(),
+            overload,
+            total_w: out.power.total_w,
+            frames_per_joule: out.power.frames_per_joule,
+        });
+        outcomes.push((profile, out));
+    }
+    Ok((report, outcomes))
+}
+
+fn print_outcome(profile: &MissionProfile, out: &ServeOutcome) {
+    println!(
+        "\n== {} ({}; capacity {:.1} rps, offered {:.1} rps) ==",
+        profile.name,
+        profile.shape.name(),
+        out.capacity_rps,
+        out.offered_rps
+    );
+    println!(
+        "{:<18} {:>4} | {:>7} {:>9} {:>6} {:>7} | {:>6} {:>8} {:>8} {:>9}",
+        "class", "prio", "offered", "completed", "shed", "requeue", "miss%", "p50 ms", "p99 ms",
+        "goodput"
+    );
+    for c in &out.classes {
+        println!(
+            "{:<18} {:>4} | {:>7} {:>9} {:>6} {:>7} | {:>5.1}% {:>8.1} {:>8.1} {:>9.1}",
+            c.name,
+            c.priority,
+            c.offered,
+            c.completed,
+            c.shed,
+            c.requeued,
+            c.deadline_miss_rate * 100.0,
+            c.p50_us as f64 / 1e3,
+            c.p99_us as f64 / 1e3,
+            c.goodput_rps
+        );
+    }
+    println!(
+        "totals: {} offered = {} completed + {} shed (exactly once); horizon {:.2} s",
+        out.offered,
+        out.completed,
+        out.shed,
+        out.elapsed_us as f64 / 1e6
+    );
+    println!(
+        "power : {:.2} W avg, {:.2} frames/J",
+        out.power.total_w, out.power.frames_per_joule
+    );
+    for a in &out.alerts {
+        println!("alert : t={:.2}s uid={} {}", a.at_us as f64 / 1e6, a.uid, a.text);
+    }
+}
+
+/// Entry point for `champd serve`.
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let profiles = profiles_from(args.flag("profile").unwrap_or("all"))?;
+    let out_path = args.flag("out").unwrap_or("BENCH_serve.json").to_string();
+    let tolerance = args.flag_f64("tolerance", 10.0) / 100.0;
+    let overload = args.flag_f64("overload", 2.0);
+    let with_trace = args.switch("trace");
+
+    let run_profiles: Vec<&'static str> = profiles.iter().map(|p| p.name).collect();
+    let configs: Vec<ServeConfig> =
+        profiles.into_iter().map(|p| config_for(p, args)).collect();
+    let (report, outcomes) = serve_report(configs, with_trace)?;
+    for (profile, out) in &outcomes {
+        print_outcome(profile, out);
+    }
+    report.write(&out_path)?;
+    println!(
+        "\nwrote {out_path} ({} records, {} power rows, commit {})",
+        report.records.len(),
+        report.power.len(),
+        report.commit
+    );
+
+    if args.switch("no-guard") {
+        return Ok(());
+    }
+    let baseline = match args.flag("baseline") {
+        Some(p) => ServeReport::load(p)?,
+        None => ServeReport::parse(DEFAULT_BASELINE)?,
+    };
+    // Only gate baseline rows this run actually produced (profile and
+    // overload must match; a checkpoint-only CI run must not fail on
+    // watchlist floors).
+    let mut scoped = ServeReport::new(baseline.commit.clone(), baseline.seed);
+    for r in &baseline.records {
+        let ran = run_profiles.iter().any(|n| *n == r.profile);
+        if ran && (r.overload - overload).abs() < 1e-9 {
+            scoped.push(r.clone());
+        }
+    }
+    anyhow::ensure!(
+        !scoped.records.is_empty(),
+        "no baseline records cover this run (profiles {run_profiles:?} @ {overload}x); \
+         add floors to the baseline or pass --no-guard"
+    );
+    let violations = report.check_against(&scoped, tolerance);
+    if violations.is_empty() {
+        println!(
+            "serve guard OK ({} baseline records, tolerance {:.0}%)",
+            scoped.records.len(),
+            tolerance * 100.0
+        );
+        Ok(())
+    } else {
+        for v in &violations {
+            eprintln!("REGRESSION: {v}");
+        }
+        anyhow::bail!("{} serve regression(s) vs baseline", violations.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::parse_args;
+
+    #[test]
+    fn embedded_baseline_parses_and_floors_the_ci_job() {
+        let b = ServeReport::parse(DEFAULT_BASELINE).unwrap();
+        assert!(!b.records.is_empty());
+        // The CI job runs checkpoint @ 2.0x: every checkpoint class must
+        // carry a floor there.
+        for class in ["officer-identify", "traveler-identify", "lane-audit", "enroll"] {
+            assert!(b.find("checkpoint", class, 2.0).is_some(), "{class} floor missing");
+        }
+    }
+
+    #[test]
+    fn profile_flag_resolves() {
+        assert_eq!(profiles_from("all").unwrap().len(), 3);
+        assert_eq!(profiles_from("checkpoint").unwrap()[0].name, "checkpoint");
+        assert_eq!(profiles_from("surveillance").unwrap()[0].name, "watchlist");
+        assert!(profiles_from("bogus").is_err());
+    }
+
+    #[test]
+    fn trace_only_scripts_the_disaster_profile() {
+        assert_eq!(trace_events_for(&MissionProfile::checkpoint()).len(), 0);
+        let evs = trace_events_for(&MissionProfile::disaster_response());
+        assert_eq!(evs.len(), 2, "disaster trace: one detach + one re-attach");
+    }
+
+    #[test]
+    fn config_reads_cli_knobs() {
+        let a = parse_args(
+            "serve --profile checkpoint --overload 4 --frames 50 --seed 9 --gallery 256 --dim 16"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = config_for(MissionProfile::checkpoint(), &a);
+        assert_eq!(cfg.requests, 50);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.gallery, 256);
+        assert!((cfg.overload - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mini_serve_run_meets_the_committed_baseline_shape() {
+        // Tiny checkpoint run: report rows cover every class, accounting
+        // holds, and the report parses back through its own schema.
+        let mut cfg = ServeConfig::new(MissionProfile::checkpoint());
+        cfg.requests = 60;
+        cfg.gallery = 512;
+        cfg.dim = 32;
+        let (report, outcomes) = serve_report(vec![cfg], false).unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(report.records.len(), 4);
+        assert_eq!(report.power.len(), 1);
+        assert!(report.power[0].total_w > 0.0);
+        let back = ServeReport::parse(&report.to_json_pretty()).unwrap();
+        assert_eq!(back.records, report.records);
+    }
+
+    #[test]
+    fn ci_shaped_run_meets_the_committed_floors() {
+        // The exact CI job: checkpoint @ 2.0x, 200 requests, defaults
+        // otherwise.  The committed goodput floors must hold here so a
+        // floor regression is caught by tier-1 before the CI gate.
+        let cfg = ServeConfig::new(MissionProfile::checkpoint());
+        let (report, _) = serve_report(vec![cfg], false).unwrap();
+        let baseline = ServeReport::parse(DEFAULT_BASELINE).unwrap();
+        let violations = report.check_against(&baseline, 0.10);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn same_seed_bit_identical_report() {
+        let mk = || {
+            let mut cfg = ServeConfig::new(MissionProfile::checkpoint());
+            cfg.requests = 80;
+            cfg.gallery = 512;
+            cfg.dim = 32;
+            cfg.overload = 2.0;
+            serve_report(vec![cfg], false).unwrap().0
+        };
+        let (mut a, mut b) = (mk(), mk());
+        // The commit field is environment-derived, not run-derived.
+        a.commit = "x".into();
+        b.commit = "x".into();
+        assert_eq!(a.to_json_pretty(), b.to_json_pretty(), "replayable forensics");
+    }
+}

@@ -109,6 +109,11 @@ pub struct EngineReport {
     pub peer_utilization: f64,
     pub elapsed_us: u64,
     pub throttle_events: u64,
+    /// Average system power over the run (device duty + host), watts.
+    pub total_w: f64,
+    /// Completions per joule — the paper's §4.3 figure of merit,
+    /// regenerated on every engine run instead of only by the power bench.
+    pub frames_per_joule: f64,
     /// Per-device frame seqs in completion order (uid-sorted), for
     /// order/exactly-once verification.
     pub per_device: Vec<(u64, Vec<u64>)>,
@@ -234,6 +239,9 @@ struct EngineState {
     batch: u32,
     /// Source frame interval (0 = saturating).
     interval: u64,
+    /// Per-device busy_us at run start, so the power report covers this
+    /// run only (timelines accumulate across runs on one orchestrator).
+    busy0: HashMap<u64, u64>,
     // ---- pipelined-mode extras ----
     /// Pipeline stages in order: (uid, slot, handoff_us, out_bytes/frame).
     stages: Vec<(u64, SlotId, u64, u64)>,
@@ -271,6 +279,7 @@ impl EngineState {
             frames,
             batch: cfg.batch.max(1),
             interval,
+            busy0: HashMap::new(),
             stages: Vec::new(),
             blocked: Vec::new(),
             head_seq: 0,
@@ -303,6 +312,7 @@ impl Orchestrator {
         let start = self.clock.now();
         let mut script = HotplugScript::new(events);
         let mut s = EngineState::new(&cfg, frames, source.interval_us);
+        s.busy0 = self.carts.iter().map(|(&u, c)| (u, c.timeline.busy_us())).collect();
 
         for (slot, uid, _) in self.registry.in_slot_order() {
             s.flow.register(uid);
@@ -584,6 +594,7 @@ impl Orchestrator {
     ) -> EngineReport {
         let start = self.clock.now();
         let mut s = EngineState::new(&cfg, frames, source.interval_us);
+        s.busy0 = self.carts.iter().map(|(&u, c)| (u, c.timeline.busy_us())).collect();
         s.frame_bytes = (source.width * source.height * 3) as u64;
 
         if self.pipeline.is_runnable().is_err() || self.pipeline.stages.is_empty() {
@@ -788,6 +799,21 @@ impl Orchestrator {
         let frames_out =
             s.st.per_seq.values().filter(|(d, c)| *d > 0 && d == c).count() as u64;
         let now = self.clock.now();
+        // Busy *deltas* since run start (timelines are cumulative across
+        // runs on one orchestrator), uid-sorted for a deterministic sum.
+        let mut busy: Vec<(u64, u64, crate::device::timing::DeviceProfile)> = self
+            .carts
+            .values()
+            .map(|c| {
+                let b0 = s.busy0.get(&c.uid).copied().unwrap_or(0);
+                (c.uid, c.timeline.busy_us().saturating_sub(b0), c.profile)
+            })
+            .collect();
+        busy.sort_by_key(|&(uid, _, _)| uid);
+        let devices: Vec<(u64, crate::device::timing::DeviceProfile)> =
+            busy.into_iter().map(|(_, b, p)| (b, p)).collect();
+        let power =
+            crate::power::PowerModel::default().report(&devices, elapsed.max(1), s.st.results);
         EngineReport {
             frames_in: frames,
             dispatched: s.st.dispatched,
@@ -801,6 +827,8 @@ impl Orchestrator {
             peer_utilization: self.bus.peer_utilization(now),
             elapsed_us: elapsed,
             throttle_events: s.flow.throttle_events,
+            total_w: power.total_w,
+            frames_per_joule: power.frames_per_joule,
             per_device: s.devs.into_iter().map(|(uid, d)| (uid, d.completed)).collect(),
         }
     }
@@ -975,6 +1003,38 @@ mod tests {
         let rep = o.run_pipelined_engine(&src, 10, EngineConfig::default());
         assert_eq!(rep.results_out, 0);
         assert_eq!(rep.fps, 0.0);
+    }
+
+    #[test]
+    fn engine_report_regenerates_power_figures() {
+        // §4.3 wiring: every engine run carries the power figure of merit.
+        let mut o = rack(5, DeviceKind::Ncs2);
+        let src = VideoSource::paper_stream(7);
+        let rep = o.run_broadcast_engine(&src, 60, EngineConfig::batched(4).with_warmup(5), vec![]);
+        assert!((3.0..15.0).contains(&rep.total_w), "total_w {}", rep.total_w);
+        assert!(rep.frames_per_joule > 0.0);
+        assert!(
+            crate::power::PowerModel::gpu_baseline_w() / rep.total_w > 5.0,
+            "the ~10 W story must hold per run (got {} W)",
+            rep.total_w
+        );
+    }
+
+    #[test]
+    fn power_figures_are_per_run_not_cumulative() {
+        // Timelines accumulate across runs on one orchestrator; the power
+        // report must cover only its own run's busy time.
+        let mut o = rack(3, DeviceKind::Ncs2);
+        let src = VideoSource::paper_stream(7);
+        let a = o.run_broadcast_engine(&src, 40, EngineConfig::default().with_warmup(5), vec![]);
+        let src = VideoSource::paper_stream(7);
+        let b = o.run_broadcast_engine(&src, 40, EngineConfig::default().with_warmup(5), vec![]);
+        assert!(
+            (b.total_w - a.total_w).abs() < 0.5,
+            "second run inflated: {} W vs {} W",
+            b.total_w,
+            a.total_w
+        );
     }
 
     #[test]

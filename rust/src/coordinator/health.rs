@@ -30,6 +30,11 @@ pub struct Alert {
 pub struct HealthMonitor {
     interval_us: u64,
     last_beat: HashMap<u64, u64>,
+    /// When the current registration began.  Beats carrying an older
+    /// timestamp belong to a previous registration of the same uid (a
+    /// stale pre-detach heartbeat delivered late after a hot re-attach)
+    /// and must not count for — or against — the new one.
+    registered_at: HashMap<u64, u64>,
     alerted_dead: HashMap<u64, bool>,
     pub alerts: Vec<Alert>,
 }
@@ -39,6 +44,7 @@ impl HealthMonitor {
         HealthMonitor {
             interval_us,
             last_beat: HashMap::new(),
+            registered_at: HashMap::new(),
             alerted_dead: HashMap::new(),
             alerts: Vec::new(),
         }
@@ -46,19 +52,28 @@ impl HealthMonitor {
 
     pub fn register(&mut self, uid: u64, now_us: u64) {
         self.last_beat.insert(uid, now_us);
+        self.registered_at.insert(uid, now_us);
         self.alerted_dead.insert(uid, false);
     }
 
     pub fn deregister(&mut self, uid: u64) {
         self.last_beat.remove(&uid);
+        self.registered_at.remove(&uid);
         self.alerted_dead.remove(&uid);
     }
 
+    /// Record a heartbeat.  The beat clock never rewinds, and beats
+    /// timestamped before the current registration are dropped — a
+    /// deregistered-then-reattached cartridge must not be swept dead (and
+    /// alerted on) because a stale pre-detach heartbeat rewound its clock.
     pub fn beat(&mut self, uid: u64, now_us: u64) {
-        if let Some(t) = self.last_beat.get_mut(&uid) {
-            *t = now_us;
-            self.alerted_dead.insert(uid, false);
+        let Some(t) = self.last_beat.get_mut(&uid) else { return };
+        let reg = self.registered_at.get(&uid).copied().unwrap_or(0);
+        if now_us < reg {
+            return;
         }
+        *t = (*t).max(now_us);
+        self.alerted_dead.insert(uid, false);
     }
 
     pub fn status(&self, uid: u64, now_us: u64) -> Option<Health> {
@@ -130,5 +145,45 @@ mod tests {
     fn unknown_uid_none() {
         let h = HealthMonitor::new(100_000);
         assert_eq!(h.status(9, 0), None);
+    }
+
+    #[test]
+    fn stale_pre_detach_beat_does_not_alert_reattached_uid() {
+        // Regression (hotplug script): detach deregisters the uid, a quick
+        // re-attach registers it again, and then a completion scheduled
+        // *before* the detach delivers its heartbeat late.  The stale beat
+        // must not rewind the clock of the new registration — previously a
+        // sweep shortly after re-attach declared the live cartridge dead.
+        let mut h = HealthMonitor::new(100_000);
+        h.register(1, 0);
+        h.beat(1, 3_950_000); // last pre-detach beat
+        h.deregister(1); //      hot detach
+        h.register(1, 4_000_000); // re-attach
+        h.beat(1, 3_950_000); //  stale pre-detach heartbeat, delivered late
+        assert_eq!(h.status(1, 4_450_000), Some(Health::Healthy));
+        assert_eq!(h.sweep(4_450_000), Vec::<u64>::new());
+        assert!(h.alerts.is_empty(), "stale beat alerted: {:?}", h.alerts);
+        // Genuine silence after re-attach still degrades normally.
+        assert_eq!(h.status(1, 4_250_000), Some(Health::Suspect));
+    }
+
+    #[test]
+    fn beat_clock_never_rewinds() {
+        let mut h = HealthMonitor::new(100_000);
+        h.register(1, 0);
+        h.beat(1, 500_000);
+        h.beat(1, 200_000); // out-of-order delivery
+        assert_eq!(h.status(1, 650_000), Some(Health::Healthy));
+        assert_eq!(h.status(1, 900_000), Some(Health::Suspect), "measured from 500ms, not 200ms");
+    }
+
+    #[test]
+    fn future_registration_grace_counts_from_readiness() {
+        // A re-attached cartridge may be registered with its ready time
+        // (model reload ahead); sweeps before that must see it healthy.
+        let mut h = HealthMonitor::new(100_000);
+        h.register(1, 1_500_000);
+        assert_eq!(h.status(1, 1_000_000), Some(Health::Healthy));
+        assert_eq!(h.sweep(1_550_000), Vec::<u64>::new());
     }
 }

@@ -492,12 +492,16 @@ impl Orchestrator {
         }
     }
 
-    /// Device busy times + profiles (for the power model).
+    /// Device busy times + profiles (for the power model), in uid order so
+    /// the power sums are deterministic across runs.
     pub fn device_busy(&self) -> Vec<(u64, crate::device::timing::DeviceProfile)> {
-        self.carts
+        let mut v: Vec<(u64, u64, crate::device::timing::DeviceProfile)> = self
+            .carts
             .values()
-            .map(|c| (c.timeline.busy_us(), c.profile))
-            .collect()
+            .map(|c| (c.uid, c.timeline.busy_us(), c.profile))
+            .collect();
+        v.sort_by_key(|&(uid, _, _)| uid);
+        v.into_iter().map(|(_, busy, prof)| (busy, prof)).collect()
     }
 }
 

@@ -24,6 +24,9 @@
 //! * [`vdisk`] — sealed, block-structured cartridge images: the on-module
 //!   container format (superblock + sealed extents + manifest + trailer
 //!   MAC) with a mount/unmount lifecycle wired into hot-swap.
+//! * [`serve`] — the multi-tenant serving layer: open-loop traffic over
+//!   mission profiles, token-bucket admission, EDF queues with typed load
+//!   shedding, and SLO telemetry (`champd serve` → `BENCH_serve.json`).
 //! * [`power`], [`workload`], [`metrics`], [`config`], [`json`], [`cli`],
 //!   [`util`] — supporting systems.
 //!
@@ -41,6 +44,7 @@ pub mod json;
 pub mod metrics;
 pub mod power;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod vdisk;
 pub mod workload;

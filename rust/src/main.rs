@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run              pipelined run from a config (default config if none)
+//!   serve            multi-tenant serving layer: admission control,
+//!                    deadline scheduling, load shedding -> BENCH_serve.json
 //!   sweep            Table-1 broadcast scaling sweep (--kind ncs2|coral)
 //!   bench            bench telemetry (scaling -> BENCH_scaling.json,
 //!                    match -> BENCH_match.json, each with a regression guard)
@@ -33,6 +35,10 @@ champd — CHAMP orchestrator (paper reproduction)
 USAGE: champd <subcommand> [flags]
 
   run [config.json] [--frames N] [--real-compute]
+  serve [--profile checkpoint|watchlist|disaster|all] [--overload F]
+        [--frames N] [--seed S] [--batch B] [--window W] [--gallery N]
+        [--dim D] [--k K] [--trace] [--out PATH] [--baseline PATH]
+        [--tolerance PCT] [--no-guard]
   sweep --kind ncs2|coral [--max-devices N] [--frames N] [--engine barrier|batched]
         [--batch B]
   bench scaling [--frames N] [--max-devices N] [--out PATH] [--baseline PATH]
@@ -123,7 +129,7 @@ fn cmd_sweep(args: &cli::Args) -> anyhow::Result<()> {
     // alongside (per-frame rate = the paper's Table-1 column; aggregate =
     // device-completions/s, the scaling quantity).
     println!(
-        "# of Modules | barrier FPS | barrier agg | engine agg (batch={batch}, {})",
+        "# of Modules | barrier FPS | barrier agg | engine agg | frames/J (batch={batch}, {})",
         args.flag("kind").unwrap_or("ncs2")
     );
     for n in 1..=max {
@@ -135,10 +141,11 @@ fn cmd_sweep(args: &cli::Args) -> anyhow::Result<()> {
         let cfg = EngineConfig::batched(batch).with_warmup((frames / 10).clamp(2, 20));
         let eng = o.run_broadcast_engine(&src, frames, cfg, vec![]);
         println!(
-            "{n:12} | {:11.1} | {:11.1} | {:.1}",
+            "{n:12} | {:11.1} | {:11.1} | {:10.1} | {:.2}",
             bar.fps,
             bar.fps * n as f64,
-            eng.fps
+            eng.fps,
+            eng.frames_per_joule
         );
     }
     Ok(())
@@ -221,6 +228,7 @@ fn main() -> anyhow::Result<()> {
     }
     match args.subcommand.as_deref().unwrap() {
         "run" => cmd_run(&args),
+        "serve" => cli::serve::run(&args),
         "sweep" => cmd_sweep(&args),
         "bench" => cli::bench::run(&args),
         "hotswap" => cmd_hotswap(&args),

@@ -325,6 +325,227 @@ impl MatchReport {
     }
 }
 
+/// One per-class SLO row of a serving run (`BENCH_serve.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeRecord {
+    /// Mission profile: `"checkpoint"`, `"watchlist"`, or `"disaster"`.
+    pub profile: String,
+    /// Request class within the profile (e.g. `"officer-identify"`).
+    pub class: String,
+    /// `"identify"`, `"enroll"`, or `"artifact-run"`.
+    pub kind: String,
+    pub priority: u8,
+    /// Offered load factor the run was driven at.
+    pub overload: f64,
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub requeued: u64,
+    /// Fraction of offered requests shed (typed, never silent).
+    pub shed_rate: f64,
+    /// Fraction of completed requests that missed their deadline.
+    pub deadline_miss_rate: f64,
+    /// On-time completions per second over the serving horizon.
+    pub goodput_rps: f64,
+    /// Completion latency percentiles (exact), virtual us.
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl ServeRecord {
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("profile", json::s(&self.profile)),
+            ("class", json::s(&self.class)),
+            ("kind", json::s(&self.kind)),
+            ("priority", json::num(self.priority as f64)),
+            ("overload", json::num(self.overload)),
+            ("offered", json::num(self.offered as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("shed", json::num(self.shed as f64)),
+            ("requeued", json::num(self.requeued as f64)),
+            ("shed_rate", json::num(self.shed_rate)),
+            ("deadline_miss_rate", json::num(self.deadline_miss_rate)),
+            ("goodput_rps", json::num(self.goodput_rps)),
+            ("p50_us", json::num(self.p50_us as f64)),
+            ("p99_us", json::num(self.p99_us as f64)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Option<ServeRecord> {
+        Some(ServeRecord {
+            profile: v.get("profile")?.as_str()?.to_string(),
+            class: v.get("class")?.as_str()?.to_string(),
+            kind: v.get("kind")?.as_str()?.to_string(),
+            priority: v.get("priority").and_then(Value::as_u64).unwrap_or(0) as u8,
+            overload: v.get("overload")?.as_f64()?,
+            offered: v.get("offered")?.as_u64()?,
+            completed: v.get("completed")?.as_u64()?,
+            shed: v.get("shed")?.as_u64()?,
+            requeued: v.get("requeued").and_then(Value::as_u64).unwrap_or(0),
+            shed_rate: v.get("shed_rate").and_then(Value::as_f64).unwrap_or(0.0),
+            deadline_miss_rate: v.get("deadline_miss_rate").and_then(Value::as_f64).unwrap_or(0.0),
+            goodput_rps: v.get("goodput_rps")?.as_f64()?,
+            p50_us: v.get("p50_us").and_then(Value::as_u64).unwrap_or(0),
+            p99_us: v.get("p99_us").and_then(Value::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// Per-profile power summary emitted alongside the SLO rows, so the
+/// paper's ~10 W figure-of-merit regenerates with every serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServePowerRecord {
+    pub profile: String,
+    pub overload: f64,
+    pub total_w: f64,
+    pub frames_per_joule: f64,
+}
+
+impl ServePowerRecord {
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("profile", json::s(&self.profile)),
+            ("overload", json::num(self.overload)),
+            ("total_w", json::num(self.total_w)),
+            ("frames_per_joule", json::num(self.frames_per_joule)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Option<ServePowerRecord> {
+        Some(ServePowerRecord {
+            profile: v.get("profile")?.as_str()?.to_string(),
+            overload: v.get("overload")?.as_f64()?,
+            total_w: v.get("total_w")?.as_f64()?,
+            frames_per_joule: v.get("frames_per_joule").and_then(Value::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+/// The serving-layer telemetry file (`BENCH_serve.json`, schema v1).
+///
+/// ```json
+/// {
+///   "schema": 1,
+///   "commit": "<sha or 'unknown'>",
+///   "seed": 7,
+///   "records": [
+///     { "profile": "checkpoint", "class": "officer-identify",
+///       "kind": "identify", "priority": 0, "overload": 2.0,
+///       "offered": 104, "completed": 96, "shed": 8, "requeued": 0,
+///       "shed_rate": 0.0769, "deadline_miss_rate": 0.0,
+///       "goodput_rps": 88.1, "p50_us": 2210, "p99_us": 4804 }
+///   ],
+///   "power": [
+///     { "profile": "checkpoint", "overload": 2.0,
+///       "total_w": 6.8, "frames_per_joule": 21.4 }
+///   ]
+/// }
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub commit: String,
+    pub seed: u64,
+    pub records: Vec<ServeRecord>,
+    pub power: Vec<ServePowerRecord>,
+}
+
+impl ServeReport {
+    pub fn new(commit: impl Into<String>, seed: u64) -> Self {
+        ServeReport { commit: commit.into(), seed, records: Vec::new(), power: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: ServeRecord) {
+        self.records.push(r);
+    }
+
+    pub fn push_power(&mut self, p: ServePowerRecord) {
+        self.power.push(p);
+    }
+
+    pub fn find(&self, profile: &str, class: &str, overload: f64) -> Option<&ServeRecord> {
+        self.records.iter().find(|r| {
+            r.profile == profile && r.class == class && (r.overload - overload).abs() < 1e-9
+        })
+    }
+
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("schema", json::num(SCHEMA_VERSION as f64)),
+            ("commit", json::s(&self.commit)),
+            ("seed", json::num(self.seed as f64)),
+            ("records", Value::Arr(self.records.iter().map(ServeRecord::to_value).collect())),
+            ("power", Value::Arr(self.power.iter().map(ServePowerRecord::to_value).collect())),
+        ])
+    }
+
+    pub fn to_json_pretty(&self) -> String {
+        self.to_value().to_json_pretty()
+    }
+
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let commit =
+            v.get("commit").and_then(Value::as_str).unwrap_or("unknown").to_string();
+        let seed = v.get("seed").and_then(Value::as_u64).unwrap_or(0);
+        let mut records = Vec::new();
+        for r in v.get("records").and_then(Value::as_arr).unwrap_or(&[]) {
+            records.push(
+                ServeRecord::from_value(r)
+                    .ok_or_else(|| anyhow::anyhow!("malformed serve record: {}", r.to_json()))?,
+            );
+        }
+        let mut power = Vec::new();
+        for p in v.get("power").and_then(Value::as_arr).unwrap_or(&[]) {
+            power.push(
+                ServePowerRecord::from_value(p)
+                    .ok_or_else(|| anyhow::anyhow!("malformed power record: {}", p.to_json()))?,
+            );
+        }
+        Ok(ServeReport { commit, seed, records, power })
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json_pretty() + "\n")?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("bad serve JSON: {e:?}"))?;
+        Self::from_value(&v)
+    }
+
+    /// Regression guard on goodput, mirroring the scaling/match guards:
+    /// every baseline (profile, class, overload) row must be present with
+    /// `goodput_rps >= baseline * (1 - tolerance)`.
+    pub fn check_against(&self, baseline: &ServeReport, tolerance: f64) -> Vec<String> {
+        let mut violations = Vec::new();
+        for b in &baseline.records {
+            match self.find(&b.profile, &b.class, b.overload) {
+                None => violations.push(format!(
+                    "missing record {}/{} @{}x (baseline {:.1} rps goodput)",
+                    b.profile, b.class, b.overload, b.goodput_rps
+                )),
+                Some(cur) => {
+                    let floor = b.goodput_rps * (1.0 - tolerance);
+                    if cur.goodput_rps < floor {
+                        violations.push(format!(
+                            "{}/{} @{}x: {:.1} rps goodput < floor {:.1} (baseline {:.1}, tol {:.0}%)",
+                            b.profile, b.class, b.overload,
+                            cur.goodput_rps, floor, b.goodput_rps, tolerance * 100.0
+                        ));
+                    }
+                }
+            }
+        }
+        violations
+    }
+}
+
 /// Best-effort commit id for the report: `$GITHUB_SHA` in CI, `git
 /// rev-parse` locally, `"unknown"` otherwise.
 pub fn current_commit() -> String {
@@ -449,5 +670,66 @@ mod tests {
     #[test]
     fn malformed_match_record_is_an_error() {
         assert!(MatchReport::parse(r#"{"records": [{"variant": "soa"}]}"#).is_err());
+    }
+
+    fn serve_record(class: &str, overload: f64, goodput: f64) -> ServeRecord {
+        ServeRecord {
+            profile: "checkpoint".into(),
+            class: class.into(),
+            kind: "identify".into(),
+            priority: 0,
+            overload,
+            offered: 100,
+            completed: 90,
+            shed: 10,
+            requeued: 0,
+            shed_rate: 0.1,
+            deadline_miss_rate: 0.0,
+            goodput_rps: goodput,
+            p50_us: 2_000,
+            p99_us: 9_000,
+        }
+    }
+
+    #[test]
+    fn serve_report_roundtrips_through_json() {
+        let mut rep = ServeReport::new("f00d", 7);
+        rep.push(serve_record("officer-identify", 2.0, 88.0));
+        rep.push_power(ServePowerRecord {
+            profile: "checkpoint".into(),
+            overload: 2.0,
+            total_w: 6.8,
+            frames_per_joule: 21.4,
+        });
+        let back = ServeReport::parse(&rep.to_json_pretty()).unwrap();
+        assert_eq!(back.commit, "f00d");
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.records, rep.records);
+        assert_eq!(back.power, rep.power);
+        assert!(back.find("checkpoint", "officer-identify", 2.0).is_some());
+        assert!(back.find("checkpoint", "officer-identify", 4.0).is_none());
+        assert!(back.find("watchlist", "officer-identify", 2.0).is_none());
+    }
+
+    #[test]
+    fn serve_guard_gates_goodput_floors() {
+        let mut baseline = ServeReport::new("base", 7);
+        baseline.push(serve_record("officer-identify", 2.0, 50.0));
+        baseline.push(serve_record("enroll", 2.0, 5.0));
+        let mut cur = ServeReport::new("cur", 7);
+        cur.push(serve_record("officer-identify", 2.0, 46.0)); // -8%: inside tol
+        let v = cur.check_against(&baseline, 0.10);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("missing record"));
+        cur.push(serve_record("enroll", 2.0, 4.0)); // -20%: regression
+        let v = cur.check_against(&baseline, 0.10);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("4.0 rps goodput"));
+    }
+
+    #[test]
+    fn malformed_serve_record_is_an_error() {
+        assert!(ServeReport::parse(r#"{"records": [{"profile": "x"}]}"#).is_err());
+        assert!(ServeReport::parse(r#"{"power": [{"overload": 1}]}"#).is_err());
     }
 }

@@ -1,0 +1,384 @@
+//! Admission control: token buckets, bounded EDF queues, typed shedding.
+//!
+//! The controller answers one question per offered request — accept, or
+//! shed with a reason — and one per dispatch opportunity: which admitted
+//! request goes next.  Ordering is strict priority across classes and
+//! earliest-deadline-first within a class (ties broken by admission
+//! order).  Every rejection is a typed [`ShedReason`]; nothing is ever
+//! dropped silently and no overload factor can make the controller panic
+//! (all bounds are enforced by shedding, not assertion).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::traffic::{MissionProfile, Request};
+
+/// Why a request was shed.  The full set of terminal outcomes is
+/// `Completed | Shed(reason)` — exactly one per offered request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The tenant's token bucket was empty at arrival.
+    RateLimited,
+    /// The class queue was at its depth bound at arrival.
+    QueueFull,
+    /// The deadline could not be met (expired in queue, or the estimated
+    /// completion at dispatch time was already past it).
+    Expired,
+    /// In-flight work was evicted more than once (repeat cartridge loss);
+    /// requeue happens exactly once, a second eviction sheds.
+    Evicted,
+}
+
+impl ShedReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedReason::RateLimited => "rate-limited",
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::Expired => "expired",
+            ShedReason::Evicted => "evicted",
+        }
+    }
+}
+
+/// Admission verdict for an offered request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Admitted,
+    Shed(ShedReason),
+}
+
+/// Deterministic token bucket over virtual time.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    rate_per_s: f64,
+    burst: f64,
+    tokens: f64,
+    last_us: u64,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_s: f64, burst: u32) -> Self {
+        let burst = (burst.max(1)) as f64;
+        TokenBucket { rate_per_s: rate_per_s.max(0.0), burst, tokens: burst, last_us: 0 }
+    }
+
+    fn refill(&mut self, now_us: u64) {
+        if now_us > self.last_us {
+            let dt_s = (now_us - self.last_us) as f64 / 1e6;
+            self.tokens = (self.tokens + dt_s * self.rate_per_s).min(self.burst);
+            self.last_us = now_us;
+        }
+    }
+
+    /// Take one token if available.
+    pub fn try_take(&mut self, now_us: u64) -> bool {
+        self.refill(now_us);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn available(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// EDF heap entry: earliest (deadline, admission-seq) pops first.
+#[derive(Debug, Clone, Copy)]
+struct EdfEntry {
+    deadline_us: u64,
+    seq: u64,
+    req: Request,
+}
+
+impl PartialEq for EdfEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline_us == other.deadline_us && self.seq == other.seq
+    }
+}
+impl Eq for EdfEntry {}
+impl Ord for EdfEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Inverted: BinaryHeap is a max-heap, we want the min to surface.
+        other
+            .deadline_us
+            .cmp(&self.deadline_us)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for EdfEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The admission controller: one bucket per tenant, one bounded EDF queue
+/// per class.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    buckets: Vec<TokenBucket>,
+    queues: Vec<BinaryHeap<EdfEntry>>,
+    /// Class indices sorted by (priority, index): the dispatch scan order.
+    order: Vec<usize>,
+    depth: usize,
+    seq: u64,
+}
+
+impl AdmissionController {
+    /// Build from a profile; bucket rates are `rate_factor × capacity`.
+    pub fn new(profile: &MissionProfile, capacity_rps: f64) -> Self {
+        let buckets = profile
+            .tenants
+            .iter()
+            .map(|t| TokenBucket::new(t.rate_factor * capacity_rps.max(1e-6), t.burst))
+            .collect();
+        let queues = profile.classes.iter().map(|_| BinaryHeap::new()).collect();
+        let mut order: Vec<usize> = (0..profile.classes.len()).collect();
+        order.sort_by_key(|&i| (profile.classes[i].priority, i));
+        AdmissionController { buckets, queues, order, depth: profile.queue_depth, seq: 0 }
+    }
+
+    /// Offer one request at `now`.  `Admitted` means it is queued; any
+    /// `Shed` is terminal for the request.  The queue bound is checked
+    /// *before* the token bucket so a full queue does not burn rate-limit
+    /// tokens the request never used.
+    pub fn offer(&mut self, req: Request, now_us: u64) -> Admission {
+        if self.queues[req.class as usize].len() >= self.depth {
+            return Admission::Shed(ShedReason::QueueFull);
+        }
+        let Some(bucket) = self.buckets.get_mut(req.tenant as usize) else {
+            return Admission::Shed(ShedReason::RateLimited);
+        };
+        if !bucket.try_take(now_us) {
+            return Admission::Shed(ShedReason::RateLimited);
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.queues[req.class as usize].push(EdfEntry { deadline_us: req.deadline_us, seq, req });
+        Admission::Admitted
+    }
+
+    /// Put evicted in-flight work back (exactly-once policy is the
+    /// caller's: it must check `req.requeued` first).  Bypasses the bucket
+    /// and the depth bound — the work was already admitted once; the
+    /// overshoot is bounded by the in-flight window.
+    pub fn requeue(&mut self, req: Request) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queues[req.class as usize].push(EdfEntry { deadline_us: req.deadline_us, seq, req });
+    }
+
+    /// Pop the next dispatchable request for one of the two servers
+    /// (`infer` selects `Enroll`/`ArtifactRun` classes, otherwise
+    /// `Identify`).  A queued request whose deadline cannot survive the
+    /// estimated service (`now + est_us > deadline`) is shed as `Expired`
+    /// into `expired` instead of being dispatched to miss.
+    pub fn pop_dispatchable(
+        &mut self,
+        now_us: u64,
+        infer: bool,
+        est_us: u64,
+        expired: &mut Vec<Request>,
+    ) -> Option<Request> {
+        for &c in &self.order {
+            loop {
+                let Some(top) = self.queues[c].peek() else { break };
+                if top.req.kind.is_inference() != infer {
+                    break; // whole class is for the other server
+                }
+                let e = self.queues[c].pop().unwrap();
+                if now_us.saturating_add(est_us) > e.deadline_us {
+                    expired.push(e.req);
+                    continue;
+                }
+                return Some(e.req);
+            }
+        }
+        None
+    }
+
+    /// Drain every queued request whose absolute deadline has passed
+    /// (used by the periodic health tick so queues cannot hold work
+    /// forever when a server is down).
+    pub fn expire_overdue(&mut self, now_us: u64, expired: &mut Vec<Request>) {
+        for q in &mut self.queues {
+            while let Some(top) = q.peek() {
+                if top.deadline_us < now_us {
+                    expired.push(q.pop().unwrap().req);
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Requests currently queued (all classes).
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(BinaryHeap::len).sum()
+    }
+
+    pub fn queued_in_class(&self, class: usize) -> usize {
+        self.queues.get(class).map(BinaryHeap::len).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::traffic::{MissionProfile, RequestKind};
+
+    fn req(id: u64, class: u8, p: &MissionProfile, arrival: u64) -> Request {
+        let spec = &p.classes[class as usize];
+        Request {
+            id,
+            tenant: 0,
+            class,
+            kind: spec.kind,
+            priority: spec.priority,
+            arrival_us: arrival,
+            deadline_us: arrival + spec.deadline_us,
+            requeued: false,
+        }
+    }
+
+    #[test]
+    fn token_bucket_limits_and_refills() {
+        let mut b = TokenBucket::new(10.0, 2);
+        assert!(b.try_take(0));
+        assert!(b.try_take(0));
+        assert!(!b.try_take(0), "burst of 2 exhausted");
+        // 100ms at 10 rps refills one token.
+        assert!(b.try_take(100_000));
+        assert!(!b.try_take(100_000));
+    }
+
+    #[test]
+    fn edf_within_class_fifo_on_ties() {
+        let p = MissionProfile::checkpoint();
+        let mut a = AdmissionController::new(&p, 1000.0);
+        // Same class, deadlines out of order.
+        let mut r1 = req(1, 0, &p, 0);
+        r1.deadline_us = 900;
+        let mut r2 = req(2, 0, &p, 0);
+        r2.deadline_us = 300;
+        let mut r3 = req(3, 0, &p, 0);
+        r3.deadline_us = 300;
+        for r in [r1, r2, r3] {
+            assert_eq!(a.offer(r, 0), Admission::Admitted);
+        }
+        let mut exp = Vec::new();
+        let ids: Vec<u64> = std::iter::from_fn(|| a.pop_dispatchable(0, false, 0, &mut exp))
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(ids, vec![2, 3, 1], "EDF order, FIFO on equal deadlines");
+        assert!(exp.is_empty());
+    }
+
+    #[test]
+    fn strict_priority_across_classes() {
+        let p = MissionProfile::checkpoint();
+        let mut a = AdmissionController::new(&p, 1000.0);
+        // traveler-identify (prio 1) admitted before officer (prio 0);
+        // officer still pops first.
+        assert_eq!(a.offer(req(1, 1, &p, 0), 0), Admission::Admitted);
+        assert_eq!(a.offer(req(2, 0, &p, 0), 0), Admission::Admitted);
+        let mut exp = Vec::new();
+        assert_eq!(a.pop_dispatchable(0, false, 0, &mut exp).unwrap().id, 2);
+        assert_eq!(a.pop_dispatchable(0, false, 0, &mut exp).unwrap().id, 1);
+    }
+
+    #[test]
+    fn kind_filter_separates_servers() {
+        let p = MissionProfile::checkpoint();
+        let mut a = AdmissionController::new(&p, 1000.0);
+        a.offer(req(1, 0, &p, 0), 0); // identify
+        a.offer(req(2, 2, &p, 0), 0); // artifact-run
+        let mut exp = Vec::new();
+        let inf = a.pop_dispatchable(0, true, 0, &mut exp).unwrap();
+        assert_eq!(inf.id, 2);
+        assert_eq!(inf.kind, RequestKind::ArtifactRun);
+        let idn = a.pop_dispatchable(0, false, 0, &mut exp).unwrap();
+        assert_eq!(idn.id, 1);
+        assert!(a.pop_dispatchable(0, false, 0, &mut exp).is_none());
+    }
+
+    #[test]
+    fn queue_bound_sheds_typed() {
+        let mut p = MissionProfile::checkpoint();
+        p.queue_depth = 2;
+        let mut a = AdmissionController::new(&p, 1e9);
+        assert_eq!(a.offer(req(1, 0, &p, 0), 0), Admission::Admitted);
+        assert_eq!(a.offer(req(2, 0, &p, 0), 0), Admission::Admitted);
+        assert_eq!(a.offer(req(3, 0, &p, 0), 0), Admission::Shed(ShedReason::QueueFull));
+        assert_eq!(a.queued(), 2);
+    }
+
+    #[test]
+    fn empty_bucket_sheds_rate_limited() {
+        let p = MissionProfile::checkpoint();
+        // Capacity ~0: every bucket starts at burst then starves.
+        let mut a = AdmissionController::new(&p, 0.000001);
+        let burst = p.tenants[0].burst as u64;
+        let mut shed = 0;
+        for i in 0..burst + 5 {
+            if a.offer(req(i, 0, &p, 0), 0) == Admission::Shed(ShedReason::RateLimited) {
+                shed += 1;
+            }
+        }
+        assert_eq!(shed, 5, "exactly the over-burst arrivals are rate-limited");
+    }
+
+    #[test]
+    fn dispatch_guard_sheds_unmeetable_deadlines() {
+        let p = MissionProfile::checkpoint();
+        let mut a = AdmissionController::new(&p, 1000.0);
+        let mut r = req(1, 0, &p, 0);
+        r.deadline_us = 1_000;
+        a.offer(r, 0);
+        let mut exp = Vec::new();
+        // Estimated service 5ms > 1ms deadline: shed, don't dispatch-to-miss.
+        assert!(a.pop_dispatchable(0, false, 5_000, &mut exp).is_none());
+        assert_eq!(exp.len(), 1);
+        assert_eq!(exp[0].id, 1);
+    }
+
+    #[test]
+    fn expire_overdue_drains_dead_queues() {
+        let p = MissionProfile::checkpoint();
+        let mut a = AdmissionController::new(&p, 1000.0);
+        a.offer(req(1, 2, &p, 0), 0);
+        a.offer(req(2, 3, &p, 0), 0);
+        let mut exp = Vec::new();
+        a.expire_overdue(10_000_000, &mut exp);
+        assert_eq!(exp.len(), 2, "both inference requests long past deadline");
+        assert_eq!(a.queued(), 0);
+    }
+
+    #[test]
+    fn queue_full_sheds_do_not_burn_tokens() {
+        let mut p = MissionProfile::checkpoint();
+        p.queue_depth = 1;
+        p.tenants[0].burst = 2; // tenant has exactly two tokens, no refill
+        let mut a = AdmissionController::new(&p, 0.000001);
+        assert_eq!(a.offer(req(1, 0, &p, 0), 0), Admission::Admitted);
+        assert_eq!(a.offer(req(2, 0, &p, 0), 0), Admission::Shed(ShedReason::QueueFull));
+        // The QueueFull shed must not have consumed the second token: the
+        // same tenant can still admit into another class.
+        assert_eq!(a.offer(req(3, 1, &p, 0), 0), Admission::Admitted);
+    }
+
+    #[test]
+    fn requeue_bypasses_bucket_and_bound() {
+        let mut p = MissionProfile::checkpoint();
+        p.queue_depth = 1;
+        let mut a = AdmissionController::new(&p, 1e9);
+        assert_eq!(a.offer(req(1, 0, &p, 0), 0), Admission::Admitted);
+        let mut r = req(2, 0, &p, 0);
+        r.requeued = true;
+        a.requeue(r);
+        assert_eq!(a.queued_in_class(0), 2, "requeue may overshoot the bound");
+    }
+}

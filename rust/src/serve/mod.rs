@@ -1,0 +1,38 @@
+//! The serving layer: multi-tenant admission control over the engines.
+//!
+//! Everything below this module is closed-loop — the dispatch engine and
+//! the match engine pull work as fast as the substrate allows.  A fielded
+//! CHAMP unit faces the opposite regime: *open-loop* traffic from many
+//! tenants (checkpoint lanes, surveillance feeds, triage teams) arrives on
+//! its own schedule, with per-class deadlines, and the unit must decide at
+//! the admission boundary what to accept, defer, and shed when demand
+//! exceeds the USB3 bus and accelerator pool.
+//!
+//! * [`traffic`] — seeded open-loop arrival generators (Poisson, bursty,
+//!   diurnal) producing typed requests (`Identify`, `Enroll`,
+//!   `ArtifactRun`) for three mission profiles, each with per-class
+//!   deadlines and priorities.
+//! * [`admission`] — per-tenant token buckets, bounded per-class queues
+//!   with earliest-deadline-first ordering, and *typed* load shedding
+//!   ([`admission::ShedReason`]): a request is never silently dropped and
+//!   the controller never panics, at any overload factor.
+//! * [`session`] — the virtual-time serving loop: coalesces admitted
+//!   `Identify` requests into [`crate::biometric::index::GalleryIndex::
+//!   top_k_batch`] probes, routes inference requests through the pipeline
+//!   cartridges under a [`crate::coordinator::flow::CreditFlow`] window
+//!   (calibrated against `run_pipelined_engine`), and survives hot-plug:
+//!   [`crate::coordinator::health::HealthMonitor`]-driven eviction
+//!   requeues in-flight work exactly once.
+//! * [`slo`] — per-class SLO accounting: exact p50/p99 latency, goodput,
+//!   deadline-miss and shed rates, with an exactly-once terminal-outcome
+//!   state machine (`offered == completed + shed`, checked per class).
+//!
+//! `champd serve` drives the whole stack and writes `BENCH_serve.json`
+//! ([`crate::metrics::report::ServeReport`], schema v1).  The run is
+//! deterministic in virtual time: the same seed produces a bit-identical
+//! report, which is what makes an incident replayable for forensics.
+
+pub mod admission;
+pub mod session;
+pub mod slo;
+pub mod traffic;

@@ -1,0 +1,747 @@
+//! The serving session: a deterministic virtual-time loop that multiplexes
+//! admitted requests onto the match engine and the accelerator pipeline.
+//!
+//! Two servers sit behind the admission controller:
+//!
+//! * the **match server** — `Identify` requests are coalesced (up to the
+//!   configured batch) into one [`GalleryIndex::top_k_batch`] probe pass;
+//!   the virtual service time of a pass is the calibrated gallery-scan
+//!   cost, amortized across the batch exactly as the SoA batch kernel
+//!   amortizes its row blocks;
+//! * the **inference pipeline** — `Enroll`/`ArtifactRun` requests batch
+//!   onto the face-stack cartridges, chained through each stage's FIFO
+//!   timeline (the same `Resource` substrate the dispatch engine books),
+//!   bounded by a [`CreditFlow`] window.  The pipeline's capacity is
+//!   calibrated at session start by an actual
+//!   [`Orchestrator::run_pipelined_engine`] run with the same batch and
+//!   window, so offered load factors are expressed against what the
+//!   engine really sustains.
+//!
+//! Hot-plug is survived, not ignored: a scripted detach cancels the
+//! pipeline's in-flight batches; the [`HealthMonitor`] sweep (driven from
+//! the periodic serve tick) detects the dead cartridge and **evicts** —
+//! cancelled requests are requeued *exactly once* (a second eviction sheds
+//! them as [`ShedReason::Evicted`]).  A re-attach before the sweep fires
+//! requeues immediately and re-registers the heartbeat, so the recovered
+//! cartridge never alerts on its stale pre-detach heartbeat.
+//!
+//! Everything runs in virtual microseconds off one completion queue: the
+//! same seed yields the same terminal outcome for every request, which is
+//! what makes `BENCH_serve.json` bit-identical across runs.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::biometric::index::GalleryIndex;
+use crate::bus::clock::Resource;
+use crate::bus::hotplug::{HotplugEvent, HotplugKind};
+use crate::bus::topology::SlotId;
+use crate::bus::usb3::BusProfile;
+use crate::coordinator::completion::CompletionQueue;
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::flow::CreditFlow;
+use crate::coordinator::health::Alert;
+use crate::coordinator::scheduler::Orchestrator;
+use crate::device::caps::CapDescriptor;
+use crate::device::timing::{stream_handoff_us, DeviceProfile};
+use crate::device::{Cartridge, DeviceKind};
+use crate::power::{PowerModel, PowerReport};
+use crate::util::rng::Rng;
+use crate::workload::video::VideoSource;
+
+use super::admission::{Admission, AdmissionController, ShedReason};
+use super::slo::{ClassOutcome, SloTracker};
+use super::traffic::{self, MissionProfile, Request, RequestKind};
+
+/// Health/expiry tick period (matches the orchestrator's heartbeat
+/// interval: 5 missed ticks = dead).
+const TICK_US: u64 = 100_000;
+
+/// Result-return wire time appended to a pipeline chain, virtual us.
+const TAIL_US: u64 = 200;
+
+/// Virtual cost of one gallery pass scoring `count` probes: a fixed
+/// stream-the-matrix term plus a per-probe term (the SoA batch kernel
+/// shares the row traffic across the batch, so probes amortize).
+pub fn scan_pass_us(rows: usize, dim: usize, count: usize) -> u64 {
+    let cells = rows.max(1) as u64 * dim.max(1) as u64;
+    let fixed = cells / 2_000 + 200;
+    let per_probe = cells / 4_000 + 50;
+    fixed + per_probe * count.max(1) as u64
+}
+
+/// Serving-run configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub profile: MissionProfile,
+    pub seed: u64,
+    /// Offered requests for the run.
+    pub requests: u64,
+    /// Offered load as a multiple of calibrated system capacity.
+    pub overload: f64,
+    /// Max requests coalesced per dispatch (both servers).
+    pub batch: u32,
+    /// In-flight pipeline batches allowed (credit window).
+    pub window: u32,
+    /// Enrolled identities at session start.
+    pub gallery: usize,
+    pub dim: usize,
+    /// Top-k retrieved per identify probe.
+    pub k: usize,
+}
+
+impl ServeConfig {
+    pub fn new(profile: MissionProfile) -> Self {
+        ServeConfig {
+            profile,
+            seed: 7,
+            requests: 200,
+            overload: 2.0,
+            batch: 2,
+            window: 2,
+            gallery: 10_000,
+            dim: 128,
+            k: 10,
+        }
+    }
+}
+
+/// One dispatch decision, for EDF-order verification.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchEntry {
+    pub class: u8,
+    pub priority: u8,
+    pub at_us: u64,
+    pub deadline_us: u64,
+    pub arrival_us: u64,
+}
+
+/// What a serving run produced.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub classes: Vec<ClassOutcome>,
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub requeued: u64,
+    /// First offer → last terminal outcome, virtual us.
+    pub elapsed_us: u64,
+    pub power: PowerReport,
+    pub alerts: Vec<Alert>,
+    pub dispatch_log: Vec<DispatchEntry>,
+    /// Calibrated capacity (overload 1.0 offered rate), requests/s.
+    pub capacity_rps: f64,
+    pub offered_rps: f64,
+    /// Exactly-once terminal accounting held for every class.
+    pub accounting_ok: bool,
+}
+
+#[derive(Debug, Clone)]
+struct InferBatch {
+    reqs: Vec<Request>,
+}
+
+#[derive(Debug, Clone)]
+struct MatchBatch {
+    id: u64,
+    reqs: Vec<Request>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum SEv {
+    Arrival(u32),
+    InferDone(u64),
+    MatchDone(u64),
+    Hotplug(u32),
+    HealthTick,
+}
+
+/// A serving session over one mission profile.
+pub struct ServeSession {
+    cfg: ServeConfig,
+    o: Orchestrator,
+    /// Inference chain, slot order (slot i holds `stage_uids[i]`).
+    stage_uids: Vec<u64>,
+    index: GalleryIndex,
+    match_res: Resource,
+    flow: CreditFlow,
+    adm: AdmissionController,
+    slo: SloTracker,
+    q: CompletionQueue<SEv>,
+    reqs: Vec<Request>,
+    hp: Vec<HotplugEvent>,
+    infer_inflight: BTreeMap<u64, InferBatch>,
+    match_inflight: Option<MatchBatch>,
+    limbo: Vec<InferBatch>,
+    down: BTreeSet<u64>,
+    detached_slot: BTreeMap<u8, u64>,
+    next_batch: u64,
+    dispatch_log: Vec<DispatchEntry>,
+    requeued_total: u64,
+    t0: u64,
+    capacity_rps: f64,
+    offered_rps: f64,
+    /// (uid, busy_us) snapshot after calibration, before serving.
+    busy0: Vec<(u64, u64)>,
+}
+
+impl ServeSession {
+    pub fn new(cfg: ServeConfig) -> anyhow::Result<Self> {
+        cfg.profile.validate()?;
+        anyhow::ensure!(cfg.requests >= 1, "need at least one request");
+        anyhow::ensure!(cfg.requests <= u32::MAX as u64, "request count too large");
+        anyhow::ensure!(cfg.gallery >= 1 && cfg.dim >= 8, "gallery/dim too small");
+        anyhow::ensure!(cfg.overload > 0.0, "overload must be positive");
+        anyhow::ensure!(cfg.batch >= 1 && cfg.window >= 1 && cfg.k >= 1);
+
+        // The inference substrate: the paper's §4.2 face stack.
+        let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        let mut stage_uids = Vec::new();
+        for (i, cap) in [
+            CapDescriptor::face_detect(),
+            CapDescriptor::face_quality(),
+            CapDescriptor::face_embed(),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            stage_uids.push(o.plug(SlotId(i as u8), Cartridge::new(0, DeviceKind::Ncs2, cap))?);
+        }
+
+        // Enroll the starting gallery through the SoA upsert path.
+        let mut rng = Rng::new(cfg.seed ^ 0x9a11_e121_0c4e_5eed);
+        let mut index = GalleryIndex::with_capacity(cfg.dim, cfg.gallery);
+        for i in 0..cfg.gallery {
+            index.upsert(format!("id{i}"), &rng.unit_vec(cfg.dim));
+        }
+
+        // Calibrate pipeline capacity with a real engine run at the same
+        // batch/window, so "overload 1.0" means what the event-driven
+        // engine actually sustains through its credit windows.
+        let cal_cfg = EngineConfig::batched(cfg.batch).with_window(cfg.window).with_warmup(4);
+        let cal = o.run_pipelined_engine(&VideoSource::paper_stream(cfg.seed), 24, cal_cfg);
+        let head_svc = o.carts[&stage_uids[0]].service_us.max(1);
+        let infer_cap_rps = if cal.fps > 0.0 { cal.fps } else { 1e6 / head_svc as f64 };
+        let identify_cap_rps = 1e6 / scan_pass_us(cfg.gallery, cfg.dim, 1) as f64;
+
+        let ident_share: f64 = cfg
+            .profile
+            .classes
+            .iter()
+            .filter(|c| c.kind == RequestKind::Identify)
+            .map(|c| c.share)
+            .sum();
+        let infer_share = (1.0 - ident_share).max(0.0);
+        let denom = ident_share / identify_cap_rps + infer_share / infer_cap_rps;
+        let capacity_rps = 1.0 / denom.max(1e-9);
+        let offered_rps = cfg.overload * capacity_rps;
+
+        let t0 = o.clock.now();
+        let reqs = traffic::generate(&cfg.profile, cfg.seed, cfg.requests, offered_rps, t0);
+        let adm = AdmissionController::new(&cfg.profile, capacity_rps);
+        let slo = SloTracker::new(cfg.requests, cfg.profile.classes.len());
+        let mut flow = CreditFlow::new(cfg.window);
+        flow.register(stage_uids[0]);
+
+        let mut busy0: Vec<(u64, u64)> = stage_uids
+            .iter()
+            .map(|&uid| (uid, o.carts[&uid].timeline.busy_us()))
+            .collect();
+        busy0.sort_by_key(|&(uid, _)| uid);
+
+        Ok(ServeSession {
+            cfg,
+            o,
+            stage_uids,
+            index,
+            match_res: Resource::new(),
+            flow,
+            adm,
+            slo,
+            q: CompletionQueue::new(),
+            reqs,
+            hp: Vec::new(),
+            infer_inflight: BTreeMap::new(),
+            match_inflight: None,
+            limbo: Vec::new(),
+            down: BTreeSet::new(),
+            detached_slot: BTreeMap::new(),
+            next_batch: 0,
+            dispatch_log: Vec::new(),
+            requeued_total: 0,
+            t0,
+            capacity_rps,
+            offered_rps,
+            busy0,
+        })
+    }
+
+    /// Calibrated overload-1.0 offered rate, requests/s.
+    pub fn capacity_rps(&self) -> f64 {
+        self.capacity_rps
+    }
+
+    /// Run to completion.  `events` are hot-plug actions with `at_us`
+    /// *relative to serve start* (mission-trace convention); the OS
+    /// notices them after the usual debounce/enumeration latency.
+    pub fn run(mut self, events: Vec<HotplugEvent>) -> ServeOutcome {
+        let t0 = self.t0;
+        for (i, ev) in events.iter().enumerate() {
+            self.q.push(t0 + ev.visible_at(), SEv::Hotplug(i as u32));
+        }
+        self.hp = events;
+        for i in 0..self.reqs.len() {
+            self.q.push(self.reqs[i].arrival_us, SEv::Arrival(i as u32));
+        }
+        self.q.push(t0 + TICK_US, SEv::HealthTick);
+
+        while let Some(c) = self.q.pop() {
+            let now = c.at_us;
+            self.o.clock.advance_to(now);
+            match c.payload {
+                SEv::Arrival(i) => self.on_arrival(i as usize, now),
+                SEv::MatchDone(id) => self.on_match_done(id, now),
+                SEv::InferDone(id) => self.on_infer_done(id, now),
+                SEv::Hotplug(i) => self.on_hotplug(i as usize, now),
+                SEv::HealthTick => self.on_tick(now),
+            }
+            self.pump(now);
+        }
+        self.finish()
+    }
+
+    // ------------------------------------------------------------- events
+
+    fn on_arrival(&mut self, i: usize, now: u64) {
+        let req = self.reqs[i];
+        self.slo.offered(&req);
+        match self.adm.offer(req, now) {
+            Admission::Admitted => {}
+            Admission::Shed(reason) => self.slo.shed(&req, reason, now),
+        }
+    }
+
+    fn on_match_done(&mut self, id: u64, now: u64) {
+        if self.match_inflight.as_ref().map(|b| b.id) != Some(id) {
+            return;
+        }
+        let b = self.match_inflight.take().unwrap();
+        for req in &b.reqs {
+            self.slo.completed(req, now);
+        }
+    }
+
+    fn on_infer_done(&mut self, id: u64, now: u64) {
+        // A batch evicted to limbo was removed from the in-flight map, so
+        // its (now stale) completion event misses here and is ignored.
+        let Some(b) = self.infer_inflight.remove(&id) else { return };
+        for req in &b.reqs {
+            if req.kind == RequestKind::Enroll {
+                let vec = self.embedding_for(req.id);
+                self.index.upsert(format!("enrolled-{}", req.id), &vec);
+            }
+            self.slo.completed(req, now);
+        }
+        self.flow.release(self.stage_uids[0]);
+        for &uid in &self.stage_uids {
+            if !self.down.contains(&uid) {
+                self.o.health.beat(uid, now);
+            }
+        }
+    }
+
+    fn on_hotplug(&mut self, i: usize, now: u64) {
+        let ev = self.hp[i];
+        let slot = ev.slot.0;
+        match ev.kind {
+            HotplugKind::Detach => {
+                let Some(&uid) = self.stage_uids.get(slot as usize) else { return };
+                if self.down.contains(&uid) {
+                    return;
+                }
+                self.down.insert(uid);
+                self.detached_slot.insert(slot, uid);
+                // In-flight pipeline work is cancelled, never completed:
+                // the batches move to limbo until eviction (health sweep)
+                // or re-attach requeues them.
+                let cancelled: Vec<u64> = self.infer_inflight.keys().copied().collect();
+                for id in cancelled {
+                    let b = self.infer_inflight.remove(&id).unwrap();
+                    self.limbo.push(b);
+                }
+                // The surviving stages abandon the cancelled batches too:
+                // clear their phantom reservations so requeued work does
+                // not queue behind service that will never happen.
+                for &stage in &self.stage_uids {
+                    if stage != uid {
+                        if let Some(c) = self.o.carts.get_mut(&stage) {
+                            c.timeline.reset_to(now);
+                        }
+                    }
+                }
+            }
+            HotplugKind::Attach => {
+                let Some(uid) = self.detached_slot.remove(&slot) else { return };
+                self.down.remove(&uid);
+                // The module returns empty: reload its model before any
+                // new work lands on its timeline.
+                let load = self.o.carts[&uid].model_load_us();
+                let cart = self.o.carts.get_mut(&uid).unwrap();
+                cart.timeline.reset_to(now);
+                cart.timeline.reserve(now, load);
+                // Fresh heartbeat registration: the stale pre-detach beat
+                // must not count against the recovered cartridge.
+                self.o.health.register(uid, now);
+                self.requeue_limbo(now);
+            }
+        }
+    }
+
+    fn on_tick(&mut self, now: u64) {
+        // Keep-alive: present cartridges heartbeat whether or not traffic
+        // reached them this tick; yanked ones cannot.
+        for &uid in &self.stage_uids {
+            if !self.down.contains(&uid) {
+                self.o.health.beat(uid, now);
+            }
+        }
+        // Queues must not hold unmeetable work while a server is down.
+        let mut overdue = Vec::new();
+        self.adm.expire_overdue(now, &mut overdue);
+        for req in overdue {
+            self.slo.shed(&req, ShedReason::Expired, now);
+        }
+        // HealthMonitor-driven eviction: a cartridge that stopped beating
+        // is declared dead, its cancelled work is requeued (exactly once),
+        // and it leaves the monitor until a re-attach registers it anew.
+        let dead = self.o.health.sweep(now);
+        for uid in dead {
+            if self.stage_uids.contains(&uid) {
+                self.requeue_limbo(now);
+                self.o.health.deregister(uid);
+            }
+        }
+        if self.slo.terminal_count < self.cfg.requests {
+            self.q.push(now + TICK_US, SEv::HealthTick);
+        }
+    }
+
+    /// Requeue evicted in-flight work.  First eviction of a request puts
+    /// it back in its class queue (original deadline, so EDF still holds);
+    /// a second eviction sheds it — requeue happens exactly once.
+    fn requeue_limbo(&mut self, now: u64) {
+        let batches: Vec<InferBatch> = self.limbo.drain(..).collect();
+        let head = self.stage_uids[0];
+        for b in batches {
+            for mut req in b.reqs {
+                if req.requeued {
+                    self.slo.shed(&req, ShedReason::Evicted, now);
+                } else {
+                    req.requeued = true;
+                    self.slo.requeued(&req);
+                    self.requeued_total += 1;
+                    self.adm.requeue(req);
+                }
+            }
+            self.flow.release(head);
+        }
+    }
+
+    // ----------------------------------------------------------- dispatch
+
+    fn pump(&mut self, now: u64) {
+        self.pump_match(now);
+        self.pump_infer(now);
+    }
+
+    /// Coalesce up to `batch` identify requests into one gallery pass.
+    fn pump_match(&mut self, now: u64) {
+        if self.match_inflight.is_some() {
+            return;
+        }
+        let rows = self.index.len();
+        // Dispatch guard at the max coalesced batch size (like the
+        // pipeline's): the pass the request actually rides may carry up
+        // to `batch` probes, and the guard must cover that completion.
+        let est = scan_pass_us(rows, self.cfg.dim, self.cfg.batch as usize);
+        let mut expired = Vec::new();
+        let mut reqs: Vec<Request> = Vec::new();
+        while reqs.len() < self.cfg.batch as usize {
+            match self.adm.pop_dispatchable(now, false, est, &mut expired) {
+                Some(r) => reqs.push(r),
+                None => break,
+            }
+        }
+        for req in expired {
+            self.slo.shed(&req, ShedReason::Expired, now);
+        }
+        if reqs.is_empty() {
+            return;
+        }
+        // The actual engine call: one pass scores the whole batch.
+        let probes: Vec<Vec<f32>> = reqs.iter().map(|r| self.probe_for(r.id)).collect();
+        let refs: Vec<&[f32]> = probes.iter().map(|p| p.as_slice()).collect();
+        let hits = self.index.top_k_batch(&refs, self.cfg.k);
+        debug_assert_eq!(hits.len(), reqs.len());
+        debug_assert!(hits.iter().all(|h| !h.is_empty()));
+        let (_, done) = self.match_res.reserve(now, scan_pass_us(rows, self.cfg.dim, reqs.len()));
+        for r in &reqs {
+            self.log_dispatch(r, now);
+        }
+        let id = self.next_batch;
+        self.next_batch += 1;
+        self.match_inflight = Some(MatchBatch { id, reqs });
+        self.q.push(done, SEv::MatchDone(id));
+    }
+
+    /// Batch inference requests onto the cartridge chain under the credit
+    /// window.
+    fn pump_infer(&mut self, now: u64) {
+        if !self.down.is_empty() {
+            return; // pipeline broken: requests wait (and expire typed)
+        }
+        let head = self.stage_uids[0];
+        loop {
+            if !self.flow.try_acquire(head) {
+                return;
+            }
+            // Dispatch guard: estimated completion = wait for the head
+            // timeline + the full chain for a max-size batch.  A request
+            // that cannot meet its deadline under that estimate is shed
+            // now instead of dispatched to miss.
+            let head_wait = self.o.carts[&head].timeline.next_free().saturating_sub(now);
+            let est = head_wait + self.chain_est_us(self.cfg.batch);
+            let mut expired = Vec::new();
+            let mut reqs: Vec<Request> = Vec::new();
+            while reqs.len() < self.cfg.batch as usize {
+                match self.adm.pop_dispatchable(now, true, est, &mut expired) {
+                    Some(r) => reqs.push(r),
+                    None => break,
+                }
+            }
+            for req in expired {
+                self.slo.shed(&req, ShedReason::Expired, now);
+            }
+            if reqs.is_empty() {
+                self.flow.release(head);
+                return;
+            }
+            let count = reqs.len() as u64;
+            let mut t = now;
+            for &uid in &self.stage_uids {
+                let cart = self.o.carts.get_mut(&uid).unwrap();
+                let handoff = stream_handoff_us(cart.kind);
+                let dur = cart.service_us * count;
+                let (_, done) = cart.timeline.reserve(t + handoff, dur);
+                t = done;
+            }
+            t += TAIL_US;
+            for r in &reqs {
+                self.log_dispatch(r, now);
+            }
+            let id = self.next_batch;
+            self.next_batch += 1;
+            self.infer_inflight.insert(id, InferBatch { reqs });
+            self.q.push(t, SEv::InferDone(id));
+        }
+    }
+
+    /// Full-chain service estimate for a `count`-request batch.
+    fn chain_est_us(&self, count: u32) -> u64 {
+        let mut t = 0;
+        for &uid in &self.stage_uids {
+            let c = &self.o.carts[&uid];
+            t += stream_handoff_us(c.kind) + c.service_us * count.max(1) as u64;
+        }
+        t + TAIL_US
+    }
+
+    fn log_dispatch(&mut self, req: &Request, now: u64) {
+        self.dispatch_log.push(DispatchEntry {
+            class: req.class,
+            priority: req.priority,
+            at_us: now,
+            deadline_us: req.deadline_us,
+            arrival_us: req.arrival_us,
+        });
+    }
+
+    /// Deterministic probe for an identify request: a noisy copy of an
+    /// enrolled row (the identification workload).
+    fn probe_for(&self, id: u64) -> Vec<f32> {
+        let mut rng = Rng::new(self.cfg.seed ^ id.wrapping_mul(0x85eb_ca6b_9e37_79b9));
+        let row = (rng.next_u64() as usize) % self.index.len().max(1);
+        self.index.row(row).iter().map(|v| v + 0.05 * rng.normal()).collect()
+    }
+
+    /// Deterministic embedding for an enroll request.
+    fn embedding_for(&self, id: u64) -> Vec<f32> {
+        let mut rng = Rng::new(self.cfg.seed ^ id.wrapping_mul(0xc2b2_ae3d_27d4_eb4f));
+        rng.unit_vec(self.cfg.dim)
+    }
+
+    // ------------------------------------------------------------- report
+
+    fn finish(self) -> ServeOutcome {
+        let elapsed_us = self.slo.last_terminal_us.saturating_sub(self.t0).max(1);
+        let classes = self.slo.summarize(&self.cfg.profile, elapsed_us);
+        let offered: u64 = classes.iter().map(|c| c.offered).sum();
+        let completed: u64 = classes.iter().map(|c| c.completed).sum();
+        let shed: u64 = classes.iter().map(|c| c.shed).sum();
+
+        // Power over the serving horizon: accelerator busy deltas (sorted
+        // by uid for a deterministic f64 sum) plus the gallery-scan load
+        // on the storage cartridge.
+        let mut devices: Vec<(u64, DeviceProfile)> = self
+            .busy0
+            .iter()
+            .map(|&(uid, b0)| {
+                let busy = self.o.carts[&uid].timeline.busy_us().saturating_sub(b0);
+                (busy.min(elapsed_us), self.o.carts[&uid].profile)
+            })
+            .collect();
+        devices.push((self.match_res.busy_us().min(elapsed_us), DeviceProfile::storage()));
+        let power = PowerModel::default().report(&devices, elapsed_us, completed);
+
+        ServeOutcome {
+            classes,
+            offered,
+            completed,
+            shed,
+            requeued: self.requeued_total,
+            elapsed_us,
+            power,
+            alerts: self.o.health.alerts.clone(),
+            dispatch_log: self.dispatch_log,
+            capacity_rps: self.capacity_rps,
+            offered_rps: self.offered_rps,
+            accounting_ok: self.slo.accounting_holds(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::topology::SlotId;
+
+    fn small_cfg(profile: MissionProfile, overload: f64, requests: u64) -> ServeConfig {
+        let mut cfg = ServeConfig::new(profile);
+        cfg.requests = requests;
+        cfg.overload = overload;
+        cfg.gallery = 512;
+        cfg.dim = 32;
+        cfg.seed = 11;
+        cfg
+    }
+
+    #[test]
+    fn smoke_run_completes_and_accounts() {
+        let out = ServeSession::new(small_cfg(MissionProfile::checkpoint(), 1.0, 80))
+            .unwrap()
+            .run(vec![]);
+        assert!(out.accounting_ok, "offered == completed + shed per class");
+        assert_eq!(out.offered, 80);
+        assert_eq!(out.offered, out.completed + out.shed);
+        assert!(out.completed > 0);
+        assert!(out.elapsed_us > 0);
+        assert!(out.power.total_w > 0.0);
+        assert!(out.power.frames_per_joule > 0.0);
+    }
+
+    #[test]
+    fn underload_mostly_meets_deadlines() {
+        let out = ServeSession::new(small_cfg(MissionProfile::checkpoint(), 0.5, 100))
+            .unwrap()
+            .run(vec![]);
+        let on_time: u64 = out.classes.iter().map(|c| c.on_time).sum();
+        assert!(
+            on_time as f64 >= 0.85 * out.offered as f64,
+            "0.5x load should serve nearly everything on time: {on_time}/{}",
+            out.offered
+        );
+    }
+
+    #[test]
+    fn heavy_overload_sheds_but_never_drops_silently() {
+        let out = ServeSession::new(small_cfg(MissionProfile::disaster_response(), 8.0, 150))
+            .unwrap()
+            .run(vec![]);
+        assert!(out.accounting_ok);
+        assert!(out.shed > 0, "8x offered load must shed");
+        assert!(out.completed > 0, "overload must not starve the servers");
+        // Typed shedding: every shed is attributed to a reason.
+        let typed: u64 = out
+            .classes
+            .iter()
+            .map(|c| c.shed_rate_limited + c.shed_queue_full + c.shed_expired + c.shed_evicted)
+            .sum();
+        assert_eq!(typed, out.shed);
+    }
+
+    #[test]
+    fn detach_then_immediate_reattach_requeues_exactly_once() {
+        // 1.5x load keeps the pipeline backlogged, so the detach is
+        // guaranteed to catch batches in flight.
+        let cfg = small_cfg(MissionProfile::disaster_response(), 1.5, 200);
+        let session = ServeSession::new(cfg).unwrap();
+        let events = vec![
+            HotplugEvent { at_us: 1_000_000, slot: SlotId(0), kind: HotplugKind::Detach, uid: 0 },
+            HotplugEvent { at_us: 1_000_000, slot: SlotId(0), kind: HotplugKind::Attach, uid: 0 },
+        ];
+        let out = session.run(events);
+        assert!(out.accounting_ok);
+        assert!(out.requeued > 0, "in-flight work at detach must requeue");
+        assert!(out.requeued <= 4, "requeue bounded by window x batch");
+        // Quick re-attach: no eviction alert needed.
+        assert!(out.alerts.is_empty(), "unexpected alerts: {:?}", out.alerts);
+    }
+
+    #[test]
+    fn delayed_reattach_evicts_via_health_sweep_with_one_alert() {
+        let cfg = small_cfg(MissionProfile::disaster_response(), 1.5, 250);
+        let session = ServeSession::new(cfg).unwrap();
+        let events = vec![
+            HotplugEvent { at_us: 1_000_000, slot: SlotId(0), kind: HotplugKind::Detach, uid: 0 },
+            HotplugEvent { at_us: 3_000_000, slot: SlotId(0), kind: HotplugKind::Attach, uid: 0 },
+        ];
+        let out = session.run(events);
+        assert!(out.accounting_ok);
+        assert_eq!(
+            out.alerts.len(),
+            1,
+            "exactly the eviction alert, none after re-attach: {:?}",
+            out.alerts
+        );
+        assert!(out.alerts[0].text.contains("stopped responding"));
+        assert!(out.completed > 0, "serving resumes after re-attach");
+    }
+
+    #[test]
+    fn same_seed_same_outcome() {
+        let run = |seed| {
+            let mut cfg = small_cfg(MissionProfile::watchlist(), 2.0, 120);
+            cfg.seed = seed;
+            ServeSession::new(cfg).unwrap().run(vec![])
+        };
+        let (a, b) = (run(5), run(5));
+        assert_eq!(a.offered, b.offered);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.elapsed_us, b.elapsed_us);
+        for (x, y) in a.classes.iter().zip(&b.classes) {
+            assert_eq!((x.p50_us, x.p99_us, x.on_time), (y.p50_us, y.p99_us, y.on_time));
+            assert!(x.goodput_rps.to_bits() == y.goodput_rps.to_bits());
+        }
+        assert!(a.power.total_w.to_bits() == run(5).power.total_w.to_bits());
+        let c = run(6);
+        assert!(a.completed != c.completed || a.elapsed_us != c.elapsed_us);
+    }
+
+    #[test]
+    fn scan_cost_amortizes_across_the_batch() {
+        let one = scan_pass_us(10_000, 128, 1);
+        let four = scan_pass_us(10_000, 128, 4);
+        assert!(four < 4 * one, "batch pass must beat 4 single passes");
+        assert!(four > one, "more probes still cost more");
+    }
+}

@@ -1,0 +1,310 @@
+//! Per-class SLO accounting with exactly-once terminal outcomes.
+//!
+//! Every offered request ends in exactly one terminal state — `Completed`
+//! or `Shed(reason)` — and the tracker enforces that as a state machine
+//! keyed by request id.  Latency percentiles are exact (sorted samples,
+//! not log buckets): the serving layer reports SLOs, and a 2× bucket edge
+//! is too coarse for a deadline conversation.
+
+use super::admission::ShedReason;
+use super::traffic::{MissionProfile, Request, RequestKind};
+
+/// Lifecycle of one offered request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReqState {
+    /// Not yet offered to admission.
+    Unseen,
+    /// Offered; no terminal outcome yet (queued or in flight).
+    Open,
+    /// Exactly one terminal outcome recorded.
+    Terminal,
+}
+
+/// Raw per-class tallies.
+#[derive(Debug, Clone, Default)]
+pub struct ClassSlo {
+    pub offered: u64,
+    pub completed: u64,
+    /// Completed at or before the deadline.
+    pub on_time: u64,
+    pub requeued: u64,
+    pub shed_rate_limited: u64,
+    pub shed_queue_full: u64,
+    pub shed_expired: u64,
+    pub shed_evicted: u64,
+    /// Completion latencies (arrival → completion), virtual us.
+    pub lat_us: Vec<u64>,
+}
+
+impl ClassSlo {
+    pub fn shed_total(&self) -> u64 {
+        self.shed_rate_limited + self.shed_queue_full + self.shed_expired + self.shed_evicted
+    }
+}
+
+/// Summarized per-class SLO row (what the report serializes).
+#[derive(Debug, Clone)]
+pub struct ClassOutcome {
+    pub name: &'static str,
+    pub kind: RequestKind,
+    pub priority: u8,
+    pub offered: u64,
+    pub completed: u64,
+    pub on_time: u64,
+    pub shed: u64,
+    pub requeued: u64,
+    pub shed_rate_limited: u64,
+    pub shed_queue_full: u64,
+    pub shed_expired: u64,
+    pub shed_evicted: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// On-time completions per second over the serving horizon.
+    pub goodput_rps: f64,
+    /// Fraction of *completed* requests that missed their deadline.
+    pub deadline_miss_rate: f64,
+    /// Fraction of *offered* requests shed.
+    pub shed_rate: f64,
+}
+
+/// Exact percentile over an already-sorted sample set.
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 * p / 100.0).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// The tracker: terminal-outcome state machine + per-class tallies.
+#[derive(Debug, Clone)]
+pub struct SloTracker {
+    state: Vec<ReqState>,
+    classes: Vec<ClassSlo>,
+    /// Double-terminal / terminal-before-offer transitions observed (must
+    /// stay 0; counted instead of panicking so overload tests can assert).
+    pub violations: u64,
+    pub terminal_count: u64,
+    pub last_terminal_us: u64,
+}
+
+impl SloTracker {
+    pub fn new(n_requests: u64, n_classes: usize) -> Self {
+        SloTracker {
+            state: vec![ReqState::Unseen; n_requests as usize],
+            classes: vec![ClassSlo::default(); n_classes],
+            violations: 0,
+            terminal_count: 0,
+            last_terminal_us: 0,
+        }
+    }
+
+    fn class_mut(&mut self, req: &Request) -> &mut ClassSlo {
+        &mut self.classes[req.class as usize]
+    }
+
+    pub fn offered(&mut self, req: &Request) {
+        match self.state.get(req.id as usize) {
+            Some(ReqState::Unseen) => {
+                self.state[req.id as usize] = ReqState::Open;
+                self.class_mut(req).offered += 1;
+            }
+            _ => self.violations += 1,
+        }
+    }
+
+    fn close(&mut self, req: &Request, now_us: u64) -> bool {
+        match self.state.get(req.id as usize) {
+            Some(ReqState::Open) => {
+                self.state[req.id as usize] = ReqState::Terminal;
+                self.terminal_count += 1;
+                self.last_terminal_us = self.last_terminal_us.max(now_us);
+                true
+            }
+            _ => {
+                self.violations += 1;
+                false
+            }
+        }
+    }
+
+    pub fn completed(&mut self, req: &Request, now_us: u64) {
+        if !self.close(req, now_us) {
+            return;
+        }
+        let lat = now_us.saturating_sub(req.arrival_us);
+        let on_time = now_us <= req.deadline_us;
+        let c = self.class_mut(req);
+        c.completed += 1;
+        if on_time {
+            c.on_time += 1;
+        }
+        c.lat_us.push(lat);
+    }
+
+    pub fn shed(&mut self, req: &Request, reason: ShedReason, now_us: u64) {
+        if !self.close(req, now_us) {
+            return;
+        }
+        let c = self.class_mut(req);
+        match reason {
+            ShedReason::RateLimited => c.shed_rate_limited += 1,
+            ShedReason::QueueFull => c.shed_queue_full += 1,
+            ShedReason::Expired => c.shed_expired += 1,
+            ShedReason::Evicted => c.shed_evicted += 1,
+        }
+    }
+
+    /// A request went back into the queue after eviction (not terminal).
+    pub fn requeued(&mut self, req: &Request) {
+        self.class_mut(req).requeued += 1;
+    }
+
+    pub fn class(&self, i: usize) -> &ClassSlo {
+        &self.classes[i]
+    }
+
+    /// Per-class accounting identity: every offered request has exactly
+    /// one terminal outcome.
+    pub fn accounting_holds(&self) -> bool {
+        self.violations == 0
+            && self
+                .classes
+                .iter()
+                .all(|c| c.offered == c.completed + c.shed_total())
+    }
+
+    /// Collapse into report rows.  `elapsed_us` is the serving horizon
+    /// (first offer → last terminal outcome).
+    pub fn summarize(&self, profile: &MissionProfile, elapsed_us: u64) -> Vec<ClassOutcome> {
+        let elapsed_s = (elapsed_us.max(1)) as f64 / 1e6;
+        profile
+            .classes
+            .iter()
+            .zip(&self.classes)
+            .map(|(spec, c)| {
+                let mut lat = c.lat_us.clone();
+                lat.sort_unstable();
+                ClassOutcome {
+                    name: spec.name,
+                    kind: spec.kind,
+                    priority: spec.priority,
+                    offered: c.offered,
+                    completed: c.completed,
+                    on_time: c.on_time,
+                    shed: c.shed_total(),
+                    requeued: c.requeued,
+                    shed_rate_limited: c.shed_rate_limited,
+                    shed_queue_full: c.shed_queue_full,
+                    shed_expired: c.shed_expired,
+                    shed_evicted: c.shed_evicted,
+                    p50_us: percentile(&lat, 50.0),
+                    p99_us: percentile(&lat, 99.0),
+                    goodput_rps: c.on_time as f64 / elapsed_s,
+                    deadline_miss_rate: if c.completed > 0 {
+                        (c.completed - c.on_time) as f64 / c.completed as f64
+                    } else {
+                        0.0
+                    },
+                    shed_rate: if c.offered > 0 {
+                        c.shed_total() as f64 / c.offered as f64
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::traffic::MissionProfile;
+
+    fn req(id: u64, class: u8) -> Request {
+        Request {
+            id,
+            tenant: 0,
+            class,
+            kind: RequestKind::Identify,
+            priority: 0,
+            arrival_us: 1_000,
+            deadline_us: 101_000,
+            requeued: false,
+        }
+    }
+
+    #[test]
+    fn exactly_once_identity_holds() {
+        let mut t = SloTracker::new(4, 1);
+        for i in 0..4 {
+            t.offered(&req(i, 0));
+        }
+        t.completed(&req(0, 0), 50_000);
+        t.completed(&req(1, 0), 200_000); // past deadline: completed, missed
+        t.shed(&req(2, 0), ShedReason::RateLimited, 1_000);
+        t.shed(&req(3, 0), ShedReason::Expired, 300_000);
+        assert!(t.accounting_holds());
+        let c = t.class(0);
+        assert_eq!((c.offered, c.completed, c.on_time), (4, 2, 1));
+        assert_eq!(c.shed_total(), 2);
+        assert_eq!(t.terminal_count, 4);
+        assert_eq!(t.last_terminal_us, 300_000);
+    }
+
+    #[test]
+    fn double_terminal_is_a_violation_not_a_panic() {
+        let mut t = SloTracker::new(1, 1);
+        t.offered(&req(0, 0));
+        t.completed(&req(0, 0), 10_000);
+        t.shed(&req(0, 0), ShedReason::Evicted, 20_000);
+        assert_eq!(t.violations, 1);
+        assert!(!t.accounting_holds());
+    }
+
+    #[test]
+    fn terminal_before_offer_is_a_violation() {
+        let mut t = SloTracker::new(1, 1);
+        t.completed(&req(0, 0), 10_000);
+        assert_eq!(t.violations, 1);
+    }
+
+    #[test]
+    fn summarize_computes_exact_percentiles_and_rates() {
+        let p = MissionProfile::checkpoint();
+        let mut t = SloTracker::new(100, p.classes.len());
+        for i in 0..100 {
+            let mut r = req(i, 0);
+            r.arrival_us = 0;
+            r.deadline_us = 250_000;
+            t.offered(&r);
+            if i < 90 {
+                t.completed(&r, (i + 1) * 1_000); // 1..90 ms
+            } else {
+                t.shed(&r, ShedReason::QueueFull, 0);
+            }
+        }
+        let rows = t.summarize(&p, 1_000_000);
+        let r = &rows[0];
+        assert_eq!(r.p50_us, 45_000);
+        assert_eq!(r.p99_us, 90_000);
+        assert_eq!(r.offered, 100);
+        assert_eq!(r.completed, 90);
+        assert!((r.shed_rate - 0.10).abs() < 1e-12);
+        assert!((r.goodput_rps - 90.0).abs() < 1e-9);
+        assert_eq!(r.deadline_miss_rate, 0.0);
+        // Untouched classes summarize to zeros, not NaNs.
+        assert_eq!(rows[1].p99_us, 0);
+        assert_eq!(rows[1].goodput_rps, 0.0);
+        assert_eq!(rows[1].deadline_miss_rate, 0.0);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        assert_eq!(percentile(&[], 99.0), 0);
+        assert_eq!(percentile(&[7], 50.0), 7);
+        assert_eq!(percentile(&[1, 2, 3, 4], 100.0), 4);
+        assert_eq!(percentile(&[1, 2, 3, 4], 1.0), 1);
+    }
+}

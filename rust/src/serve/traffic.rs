@@ -1,0 +1,433 @@
+//! Open-loop traffic generation: seeded arrival processes over mission
+//! profiles.
+//!
+//! A [`MissionProfile`] is the operator story as a traffic contract: which
+//! tenants share the unit, what request classes they send (with priority
+//! and relative deadline), and what shape the arrival process takes.  The
+//! generator is open-loop — arrivals do not wait for service — and fully
+//! deterministic per seed, so the same profile + seed reproduces the same
+//! offered stream bit-for-bit.
+
+use crate::util::rng::Rng;
+
+/// What a request asks the unit to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Probe the gallery: embed is already available, score + top-k.
+    Identify,
+    /// Add an identity: run the embed pipeline, then upsert the gallery.
+    Enroll,
+    /// Run an inference artifact over a frame (detection/quality/embed).
+    ArtifactRun,
+}
+
+impl RequestKind {
+    /// Whether this kind rides the accelerator pipeline (vs the gallery
+    /// scan path on the storage cartridge).
+    pub fn is_inference(self) -> bool {
+        matches!(self, RequestKind::Enroll | RequestKind::ArtifactRun)
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RequestKind::Identify => "identify",
+            RequestKind::Enroll => "enroll",
+            RequestKind::ArtifactRun => "artifact-run",
+        }
+    }
+}
+
+/// One offered request.  `id` indexes the generated stream (0..n) and is
+/// the key for exactly-once terminal accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub id: u64,
+    /// Index into the profile's tenant list.
+    pub tenant: u8,
+    /// Index into the profile's class list.
+    pub class: u8,
+    pub kind: RequestKind,
+    /// Lower = more urgent; strict priority across classes.
+    pub priority: u8,
+    /// Capture/arrival time, virtual us.
+    pub arrival_us: u64,
+    /// Absolute deadline, virtual us.
+    pub deadline_us: u64,
+    /// Set when eviction put this request back in the queue (at most once).
+    pub requeued: bool,
+}
+
+/// A tenant sharing the unit, with its admission contract.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: &'static str,
+    /// Fraction of the profile's offered traffic from this tenant.
+    pub share: f64,
+    /// Sustained admission rate as a fraction of system capacity.
+    pub rate_factor: f64,
+    /// Token-bucket burst allowance, requests.
+    pub burst: u32,
+}
+
+/// A request class: one kind at one priority with one relative deadline.
+#[derive(Debug, Clone)]
+pub struct ClassSpec {
+    pub name: &'static str,
+    pub kind: RequestKind,
+    pub priority: u8,
+    /// Relative deadline from arrival, virtual us.
+    pub deadline_us: u64,
+    /// Fraction of offered requests in this class.
+    pub share: f64,
+}
+
+/// Shape of the arrival process (all mean-preserving: the long-run rate is
+/// the configured rate; the shape moves burstiness around it).
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalShape {
+    /// Memoryless arrivals at constant rate.
+    Poisson,
+    /// Square-wave rate modulation: `factor`× the mean rate for the first
+    /// `duty` of each `period_us`, proportionally quieter the rest.
+    Bursty { factor: f64, duty: f64, period_us: u64 },
+    /// Triangle-wave rate modulation between `trough`× and
+    /// `(2 - trough)`× of the mean over `period_us` (a compressed diurnal
+    /// cycle).
+    Diurnal { trough: f64, period_us: u64 },
+}
+
+impl ArrivalShape {
+    /// Instantaneous rate multiplier at virtual time `t_us`.
+    fn multiplier(&self, t_us: u64) -> f64 {
+        match *self {
+            ArrivalShape::Poisson => 1.0,
+            ArrivalShape::Bursty { factor, duty, period_us } => {
+                let phase = (t_us % period_us.max(1)) as f64 / period_us.max(1) as f64;
+                if phase < duty {
+                    factor
+                } else {
+                    // Mean-preserving quiet floor.
+                    ((1.0 - factor * duty) / (1.0 - duty)).max(0.05)
+                }
+            }
+            ArrivalShape::Diurnal { trough, period_us } => {
+                let phase = (t_us % period_us.max(1)) as f64 / period_us.max(1) as f64;
+                let tri = 1.0 - (2.0 * phase - 1.0).abs(); // 0→1→0 over a period
+                trough + 2.0 * (1.0 - trough) * tri
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalShape::Poisson => "poisson",
+            ArrivalShape::Bursty { .. } => "bursty",
+            ArrivalShape::Diurnal { .. } => "diurnal",
+        }
+    }
+}
+
+/// A named mission: tenants + classes + arrival shape + queue bound.
+#[derive(Debug, Clone)]
+pub struct MissionProfile {
+    pub name: &'static str,
+    pub shape: ArrivalShape,
+    pub tenants: Vec<TenantSpec>,
+    pub classes: Vec<ClassSpec>,
+    /// Bound on each class queue (admitted-but-waiting requests).
+    pub queue_depth: usize,
+}
+
+impl MissionProfile {
+    /// Border checkpoint: identify-heavy, officers preempt travelers,
+    /// occasional enroll and audit inference.  Poisson arrivals.
+    pub fn checkpoint() -> Self {
+        MissionProfile {
+            name: "checkpoint",
+            shape: ArrivalShape::Poisson,
+            tenants: vec![
+                TenantSpec { name: "lane-a", share: 0.55, rate_factor: 0.9, burst: 24 },
+                TenantSpec { name: "lane-b", share: 0.45, rate_factor: 0.9, burst: 24 },
+            ],
+            classes: vec![
+                ClassSpec {
+                    name: "officer-identify",
+                    kind: RequestKind::Identify,
+                    priority: 0,
+                    deadline_us: 250_000,
+                    share: 0.5,
+                },
+                ClassSpec {
+                    name: "traveler-identify",
+                    kind: RequestKind::Identify,
+                    priority: 1,
+                    deadline_us: 500_000,
+                    share: 0.3,
+                },
+                ClassSpec {
+                    name: "lane-audit",
+                    kind: RequestKind::ArtifactRun,
+                    priority: 2,
+                    deadline_us: 1_500_000,
+                    share: 0.1,
+                },
+                ClassSpec {
+                    name: "enroll",
+                    kind: RequestKind::Enroll,
+                    priority: 3,
+                    deadline_us: 2_500_000,
+                    share: 0.1,
+                },
+            ],
+            queue_depth: 64,
+        }
+    }
+
+    /// Surveillance watchlist: inference-heavy streams with urgent hit
+    /// confirmation, diurnal load swing.
+    pub fn watchlist() -> Self {
+        MissionProfile {
+            name: "watchlist",
+            shape: ArrivalShape::Diurnal { trough: 0.35, period_us: 4_000_000 },
+            tenants: vec![
+                TenantSpec { name: "north-feed", share: 0.5, rate_factor: 0.8, burst: 32 },
+                TenantSpec { name: "south-feed", share: 0.3, rate_factor: 0.8, burst: 32 },
+                TenantSpec { name: "analyst", share: 0.2, rate_factor: 0.6, burst: 16 },
+            ],
+            classes: vec![
+                ClassSpec {
+                    name: "hit-confirm",
+                    kind: RequestKind::Identify,
+                    priority: 0,
+                    deadline_us: 200_000,
+                    share: 0.35,
+                },
+                ClassSpec {
+                    name: "stream-infer",
+                    kind: RequestKind::ArtifactRun,
+                    priority: 1,
+                    deadline_us: 1_000_000,
+                    share: 0.45,
+                },
+                ClassSpec {
+                    name: "sweep-identify",
+                    kind: RequestKind::Identify,
+                    priority: 2,
+                    deadline_us: 800_000,
+                    share: 0.1,
+                },
+                ClassSpec {
+                    name: "gallery-update",
+                    kind: RequestKind::Enroll,
+                    priority: 3,
+                    deadline_us: 5_000_000,
+                    share: 0.1,
+                },
+            ],
+            queue_depth: 128,
+        }
+    }
+
+    /// Disaster-response triage: bursty arrivals (sweep teams report in
+    /// waves), survivor detection as urgent as identification.
+    pub fn disaster_response() -> Self {
+        MissionProfile {
+            name: "disaster",
+            shape: ArrivalShape::Bursty { factor: 2.5, duty: 0.3, period_us: 2_000_000 },
+            tenants: vec![
+                TenantSpec { name: "triage-team", share: 0.6, rate_factor: 1.0, burst: 40 },
+                TenantSpec { name: "uav-feed", share: 0.4, rate_factor: 0.8, burst: 24 },
+            ],
+            classes: vec![
+                ClassSpec {
+                    name: "triage-identify",
+                    kind: RequestKind::Identify,
+                    priority: 0,
+                    deadline_us: 400_000,
+                    share: 0.4,
+                },
+                ClassSpec {
+                    name: "survivor-detect",
+                    kind: RequestKind::ArtifactRun,
+                    priority: 0,
+                    deadline_us: 1_200_000,
+                    share: 0.4,
+                },
+                ClassSpec {
+                    name: "field-enroll",
+                    kind: RequestKind::Enroll,
+                    priority: 1,
+                    deadline_us: 3_000_000,
+                    share: 0.2,
+                },
+            ],
+            queue_depth: 32,
+        }
+    }
+
+    /// The three shipped profiles, in the canonical report order.
+    pub fn all() -> Vec<MissionProfile> {
+        vec![Self::checkpoint(), Self::watchlist(), Self::disaster_response()]
+    }
+
+    /// Look up a profile by CLI name (with the obvious aliases).
+    pub fn by_name(name: &str) -> Option<MissionProfile> {
+        match name {
+            "checkpoint" => Some(Self::checkpoint()),
+            "watchlist" | "surveillance" => Some(Self::watchlist()),
+            "disaster" | "disaster-response" => Some(Self::disaster_response()),
+            _ => None,
+        }
+    }
+
+    /// Shares must describe a distribution (the generator samples them).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.tenants.is_empty() && !self.classes.is_empty());
+        let ts: f64 = self.tenants.iter().map(|t| t.share).sum();
+        let cs: f64 = self.classes.iter().map(|c| c.share).sum();
+        anyhow::ensure!((ts - 1.0).abs() < 1e-6, "tenant shares sum to {ts}");
+        anyhow::ensure!((cs - 1.0).abs() < 1e-6, "class shares sum to {cs}");
+        anyhow::ensure!(self.classes.len() <= u8::MAX as usize);
+        anyhow::ensure!(self.queue_depth >= 1);
+        Ok(())
+    }
+}
+
+/// FNV-1a over the profile name, so each profile gets an independent
+/// deterministic stream from the same user seed.
+fn mix_name(seed: u64, name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    seed ^ h
+}
+
+fn pick(shares: &[f64], u: f64) -> usize {
+    let mut acc = 0.0;
+    for (i, s) in shares.iter().enumerate() {
+        acc += s;
+        if u < acc {
+            return i;
+        }
+    }
+    shares.len() - 1
+}
+
+/// Generate `n` open-loop arrivals at mean rate `rate_rps`, starting at
+/// `t0_us`.  Arrival times are strictly by construction nondecreasing;
+/// tenant and class are sampled from the profile shares.
+pub fn generate(
+    profile: &MissionProfile,
+    seed: u64,
+    n: u64,
+    rate_rps: f64,
+    t0_us: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(mix_name(seed, profile.name));
+    let base_us = 1e6 / rate_rps.max(1e-6);
+    let tenant_shares: Vec<f64> = profile.tenants.iter().map(|t| t.share).collect();
+    let class_shares: Vec<f64> = profile.classes.iter().map(|c| c.share).collect();
+    let mut t = t0_us as f64;
+    let mut out = Vec::with_capacity(n as usize);
+    for id in 0..n {
+        let m = profile.shape.multiplier(t as u64);
+        // Exponential inter-arrival at the locally modulated rate.
+        let u = rng.f64().min(1.0 - 1e-12);
+        t += -(1.0 - u).ln() * base_us / m;
+        let tenant = pick(&tenant_shares, rng.f64()) as u8;
+        let class = pick(&class_shares, rng.f64()) as u8;
+        let spec = &profile.classes[class as usize];
+        let arrival_us = t as u64;
+        out.push(Request {
+            id,
+            tenant,
+            class,
+            kind: spec.kind,
+            priority: spec.priority,
+            arrival_us,
+            deadline_us: arrival_us + spec.deadline_us,
+            requeued: false,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_validate_and_cover_all_kinds() {
+        for p in MissionProfile::all() {
+            p.validate().unwrap();
+            assert!(p.classes.iter().any(|c| c.kind == RequestKind::Identify), "{}", p.name);
+            assert!(p.classes.iter().any(|c| c.kind.is_inference()), "{}", p.name);
+        }
+        assert_eq!(MissionProfile::all().len(), 3);
+    }
+
+    #[test]
+    fn by_name_resolves_aliases() {
+        assert_eq!(MissionProfile::by_name("checkpoint").unwrap().name, "checkpoint");
+        assert_eq!(MissionProfile::by_name("surveillance").unwrap().name, "watchlist");
+        assert_eq!(MissionProfile::by_name("disaster-response").unwrap().name, "disaster");
+        assert!(MissionProfile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_ordered() {
+        let p = MissionProfile::checkpoint();
+        let a = generate(&p, 42, 500, 100.0, 1_000);
+        let b = generate(&p, 42, 500, 100.0, 1_000);
+        assert_eq!(a.len(), 500);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_us, y.arrival_us);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.tenant, y.tenant);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival_us >= w[0].arrival_us, "arrivals must be ordered");
+        }
+        assert!(a[0].arrival_us >= 1_000);
+        let c = generate(&p, 43, 500, 100.0, 1_000);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival_us != y.arrival_us));
+    }
+
+    #[test]
+    fn mean_rate_is_roughly_preserved_by_all_shapes() {
+        for p in MissionProfile::all() {
+            let reqs = generate(&p, 7, 4_000, 200.0, 0);
+            let span_s = reqs.last().unwrap().arrival_us as f64 / 1e6;
+            let rate = reqs.len() as f64 / span_s.max(1e-9);
+            assert!(
+                (120.0..320.0).contains(&rate),
+                "{}: long-run rate {rate:.1} rps far from 200",
+                p.name
+            );
+        }
+    }
+
+    #[test]
+    fn deadlines_follow_class_spec() {
+        let p = MissionProfile::disaster_response();
+        for r in generate(&p, 1, 200, 50.0, 0) {
+            let spec = &p.classes[r.class as usize];
+            assert_eq!(r.deadline_us, r.arrival_us + spec.deadline_us);
+            assert_eq!(r.kind, spec.kind);
+            assert_eq!(r.priority, spec.priority);
+            assert!(!r.requeued);
+        }
+    }
+
+    #[test]
+    fn bursty_shape_actually_bursts() {
+        let shape = ArrivalShape::Bursty { factor: 2.5, duty: 0.3, period_us: 2_000_000 };
+        assert!(shape.multiplier(100_000) > 2.0);
+        assert!(shape.multiplier(1_500_000) < 0.5);
+        // Diurnal peaks mid-period.
+        let d = ArrivalShape::Diurnal { trough: 0.35, period_us: 4_000_000 };
+        assert!(d.multiplier(2_000_000) > d.multiplier(0));
+    }
+}

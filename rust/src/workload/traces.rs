@@ -112,4 +112,36 @@ mod tests {
         assert_eq!(events[0].at_us, 5_000_000);
         assert_eq!(events[1].at_us, 10_000_000);
     }
+
+    #[test]
+    fn disaster_response_swaps_the_head_mid_mission() {
+        // §5: 4s of debris detection, swap slot 0, 4s of person detection.
+        let t = MissionTrace::disaster_response();
+        assert_eq!(t.total_run_us(), 8_000_000);
+        let events = t.to_hotplug_events(9);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, HotplugKind::Detach);
+        assert_eq!(events[0].slot, SlotId(0));
+        assert_eq!(events[0].at_us, 4_000_000);
+        assert_eq!(events[1].kind, HotplugKind::Attach);
+        assert_eq!(events[1].slot, SlotId(0));
+        assert_eq!(events[1].at_us, 4_000_000, "re-insert lands in the same trace step");
+        assert_eq!(events[1].uid, 9, "placeholder uid filled by the runner");
+        // The OS sees the detach before the attach (enumeration latency).
+        assert!(events[0].visible_at() < events[1].visible_at());
+    }
+
+    #[test]
+    fn explicit_insert_uid_is_preserved() {
+        let t = MissionTrace {
+            name: "explicit".into(),
+            steps: vec![
+                TraceStep::Run { dur_us: 1_000 },
+                TraceStep::Insert { slot: SlotId(2), uid: 77 },
+            ],
+        };
+        let events = t.to_hotplug_events(5);
+        assert_eq!(events[0].uid, 77, "non-placeholder uid must not be overridden");
+        assert_eq!(events[0].at_us, 1_000);
+    }
 }

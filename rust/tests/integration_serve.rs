@@ -1,0 +1,119 @@
+//! End-to-end serving-layer integration: the §5 disaster-response mission
+//! trace driven through the `champd serve` machinery, plus the telemetry
+//! file contract for all three profiles.
+
+use champ::cli::serve::{serve_report, trace_events_for};
+use champ::metrics::report::ServeReport;
+use champ::serve::session::{ServeConfig, ServeSession};
+use champ::serve::traffic::MissionProfile;
+
+fn disaster_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::new(MissionProfile::disaster_response());
+    cfg.requests = 400;
+    cfg.overload = 1.5;
+    cfg.gallery = 512;
+    cfg.dim = 32;
+    cfg.seed = 3;
+    cfg
+}
+
+#[test]
+fn disaster_trace_detach_keeps_exactly_once_accounting() {
+    // MissionTrace::disaster_response(): run 4s, yank the head cartridge,
+    // re-insert it, run on.  The serving layer must cancel the in-flight
+    // pipeline work, requeue each cancelled request exactly once, and keep
+    // the offered == completed + shed identity intact through it all.
+    let events = trace_events_for(&MissionProfile::disaster_response());
+    assert_eq!(events.len(), 2, "trace: one detach + one re-attach");
+    let out = ServeSession::new(disaster_cfg()).unwrap().run(events);
+
+    assert!(out.accounting_ok, "dropped-exactly-once accounting violated");
+    assert_eq!(out.offered, 400);
+    assert_eq!(out.offered, out.completed + out.shed);
+    assert!(out.requeued > 0, "in-flight work at the detach must requeue");
+    assert!(out.requeued <= 4, "requeue bounded by window x batch (one eviction each)");
+    // One eviction: nothing is requeued twice, so nothing sheds as Evicted.
+    let evicted: u64 = out.classes.iter().map(|c| c.shed_evicted).sum();
+    assert_eq!(evicted, 0, "single eviction must not double-requeue");
+    // The mission continues after the swap: the run outlives the 4s detach
+    // plus the model reload, and inference work still completes.
+    assert!(out.elapsed_us > 5_000_000, "horizon {}us too short", out.elapsed_us);
+    let survivor = out.classes.iter().find(|c| c.name == "survivor-detect").unwrap();
+    assert!(survivor.completed > 0, "inference never recovered after re-attach");
+}
+
+#[test]
+fn disaster_trace_without_reattach_sheds_typed_not_silent() {
+    // Same mission, but the operator never re-inserts the cartridge: the
+    // health sweep evicts (one alert), requeued work that cannot be served
+    // expires typed, and the identify path keeps serving throughout.
+    let cfg = disaster_cfg();
+    let mut events = trace_events_for(&MissionProfile::disaster_response());
+    events.truncate(1); // keep only the detach
+    let out = ServeSession::new(cfg).unwrap().run(events);
+
+    assert!(out.accounting_ok);
+    assert_eq!(out.alerts.len(), 1, "exactly one eviction alert: {:?}", out.alerts);
+    assert!(out.alerts[0].text.contains("stopped responding"));
+    let triage = out.classes.iter().find(|c| c.name == "triage-identify").unwrap();
+    assert!(triage.completed > 0, "identify path must survive the pipeline loss");
+    let infer_shed: u64 = out
+        .classes
+        .iter()
+        .filter(|c| c.name != "triage-identify")
+        .map(|c| c.shed_expired + c.shed_evicted)
+        .sum();
+    assert!(infer_shed > 0, "unservable inference work must shed typed");
+}
+
+#[test]
+fn serve_report_covers_all_profiles_with_power_rows() {
+    let configs: Vec<ServeConfig> = MissionProfile::all()
+        .into_iter()
+        .map(|p| {
+            let mut cfg = ServeConfig::new(p);
+            cfg.requests = 80;
+            cfg.overload = 2.0;
+            cfg.gallery = 512;
+            cfg.dim = 32;
+            cfg.seed = 7;
+            cfg
+        })
+        .collect();
+    let (report, outcomes) = serve_report(configs, false).unwrap();
+    assert_eq!(outcomes.len(), 3);
+    assert_eq!(report.power.len(), 3);
+    for p in MissionProfile::all() {
+        for class in &p.classes {
+            let r = report
+                .find(p.name, class.name, 2.0)
+                .unwrap_or_else(|| panic!("{}/{} missing from report", p.name, class.name));
+            assert_eq!(r.offered, r.completed + r.shed, "accounting in the serialized row");
+            assert!(r.p50_us <= r.p99_us);
+        }
+        let pw = report
+            .power
+            .iter()
+            .find(|x| x.profile == p.name)
+            .unwrap_or_else(|| panic!("{} power row missing", p.name));
+        assert!(pw.total_w > 0.0, "{}: no power figure", p.name);
+        assert!(pw.frames_per_joule > 0.0, "{}: no efficiency figure", p.name);
+    }
+    // Schema v1 roundtrip through the file format.
+    let back = ServeReport::parse(&report.to_json_pretty()).unwrap();
+    assert_eq!(back.records, report.records);
+    assert_eq!(back.power, report.power);
+}
+
+#[test]
+fn trace_driven_serve_report_records_the_requeue() {
+    // The satellite contract: MissionTrace::disaster_response() end-to-end
+    // through the `champd serve` code path, requeue visible in telemetry.
+    let (report, outcomes) = serve_report(vec![disaster_cfg()], true).unwrap();
+    let requeued: u64 = report.records.iter().map(|r| r.requeued).sum();
+    assert!(requeued > 0, "trace requeue must surface in BENCH_serve.json");
+    assert_eq!(requeued, outcomes[0].1.requeued);
+    for r in &report.records {
+        assert_eq!(r.offered, r.completed + r.shed, "{}: row accounting", r.class);
+    }
+}
