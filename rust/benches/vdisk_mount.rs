@@ -2,8 +2,10 @@
 //!
 //! Cold mount pays the full verify walk (file read + superblock MAC +
 //! whole-image trailer MAC + manifest unseal) plus the first decrypt of
-//! every gallery block; a warm read serves the same blocks from the LRU
-//! cache.  Future sharding/caching PRs regress against these numbers.
+//! every gallery block; the par4 column streams the extent through the
+//! 4-worker parallel unseal pipeline; a warm read serves the same blocks
+//! from the sharded block cache.  `champd bench vdisk` is the guarded
+//! telemetry version of this sweep.
 
 mod common;
 
@@ -29,8 +31,9 @@ fn main() {
     let key = SealKey::from_passphrase("bench");
 
     println!(
-        "{:<9} | {:>10} | {:>13} | {:>13} | {:>13} | {:>8}",
-        "gallery", "image KiB", "mount us", "cold read us", "warm read us", "hit rate"
+        "{:<9} | {:>10} | {:>13} | {:>13} | {:>13} | {:>13} | {:>8}",
+        "gallery", "image KiB", "mount us", "cold read us", "par4 read us", "warm read us",
+        "hit rate"
     );
     for &n in &[128usize, 512, 2048] {
         let path = dir.join(format!("g{n}.vdisk"));
@@ -51,7 +54,17 @@ fn main() {
             assert!(img.load_gallery().unwrap().len() == n);
         });
 
-        // Warm read: same mount, blocks served from the LRU cache.
+        // Parallel streaming walk: 4 unseal workers, cache bypassed.
+        let img_par = MountedImage::mount(&path, &key).unwrap();
+        let par4 = common::time_it(2, 10, || {
+            let mut bytes = 0usize;
+            for b in img_par.extent_reader("gallery").unwrap().threads(4).bypass_cache() {
+                bytes += b.unwrap().len();
+            }
+            assert!(bytes > 0);
+        });
+
+        // Warm read: same mount, blocks served from the sharded cache.
         let img = MountedImage::mount_with_cache(&path, &key, 4096).unwrap();
         img.load_gallery().unwrap(); // populate
         let warm = common::time_it(3, 30, || {
@@ -59,11 +72,12 @@ fn main() {
         });
 
         println!(
-            "{:<9} | {:>10} | {:>13.1} | {:>13.1} | {:>13.1} | {:>7.1}%",
+            "{:<9} | {:>10} | {:>13.1} | {:>13.1} | {:>13.1} | {:>13.1} | {:>7.1}%",
             n,
             sum.total_len / 1024,
             mount.mean_us,
             cold.mean_us - mount.mean_us,
+            par4.mean_us,
             warm.mean_us,
             img.cache_stats().hit_rate() * 100.0
         );

@@ -228,6 +228,32 @@ impl GalleryIndex {
         }
     }
 
+    /// Insert or replace `id`'s row, letting `fill` write the components
+    /// straight into the SoA matrix — the zero-copy enrollment primitive
+    /// the streaming decoder and the bulk rotation use (no intermediate
+    /// per-row buffer; the matrix slice is the only destination touched).
+    /// The norm is computed from the filled slice in the same pass.
+    pub fn upsert_with(&mut self, id: &str, fill: impl FnOnce(&mut [f32])) -> usize {
+        match self.id_to_row.get(id) {
+            Some(&row) => {
+                let (lo, hi) = (row * self.dim, (row + 1) * self.dim);
+                fill(&mut self.data[lo..hi]);
+                self.inv_norms[row] = inv_norm_of(&self.data[lo..hi]);
+                row
+            }
+            None => {
+                let row = self.ids.len();
+                self.ids.push(id.to_string());
+                self.id_to_row.insert(id.to_string(), row);
+                let lo = self.data.len();
+                self.data.resize(lo + self.dim, 0.0);
+                fill(&mut self.data[lo..]);
+                self.inv_norms.push(inv_norm_of(&self.data[lo..]));
+                row
+            }
+        }
+    }
+
     /// Remove `id`, preserving the enrollment order of the other rows
     /// (O(n·dim) memmove — removal is rare; scans are the hot path).
     pub fn remove(&mut self, id: &str) -> bool {
@@ -514,6 +540,29 @@ mod tests {
         assert_eq!(idx.row(0), &[0.5, 0.5]);
         assert_eq!(idx.row_of("b"), Some(1));
         assert_eq!(idx.id_of(1), "b");
+    }
+
+    #[test]
+    fn upsert_with_matches_upsert() {
+        let mut a = GalleryIndex::new(3);
+        let mut b = GalleryIndex::new(3);
+        for (id, v) in [("x", [1.0f32, 2.0, 3.0]), ("y", [0.5, 0.0, -1.0]), ("x", [9.0, 8.0, 7.0])]
+        {
+            let ra = a.upsert(id, &v);
+            let rb = b.upsert_with(id, |dst| dst.copy_from_slice(&v));
+            assert_eq!(ra, rb);
+        }
+        assert_eq!(a.data(), b.data());
+        assert_eq!(a.len(), b.len());
+        for r in 0..a.len() {
+            assert_eq!(a.id_of(r), b.id_of(r));
+            // Norms come out bit-identical: same kernel, same input.
+            assert_eq!(
+                a.top_k(a.row(r), 2),
+                b.top_k(b.row(r), 2),
+                "row {r}: scoring must agree"
+            );
+        }
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! contract (SoA >= 5x naive at >= 100k identities; sharded >= 2x SoA at
 //! >= 1M).
 //!
+//! `champd bench vdisk` (see [`super::bench_vdisk`]) measures the sealed
+//! cartridge read pipeline — mount-to-first-match, parallel unseal MB/s,
+//! cache hit rate, bytes-copied-per-template — into `BENCH_vdisk.json`.
+//!
 //! Flags (scaling):
 //!   --frames N        source frames per point (default 200)
 //!   --max-devices N   sweep 1..=N accelerators (default 5)
@@ -414,8 +418,9 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("scaling") => run_scaling(args),
         Some("match") => run_match(args),
+        Some("vdisk") => super::bench_vdisk::run(args),
         other => anyhow::bail!(
-            "unknown bench target {other:?}; available: scaling, match"
+            "unknown bench target {other:?}; available: scaling, match, vdisk"
         ),
     }
 }

@@ -5,6 +5,7 @@
 //! A repeated flag follows the conventional "last one wins" rule.
 
 pub mod bench;
+pub mod bench_vdisk;
 pub mod serve;
 pub mod vdisk;
 

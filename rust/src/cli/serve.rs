@@ -21,6 +21,10 @@
 //!   --k K             top-k per identify probe (default 10)
 //!   --trace           apply the profile's mission trace (disaster: the §5
 //!                     mid-run cartridge swap) as hot-plug events
+//!   --image PATH      serve Identify from this sealed cartridge image
+//!                     (packed with `champd vdisk pack`); the in-memory
+//!                     index then only backs enrolls + detach fallback
+//!   --image-key K     seal passphrase for --image (default champ-dev-key)
 //!   --out PATH        output JSON (default BENCH_serve.json)
 //!   --baseline PATH   baseline JSON (default: the committed floors)
 //!   --tolerance PCT   allowed goodput drop below baseline (default 10)
@@ -71,6 +75,8 @@ pub fn config_for(profile: MissionProfile, args: &Args) -> ServeConfig {
     cfg.gallery = args.flag_u64("gallery", 10_000) as usize;
     cfg.dim = args.flag_u64("dim", 128) as usize;
     cfg.k = args.flag_u64("k", 10) as usize;
+    cfg.image = args.flag("image").map(std::path::PathBuf::from);
+    cfg.image_key = args.flag("image-key").unwrap_or("champ-dev-key").to_string();
     cfg
 }
 
@@ -271,6 +277,14 @@ mod tests {
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.gallery, 256);
         assert!((cfg.overload - 4.0).abs() < 1e-12);
+        assert!(cfg.image.is_none());
+
+        let a = parse_args(
+            "serve --image cart.vdisk --image-key op-key".split_whitespace().map(String::from),
+        );
+        let cfg = config_for(MissionProfile::checkpoint(), &a);
+        assert_eq!(cfg.image.as_deref(), Some(std::path::Path::new("cart.vdisk")));
+        assert_eq!(cfg.image_key, "op-key");
     }
 
     #[test]

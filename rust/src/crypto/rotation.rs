@@ -63,14 +63,15 @@ impl RotationKey {
 
     /// Bulk-apply R to every row of a gallery index (the enrollment and
     /// pack paths): rotates the whole SoA matrix in place of n separate
-    /// `Template` round-trips, preserving ids and row order.
+    /// `Template` round-trips, preserving ids and row order.  The rotated
+    /// components are written straight into the destination matrix during
+    /// the fill pass (`upsert_with`) — no per-row staging buffer, so a
+    /// pack→mount→serve cycle touches each template byte once per stage.
     pub fn apply_index(&self, idx: &GalleryIndex) -> GalleryIndex {
         assert_eq!(idx.dim(), self.dim, "rotation dim mismatch");
         let mut out = GalleryIndex::with_capacity(self.dim, idx.len());
-        let mut buf = vec![0.0f32; self.dim];
         for (id, row) in idx.iter() {
-            self.apply_into(row, &mut buf);
-            out.upsert(id, &buf);
+            out.upsert_with(id, |dst| self.apply_into(row, dst));
         }
         out
     }

@@ -6,7 +6,8 @@
 //!                    deadline scheduling, load shedding -> BENCH_serve.json
 //!   sweep            Table-1 broadcast scaling sweep (--kind ncs2|coral)
 //!   bench            bench telemetry (scaling -> BENCH_scaling.json,
-//!                    match -> BENCH_match.json, each with a regression guard)
+//!                    match -> BENCH_match.json, vdisk -> BENCH_vdisk.json,
+//!                    each with a regression guard)
 //!   hotswap          the §4.2 hot-swap experiment
 //!   power            §4.3 power report over the Table-1 sweep
 //!   export-workflow  dump the ComfyUI-style graph for the live pipeline
@@ -37,14 +38,16 @@ USAGE: champd <subcommand> [flags]
   run [config.json] [--frames N] [--real-compute]
   serve [--profile checkpoint|watchlist|disaster|all] [--overload F]
         [--frames N] [--seed S] [--batch B] [--window W] [--gallery N]
-        [--dim D] [--k K] [--trace] [--out PATH] [--baseline PATH]
-        [--tolerance PCT] [--no-guard]
+        [--dim D] [--k K] [--trace] [--image IMG.vdisk] [--image-key K]
+        [--out PATH] [--baseline PATH] [--tolerance PCT] [--no-guard]
   sweep --kind ncs2|coral [--max-devices N] [--frames N] [--engine barrier|batched]
         [--batch B]
   bench scaling [--frames N] [--max-devices N] [--out PATH] [--baseline PATH]
         [--tolerance PCT] [--no-guard]
   bench match [--sizes 1k,10k,100k[,1m]] [--dim D] [--probes N] [--k K]
         [--out PATH] [--baseline PATH] [--tolerance PCT] [--no-guard]
+  bench vdisk [--sizes 10k,100k] [--dim D] [--block-size B] [--out PATH]
+        [--baseline PATH] [--tolerance PCT] [--no-guard]
   hotswap [--fps F]
   power [--kind ncs2|coral]
   export-workflow [config.json]

@@ -546,6 +546,182 @@ impl ServeReport {
     }
 }
 
+/// One point of the vdisk read-path sweep (`BENCH_vdisk.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VdiskRecord {
+    /// Identities enrolled in the packed gallery image.
+    pub identities: usize,
+    pub dim: usize,
+    pub block_size: u32,
+    /// Verify-walk cost of `MountedImage::mount` alone, wall-clock us.
+    pub mount_us: u64,
+    /// Mount + streaming gallery decode + first top-k probe, wall-clock us.
+    pub first_match_us: u64,
+    /// Unseal throughput of a full gallery-extent walk (plaintext MB/s).
+    pub serial_mb_s: f64,
+    pub par2_mb_s: f64,
+    pub par4_mb_s: f64,
+    /// Block-cache hit rate after two full extent walks.
+    pub cache_hit_rate: f64,
+    /// Intermediate bytes copied per template, streaming decode (carry
+    /// buffer only — the zero-copy proof).
+    pub stream_bytes_per_template: f64,
+    /// Analytic reference line for the legacy `read_extent` + `decode`
+    /// path (extent assembly + parse buffer + buffer-to-matrix memcpy,
+    /// ~3x the template width) — derived from the path's structure, not
+    /// measured, and never gated.
+    pub legacy_bytes_per_template: f64,
+}
+
+impl VdiskRecord {
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("identities", json::num(self.identities as f64)),
+            ("dim", json::num(self.dim as f64)),
+            ("block_size", json::num(self.block_size as f64)),
+            ("mount_us", json::num(self.mount_us as f64)),
+            ("first_match_us", json::num(self.first_match_us as f64)),
+            ("serial_mb_s", json::num(self.serial_mb_s)),
+            ("par2_mb_s", json::num(self.par2_mb_s)),
+            ("par4_mb_s", json::num(self.par4_mb_s)),
+            ("cache_hit_rate", json::num(self.cache_hit_rate)),
+            ("stream_bytes_per_template", json::num(self.stream_bytes_per_template)),
+            ("legacy_bytes_per_template", json::num(self.legacy_bytes_per_template)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Option<VdiskRecord> {
+        Some(VdiskRecord {
+            identities: v.get("identities")?.as_usize()?,
+            dim: v.get("dim")?.as_usize()?,
+            block_size: v.get("block_size")?.as_u64()? as u32,
+            mount_us: v.get("mount_us").and_then(Value::as_u64).unwrap_or(0),
+            first_match_us: v.get("first_match_us").and_then(Value::as_u64).unwrap_or(0),
+            serial_mb_s: v.get("serial_mb_s")?.as_f64()?,
+            par2_mb_s: v.get("par2_mb_s").and_then(Value::as_f64).unwrap_or(0.0),
+            par4_mb_s: v.get("par4_mb_s")?.as_f64()?,
+            cache_hit_rate: v.get("cache_hit_rate").and_then(Value::as_f64).unwrap_or(0.0),
+            stream_bytes_per_template: v
+                .get("stream_bytes_per_template")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0),
+            legacy_bytes_per_template: v
+                .get("legacy_bytes_per_template")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0),
+        })
+    }
+}
+
+/// The vdisk read-path telemetry file (`BENCH_vdisk.json`, schema v1).
+///
+/// ```json
+/// {
+///   "schema": 1,
+///   "commit": "<sha or 'unknown'>",
+///   "records": [
+///     { "identities": 100000, "dim": 128, "block_size": 4096,
+///       "mount_us": 180000, "first_match_us": 650000,
+///       "serial_mb_s": 85.2, "par2_mb_s": 160.1, "par4_mb_s": 297.4,
+///       "cache_hit_rate": 0.5,
+///       "stream_bytes_per_template": 66.0,
+///       "legacy_bytes_per_template": 1545.0 }
+///   ]
+/// }
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct VdiskReport {
+    pub commit: String,
+    pub records: Vec<VdiskRecord>,
+}
+
+impl VdiskReport {
+    pub fn new(commit: impl Into<String>) -> Self {
+        VdiskReport { commit: commit.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: VdiskRecord) {
+        self.records.push(r);
+    }
+
+    pub fn find(&self, identities: usize, dim: usize) -> Option<&VdiskRecord> {
+        self.records.iter().find(|r| r.identities == identities && r.dim == dim)
+    }
+
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("schema", json::num(SCHEMA_VERSION as f64)),
+            ("commit", json::s(&self.commit)),
+            ("records", Value::Arr(self.records.iter().map(VdiskRecord::to_value).collect())),
+        ])
+    }
+
+    pub fn to_json_pretty(&self) -> String {
+        self.to_value().to_json_pretty()
+    }
+
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let commit =
+            v.get("commit").and_then(Value::as_str).unwrap_or("unknown").to_string();
+        let mut records = Vec::new();
+        for r in v.get("records").and_then(Value::as_arr).unwrap_or(&[]) {
+            records.push(
+                VdiskRecord::from_value(r)
+                    .ok_or_else(|| anyhow::anyhow!("malformed vdisk record: {}", r.to_json()))?,
+            );
+        }
+        Ok(VdiskReport { commit, records })
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json_pretty() + "\n")?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("bad vdisk JSON: {e:?}"))?;
+        Self::from_value(&v)
+    }
+
+    /// Regression guard on unseal throughput, mirroring the other gates:
+    /// every baseline (identities, dim) row must be present with serial
+    /// and 4-thread MB/s `>= baseline * (1 - tolerance)`.
+    pub fn check_against(&self, baseline: &VdiskReport, tolerance: f64) -> Vec<String> {
+        let mut violations = Vec::new();
+        for b in &baseline.records {
+            match self.find(b.identities, b.dim) {
+                None => violations.push(format!(
+                    "missing record {}x{} (baseline {:.1} MB/s serial)",
+                    b.identities, b.dim, b.serial_mb_s
+                )),
+                Some(cur) => {
+                    for (what, got, base) in [
+                        ("serial", cur.serial_mb_s, b.serial_mb_s),
+                        ("par4", cur.par4_mb_s, b.par4_mb_s),
+                    ] {
+                        let floor = base * (1.0 - tolerance);
+                        if got < floor {
+                            violations.push(format!(
+                                "{}x{} {what}: {got:.1} MB/s < floor {floor:.1} \
+                                 (baseline {base:.1}, tol {:.0}%)",
+                                b.identities,
+                                b.dim,
+                                tolerance * 100.0
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        violations
+    }
+}
+
 /// Best-effort commit id for the report: `$GITHUB_SHA` in CI, `git
 /// rev-parse` locally, `"unknown"` otherwise.
 pub fn current_commit() -> String {
@@ -731,5 +907,54 @@ mod tests {
     fn malformed_serve_record_is_an_error() {
         assert!(ServeReport::parse(r#"{"records": [{"profile": "x"}]}"#).is_err());
         assert!(ServeReport::parse(r#"{"power": [{"overload": 1}]}"#).is_err());
+    }
+
+    fn vdisk_record(n: usize, serial: f64, par4: f64) -> VdiskRecord {
+        VdiskRecord {
+            identities: n,
+            dim: 128,
+            block_size: 4096,
+            mount_us: 1_000,
+            first_match_us: 5_000,
+            serial_mb_s: serial,
+            par2_mb_s: serial * 1.6,
+            par4_mb_s: par4,
+            cache_hit_rate: 0.5,
+            stream_bytes_per_template: 66.0,
+            legacy_bytes_per_template: 1545.0,
+        }
+    }
+
+    #[test]
+    fn vdisk_report_roundtrips_through_json() {
+        let mut rep = VdiskReport::new("beef");
+        rep.push(vdisk_record(10_000, 80.0, 250.0));
+        rep.push(vdisk_record(100_000, 85.0, 290.0));
+        let back = VdiskReport::parse(&rep.to_json_pretty()).unwrap();
+        assert_eq!(back.commit, "beef");
+        assert_eq!(back.records, rep.records);
+        assert!(back.find(10_000, 128).is_some());
+        assert!(back.find(10_000, 64).is_none());
+    }
+
+    #[test]
+    fn vdisk_guard_gates_serial_and_par4() {
+        let mut baseline = VdiskReport::new("base");
+        baseline.push(vdisk_record(10_000, 50.0, 100.0));
+        let mut cur = VdiskReport::new("cur");
+        cur.push(vdisk_record(10_000, 46.0, 91.0)); // -8%, -9%: inside tol
+        assert!(cur.check_against(&baseline, 0.10).is_empty());
+        let mut cur = VdiskReport::new("cur");
+        cur.push(vdisk_record(10_000, 40.0, 101.0)); // serial -20%
+        let v = cur.check_against(&baseline, 0.10);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("serial"));
+        let v = VdiskReport::new("cur").check_against(&baseline, 0.10);
+        assert!(v[0].contains("missing record"));
+    }
+
+    #[test]
+    fn malformed_vdisk_record_is_an_error() {
+        assert!(VdiskReport::parse(r#"{"records": [{"identities": 10}]}"#).is_err());
     }
 }

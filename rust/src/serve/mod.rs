@@ -22,7 +22,10 @@
 //!   cartridges under a [`crate::coordinator::flow::CreditFlow`] window
 //!   (calibrated against `run_pipelined_engine`), and survives hot-plug:
 //!   [`crate::coordinator::health::HealthMonitor`]-driven eviction
-//!   requeues in-flight work exactly once.
+//!   requeues in-flight work exactly once.  With `--image`, Identify
+//!   resolves against a mounted sealed cartridge image (streaming-decoded
+//!   through the vdisk read pipeline), falling back to the in-memory
+//!   index only while the media is out of the bay.
 //! * [`slo`] — per-class SLO accounting: exact p50/p99 latency, goodput,
 //!   deadline-miss and shed rates, with an exactly-once terminal-outcome
 //!   state machine (`offered == completed + shed`, checked per class).

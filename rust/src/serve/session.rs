@@ -28,8 +28,19 @@
 //! Everything runs in virtual microseconds off one completion queue: the
 //! same seed yields the same terminal outcome for every request, which is
 //! what makes `BENCH_serve.json` bit-identical across runs.
+//!
+//! **Serving from sealed media**: with [`ServeConfig::image`] set, the
+//! session mounts the cartridge image through a [`MountSupervisor`]
+//! (MAC-verified, fail-closed) and resolves Identify traffic against the
+//! image's streaming-decoded [`GalleryIndex`] — the sealed cartridge *is*
+//! the data plane, exactly the CHAMP premise.  A hot-swap of the storage
+//! bay ([`STORAGE_SLOT`]) unmounts mid-run: identify falls back to the
+//! in-memory index (enroll overlay) without dropping a request, and a
+//! re-attach swaps the mounted snapshot back in atomically.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::biometric::index::GalleryIndex;
 use crate::bus::clock::Resource;
@@ -41,11 +52,13 @@ use crate::coordinator::engine::EngineConfig;
 use crate::coordinator::flow::CreditFlow;
 use crate::coordinator::health::Alert;
 use crate::coordinator::scheduler::Orchestrator;
+use crate::crypto::seal::SealKey;
 use crate::device::caps::CapDescriptor;
 use crate::device::timing::{stream_handoff_us, DeviceProfile};
 use crate::device::{Cartridge, DeviceKind};
 use crate::power::{PowerModel, PowerReport};
 use crate::util::rng::Rng;
+use crate::vdisk::{MountEvent, MountSupervisor};
 use crate::workload::video::VideoSource;
 
 use super::admission::{Admission, AdmissionController, ShedReason};
@@ -55,6 +68,13 @@ use super::traffic::{self, MissionProfile, Request, RequestKind};
 /// Health/expiry tick period (matches the orchestrator's heartbeat
 /// interval: 5 missed ticks = dead).
 const TICK_US: u64 = 100_000;
+
+/// The storage bay: hot-plug events on this slot mount/unmount the sealed
+/// gallery image instead of touching the inference chain (slots 0..2).
+pub const STORAGE_SLOT: u8 = 3;
+
+/// Cartridge uid the serving session registers its media under.
+const STORAGE_MEDIA_UID: u64 = 0x5700;
 
 /// Result-return wire time appended to a pipeline chain, virtual us.
 const TAIL_US: u64 = 200;
@@ -82,11 +102,17 @@ pub struct ServeConfig {
     pub batch: u32,
     /// In-flight pipeline batches allowed (credit window).
     pub window: u32,
-    /// Enrolled identities at session start.
+    /// Enrolled identities at session start (ignored when serving from a
+    /// mounted image — the image's gallery is the population).
     pub gallery: usize,
     pub dim: usize,
     /// Top-k retrieved per identify probe.
     pub k: usize,
+    /// Sealed cartridge image to serve Identify traffic from.  None = the
+    /// in-memory index only (the pre-vdisk behavior).
+    pub image: Option<PathBuf>,
+    /// Seal passphrase for `image`.
+    pub image_key: String,
 }
 
 impl ServeConfig {
@@ -101,6 +127,8 @@ impl ServeConfig {
             gallery: 10_000,
             dim: 128,
             k: 10,
+            image: None,
+            image_key: "champ-dev-key".to_string(),
         }
     }
 }
@@ -133,6 +161,9 @@ pub struct ServeOutcome {
     pub offered_rps: f64,
     /// Exactly-once terminal accounting held for every class.
     pub accounting_ok: bool,
+    /// Mount lifecycle of the sealed gallery media (empty when serving
+    /// purely in-memory).
+    pub media_events: Vec<MountEvent>,
 }
 
 #[derive(Debug, Clone)]
@@ -161,7 +192,15 @@ pub struct ServeSession {
     o: Orchestrator,
     /// Inference chain, slot order (slot i holds `stage_uids[i]`).
     stage_uids: Vec<u64>,
+    /// In-memory index: the whole population when no media is configured,
+    /// otherwise the enroll overlay + detach fallback.
     index: GalleryIndex,
+    /// The storage bay (media registry + verified mounts), when serving
+    /// from a sealed image.
+    mounts: Option<MountSupervisor>,
+    /// Snapshot of the mounted image's gallery; swapped atomically on
+    /// hot-swap (None while the media is out).
+    mounted_index: Option<Arc<GalleryIndex>>,
     match_res: Resource,
     flow: CreditFlow,
     adm: AdmissionController,
@@ -207,11 +246,47 @@ impl ServeSession {
             stage_uids.push(o.plug(SlotId(i as u8), Cartridge::new(0, DeviceKind::Ncs2, cap))?);
         }
 
-        // Enroll the starting gallery through the SoA upsert path.
+        // Serving from sealed media: mount (fail-closed) and decode the
+        // gallery once, before a single request is admitted.  The mounted
+        // index is the identify population; the in-memory index starts
+        // empty as the enroll overlay + detach fallback.
+        let mut mounts = None;
+        let mut mounted_index: Option<Arc<GalleryIndex>> = None;
+        if let Some(path) = &cfg.image {
+            let mut sup = MountSupervisor::with_key(SealKey::from_passphrase(&cfg.image_key));
+            sup.register_media(STORAGE_MEDIA_UID, path.clone());
+            if sup.handle_attach(STORAGE_MEDIA_UID, 0).is_none() {
+                let detail =
+                    sup.events.last().map(|e| e.detail.clone()).unwrap_or_default();
+                anyhow::bail!("cannot serve from {}: {detail}", path.display());
+            }
+            let idx = sup.gallery_index(STORAGE_MEDIA_UID).ok_or_else(|| {
+                anyhow::anyhow!("image {} carries no gallery extent", path.display())
+            })?;
+            anyhow::ensure!(
+                idx.dim() == cfg.dim,
+                "image gallery dim {} != configured dim {} (pass --dim {})",
+                idx.dim(),
+                cfg.dim,
+                idx.dim()
+            );
+            anyhow::ensure!(!idx.is_empty(), "image gallery is empty");
+            mounted_index = Some(idx);
+            mounts = Some(sup);
+        }
+        let gallery_rows = mounted_index.as_ref().map_or(cfg.gallery, |i| i.len());
+
+        // Enroll the starting gallery through the SoA upsert path (skipped
+        // when the mounted image is the population).
         let mut rng = Rng::new(cfg.seed ^ 0x9a11_e121_0c4e_5eed);
-        let mut index = GalleryIndex::with_capacity(cfg.dim, cfg.gallery);
-        for i in 0..cfg.gallery {
-            index.upsert(format!("id{i}"), &rng.unit_vec(cfg.dim));
+        let mut index = GalleryIndex::with_capacity(
+            cfg.dim,
+            if mounted_index.is_some() { 0 } else { cfg.gallery },
+        );
+        if mounted_index.is_none() {
+            for i in 0..cfg.gallery {
+                index.upsert(format!("id{i}"), &rng.unit_vec(cfg.dim));
+            }
         }
 
         // Calibrate pipeline capacity with a real engine run at the same
@@ -221,7 +296,7 @@ impl ServeSession {
         let cal = o.run_pipelined_engine(&VideoSource::paper_stream(cfg.seed), 24, cal_cfg);
         let head_svc = o.carts[&stage_uids[0]].service_us.max(1);
         let infer_cap_rps = if cal.fps > 0.0 { cal.fps } else { 1e6 / head_svc as f64 };
-        let identify_cap_rps = 1e6 / scan_pass_us(cfg.gallery, cfg.dim, 1) as f64;
+        let identify_cap_rps = 1e6 / scan_pass_us(gallery_rows, cfg.dim, 1) as f64;
 
         let ident_share: f64 = cfg
             .profile
@@ -253,6 +328,8 @@ impl ServeSession {
             o,
             stage_uids,
             index,
+            mounts,
+            mounted_index,
             match_res: Resource::new(),
             flow,
             adm,
@@ -278,6 +355,12 @@ impl ServeSession {
     /// Calibrated overload-1.0 offered rate, requests/s.
     pub fn capacity_rps(&self) -> f64 {
         self.capacity_rps
+    }
+
+    /// The index Identify resolves against: the mounted image's gallery
+    /// when media is in the bay, the in-memory index otherwise.
+    fn active_index(&self) -> &GalleryIndex {
+        self.mounted_index.as_deref().unwrap_or(&self.index)
     }
 
     /// Run to completion.  `events` are hot-plug actions with `at_us`
@@ -352,6 +435,26 @@ impl ServeSession {
     fn on_hotplug(&mut self, i: usize, now: u64) {
         let ev = self.hp[i];
         let slot = ev.slot.0;
+        // The storage bay: swap the sealed gallery media, not a pipeline
+        // stage.  Detach unmounts and identify falls back to the
+        // in-memory overlay; attach remounts (fail-closed) and swaps the
+        // serving snapshot back in atomically.
+        if slot == STORAGE_SLOT {
+            if let Some(mounts) = self.mounts.as_mut() {
+                match ev.kind {
+                    HotplugKind::Detach => {
+                        mounts.handle_detach(STORAGE_MEDIA_UID, now);
+                        self.mounted_index = None;
+                    }
+                    HotplugKind::Attach => {
+                        if mounts.handle_attach(STORAGE_MEDIA_UID, now).is_some() {
+                            self.mounted_index = mounts.gallery_index(STORAGE_MEDIA_UID);
+                        }
+                    }
+                }
+            }
+            return;
+        }
         match ev.kind {
             HotplugKind::Detach => {
                 let Some(&uid) = self.stage_uids.get(slot as usize) else { return };
@@ -453,12 +556,14 @@ impl ServeSession {
         self.pump_infer(now);
     }
 
-    /// Coalesce up to `batch` identify requests into one gallery pass.
+    /// Coalesce up to `batch` identify requests into one gallery pass
+    /// against the active index (mounted sealed image, or the in-memory
+    /// fallback while the media is out).
     fn pump_match(&mut self, now: u64) {
         if self.match_inflight.is_some() {
             return;
         }
-        let rows = self.index.len();
+        let rows = self.active_index().len();
         // Dispatch guard at the max coalesced batch size (like the
         // pipeline's): the pass the request actually rides may carry up
         // to `batch` probes, and the guard must cover that completion.
@@ -480,9 +585,11 @@ impl ServeSession {
         // The actual engine call: one pass scores the whole batch.
         let probes: Vec<Vec<f32>> = reqs.iter().map(|r| self.probe_for(r.id)).collect();
         let refs: Vec<&[f32]> = probes.iter().map(|p| p.as_slice()).collect();
-        let hits = self.index.top_k_batch(&refs, self.cfg.k);
+        let hits = self.active_index().top_k_batch(&refs, self.cfg.k);
         debug_assert_eq!(hits.len(), reqs.len());
-        debug_assert!(hits.iter().all(|h| !h.is_empty()));
+        // A mid-swap fallback index can legitimately be empty: zero-hit
+        // identifies still complete (and account) normally.
+        debug_assert!(rows == 0 || hits.iter().all(|h| !h.is_empty()));
         let (_, done) = self.match_res.reserve(now, scan_pass_us(rows, self.cfg.dim, reqs.len()));
         for r in &reqs {
             self.log_dispatch(r, now);
@@ -565,12 +672,18 @@ impl ServeSession {
         });
     }
 
-    /// Deterministic probe for an identify request: a noisy copy of an
-    /// enrolled row (the identification workload).
+    /// Deterministic probe for an identify request: a noisy copy of a row
+    /// enrolled in the active index (the identification workload).  While
+    /// no population is available (media out, empty overlay) the probe is
+    /// a seeded unit vector — requests still serve, scores are just cold.
     fn probe_for(&self, id: u64) -> Vec<f32> {
         let mut rng = Rng::new(self.cfg.seed ^ id.wrapping_mul(0x85eb_ca6b_9e37_79b9));
-        let row = (rng.next_u64() as usize) % self.index.len().max(1);
-        self.index.row(row).iter().map(|v| v + 0.05 * rng.normal()).collect()
+        let idx = self.active_index();
+        if idx.is_empty() {
+            return rng.unit_vec(self.cfg.dim);
+        }
+        let row = (rng.next_u64() as usize) % idx.len();
+        idx.row(row).iter().map(|v| v + 0.05 * rng.normal()).collect()
     }
 
     /// Deterministic embedding for an enroll request.
@@ -615,6 +728,7 @@ impl ServeSession {
             capacity_rps: self.capacity_rps,
             offered_rps: self.offered_rps,
             accounting_ok: self.slo.accounting_holds(),
+            media_events: self.mounts.map(|m| m.events).unwrap_or_default(),
         }
     }
 }
@@ -743,5 +857,85 @@ mod tests {
         let four = scan_pass_us(10_000, 128, 4);
         assert!(four < 4 * one, "batch pass must beat 4 single passes");
         assert!(four > one, "more probes still cost more");
+    }
+
+    // ---- serving from a sealed image ------------------------------------
+
+    fn packed_image(tag: &str, n: usize, dim: usize, pass: &str) -> std::path::PathBuf {
+        use crate::biometric::gallery::Gallery;
+        use crate::vdisk::ImageBuilder;
+        let dir =
+            std::env::temp_dir().join(format!("champ-servimg-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(41);
+        let mut idx = GalleryIndex::with_capacity(dim, n);
+        for i in 0..n {
+            idx.upsert(format!("sub{i}"), &rng.unit_vec(dim));
+        }
+        let path = dir.join("media.vdisk");
+        ImageBuilder::new("serve-media")
+            .gallery(&Gallery::from_index(idx))
+            .block_size(512)
+            .write(&path, &SealKey::from_passphrase(pass))
+            .unwrap();
+        path
+    }
+
+    fn image_cfg(path: std::path::PathBuf, requests: u64) -> ServeConfig {
+        let mut cfg = small_cfg(MissionProfile::checkpoint(), 1.5, requests);
+        cfg.dim = 32;
+        cfg.image = Some(path);
+        cfg.image_key = "serve-media-key".into();
+        cfg
+    }
+
+    #[test]
+    fn identify_serves_from_the_mounted_image() {
+        let path = packed_image("run", 256, 32, "serve-media-key");
+        let out = ServeSession::new(image_cfg(path, 100)).unwrap().run(vec![]);
+        assert!(out.accounting_ok);
+        assert_eq!(out.offered, out.completed + out.shed);
+        assert!(out.completed > 0, "identify must serve from the sealed image");
+        let kinds: Vec<_> = out.media_events.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec![crate::vdisk::MountEventKind::Mounted]);
+    }
+
+    #[test]
+    fn storage_detach_falls_back_and_reattach_swaps_the_index_back() {
+        use crate::vdisk::MountEventKind::{Mounted, Unmounted};
+        let path = packed_image("swap", 256, 32, "serve-media-key");
+        let events = vec![
+            HotplugEvent {
+                at_us: 500_000,
+                slot: SlotId(STORAGE_SLOT),
+                kind: HotplugKind::Detach,
+                uid: 0,
+            },
+            HotplugEvent {
+                at_us: 2_000_000,
+                slot: SlotId(STORAGE_SLOT),
+                kind: HotplugKind::Attach,
+                uid: 0,
+            },
+        ];
+        let out = ServeSession::new(image_cfg(path, 200)).unwrap().run(events);
+        assert!(out.accounting_ok, "fallback must not break exactly-once accounting");
+        assert_eq!(out.offered, out.completed + out.shed);
+        assert!(out.completed > 0);
+        let kinds: Vec<_> = out.media_events.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec![Mounted, Unmounted, Mounted], "{:?}", out.media_events);
+    }
+
+    #[test]
+    fn image_session_fails_closed_on_wrong_key_or_dim() {
+        let path = packed_image("bad", 64, 32, "serve-media-key");
+        let mut cfg = image_cfg(path.clone(), 50);
+        cfg.image_key = "wrong".into();
+        let e = ServeSession::new(cfg).unwrap_err().to_string();
+        assert!(e.contains("cannot serve from"), "{e}");
+        let mut cfg = image_cfg(path, 50);
+        cfg.dim = 16;
+        let e = ServeSession::new(cfg).unwrap_err().to_string();
+        assert!(e.contains("dim"), "{e}");
     }
 }

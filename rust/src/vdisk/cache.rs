@@ -1,14 +1,24 @@
-//! LRU cache over decrypted blocks (and anything else keyable).
+//! Caches over decrypted blocks: a plain LRU map plus the sharded,
+//! miss-coalescing front the mounted reader actually uses.
 //!
 //! Unsealing a block costs a CTR pass plus an HMAC; the hot path (repeated
 //! gallery scans, artifact re-reads after a hot-swap) hits the same blocks
 //! over and over, so [`MountedImage`](super::MountedImage) keeps the most
 //! recently used plaintext blocks here.  Recency is a monotone tick per
 //! access; eviction scans for the minimum, which is plenty below a few
-//! thousand resident blocks.
+//! thousand resident blocks per shard.
+//!
+//! [`ShardedBlockCache`] replaces the old single global `Mutex<LruCache>`:
+//! the key space is split across independent shards (deterministic
+//! round-robin over block index, so a sequential extent walk never
+//! serializes on one lock), and the miss path is *single-entry* — the
+//! first reader of a block reserves it under the shard lock, unseals
+//! outside the lock, and publishes; concurrent readers of the same block
+//! park on the shard condvar instead of unsealing a second time.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::hash::Hash;
+use std::sync::{Condvar, Mutex};
 
 /// Hit/miss/eviction counters (monotone since creation).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -27,6 +37,13 @@ impl CacheStats {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+
+    fn add(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.inserts += other.inserts;
     }
 }
 
@@ -78,6 +95,18 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         }
     }
 
+    /// Look up `k`, refreshing recency but counting nothing.  Used by the
+    /// sharded front's coalesced-miss wakeups: the waiter's first `get`
+    /// already recorded the miss for this logical access.
+    pub fn get_untracked(&mut self, k: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(k).map(|entry| {
+            entry.1 = tick;
+            &entry.0
+        })
+    }
+
     /// Insert `k`, evicting the least recently used entry if at capacity.
     pub fn put(&mut self, k: K, v: V) {
         self.tick += 1;
@@ -98,6 +127,132 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
 
     pub fn clear(&mut self) {
         self.map.clear();
+    }
+}
+
+/// Key of a decrypted block: `(extent index, block index)`.
+pub type BlockKey = (u32, u32);
+
+/// Default shard count of a mounted image's block cache.
+pub const DEFAULT_CACHE_SHARDS: usize = 8;
+
+struct ShardState<V> {
+    lru: LruCache<BlockKey, V>,
+    /// Blocks a leader is currently unsealing (miss reservation).
+    pending: HashSet<BlockKey>,
+}
+
+struct Shard<V> {
+    state: Mutex<ShardState<V>>,
+    /// Wakes coalesced waiters when a leader publishes (or fails).
+    cv: Condvar,
+}
+
+/// Sharded, miss-coalescing cache over decrypted blocks.
+///
+/// * **Sharding** — `shard_of` mixes `(extent, block)` deterministically
+///   (no per-process hasher randomness), landing consecutive blocks of an
+///   extent on consecutive shards, so a streaming walk spreads evenly and
+///   concurrent readers rarely contend on one lock.
+/// * **Single-entry misses** — `get_or_try_insert_with` takes the shard
+///   lock once for the hit/reserve decision.  A miss reserves the key,
+///   runs the unseal closure with no lock held, then publishes.  Racing
+///   readers of the same block wait on the shard condvar and are served
+///   the leader's block: one unseal per block, always.
+/// * **Failure** — a leader's error is returned to that caller only;
+///   waiters retake leadership and re-derive the (deterministic) error,
+///   so a tampered block fails every reader identically.
+pub struct ShardedBlockCache<V> {
+    shards: Vec<Shard<V>>,
+}
+
+impl<V: Clone> ShardedBlockCache<V> {
+    /// Total capacity in entries, split evenly across `shards` (both
+    /// clamped to >= 1).
+    pub fn new(total_cap: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let per_shard = total_cap.max(1).div_ceil(shards);
+        ShardedBlockCache {
+            shards: (0..shards)
+                .map(|_| Shard {
+                    state: Mutex::new(ShardState {
+                        lru: LruCache::new(per_shard),
+                        pending: HashSet::new(),
+                    }),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Deterministic shard placement: consecutive blocks of one extent
+    /// round-robin across shards (sequential walks never pile onto one
+    /// lock), different extents start at different offsets.
+    fn shard_of(&self, k: &BlockKey) -> usize {
+        (k.0 as u64 * 0x9E37_79B9 + k.1 as u64) as usize % self.shards.len()
+    }
+
+    /// Look up `k`; on miss, run `f` (exactly once across all concurrent
+    /// callers) and cache its success.
+    pub fn get_or_try_insert_with<E>(
+        &self,
+        k: BlockKey,
+        f: impl FnOnce() -> Result<V, E>,
+    ) -> Result<V, E> {
+        let shard = &self.shards[self.shard_of(&k)];
+        let mut st = shard.state.lock().unwrap();
+        if let Some(v) = st.lru.get(&k) {
+            return Ok(v.clone());
+        }
+        // Coalesce: while another reader is unsealing this block, park.
+        while st.pending.contains(&k) {
+            st = shard.cv.wait(st).unwrap();
+            if let Some(v) = st.lru.get_untracked(&k) {
+                return Ok(v.clone());
+            }
+        }
+        // Leader: reserve the entry, unseal with no lock held, publish.
+        st.pending.insert(k);
+        drop(st);
+        let res = f();
+        let mut st = shard.state.lock().unwrap();
+        st.pending.remove(&k);
+        if let Ok(v) = &res {
+            st.lru.put(k, v.clone());
+        }
+        drop(st);
+        shard.cv.notify_all();
+        res
+    }
+
+    /// Aggregate counters across all shards.  `inserts` counts actual
+    /// unseals (coalesced waiters record a miss but never an insert).
+    pub fn stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for s in &self.shards {
+            total.add(&s.state.lock().unwrap().lru.stats());
+        }
+        total
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.state.lock().unwrap().lru.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached block (stats are kept; in-flight reservations
+    /// are untouched, so racing readers stay coalesced).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.state.lock().unwrap().lru.clear();
+        }
     }
 }
 
@@ -160,5 +315,87 @@ mod tests {
         c.get(&9);
         assert!((c.stats().hit_rate() - 2.0 / 3.0).abs() < 1e-9);
         assert_eq!(LruCache::<u32, u32>::new(1).stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn untracked_get_refreshes_without_counting() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        assert_eq!(c.get_untracked(&1), Some(&10));
+        assert_eq!(c.get_untracked(&9), None);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "untracked lookups must not count");
+        // But it does refresh recency: 2 is now the LRU victim.
+        c.put(3, 30);
+        assert!(c.get(&1).is_some());
+        assert!(c.get(&2).is_none());
+    }
+
+    #[test]
+    fn sharded_single_thread_hit_miss() {
+        let c: ShardedBlockCache<u64> = ShardedBlockCache::new(16, 4);
+        assert_eq!(c.shard_count(), 4);
+        let v = c.get_or_try_insert_with::<()>((0, 3), || Ok(33)).unwrap();
+        assert_eq!(v, 33);
+        // Second read is a hit: the closure must not run again.
+        let v = c.get_or_try_insert_with::<()>((0, 3), || panic!("unsealed twice")).unwrap();
+        assert_eq!(v, 33);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn sharded_error_is_not_cached() {
+        let c: ShardedBlockCache<u64> = ShardedBlockCache::new(4, 2);
+        let e = c.get_or_try_insert_with((1, 1), || Err::<u64, &str>("tamper"));
+        assert_eq!(e, Err("tamper"));
+        assert_eq!(c.stats().inserts, 0);
+        // A later reader retries the compute (deterministic error paths
+        // fail every reader; a transient one recovers).
+        let v = c.get_or_try_insert_with::<()>((1, 1), || Ok(7)).unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn sharded_round_robin_spreads_sequential_blocks() {
+        // Total capacity 8 over 8 shards = 1 entry each; 8 consecutive
+        // blocks of one extent must land one-per-shard (no eviction).
+        let c: ShardedBlockCache<u32> = ShardedBlockCache::new(8, 8);
+        for b in 0..8u32 {
+            c.get_or_try_insert_with::<()>((0, b), || Ok(b)).unwrap();
+        }
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn sharded_concurrent_misses_unseal_once() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let c: ShardedBlockCache<u64> = ShardedBlockCache::new(64, 8);
+        let unseals = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for b in 0..16u32 {
+                        let v = c
+                            .get_or_try_insert_with::<()>((0, b), || {
+                                unseals.fetch_add(1, Ordering::SeqCst);
+                                // Widen the race window: the other readers
+                                // must coalesce, not recompute.
+                                std::thread::sleep(std::time::Duration::from_millis(1));
+                                Ok(b as u64 * 10)
+                            })
+                            .unwrap();
+                        assert_eq!(v, b as u64 * 10);
+                    }
+                });
+            }
+        });
+        assert_eq!(unseals.load(Ordering::SeqCst), 16, "one unseal per block");
+        assert_eq!(c.stats().inserts, 16);
     }
 }

@@ -7,7 +7,7 @@
 //! mounted reader decrypt only the blocks a request touches — with the LRU
 //! cache absorbing repeats.
 
-use crate::crypto::seal::{SealKey, TAG_LEN};
+use crate::crypto::seal::{SealKey, SubkeyFactory, TAG_LEN};
 use crate::json::{self, Value};
 
 use super::{block_tweak, VdiskError};
@@ -147,8 +147,9 @@ pub fn seal_blocks(
 ) -> Vec<u8> {
     let sealed_len = ExtentMeta::sealed_size(data.len() as u64, block_size) as usize;
     let mut out = Vec::with_capacity(sealed_len);
+    let factory = key.subkey_factory();
     for (b, chunk) in data.chunks(block_size as usize).enumerate() {
-        let sub = key.subkey(&block_tweak(image_uid, extent_idx, b as u32));
+        let sub = factory.derive(&block_tweak(image_uid, extent_idx, b as u32));
         out.extend_from_slice(&sub.seal(chunk));
     }
     out
@@ -157,6 +158,21 @@ pub fn seal_blocks(
 /// Unseal one block out of the raw image bytes.
 pub fn unseal_block(
     key: &SealKey,
+    image_uid: u64,
+    extent_idx: usize,
+    meta: &ExtentMeta,
+    block_idx: u32,
+    block_size: u32,
+    raw: &[u8],
+) -> Result<Vec<u8>, VdiskError> {
+    unseal_block_with(&key.subkey_factory(), image_uid, extent_idx, meta, block_idx, block_size, raw)
+}
+
+/// [`unseal_block`] with a reusable [`SubkeyFactory`]: the block walkers
+/// (mounted reader, streaming unseal) derive thousands of sibling subkeys,
+/// so the derivation-schedule prefix is hashed once, not once per block.
+pub fn unseal_block_with(
+    factory: &SubkeyFactory,
     image_uid: u64,
     extent_idx: usize,
     meta: &ExtentMeta,
@@ -175,7 +191,8 @@ pub fn unseal_block(
     if end > raw.len() {
         return Err(VdiskError::Torn { expected: end as u64, actual: raw.len() as u64 });
     }
-    key.subkey(&block_tweak(image_uid, extent_idx, block_idx))
+    factory
+        .derive(&block_tweak(image_uid, extent_idx, block_idx))
         .unseal(&raw[start..end])
         .map_err(|_| VdiskError::Tamper("extent block"))
 }

@@ -33,20 +33,24 @@
 //! Module map: [`superblock`] (fixed header), [`extent`] (block framing +
 //! sealing), [`manifest`] (sealed JSON directory), [`image`] (the packer),
 //! [`mount`] (verify-then-read lifecycle + hot-swap supervisor), [`cache`]
-//! (LRU over decrypted blocks so repeated gallery/artifact reads are fast).
+//! (sharded miss-coalescing cache over decrypted blocks), [`stream`]
+//! (parallel streaming unseal — the read pipeline's data plane; see
+//! DESIGN.md §Vdisk read pipeline).
 
 pub mod cache;
 pub mod extent;
 pub mod image;
 pub mod manifest;
 pub mod mount;
+pub mod stream;
 pub mod superblock;
 
-pub use cache::{CacheStats, LruCache};
+pub use cache::{CacheStats, LruCache, ShardedBlockCache};
 pub use extent::{ExtentKind, ExtentMeta};
 pub use image::{ImageBuilder, ImageSummary};
 pub use manifest::ImageManifest;
 pub use mount::{MountEvent, MountEventKind, MountSupervisor, MountedImage};
+pub use stream::ExtentReader;
 pub use superblock::{Superblock, FORMAT_VERSION};
 
 /// Everything that can go wrong opening or reading a cartridge image.

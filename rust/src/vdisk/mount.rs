@@ -4,29 +4,38 @@
 //! check against the superblock's `total_len`, whole-image trailer MAC,
 //! sealed-manifest open + cross-check) and fails closed before a single
 //! payload byte is interpreted.  After that, reads decrypt lazily per
-//! block through the LRU cache.
+//! block through the sharded, miss-coalescing block cache
+//! ([`ShardedBlockCache`]); whole-extent walks stream through the
+//! parallel unseal pipeline ([`super::stream::ExtentReader`]).
 //!
 //! [`MountSupervisor`] is the coordinator-facing half: it tracks which
 //! cartridge carries which image file (the [`MediaBay`]), mounts on
 //! Attach, unmounts on Detach, and logs every outcome — a yanked,
 //! half-written image shows up as a `Rejected` event, never as a mount.
+//! A mounted image that carries a gallery extent is decoded (streaming,
+//! zero intermediate copies) into a shared [`GalleryIndex`] at attach, so
+//! the serving layer resolves Identify traffic straight off the sealed
+//! media; a hot-swap replaces that index atomically with the remount.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use crate::biometric::gallery::Gallery;
+use crate::biometric::gallery::{DecodeStats, Gallery};
+use crate::biometric::index::GalleryIndex;
 use crate::bus::hotplug::MediaBay;
-use crate::crypto::seal::{SealKey, TAG_LEN};
+use crate::crypto::seal::{SealKey, SubkeyFactory, TAG_LEN};
 
-use super::cache::{CacheStats, LruCache};
-use super::extent::{unseal_block, ExtentKind};
+use super::cache::{CacheStats, ShardedBlockCache, DEFAULT_CACHE_SHARDS};
+use super::extent::{unseal_block_with, ExtentKind};
 use super::image::GALLERY_EXTENT;
 use super::manifest::ImageManifest;
+use super::stream::ExtentReader;
 use super::superblock::{Superblock, SB_LEN};
 use super::{manifest_tweak, trailer_tweak, VdiskError};
 
-/// Default decrypted-block cache capacity (blocks, not bytes).
+/// Default decrypted-block cache capacity (blocks, not bytes), split
+/// across [`DEFAULT_CACHE_SHARDS`] shards.
 pub const DEFAULT_CACHE_BLOCKS: usize = 64;
 
 /// A verified, readable cartridge image.
@@ -34,9 +43,10 @@ pub struct MountedImage {
     pub superblock: Superblock,
     pub manifest: ImageManifest,
     path: PathBuf,
-    key: SealKey,
+    /// Per-block subkey derivation midstate (schedule hashed once).
+    factory: SubkeyFactory,
     raw: Vec<u8>,
-    cache: Mutex<LruCache<(u32, u32), Arc<Vec<u8>>>>,
+    cache: ShardedBlockCache<Arc<[u8]>>,
 }
 
 impl std::fmt::Debug for MountedImage {
@@ -115,9 +125,9 @@ impl MountedImage {
             superblock: sb,
             manifest,
             path,
-            key: key.clone(),
+            factory: key.subkey_factory(),
             raw,
-            cache: Mutex::new(LruCache::new(cache_blocks)),
+            cache: ShardedBlockCache::new(cache_blocks, DEFAULT_CACHE_SHARDS),
         })
     }
 
@@ -133,49 +143,92 @@ impl MountedImage {
         &self.manifest.label
     }
 
-    /// Decrypt (or cache-hit) one block of one extent.
-    pub fn read_block(&self, extent_idx: usize, block: u32) -> Result<Arc<Vec<u8>>, VdiskError> {
+    /// Decrypt (or cache-hit) one block of one extent.  A hit is a single
+    /// shard-lock acquisition and an `Arc` clone; a miss reserves the
+    /// entry so racing readers of the same block unseal it exactly once.
+    pub fn read_block(&self, extent_idx: usize, block: u32) -> Result<Arc<[u8]>, VdiskError> {
+        // Geometry check outside the closure so a bad index never reserves
+        // a cache entry.
+        if extent_idx >= self.manifest.extents.len() {
+            return Err(VdiskError::Corrupt(format!("no extent index {extent_idx}")));
+        }
+        self.cache.get_or_try_insert_with((extent_idx as u32, block), || {
+            self.unseal_block_raw(extent_idx, block)
+        })
+    }
+
+    /// Unseal one block straight from the raw image, skipping the cache
+    /// (the streaming reader's bypass path).
+    pub(crate) fn unseal_block_raw(
+        &self,
+        extent_idx: usize,
+        block: u32,
+    ) -> Result<Arc<[u8]>, VdiskError> {
         let meta = self
             .manifest
             .extents
             .get(extent_idx)
             .ok_or_else(|| VdiskError::Corrupt(format!("no extent index {extent_idx}")))?;
-        let cache_key = (extent_idx as u32, block);
-        if let Some(hit) = self.cache.lock().unwrap().get(&cache_key) {
-            return Ok(hit.clone());
-        }
-        let plain = unseal_block(
-            &self.key,
+        unseal_block_with(
+            &self.factory,
             self.superblock.image_uid,
             extent_idx,
             meta,
             block,
             self.superblock.block_size,
             &self.raw,
-        )?;
-        let arc = Arc::new(plain);
-        self.cache.lock().unwrap().put(cache_key, arc.clone());
-        Ok(arc)
+        )
+        .map(Arc::from)
     }
 
-    /// Read a whole extent by name (assembled from cached blocks).
+    /// Streaming in-order reader over the named extent (parallel unseal,
+    /// bounded memory; see [`ExtentReader`]).
+    pub fn extent_reader(&self, name: &str) -> Result<ExtentReader<'_>, VdiskError> {
+        ExtentReader::new(self, name)
+    }
+
+    /// Read a whole extent by name: a thin collector over the streaming
+    /// reader, kept for small extents and tests.  The result is truncated
+    /// to the manifest's `plain_len` so a final partial block can never
+    /// over-fill the payload.
     pub fn read_extent(&self, name: &str) -> Result<Vec<u8>, VdiskError> {
-        let (idx, meta) = self
-            .manifest
-            .find(name)
-            .ok_or_else(|| VdiskError::MissingExtent(name.to_string()))?;
-        let mut out = Vec::with_capacity(meta.plain_len as usize);
-        for b in 0..meta.blocks {
-            out.extend_from_slice(&self.read_block(idx, b)?);
+        let reader = self.extent_reader(name)?;
+        let plain_len = reader.plain_len() as usize;
+        let mut out = Vec::with_capacity(plain_len);
+        for block in reader {
+            out.extend_from_slice(&block?);
         }
+        out.truncate(plain_len);
         Ok(out)
     }
 
     /// Decode the gallery extent (rotation-protected templates).
     pub fn load_gallery(&self) -> Result<Gallery, VdiskError> {
-        let bytes = self.read_extent(GALLERY_EXTENT)?;
-        Gallery::decode(&bytes, self.superblock.gallery_dim as usize)
-            .map_err(|e| VdiskError::Corrupt(format!("gallery extent: {e}")))
+        self.load_gallery_index().map(|(idx, _)| Gallery::from_index(idx))
+    }
+
+    /// Streaming decode of the gallery extent straight into the SoA
+    /// [`GalleryIndex`]: blocks are unsealed in parallel and parsed in
+    /// place — templates never exist as an intermediate whole-extent
+    /// buffer.  Returns the index plus the copy-accounting proof
+    /// ([`DecodeStats`]).
+    pub fn load_gallery_index(&self) -> Result<(GalleryIndex, DecodeStats), VdiskError> {
+        let reader = self.extent_reader(GALLERY_EXTENT)?;
+        let rows_hint = reader.plain_len() as usize
+            / (8 + 4 * (self.superblock.gallery_dim as usize).max(1));
+        Gallery::decode_stream(reader, self.superblock.gallery_dim as usize, rows_hint)
+            .map(|(g, stats)| (g.into_index(), stats))
+            .map_err(|e| match e.downcast::<VdiskError>() {
+                Ok(v) => v,
+                Err(e) => VdiskError::Corrupt(format!("gallery extent: {e}")),
+            })
+    }
+
+    /// Flip one raw image byte in place (tamper-injection for tests; the
+    /// mount-time MACs make this unreachable through a file).
+    #[cfg(test)]
+    pub(crate) fn flip_raw_byte(&mut self, i: usize) {
+        self.raw[i] ^= 0x01;
     }
 
     /// Names of the artifact extents carried on this image.
@@ -187,8 +240,11 @@ impl MountedImage {
             .collect()
     }
 
+    /// Aggregate block-cache counters (summed across shards; `inserts`
+    /// counts actual unseals, so coalesced misses are visible as
+    /// `misses - inserts`).
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.lock().unwrap().stats()
+        self.cache.stats()
     }
 }
 
@@ -217,6 +273,10 @@ pub struct MountSupervisor {
     /// Which image file is physically on each cartridge (by uid).
     pub bay: MediaBay,
     mounted: HashMap<u64, Arc<MountedImage>>,
+    /// Serving-ready gallery per mounted uid, decoded (streaming) at
+    /// attach.  A remount replaces the `Arc` atomically; a detach drops
+    /// it, so readers holding the old `Arc` drain safely.
+    galleries: HashMap<u64, Arc<GalleryIndex>>,
     pub events: Vec<MountEvent>,
 }
 
@@ -248,33 +308,45 @@ impl MountSupervisor {
         self.handle_detach(uid, at_us);
         let key = self.key.as_ref()?;
         let path = self.bay.path_of(uid)?.to_path_buf();
-        match MountedImage::mount(&path, key) {
-            Ok(img) => {
-                let img = Arc::new(img);
-                self.events.push(MountEvent {
-                    uid,
-                    at_us,
-                    kind: MountEventKind::Mounted,
-                    detail: format!("{} ({} extents)", img.label(), img.manifest.extents.len()),
-                });
-                self.mounted.insert(uid, img.clone());
-                Some(img)
-            }
-            Err(e) => {
-                self.events.push(MountEvent {
-                    uid,
-                    at_us,
-                    kind: MountEventKind::Rejected,
-                    detail: e.to_string(),
-                });
-                None
+        let rejected = |events: &mut Vec<MountEvent>, e: VdiskError| {
+            events.push(MountEvent {
+                uid,
+                at_us,
+                kind: MountEventKind::Rejected,
+                detail: e.to_string(),
+            });
+            None
+        };
+        let img = match MountedImage::mount(&path, key) {
+            Ok(img) => Arc::new(img),
+            Err(e) => return rejected(&mut self.events, e),
+        };
+        // Serving-ready gallery: decode the sealed gallery (if the image
+        // carries one) before the mount is published, so a structurally
+        // corrupt gallery rejects the media instead of surfacing later on
+        // the identify path.
+        if img.manifest.find(GALLERY_EXTENT).is_some() {
+            match img.load_gallery_index() {
+                Ok((idx, _)) => {
+                    self.galleries.insert(uid, Arc::new(idx));
+                }
+                Err(e) => return rejected(&mut self.events, e),
             }
         }
+        self.events.push(MountEvent {
+            uid,
+            at_us,
+            kind: MountEventKind::Mounted,
+            detail: format!("{} ({} extents)", img.label(), img.manifest.extents.len()),
+        });
+        self.mounted.insert(uid, img.clone());
+        Some(img)
     }
 
     /// Detach edge: drop the mount (the media leaves with the module; its
     /// bay registration stays so a re-insert can remount).
     pub fn handle_detach(&mut self, uid: u64, at_us: u64) {
+        self.galleries.remove(&uid);
         if self.mounted.remove(&uid).is_some() {
             self.events.push(MountEvent {
                 uid,
@@ -291,6 +363,14 @@ impl MountSupervisor {
 
     pub fn image(&self, uid: u64) -> Option<&Arc<MountedImage>> {
         self.mounted.get(&uid)
+    }
+
+    /// The serving-ready gallery of mounted uid `uid` (None when nothing
+    /// is mounted there or the image carries no gallery extent).  The
+    /// `Arc` is replaced wholesale on remount — callers clone it and keep
+    /// scanning a consistent snapshot across hot-swaps.
+    pub fn gallery_index(&self, uid: u64) -> Option<Arc<GalleryIndex>> {
+        self.galleries.get(&uid).cloned()
     }
 
     pub fn mounted_count(&self) -> usize {
@@ -369,6 +449,59 @@ mod tests {
     }
 
     #[test]
+    fn non_aligned_extent_reads_exactly_plain_len() {
+        // Regression: the final partial block must never over-fill the
+        // payload past `plain_len` (and every byte must round-trip).
+        let key = SealKey::from_passphrase("align");
+        let dir = tmp_dir("align");
+        for (len, bs) in [(333usize, 128u32), (128, 128), (1, 64), (127, 64), (129, 64)] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 7 % 256) as u8).collect();
+            let path = dir.join(format!("a{len}-{bs}.vdisk"));
+            ImageBuilder::new("align")
+                .blob("payload", data.clone())
+                .block_size(bs)
+                .write(&path, &key)
+                .unwrap();
+            let img = MountedImage::mount(&path, &key).unwrap();
+            let back = img.read_extent("payload").unwrap();
+            assert_eq!(back.len(), len, "len {len} bs {bs}: plain_len respected");
+            assert_eq!(back, data, "len {len} bs {bs}: content round-trips");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_readers_unseal_each_block_once() {
+        // The read_block miss path is single-entry: racing full-extent
+        // reads coalesce to exactly one unseal per block.
+        let key = SealKey::from_passphrase("mnt");
+        let dir = tmp_dir("race");
+        let path = build(&dir, &key);
+        let img = MountedImage::mount(&path, &key).unwrap();
+        let expect = img.read_extent("gallery").unwrap();
+        let blocks: u64 =
+            img.manifest.extents.iter().map(|e| e.blocks as u64).sum::<u64>();
+        // One warm copy exists now; clear nothing — restart from a fresh
+        // mount so the concurrent pass does all the unsealing itself.
+        drop(img);
+        let img = MountedImage::mount(&path, &key).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..3 {
+                        assert_eq!(img.read_extent("gallery").unwrap(), expect);
+                        assert_eq!(img.read_extent("config").unwrap(), b"{\"fps\": 8}");
+                    }
+                });
+            }
+        });
+        let stats = img.cache_stats();
+        assert_eq!(stats.inserts, blocks, "exactly one unseal per block");
+        assert!(stats.hits >= stats.inserts, "repeat walks served from cache");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn wrong_key_rejected() {
         let key = SealKey::from_passphrase("mnt");
         let dir = tmp_dir("wrongkey");
@@ -427,13 +560,21 @@ mod tests {
         assert!(sup.handle_attach(8, 100).is_none());
         assert!(sup.events.is_empty());
 
-        // Attach mounts; detach unmounts; re-attach remounts.
+        // Attach mounts; detach unmounts; re-attach remounts.  A mounted
+        // gallery image exposes its serving-ready index, the detach drops
+        // it, and the remount publishes a fresh snapshot.
         assert!(sup.handle_attach(7, 200).is_some());
         assert!(sup.is_mounted(7));
         assert_eq!(sup.mounted_count(), 1);
+        let idx = sup.gallery_index(7).expect("mounted gallery image exposes an index");
+        assert_eq!(idx.len(), 20);
+        assert_eq!(idx.dim(), 16);
         sup.handle_detach(7, 300);
         assert!(!sup.is_mounted(7));
+        assert!(sup.gallery_index(7).is_none(), "detach must drop the index");
         assert!(sup.handle_attach(7, 400).is_some());
+        let idx2 = sup.gallery_index(7).expect("remount republishes the index");
+        assert_eq!(idx2.data(), idx.data(), "same media, same snapshot");
         let kinds: Vec<_> = sup.events.iter().map(|e| e.kind).collect();
         assert_eq!(
             kinds,

@@ -1,11 +1,17 @@
 //! End-to-end serving-layer integration: the §5 disaster-response mission
-//! trace driven through the `champd serve` machinery, plus the telemetry
-//! file contract for all three profiles.
+//! trace driven through the `champd serve` machinery, the telemetry file
+//! contract for all three profiles, and the serve-from-sealed-image loop
+//! (pack → mount → serve → hot-swap fallback).
 
+use champ::bus::hotplug::{HotplugEvent, HotplugKind};
+use champ::bus::topology::SlotId;
 use champ::cli::serve::{serve_report, trace_events_for};
+use champ::cli;
+use champ::cli::vdisk::{pack, pack_options_from};
 use champ::metrics::report::ServeReport;
-use champ::serve::session::{ServeConfig, ServeSession};
+use champ::serve::session::{ServeConfig, ServeSession, STORAGE_SLOT};
 use champ::serve::traffic::MissionProfile;
+use champ::vdisk::MountEventKind;
 
 fn disaster_cfg() -> ServeConfig {
     let mut cfg = ServeConfig::new(MissionProfile::disaster_response());
@@ -103,6 +109,77 @@ fn serve_report_covers_all_profiles_with_power_rows() {
     let back = ServeReport::parse(&report.to_json_pretty()).unwrap();
     assert_eq!(back.records, report.records);
     assert_eq!(back.power, report.power);
+}
+
+/// Pack a sealed cartridge image through the exact `champd vdisk pack`
+/// code path (rotation-protected gallery, atomic publish).
+fn pack_image(tag: &str, gallery: usize, dim: usize, key: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("champ-iserve-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("gallery.vdisk");
+    let argv = format!(
+        "vdisk pack --out {} --gallery {gallery} --dim {dim} --seed 5 --key {key} \
+         --label serve-media --block-size 1024",
+        out.display()
+    );
+    let args = cli::parse_args(argv.split_whitespace().map(String::from));
+    pack(&pack_options_from(&args).unwrap()).unwrap();
+    out
+}
+
+#[test]
+fn checkpoint_profile_serves_from_a_packed_sealed_image() {
+    // The acceptance loop: pack → mount → serve the checkpoint profile
+    // from the sealed image.  Identify resolves against the image's
+    // streaming-decoded gallery and the SLO accounting identity holds.
+    let out_path = pack_image("full", 600, 32, "mission-serve-key");
+    let mut cfg = ServeConfig::new(MissionProfile::checkpoint());
+    cfg.requests = 150;
+    cfg.overload = 2.0;
+    cfg.dim = 32;
+    cfg.seed = 13;
+    cfg.image = Some(out_path);
+    cfg.image_key = "mission-serve-key".into();
+    let out = ServeSession::new(cfg).unwrap().run(vec![]);
+
+    assert!(out.accounting_ok, "offered == completed + shed per class");
+    assert_eq!(out.offered, 150);
+    assert_eq!(out.offered, out.completed + out.shed);
+    assert!(out.completed > 0, "identify must complete against the mounted image");
+    let kinds: Vec<_> = out.media_events.iter().map(|e| e.kind).collect();
+    assert_eq!(kinds, vec![MountEventKind::Mounted]);
+    for c in &out.classes {
+        assert_eq!(c.offered, c.completed + c.shed, "{}: per-class identity", c.name);
+    }
+}
+
+#[test]
+fn mid_run_media_detach_falls_back_without_panic() {
+    // Yank the storage bay mid-run and never re-insert: identify traffic
+    // falls back to the (empty) in-memory overlay, nothing panics, and
+    // every request still reaches a typed terminal outcome.
+    let out_path = pack_image("detach", 600, 32, "mission-serve-key");
+    let mut cfg = ServeConfig::new(MissionProfile::checkpoint());
+    cfg.requests = 200;
+    cfg.overload = 1.5;
+    cfg.dim = 32;
+    cfg.seed = 17;
+    cfg.image = Some(out_path);
+    cfg.image_key = "mission-serve-key".into();
+    let events = vec![HotplugEvent {
+        at_us: 300_000,
+        slot: SlotId(STORAGE_SLOT),
+        kind: HotplugKind::Detach,
+        uid: 0,
+    }];
+    let out = ServeSession::new(cfg).unwrap().run(events);
+
+    assert!(out.accounting_ok, "fallback must keep exactly-once accounting");
+    assert_eq!(out.offered, out.completed + out.shed);
+    assert!(out.completed > 0, "serving continues on the fallback index");
+    let kinds: Vec<_> = out.media_events.iter().map(|e| e.kind).collect();
+    assert_eq!(kinds, vec![MountEventKind::Mounted, MountEventKind::Unmounted]);
 }
 
 #[test]

@@ -1,0 +1,139 @@
+//! Property suite for the streaming vdisk read pipeline: the zero-copy
+//! decode must be bit-identical to the legacy `read_extent` +
+//! `Gallery::decode` path for any extent/block geometry, and the sharded
+//! cache must keep its one-unseal-per-block contract under concurrency.
+//! (Tamper parity between serial and parallel unseal is pinned by the
+//! crate-internal tests in `vdisk::stream` — mount-time MACs make a
+//! tampered file unreachable through the public API.)
+
+use std::path::{Path, PathBuf};
+
+use champ::biometric::gallery::Gallery;
+use champ::biometric::template::Template;
+use champ::crypto::seal::SealKey;
+use champ::util::prop;
+use champ::util::rng::Rng;
+use champ::vdisk::{ImageBuilder, MountedImage};
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("champ-pstream-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn random_gallery(rng: &mut Rng, n: usize, dim: usize) -> Gallery {
+    let mut g = Gallery::new(dim);
+    for _ in 0..n {
+        // Variable-length ids (duplicates collapse, like real enrollment).
+        let id = format!("p{}", rng.next_u64() % 10_000_000);
+        g.add(id, Template::new(rng.unit_vec(dim)));
+    }
+    g
+}
+
+fn pack(dir: &Path, g: &Gallery, bs: u32, key: &SealKey, tag: &str) -> PathBuf {
+    let path = dir.join(format!("{tag}.vdisk"));
+    ImageBuilder::new("prop").gallery(g).block_size(bs).write(&path, key).unwrap();
+    path
+}
+
+/// Streaming decode == legacy decode, bit for bit (matrix, ids, order).
+fn assert_stream_equals_legacy(img: &MountedImage, dim: usize) {
+    let legacy =
+        Gallery::decode(&img.read_extent("gallery").unwrap(), dim).unwrap();
+    let (sidx, stats) = img.load_gallery_index().unwrap();
+    assert_eq!(sidx.len(), legacy.len());
+    assert_eq!(sidx.dim(), legacy.dim());
+    assert_eq!(sidx.data(), legacy.index().data(), "matrix must match bit for bit");
+    for (r, (id, row)) in legacy.iter().enumerate() {
+        assert_eq!(sidx.id_of(r), id, "row {r}: enrollment order preserved");
+        assert_eq!(sidx.row(r), row, "row {r}");
+    }
+    assert_eq!(stats.templates, legacy.len() as u64);
+    // The zero-copy bound: only boundary straddles are staged, so the
+    // carry can never exceed one full record per block boundary.
+    let (_, meta) = img.manifest.find("gallery").unwrap();
+    let max_record = legacy
+        .iter()
+        .map(|(id, _)| 4 + id.len() as u64 + 4 * dim as u64)
+        .max()
+        .unwrap_or(0);
+    assert!(
+        stats.carry_bytes <= max_record * meta.blocks.max(1) as u64,
+        "carry {} exceeds one record per boundary ({} x {})",
+        stats.carry_bytes,
+        max_record,
+        meta.blocks
+    );
+}
+
+#[test]
+fn streaming_decode_is_bit_identical_for_random_geometries() {
+    let dir = tmp("geom");
+    let key = SealKey::from_passphrase("prop-stream");
+    prop::check("stream-vs-legacy", 211, 18, |rng, case| {
+        let dim = 1 + (rng.next_u64() % 24) as usize;
+        let n = (rng.next_u64() % 30) as usize;
+        let bs = 64 + (rng.next_u64() % 400) as u32;
+        let g = random_gallery(rng, n, dim);
+        let path = pack(&dir, &g, bs, &key, &format!("c{case}"));
+        let img = MountedImage::mount(&path, &key).unwrap();
+        assert_stream_equals_legacy(&img, dim);
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streaming_decode_edge_geometries() {
+    let dir = tmp("edge");
+    let key = SealKey::from_passphrase("prop-stream");
+    let mut rng = Rng::new(77);
+    // (n, dim, block size): single-block image; every row straddling
+    // multiple blocks (block < template width); a block barely larger
+    // than one record; empty gallery.
+    for (i, (n, dim, bs)) in
+        [(5usize, 8usize, 4096u32), (7, 32, 64), (9, 15, 4 + 8 + 60), (0, 8, 128)]
+            .into_iter()
+            .enumerate()
+    {
+        let g = random_gallery(&mut rng, n, dim);
+        let path = pack(&dir, &g, bs, &key, &format!("e{i}"));
+        let img = MountedImage::mount(&path, &key).unwrap();
+        assert_stream_equals_legacy(&img, dim);
+        // Single-block images stage nothing at all.
+        if i == 0 {
+            let (_, stats) = img.load_gallery_index().unwrap();
+            assert_eq!(stats.carry_bytes, 0, "one block => zero staged bytes");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_full_extent_walks_unseal_each_block_once() {
+    // The read_block miss path is single-entry even when whole-extent
+    // streaming walks race: cache telemetry proves one unseal per block.
+    let dir = tmp("race");
+    let key = SealKey::from_passphrase("prop-stream");
+    let mut rng = Rng::new(5);
+    let g = random_gallery(&mut rng, 40, 16);
+    let path = pack(&dir, &g, 128, &key, "race");
+    let img = MountedImage::mount(&path, &key).unwrap();
+    let blocks: u64 = img.manifest.extents.iter().map(|e| e.blocks as u64).sum();
+    let expect = img.read_extent("gallery").unwrap();
+    drop(img);
+
+    let img = MountedImage::mount(&path, &key).unwrap();
+    std::thread::scope(|s| {
+        for _ in 0..6 {
+            s.spawn(|| {
+                for _ in 0..2 {
+                    assert_eq!(img.read_extent("gallery").unwrap(), expect);
+                }
+            });
+        }
+    });
+    let stats = img.cache_stats();
+    assert_eq!(stats.inserts, blocks, "one unseal per block under 6 racing readers");
+    std::fs::remove_dir_all(&dir).ok();
+}
