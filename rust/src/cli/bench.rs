@@ -21,6 +21,9 @@
 //! Flags (scaling):
 //!   --frames N        source frames per point (default 200)
 //!   --max-devices N   sweep 1..=N accelerators (default 5)
+//!   --trace [PATH]    after the sweep, run one instrumented engine pass
+//!                     at max devices and export its causal trace as
+//!                     Perfetto JSON (default TRACE_bench.json)
 //!   --out PATH        output JSON (default BENCH_scaling.json)
 //!   --baseline PATH   baseline JSON (default: the checked-in
 //!                     benches/common/scaling_baseline.json, embedded)
@@ -152,6 +155,29 @@ fn print_table(report: &BenchReport) {
     }
 }
 
+/// One instrumented engine pass for `bench scaling --trace`: the max-rig
+/// NCS2 rack with the recorder on, exported as Perfetto JSON.
+fn export_scaling_trace(path: &str, frames: u64, n: usize) -> anyhow::Result<()> {
+    use crate::obs::{export, TraceRecorder, TraceSnapshot};
+    let mut o = rack(DeviceKind::Ncs2, n)?;
+    o.obs = TraceRecorder::enabled();
+    let src = VideoSource::paper_stream(7);
+    let cfg = EngineConfig::batched(4).with_warmup((frames / 10).clamp(2, 20));
+    let _rep = o.run_broadcast_engine(&src, frames, cfg, vec![]);
+    let snap = TraceSnapshot {
+        records: o.obs.snapshot(),
+        metrics: o.reg.snapshot(),
+        dropped: o.obs.dropped(),
+    };
+    std::fs::write(path, export::perfetto_json(&snap) + "\n")?;
+    println!(
+        "wrote {path} ({} trace records, {} dropped)",
+        snap.records.len(),
+        snap.dropped
+    );
+    Ok(())
+}
+
 fn run_scaling(args: &Args) -> anyhow::Result<()> {
     let frames = args.flag_u64("frames", 200);
     let max_devices = args.flag_u64("max-devices", 5) as usize;
@@ -162,6 +188,11 @@ fn run_scaling(args: &Args) -> anyhow::Result<()> {
     print_table(&report);
     report.write(&out)?;
     println!("\nwrote {out} ({} records, commit {})", report.records.len(), report.commit);
+
+    if args.switch("trace") {
+        let tpath = args.flag("trace").unwrap_or("TRACE_bench.json");
+        export_scaling_trace(tpath, frames, max_devices.max(1))?;
+    }
 
     if args.switch("no-guard") {
         return Ok(());

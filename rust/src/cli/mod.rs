@@ -7,6 +7,7 @@
 pub mod bench;
 pub mod bench_vdisk;
 pub mod serve;
+pub mod trace;
 pub mod vdisk;
 
 /// Parsed command line.

@@ -3,10 +3,13 @@
 //!
 //! Runs the admission-controlled serving session over one or all mission
 //! profiles at a configured overload factor, prints the per-class SLO
-//! table plus the power figure of merit, writes the telemetry file
-//! ([`crate::metrics::report::ServeReport`], schema v1), and enforces the
+//! table plus the per-tenant fairness table and the power figure of
+//! merit, writes the telemetry file
+//! ([`crate::metrics::report::ServeReport`], schema v2), and enforces the
 //! goodput regression guard against the committed baseline
-//! (`rust/benches/common/serve_baseline.json`).
+//! (`rust/benches/common/serve_baseline.json`).  With `--trace` it also
+//! exports the causal trace (Perfetto JSON + folded stacks) and prints
+//! the SLO health summary.
 //!
 //! Flags:
 //!   --profile P       checkpoint | watchlist | disaster | all (default all)
@@ -19,8 +22,12 @@
 //!   --gallery N       enrolled identities (default 10000)
 //!   --dim D           embedding dimension (default 128)
 //!   --k K             top-k per identify probe (default 10)
-//!   --trace           apply the profile's mission trace (disaster: the §5
-//!                     mid-run cartridge swap) as hot-plug events
+//!   --trace [PATH]    enable end-to-end causal tracing AND apply the
+//!                     profile's mission trace (disaster: the §5 mid-run
+//!                     cartridge swap) as hot-plug events; writes
+//!                     Perfetto trace-event JSON to PATH (default
+//!                     TRACE_serve.json) plus folded flamegraph stacks,
+//!                     and prints the SLO health summary
 //!   --image PATH      serve Identify from this sealed cartridge image
 //!                     (packed with `champd vdisk pack`); the in-memory
 //!                     index then only backs enrolls + detach fallback
@@ -31,7 +38,11 @@
 //!   --no-guard        write telemetry but skip the regression gate
 
 use crate::bus::hotplug::HotplugEvent;
-use crate::metrics::report::{current_commit, ServePowerRecord, ServeRecord, ServeReport};
+use crate::metrics::report::{
+    current_commit, ServePowerRecord, ServeRecord, ServeReport, ServeTenantRecord,
+};
+use crate::obs::export;
+use crate::obs::health::{health_summary, BudgetRow};
 use crate::serve::session::{ServeConfig, ServeOutcome, ServeSession};
 use crate::serve::traffic::MissionProfile;
 use crate::workload::traces::MissionTrace;
@@ -43,7 +54,7 @@ use super::Args;
 const DEFAULT_BASELINE: &str = include_str!("../../benches/common/serve_baseline.json");
 
 /// Resolve `--profile`.
-fn profiles_from(name: &str) -> anyhow::Result<Vec<MissionProfile>> {
+pub(crate) fn profiles_from(name: &str) -> anyhow::Result<Vec<MissionProfile>> {
     if name == "all" {
         return Ok(MissionProfile::all());
     }
@@ -77,7 +88,79 @@ pub fn config_for(profile: MissionProfile, args: &Args) -> ServeConfig {
     cfg.k = args.flag_u64("k", 10) as usize;
     cfg.image = args.flag("image").map(std::path::PathBuf::from);
     cfg.image_key = args.flag("image-key").unwrap_or("champ-dev-key").to_string();
+    cfg.trace = args.switch("trace");
     cfg
+}
+
+/// Artifact paths for one profile's trace: the Perfetto JSON (the base
+/// path, profile-suffixed when several profiles ran) and the folded
+/// flamegraph stacks next to it.
+pub(crate) fn trace_artifact_paths(base: &str, profile: &str, multi: bool) -> (String, String) {
+    let perfetto = if multi {
+        match base.rsplit_once('.') {
+            Some((stem, ext)) => format!("{stem}_{profile}.{ext}"),
+            None => format!("{base}_{profile}"),
+        }
+    } else {
+        base.to_string()
+    };
+    let folded = match perfetto.rsplit_once('.') {
+        Some((stem, _)) => format!("{stem}.folded"),
+        None => format!("{perfetto}.folded"),
+    };
+    (perfetto, folded)
+}
+
+/// Budget-burn rows for the SLO health surface: one per class, one per
+/// tenant, in report order.
+pub(crate) fn budget_rows(out: &ServeOutcome) -> Vec<BudgetRow> {
+    let mut rows = Vec::with_capacity(out.classes.len() + out.tenants.len());
+    for c in &out.classes {
+        rows.push(BudgetRow {
+            scope: "class",
+            name: c.name.to_string(),
+            offered: c.offered,
+            completed: c.completed,
+            shed: c.shed,
+            deadline_misses: c.completed - c.on_time,
+            p99_us: c.p99_us,
+        });
+    }
+    for t in &out.tenants {
+        rows.push(BudgetRow {
+            scope: "tenant",
+            name: t.name.to_string(),
+            offered: t.offered,
+            completed: t.completed,
+            shed: t.shed,
+            deadline_misses: t.completed - t.on_time,
+            p99_us: t.p99_us,
+        });
+    }
+    rows
+}
+
+/// Write one profile's trace artifacts and print its health summary.
+pub(crate) fn emit_trace_artifacts(
+    base: &str,
+    profile: &MissionProfile,
+    out: &ServeOutcome,
+    multi: bool,
+) -> anyhow::Result<()> {
+    let Some(snap) = &out.trace else { return Ok(()) };
+    let (ppath, fpath) = trace_artifact_paths(base, profile.name, multi);
+    let perfetto = export::perfetto_json(snap);
+    let n_events = export::count_trace_events(&perfetto)
+        .map_err(|e| anyhow::anyhow!("exported trace failed to re-parse: {e:?}"))?;
+    std::fs::write(&ppath, perfetto + "\n")?;
+    std::fs::write(&fpath, export::folded_stacks(snap))?;
+    println!(
+        "\nwrote {ppath} ({} trace events, {} records) and {fpath}",
+        n_events,
+        snap.records.len()
+    );
+    print!("{}", health_summary(snap, &budget_rows(out)));
+    Ok(())
 }
 
 /// Run the serving sweep and assemble the telemetry report.  Returns the
@@ -116,6 +199,23 @@ pub fn serve_report(
                 goodput_rps: c.goodput_rps,
                 p50_us: c.p50_us,
                 p99_us: c.p99_us,
+            });
+        }
+        for t in &out.tenants {
+            report.push_tenant(ServeTenantRecord {
+                profile: profile.name.to_string(),
+                tenant: t.name.to_string(),
+                share: t.share,
+                overload,
+                offered: t.offered,
+                completed: t.completed,
+                shed: t.shed,
+                requeued: t.requeued,
+                shed_rate: t.shed_rate,
+                deadline_miss_rate: t.deadline_miss_rate,
+                goodput_rps: t.goodput_rps,
+                p50_us: t.p50_us,
+                p99_us: t.p99_us,
             });
         }
         report.push_power(ServePowerRecord {
@@ -157,6 +257,28 @@ fn print_outcome(profile: &MissionProfile, out: &ServeOutcome) {
             c.goodput_rps
         );
     }
+    if !out.tenants.is_empty() {
+        println!(
+            "{:<18} {:>5} | {:>7} {:>9} {:>6} {:>7} | {:>6} {:>8} {:>8} {:>9}",
+            "tenant", "share", "offered", "completed", "shed", "requeue", "miss%", "p50 ms",
+            "p99 ms", "goodput"
+        );
+        for t in &out.tenants {
+            println!(
+                "{:<18} {:>4.0}% | {:>7} {:>9} {:>6} {:>7} | {:>5.1}% {:>8.1} {:>8.1} {:>9.1}",
+                t.name,
+                t.share * 100.0,
+                t.offered,
+                t.completed,
+                t.shed,
+                t.requeued,
+                t.deadline_miss_rate * 100.0,
+                t.p50_us as f64 / 1e3,
+                t.p99_us as f64 / 1e3,
+                t.goodput_rps
+            );
+        }
+    }
     println!(
         "totals: {} offered = {} completed + {} shed (exactly once); horizon {:.2} s",
         out.offered,
@@ -188,10 +310,18 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     for (profile, out) in &outcomes {
         print_outcome(profile, out);
     }
+    if with_trace {
+        let base = args.flag("trace").unwrap_or("TRACE_serve.json").to_string();
+        let multi = outcomes.len() > 1;
+        for (profile, out) in &outcomes {
+            emit_trace_artifacts(&base, profile, out, multi)?;
+        }
+    }
     report.write(&out_path)?;
     println!(
-        "\nwrote {out_path} ({} records, {} power rows, commit {})",
+        "\nwrote {out_path} ({} records, {} tenant rows, {} power rows, commit {})",
         report.records.len(),
+        report.tenants.len(),
         report.power.len(),
         report.commit
     );
@@ -298,10 +428,29 @@ mod tests {
         let (report, outcomes) = serve_report(vec![cfg], false).unwrap();
         assert_eq!(outcomes.len(), 1);
         assert_eq!(report.records.len(), 4);
+        // Checkpoint has two tenants (lane-a / lane-b); their terminal
+        // counts partition the totals.
+        assert_eq!(report.tenants.len(), 2);
+        let toff: u64 = report.tenants.iter().map(|t| t.offered).sum();
+        assert_eq!(toff, outcomes[0].1.offered);
         assert_eq!(report.power.len(), 1);
         assert!(report.power[0].total_w > 0.0);
         let back = ServeReport::parse(&report.to_json_pretty()).unwrap();
         assert_eq!(back.records, report.records);
+        assert_eq!(back.tenants, report.tenants);
+    }
+
+    #[test]
+    fn trace_paths_suffix_only_multi_profile_runs() {
+        let (p, f) = trace_artifact_paths("TRACE_serve.json", "checkpoint", false);
+        assert_eq!(p, "TRACE_serve.json");
+        assert_eq!(f, "TRACE_serve.folded");
+        let (p, f) = trace_artifact_paths("TRACE_serve.json", "disaster", true);
+        assert_eq!(p, "TRACE_serve_disaster.json");
+        assert_eq!(f, "TRACE_serve_disaster.folded");
+        let (p, f) = trace_artifact_paths("out/trace", "watchlist", true);
+        assert_eq!(p, "out/trace_watchlist");
+        assert_eq!(f, "out/trace_watchlist.folded");
     }
 
     #[test]

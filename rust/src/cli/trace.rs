@@ -1,0 +1,110 @@
+//! `champd trace` — run a traced serving session and export the causal
+//! trace.
+//!
+//! A thin front-end over the serving layer with tracing always on: runs
+//! the selected mission profile(s) with the profile's scripted hot-plug
+//! events, writes the Perfetto trace-event JSON plus the folded
+//! flamegraph stacks, and prints the SLO health summary (per-class and
+//! per-tenant budget burn, slowest spans by stage).  No telemetry report
+//! is written and no regression guard runs — use `champd serve --trace`
+//! for the gated path.
+//!
+//! Flags (serving knobs match `champd serve`):
+//!   --profile P       checkpoint | watchlist | disaster | all
+//!                     (default checkpoint)
+//!   --out PATH        Perfetto JSON output (default TRACE_serve.json);
+//!                     the folded stacks land next to it (.folded)
+//!   --overload F      offered load vs calibrated capacity (default 2.0)
+//!   --frames N        offered requests per profile (default 200)
+//!   --seed S          traffic seed (default 7; same seed on the same
+//!                     machine => bit-identical trace)
+//!   --batch/--window/--gallery/--dim/--k      as in `champd serve`
+//!   --image PATH      serve Identify from this sealed cartridge image
+//!   --image-key K     seal passphrase for --image (default champ-dev-key)
+
+use crate::serve::session::ServeConfig;
+
+use super::serve::{config_for, emit_trace_artifacts, profiles_from, serve_report};
+use super::Args;
+
+/// Entry point for `champd trace`.
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let profiles = profiles_from(args.flag("profile").unwrap_or("checkpoint"))?;
+    let base = args.flag("out").unwrap_or("TRACE_serve.json").to_string();
+
+    let configs: Vec<ServeConfig> = profiles
+        .into_iter()
+        .map(|p| {
+            let mut cfg = config_for(p, args);
+            cfg.trace = true;
+            cfg
+        })
+        .collect();
+    let multi = configs.len() > 1;
+    // with_trace also applies each profile's scripted hot-plug events, so
+    // the disaster trace shows the mid-run cartridge swap.
+    let (_report, outcomes) = serve_report(configs, true)?;
+    for (profile, out) in &outcomes {
+        anyhow::ensure!(
+            out.trace.is_some(),
+            "{}: session ran without a trace snapshot",
+            profile.name
+        );
+        emit_trace_artifacts(&base, profile, out, multi)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::parse_args;
+    use crate::serve::traffic::MissionProfile;
+
+    #[test]
+    fn trace_verb_forces_tracing_on() {
+        // `champd trace` must not require --trace: the verb itself is the
+        // opt-in.
+        let a = parse_args("trace --profile checkpoint --frames 40".split_whitespace().map(String::from));
+        let mut cfg = config_for(MissionProfile::checkpoint(), &a);
+        assert!(!cfg.trace, "config_for alone leaves tracing off");
+        cfg.trace = true;
+        assert!(cfg.trace);
+    }
+
+    #[test]
+    fn traced_mini_run_produces_a_connected_snapshot() {
+        use crate::obs::Stage;
+        let mut cfg = ServeConfig::new(MissionProfile::checkpoint());
+        cfg.requests = 40;
+        cfg.gallery = 256;
+        cfg.dim = 32;
+        cfg.trace = true;
+        let (_r, outcomes) = serve_report(vec![cfg], true).unwrap();
+        let snap = outcomes[0].1.trace.as_ref().expect("trace snapshot");
+        assert!(snap.dropped == 0, "mini run must fit the ring");
+        assert!(!snap.records.is_empty());
+        // At least one request shows the full queue -> bus-grant ->
+        // compute chain with exact tiling.
+        let mut chained = 0;
+        for r in &snap.records {
+            if let crate::obs::RecordKind::Span(Stage::Queue) = r.kind {
+                let grant = snap.records.iter().find(|g| {
+                    g.trace == r.trace
+                        && matches!(g.kind, crate::obs::RecordKind::Span(Stage::BusGrant))
+                        && g.t0_us == r.t1_us
+                });
+                let Some(grant) = grant else { continue };
+                let compute = snap.records.iter().find(|c| {
+                    c.trace == r.trace
+                        && matches!(c.kind, crate::obs::RecordKind::Span(Stage::Compute))
+                        && c.t0_us == grant.t1_us
+                });
+                if compute.is_some() {
+                    chained += 1;
+                }
+            }
+        }
+        assert!(chained > 0, "no request had a connected queue->grant->compute chain");
+    }
+}

@@ -37,6 +37,7 @@ use crate::bus::topology::SlotId;
 use crate::device::timing::stream_handoff_us;
 use crate::device::Cartridge;
 use crate::metrics::{FpsMeter, Histogram};
+use crate::obs::{EventKind, Stage, TraceId};
 use crate::workload::video::VideoSource;
 
 use super::completion::CompletionQueue;
@@ -394,7 +395,16 @@ impl Orchestrator {
             // batching buys (a leaner bus generation also cuts host cost).
             let host_cost =
                 (host_raw as f64 * self.bus.profile.host_efficiency()).round() as u64;
-            let (_, host_done) = self.bus.host.reserve(now, host_cost);
+            let (host_start, host_done) = self.bus.host.reserve(now, host_cost);
+            self.obs.span(
+                TraceId::frame(env.first_seq),
+                Stage::HostPrep,
+                host_start,
+                host_done,
+                uid,
+                count as u64,
+            );
+            self.reg.count("engine.host.batches", 1);
             let b = BatchState { env, dispatched_us: now, stage: 0 };
             s.q.push(host_done, Ev::HostDone { uid, epoch: dev.epoch, b });
         }
@@ -417,6 +427,20 @@ impl Orchestrator {
             if info.map(|t| t < decision).unwrap_or(false) {
                 // Something happens before the wire's next grant instant;
                 // process it first — it may add a competing transfer.
+                if self.obs.is_enabled() {
+                    if let Some(r) =
+                        s.pending.iter().min_by_key(|r| (r.ready_us, r.b.env.first_seq))
+                    {
+                        self.obs.event(
+                            TraceId::frame(r.b.env.first_seq),
+                            EventKind::BusDefer,
+                            decision,
+                            s.pending.len() as u64,
+                            r.uid,
+                        );
+                    }
+                }
+                self.reg.count("engine.bus.defers", 1);
                 return;
             }
             let cands: Vec<SlotId> = s
@@ -436,7 +460,13 @@ impl Orchestrator {
                 .unwrap();
             let req = s.pending.remove(idx);
             let cost = self.bus.profile.bulk_time_us(req.bytes);
-            let (_, end) = self.bus.wire.reserve(req.ready_us, cost);
+            let (wire_start, end) = self.bus.wire.reserve(req.ready_us, cost);
+            if self.obs.is_enabled() {
+                let t = TraceId::frame(req.b.env.first_seq);
+                self.obs.span(t, Stage::BusGrant, req.ready_us, wire_start, req.uid, cands.len() as u64);
+                self.obs.span(t, Stage::Wire, wire_start, end, req.uid, req.bytes);
+            }
+            self.reg.count("engine.bus.grants", 1);
             s.q.push(end, Ev::XferDone { req });
         }
     }
@@ -466,7 +496,15 @@ impl Orchestrator {
                     Leg::Input => {
                         let Some(cart) = self.carts.get_mut(&req.uid) else { return };
                         let dur = cart.service_us * req.b.env.count as u64;
-                        let (_, done) = cart.timeline.reserve(at, dur);
+                        let (c_start, done) = cart.timeline.reserve(at, dur);
+                        self.obs.span(
+                            TraceId::frame(req.b.env.first_seq),
+                            Stage::Compute,
+                            c_start,
+                            done,
+                            req.uid,
+                            req.b.env.count as u64,
+                        );
                         s.q.push(done, Ev::InferDone { uid: req.uid, epoch: req.epoch, b: req.b });
                     }
                     Leg::Result => {
@@ -670,8 +708,17 @@ impl Orchestrator {
             Segment::PeerLink => {
                 // Direct neighbour link: no host routing work, no shared
                 // wire — only the pair's private segment serializes.
-                let (_, end) =
+                let (p_start, end) =
                     self.bus.peer_transfer(from_slot.unwrap(), slot, at, b.env.wire_bytes());
+                self.obs.span(
+                    TraceId::frame(b.env.first_seq),
+                    Stage::Wire,
+                    p_start,
+                    end,
+                    uid,
+                    b.env.wire_bytes(),
+                );
+                self.reg.count("engine.peer.hops", 1);
                 let req = WireReq {
                     uid,
                     epoch: 0,
@@ -720,7 +767,15 @@ impl Orchestrator {
                 Leg::Hop => {
                     let Some(cart) = self.carts.get_mut(&req.uid) else { return };
                     let dur = cart.service_us * req.b.env.count as u64;
-                    let (_, done) = cart.timeline.reserve(at, dur);
+                    let (c_start, done) = cart.timeline.reserve(at, dur);
+                    self.obs.span(
+                        TraceId::frame(req.b.env.first_seq),
+                        Stage::Compute,
+                        c_start,
+                        done,
+                        req.uid,
+                        req.b.env.count as u64,
+                    );
                     s.q.push(done, Ev::InferDone { uid: req.uid, epoch: 0, b: req.b });
                 }
                 Leg::Tail => {

@@ -84,6 +84,12 @@ pub struct Orchestrator {
     pub swap: SwapController,
     pub clock: SimClock,
     pub stage_metrics: HashMap<u64, StageMetrics>,
+    /// Trace recorder threaded into the engine and mount paths.  Off by
+    /// default; callers that want a trace install an enabled recorder
+    /// before running (`champd serve --trace`, `champd trace`).
+    pub obs: crate::obs::TraceRecorder,
+    /// Metrics registry the engine (and layers above) publish into.
+    pub reg: crate::obs::MetricsRegistry,
     next_uid: u64,
 }
 
@@ -102,6 +108,8 @@ impl Orchestrator {
             swap: SwapController::new(),
             clock: SimClock::new(),
             stage_metrics: HashMap::new(),
+            obs: crate::obs::TraceRecorder::off(),
+            reg: crate::obs::MetricsRegistry::new(),
             next_uid: 1,
         }
     }

@@ -42,6 +42,7 @@ pub mod crypto;
 pub mod device;
 pub mod json;
 pub mod metrics;
+pub mod obs;
 pub mod power;
 pub mod runtime;
 pub mod serve;

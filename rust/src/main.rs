@@ -10,6 +10,8 @@
 //!                    each with a regression guard)
 //!   hotswap          the §4.2 hot-swap experiment
 //!   power            §4.3 power report over the Table-1 sweep
+//!   trace            traced serving run -> Perfetto JSON + folded stacks
+//!                    + SLO health summary
 //!   export-workflow  dump the ComfyUI-style graph for the live pipeline
 //!   check-artifacts  compile every artifact and run a smoke inference
 //!   vdisk            pack / inspect / verify sealed cartridge images
@@ -38,12 +40,15 @@ USAGE: champd <subcommand> [flags]
   run [config.json] [--frames N] [--real-compute]
   serve [--profile checkpoint|watchlist|disaster|all] [--overload F]
         [--frames N] [--seed S] [--batch B] [--window W] [--gallery N]
-        [--dim D] [--k K] [--trace] [--image IMG.vdisk] [--image-key K]
+        [--dim D] [--k K] [--trace [PATH]] [--image IMG.vdisk] [--image-key K]
         [--out PATH] [--baseline PATH] [--tolerance PCT] [--no-guard]
+  trace [--profile checkpoint|watchlist|disaster|all] [--out PATH]
+        [--overload F] [--frames N] [--seed S] [--image IMG.vdisk]
+        [--image-key K] (serving knobs as in serve; tracing always on)
   sweep --kind ncs2|coral [--max-devices N] [--frames N] [--engine barrier|batched]
         [--batch B]
-  bench scaling [--frames N] [--max-devices N] [--out PATH] [--baseline PATH]
-        [--tolerance PCT] [--no-guard]
+  bench scaling [--frames N] [--max-devices N] [--trace [PATH]] [--out PATH]
+        [--baseline PATH] [--tolerance PCT] [--no-guard]
   bench match [--sizes 1k,10k,100k[,1m]] [--dim D] [--probes N] [--k K]
         [--out PATH] [--baseline PATH] [--tolerance PCT] [--no-guard]
   bench vdisk [--sizes 10k,100k] [--dim D] [--block-size B] [--out PATH]
@@ -232,6 +237,7 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand.as_deref().unwrap() {
         "run" => cmd_run(&args),
         "serve" => cli::serve::run(&args),
+        "trace" => cli::trace::run(&args),
         "sweep" => cmd_sweep(&args),
         "bench" => cli::bench::run(&args),
         "hotswap" => cmd_hotswap(&args),

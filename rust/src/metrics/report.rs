@@ -392,6 +392,66 @@ impl ServeRecord {
     }
 }
 
+/// One per-tenant fairness row of a serving run (schema v2).  Sourced
+/// from the metrics registry's `serve.tenant.*` counters plus the SLO
+/// tracker's per-tenant latency samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeTenantRecord {
+    pub profile: String,
+    /// Tenant name within the profile (e.g. `"lane-a"`).
+    pub tenant: String,
+    /// Nominal traffic share the profile assigns this tenant.
+    pub share: f64,
+    pub overload: f64,
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub requeued: u64,
+    pub shed_rate: f64,
+    pub deadline_miss_rate: f64,
+    pub goodput_rps: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl ServeTenantRecord {
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("profile", json::s(&self.profile)),
+            ("tenant", json::s(&self.tenant)),
+            ("share", json::num(self.share)),
+            ("overload", json::num(self.overload)),
+            ("offered", json::num(self.offered as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("shed", json::num(self.shed as f64)),
+            ("requeued", json::num(self.requeued as f64)),
+            ("shed_rate", json::num(self.shed_rate)),
+            ("deadline_miss_rate", json::num(self.deadline_miss_rate)),
+            ("goodput_rps", json::num(self.goodput_rps)),
+            ("p50_us", json::num(self.p50_us as f64)),
+            ("p99_us", json::num(self.p99_us as f64)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Option<ServeTenantRecord> {
+        Some(ServeTenantRecord {
+            profile: v.get("profile")?.as_str()?.to_string(),
+            tenant: v.get("tenant")?.as_str()?.to_string(),
+            share: v.get("share").and_then(Value::as_f64).unwrap_or(0.0),
+            overload: v.get("overload")?.as_f64()?,
+            offered: v.get("offered")?.as_u64()?,
+            completed: v.get("completed")?.as_u64()?,
+            shed: v.get("shed")?.as_u64()?,
+            requeued: v.get("requeued").and_then(Value::as_u64).unwrap_or(0),
+            shed_rate: v.get("shed_rate").and_then(Value::as_f64).unwrap_or(0.0),
+            deadline_miss_rate: v.get("deadline_miss_rate").and_then(Value::as_f64).unwrap_or(0.0),
+            goodput_rps: v.get("goodput_rps").and_then(Value::as_f64).unwrap_or(0.0),
+            p50_us: v.get("p50_us").and_then(Value::as_u64).unwrap_or(0),
+            p99_us: v.get("p99_us").and_then(Value::as_u64).unwrap_or(0),
+        })
+    }
+}
+
 /// Per-profile power summary emitted alongside the SLO rows, so the
 /// paper's ~10 W figure-of-merit regenerates with every serving run.
 #[derive(Debug, Clone, PartialEq)]
@@ -422,11 +482,15 @@ impl ServePowerRecord {
     }
 }
 
-/// The serving-layer telemetry file (`BENCH_serve.json`, schema v1).
+/// Serve-report schema: v2 adds the per-tenant `tenants` rows.  Readers
+/// stay lenient — a v1 file (no `tenants` key) parses with an empty list.
+pub const SERVE_SCHEMA_VERSION: u64 = 2;
+
+/// The serving-layer telemetry file (`BENCH_serve.json`, schema v2).
 ///
 /// ```json
 /// {
-///   "schema": 1,
+///   "schema": 2,
 ///   "commit": "<sha or 'unknown'>",
 ///   "seed": 7,
 ///   "records": [
@@ -435,6 +499,12 @@ impl ServePowerRecord {
 ///       "offered": 104, "completed": 96, "shed": 8, "requeued": 0,
 ///       "shed_rate": 0.0769, "deadline_miss_rate": 0.0,
 ///       "goodput_rps": 88.1, "p50_us": 2210, "p99_us": 4804 }
+///   ],
+///   "tenants": [
+///     { "profile": "checkpoint", "tenant": "lane-a", "share": 0.55,
+///       "overload": 2.0, "offered": 57, "completed": 52, "shed": 5,
+///       "requeued": 0, "shed_rate": 0.0877, "deadline_miss_rate": 0.0,
+///       "goodput_rps": 47.7, "p50_us": 2190, "p99_us": 4700 }
 ///   ],
 ///   "power": [
 ///     { "profile": "checkpoint", "overload": 2.0,
@@ -447,16 +517,27 @@ pub struct ServeReport {
     pub commit: String,
     pub seed: u64,
     pub records: Vec<ServeRecord>,
+    pub tenants: Vec<ServeTenantRecord>,
     pub power: Vec<ServePowerRecord>,
 }
 
 impl ServeReport {
     pub fn new(commit: impl Into<String>, seed: u64) -> Self {
-        ServeReport { commit: commit.into(), seed, records: Vec::new(), power: Vec::new() }
+        ServeReport {
+            commit: commit.into(),
+            seed,
+            records: Vec::new(),
+            tenants: Vec::new(),
+            power: Vec::new(),
+        }
     }
 
     pub fn push(&mut self, r: ServeRecord) {
         self.records.push(r);
+    }
+
+    pub fn push_tenant(&mut self, r: ServeTenantRecord) {
+        self.tenants.push(r);
     }
 
     pub fn push_power(&mut self, p: ServePowerRecord) {
@@ -471,10 +552,14 @@ impl ServeReport {
 
     pub fn to_value(&self) -> Value {
         json::obj(vec![
-            ("schema", json::num(SCHEMA_VERSION as f64)),
+            ("schema", json::num(SERVE_SCHEMA_VERSION as f64)),
             ("commit", json::s(&self.commit)),
             ("seed", json::num(self.seed as f64)),
             ("records", Value::Arr(self.records.iter().map(ServeRecord::to_value).collect())),
+            (
+                "tenants",
+                Value::Arr(self.tenants.iter().map(ServeTenantRecord::to_value).collect()),
+            ),
             ("power", Value::Arr(self.power.iter().map(ServePowerRecord::to_value).collect())),
         ])
     }
@@ -494,6 +579,14 @@ impl ServeReport {
                     .ok_or_else(|| anyhow::anyhow!("malformed serve record: {}", r.to_json()))?,
             );
         }
+        // v1 back-compat: no "tenants" key parses as an empty list.
+        let mut tenants = Vec::new();
+        for t in v.get("tenants").and_then(Value::as_arr).unwrap_or(&[]) {
+            tenants.push(
+                ServeTenantRecord::from_value(t)
+                    .ok_or_else(|| anyhow::anyhow!("malformed tenant record: {}", t.to_json()))?,
+            );
+        }
         let mut power = Vec::new();
         for p in v.get("power").and_then(Value::as_arr).unwrap_or(&[]) {
             power.push(
@@ -501,7 +594,7 @@ impl ServeReport {
                     .ok_or_else(|| anyhow::anyhow!("malformed power record: {}", p.to_json()))?,
             );
         }
-        Ok(ServeReport { commit, seed, records, power })
+        Ok(ServeReport { commit, seed, records, tenants, power })
     }
 
     pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
@@ -885,6 +978,50 @@ mod tests {
         assert!(back.find("checkpoint", "officer-identify", 2.0).is_some());
         assert!(back.find("checkpoint", "officer-identify", 4.0).is_none());
         assert!(back.find("watchlist", "officer-identify", 2.0).is_none());
+    }
+
+    #[test]
+    fn serve_report_v2_roundtrips_tenants() {
+        let mut rep = ServeReport::new("f00d", 7);
+        rep.push(serve_record("officer-identify", 2.0, 88.0));
+        rep.push_tenant(ServeTenantRecord {
+            profile: "checkpoint".into(),
+            tenant: "lane-a".into(),
+            share: 0.55,
+            overload: 2.0,
+            offered: 57,
+            completed: 52,
+            shed: 5,
+            requeued: 1,
+            shed_rate: 0.0877,
+            deadline_miss_rate: 0.0,
+            goodput_rps: 47.7,
+            p50_us: 2_190,
+            p99_us: 4_700,
+        });
+        let text = rep.to_json_pretty();
+        assert!(text.contains("\"schema\": 2"), "{text}");
+        let back = ServeReport::parse(&text).unwrap();
+        assert_eq!(back.tenants, rep.tenants);
+    }
+
+    #[test]
+    fn serve_report_v1_parses_with_empty_tenants() {
+        // A pre-v2 file has no "tenants" key; it must still load.
+        let v1 = r#"{
+            "schema": 1, "commit": "old", "seed": 3,
+            "records": [
+                { "profile": "checkpoint", "class": "enroll",
+                  "kind": "enroll", "priority": 1, "overload": 1.0,
+                  "offered": 10, "completed": 10, "shed": 0,
+                  "goodput_rps": 5.0 }
+            ],
+            "power": []
+        }"#;
+        let back = ServeReport::parse(v1).unwrap();
+        assert_eq!(back.records.len(), 1);
+        assert!(back.tenants.is_empty(), "v1 files read back with no tenant rows");
+        assert!(ServeReport::parse(r#"{"tenants": [{"profile": "x"}]}"#).is_err());
     }
 
     #[test]

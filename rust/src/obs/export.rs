@@ -1,0 +1,264 @@
+//! Trace exporters: Chrome/Perfetto trace-event JSON and folded stacks.
+//!
+//! The Perfetto format is the trace-event JSON object form — a top-level
+//! `{"traceEvents": [...]}` with `ph:"X"` complete events (`ts`/`dur` in
+//! microseconds, which is exactly our virtual clock unit) and `ph:"i"`
+//! instants.  `chrome://tracing` and <https://ui.perfetto.dev> both load
+//! it; extra top-level keys (we add `"metrics"`) are tolerated by spec.
+//!
+//! Tracks: `pid` groups records into three processes — requests, engine
+//! frames, storage — and `tid` is the trace id within its group, so one
+//! request's admission → queue → dispatch → bus-grant → compute → unseal
+//! chain renders as one row of tiled slices.
+//!
+//! Folded stacks are the `inferno`/FlameGraph text format: one
+//! `stack;frames count` line per aggregate, here `<group>;<stage>` with
+//! the summed span microseconds as the count, so any stock flamegraph
+//! tool renders where the virtual time went.
+
+use crate::json::{self, num, obj, s, Value};
+
+use super::recorder::{RecordKind, TraceId, TraceRecord};
+use super::TraceSnapshot;
+
+/// Perfetto `pid` for serving-request tracks.
+const PID_REQUESTS: u64 = 1;
+/// Perfetto `pid` for engine device-frame tracks.
+const PID_ENGINE: u64 = 2;
+/// Perfetto `pid` for the storage track (mounts, unseal waves).
+const PID_STORAGE: u64 = 3;
+
+fn group_of(t: TraceId) -> (u64, u64) {
+    if t == TraceId::STORAGE {
+        (PID_STORAGE, 0)
+    } else if t.is_frame() {
+        (PID_ENGINE, t.0 & 0x00FF_FFFF_FFFF_FFFF)
+    } else {
+        (PID_REQUESTS, t.0)
+    }
+}
+
+fn meta_event(pid: u64, name: &str) -> Value {
+    obj(vec![
+        ("ph", s("M")),
+        ("pid", num(pid as f64)),
+        ("tid", num(0.0)),
+        ("name", s("process_name")),
+        ("args", obj(vec![("name", s(name))])),
+    ])
+}
+
+fn record_event(r: &TraceRecord) -> Value {
+    let (pid, tid) = group_of(r.trace);
+    let args = obj(vec![("a", num(r.a as f64)), ("b", num(r.b as f64))]);
+    match r.kind {
+        RecordKind::Span(stage) => obj(vec![
+            ("ph", s("X")),
+            ("name", s(stage.as_str())),
+            ("cat", s("champ")),
+            ("pid", num(pid as f64)),
+            ("tid", num(tid as f64)),
+            ("ts", num(r.t0_us as f64)),
+            ("dur", num(r.dur_us() as f64)),
+            ("args", args),
+        ]),
+        RecordKind::Event(kind) => obj(vec![
+            ("ph", s("i")),
+            ("name", s(kind.as_str())),
+            ("cat", s("champ")),
+            ("pid", num(pid as f64)),
+            ("tid", num(tid as f64)),
+            ("ts", num(r.t0_us as f64)),
+            ("s", s("t")),
+            ("args", args),
+        ]),
+    }
+}
+
+fn metrics_value(snap: &TraceSnapshot) -> Value {
+    let counters: Vec<(String, Value)> =
+        snap.metrics.counters.iter().map(|(k, v)| (k.clone(), num(*v as f64))).collect();
+    let gauges: Vec<(String, Value)> = snap
+        .metrics
+        .gauges
+        .iter()
+        .map(|(k, last, max)| {
+            (k.clone(), obj(vec![("last", num(*last as f64)), ("max", num(*max as f64))]))
+        })
+        .collect();
+    let hists: Vec<(String, Value)> = snap
+        .metrics
+        .hists
+        .iter()
+        .map(|(k, h)| {
+            (
+                k.clone(),
+                obj(vec![
+                    ("count", num(h.count as f64)),
+                    ("mean_us", num(h.mean_us as f64)),
+                    ("p50_us", num(h.p50_us as f64)),
+                    ("p99_us", num(h.p99_us as f64)),
+                    ("max_us", num(h.max_us as f64)),
+                ]),
+            )
+        })
+        .collect();
+    obj(vec![
+        ("counters", Value::Obj(counters)),
+        ("gauges", Value::Obj(gauges)),
+        ("histograms", Value::Obj(hists)),
+        ("dropped_records", num(snap.dropped as f64)),
+    ])
+}
+
+/// The full snapshot as a Perfetto-loadable trace-event JSON [`Value`].
+pub fn perfetto_value(snap: &TraceSnapshot) -> Value {
+    let mut events = vec![
+        meta_event(PID_REQUESTS, "requests"),
+        meta_event(PID_ENGINE, "engine"),
+        meta_event(PID_STORAGE, "storage"),
+    ];
+    events.extend(snap.records.iter().map(record_event));
+    obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", s("ms")),
+        ("metrics", metrics_value(snap)),
+    ])
+}
+
+/// Pretty-printed Perfetto trace-event JSON.
+pub fn perfetto_json(snap: &TraceSnapshot) -> String {
+    perfetto_value(snap).to_json_pretty()
+}
+
+/// Folded-stacks flamegraph text: `group;stage total_span_us` lines,
+/// stage-sorted within each group.  Instants are excluded (zero width).
+pub fn folded_stacks(snap: &TraceSnapshot) -> String {
+    // (group name, stage) -> summed span microseconds.  Small fixed key
+    // space, so a sorted Vec beats a map for determinism and simplicity.
+    let mut totals: Vec<((&'static str, &'static str), u64)> = Vec::new();
+    for r in &snap.records {
+        let RecordKind::Span(stage) = r.kind else { continue };
+        let group = match group_of(r.trace).0 {
+            PID_ENGINE => "engine",
+            PID_STORAGE => "storage",
+            _ => "requests",
+        };
+        let key = (group, stage.as_str());
+        match totals.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => *v += r.dur_us(),
+            None => totals.push((key, r.dur_us())),
+        }
+    }
+    totals.sort_unstable_by_key(|(k, _)| *k);
+    let mut out = String::new();
+    for ((group, stage), us) in totals {
+        out.push_str(group);
+        out.push(';');
+        out.push_str(stage);
+        out.push(' ');
+        out.push_str(&us.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse helper used by tests and the CLI overhead gate: the number of
+/// `traceEvents` entries in an exported Perfetto JSON string.
+pub fn count_trace_events(text: &str) -> Result<usize, json::ParseError> {
+    let v = json::parse(text)?;
+    Ok(v.get("traceEvents").and_then(Value::as_arr).map(|a| a.len()).unwrap_or(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::{EventKind, Stage, TraceRecorder};
+
+    fn sample_snapshot() -> TraceSnapshot {
+        let rec = TraceRecorder::enabled();
+        rec.event(TraceId::request(1), EventKind::Offered, 100, 0, 0);
+        rec.span(TraceId::request(1), Stage::Queue, 100, 250, 0, 0);
+        rec.span(TraceId::request(1), Stage::Compute, 300, 900, 2, 0);
+        rec.span(TraceId::frame(4), Stage::Wire, 50, 80, 0, 0);
+        rec.span(TraceId::STORAGE, Stage::UnsealWave, 0, 0, 8, 8);
+        let reg = crate::obs::MetricsRegistry::new();
+        reg.count("serve.offered", 5);
+        reg.gauge("serve.queue_depth", 3);
+        reg.observe("serve.latency_us", 800);
+        TraceSnapshot { records: rec.snapshot(), metrics: reg.snapshot(), dropped: 0 }
+    }
+
+    #[test]
+    fn perfetto_output_parses_and_has_trace_events() {
+        let snap = sample_snapshot();
+        let text = perfetto_json(&snap);
+        // 3 process_name metadata events + 5 records.
+        assert_eq!(count_trace_events(&text).unwrap(), 8);
+        let v = crate::json::parse(&text).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // Every non-metadata event carries ph/pid/tid/ts.
+        for e in events {
+            assert!(e.get("ph").is_some());
+            assert!(e.get("pid").is_some());
+            assert!(e.get("ts").is_some() || e.get("ph").unwrap().as_str() == Some("M"));
+        }
+        // The queue span landed in the requests process with its duration.
+        let span = events
+            .iter()
+            .find(|e| e.get("name").and_then(Value::as_str) == Some("queue"))
+            .unwrap();
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("pid").unwrap().as_u64(), Some(1));
+        assert_eq!(span.get("dur").unwrap().as_u64(), Some(150));
+        // Metrics rode along as a tolerated extra key.
+        assert_eq!(
+            v.get("metrics").unwrap().get("counters").unwrap().get("serve.offered").unwrap()
+                .as_u64(),
+            Some(5)
+        );
+    }
+
+    #[test]
+    fn tracks_split_by_id_band() {
+        let snap = sample_snapshot();
+        let v = perfetto_value(&snap);
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let pid_of = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(Value::as_str) == Some(name))
+                .and_then(|e| e.get("pid"))
+                .and_then(Value::as_u64)
+                .unwrap()
+        };
+        assert_eq!(pid_of("queue"), PID_REQUESTS);
+        assert_eq!(pid_of("wire"), PID_ENGINE);
+        assert_eq!(pid_of("unseal-wave"), PID_STORAGE);
+    }
+
+    #[test]
+    fn folded_stacks_aggregate_span_time() {
+        let snap = sample_snapshot();
+        let text = folded_stacks(&snap);
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.contains(&"requests;queue 150"));
+        assert!(lines.contains(&"requests;compute 600"));
+        assert!(lines.contains(&"engine;wire 30"));
+        assert!(lines.contains(&"storage;unseal-wave 0"));
+        // Instants contribute no lines.
+        assert!(!text.contains("offered"));
+        // Deterministic order: sorted by (group, stage).
+        let mut sorted = lines.clone();
+        sorted.sort_unstable();
+        assert_eq!(lines, sorted);
+    }
+
+    #[test]
+    fn empty_snapshot_exports_cleanly() {
+        let snap = TraceSnapshot::default();
+        let text = perfetto_json(&snap);
+        assert_eq!(count_trace_events(&text).unwrap(), 3);
+        assert_eq!(folded_stacks(&snap), "");
+    }
+}

@@ -1,0 +1,178 @@
+//! The end-of-run "SLO health" text surface.
+//!
+//! Operators at a checkpoint get one screen, not a JSON artifact: which
+//! class or tenant is burning its error budget, and where the slow
+//! requests actually spent their time.  [`health_summary`] renders both
+//! from a [`TraceSnapshot`] plus budget rows the serve layer supplies.
+//!
+//! The module defines its own [`BudgetRow`] rather than importing serve
+//! types: obs sits below serve in the layer order, and the health surface
+//! should render anything that can express offered/completed/shed.
+
+use super::recorder::{RecordKind, Stage, TraceId, TraceRecord};
+use super::TraceSnapshot;
+
+/// One error-budget line: a class or tenant's terminal accounting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BudgetRow {
+    /// "class" or "tenant".
+    pub scope: &'static str,
+    pub name: String,
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    /// Completions that landed past their deadline.
+    pub deadline_misses: u64,
+    pub p99_us: u64,
+}
+
+impl BudgetRow {
+    /// Fraction of offered requests that missed their SLO (shed or late).
+    /// "Budget burn": 0.0 = untouched budget, 1.0 = nothing on time.
+    pub fn burn(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        (self.shed + self.deadline_misses) as f64 / self.offered as f64
+    }
+}
+
+fn trace_label(t: TraceId) -> String {
+    if t == TraceId::STORAGE {
+        "storage".to_string()
+    } else if t.is_frame() {
+        format!("frame#{}", t.0 & 0x00FF_FFFF_FFFF_FFFF)
+    } else {
+        format!("req#{}", t.0)
+    }
+}
+
+/// The top `n` widest spans of `stage`, slowest first; ties broken by the
+/// record sort key so the listing is deterministic.
+pub fn slowest_spans(records: &[TraceRecord], stage: Stage, n: usize) -> Vec<TraceRecord> {
+    let mut spans: Vec<TraceRecord> = records
+        .iter()
+        .filter(|r| matches!(r.kind, RecordKind::Span(s) if s == stage))
+        .copied()
+        .collect();
+    spans.sort_unstable_by(|a, b| {
+        b.dur_us().cmp(&a.dur_us()).then_with(|| a.sort_key().cmp(&b.sort_key()))
+    });
+    spans.truncate(n);
+    spans
+}
+
+/// Render the SLO health text: budget-burn rows, then the top-5 slowest
+/// spans for each stage that appears in the trace.
+pub fn health_summary(snap: &TraceSnapshot, rows: &[BudgetRow]) -> String {
+    let mut out = String::new();
+    out.push_str("SLO health\n");
+    out.push_str("  scope   name          offered  completed  shed  late   burn    p99_us\n");
+    for r in rows {
+        out.push_str(&format!(
+            "  {:<7} {:<13} {:>7} {:>10} {:>5} {:>5}  {:>5.1}% {:>9}\n",
+            r.scope,
+            r.name,
+            r.offered,
+            r.completed,
+            r.shed,
+            r.deadline_misses,
+            r.burn() * 100.0,
+            r.p99_us,
+        ));
+    }
+    out.push_str("  slowest spans by stage (top 5)\n");
+    for stage in Stage::ALL {
+        let top = slowest_spans(&snap.records, stage, 5);
+        if top.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("    {}:\n", stage.as_str()));
+        for r in top {
+            out.push_str(&format!(
+                "      {:<12} {:>9}us  [{} .. {}]\n",
+                trace_label(r.trace),
+                r.dur_us(),
+                r.t0_us,
+                r.t1_us,
+            ));
+        }
+    }
+    if snap.dropped > 0 {
+        out.push_str(&format!(
+            "  warning: {} records lost to ring overflow — trace is partial\n",
+            snap.dropped
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::TraceRecorder;
+
+    #[test]
+    fn burn_math() {
+        let r = BudgetRow {
+            scope: "class",
+            name: "Identify".into(),
+            offered: 100,
+            completed: 90,
+            shed: 10,
+            deadline_misses: 5,
+            p99_us: 4_000,
+        };
+        assert!((r.burn() - 0.15).abs() < 1e-12);
+        assert_eq!(BudgetRow::default().burn(), 0.0);
+    }
+
+    #[test]
+    fn slowest_spans_rank_by_duration_deterministically() {
+        let rec = TraceRecorder::enabled();
+        for (id, d) in [(1u64, 50u64), (2, 300), (3, 100), (4, 300), (5, 10), (6, 80), (7, 90)] {
+            rec.span(TraceId::request(id), Stage::Compute, 0, d, 0, 0);
+        }
+        rec.span(TraceId::request(9), Stage::Queue, 0, 999, 0, 0);
+        let records = rec.snapshot();
+        let top = slowest_spans(&records, Stage::Compute, 5);
+        assert_eq!(top.len(), 5);
+        let durs: Vec<u64> = top.iter().map(TraceRecord::dur_us).collect();
+        assert_eq!(durs, vec![300, 300, 100, 90, 80]);
+        // Duration tie between req#2 and req#4 resolves by sort key.
+        assert_eq!(top[0].trace, TraceId::request(2));
+        assert_eq!(top[1].trace, TraceId::request(4));
+    }
+
+    #[test]
+    fn summary_renders_rows_and_stages() {
+        let rec = TraceRecorder::enabled();
+        rec.span(TraceId::request(1), Stage::Queue, 0, 120, 0, 0);
+        rec.span(TraceId::request(1), Stage::Compute, 120, 500, 0, 0);
+        let snap = TraceSnapshot { records: rec.snapshot(), ..Default::default() };
+        let rows = vec![BudgetRow {
+            scope: "tenant",
+            name: "border-patrol".into(),
+            offered: 40,
+            completed: 38,
+            shed: 2,
+            deadline_misses: 0,
+            p99_us: 3_200,
+        }];
+        let text = health_summary(&snap, &rows);
+        assert!(text.contains("SLO health"));
+        assert!(text.contains("border-patrol"));
+        assert!(text.contains("5.0%"));
+        assert!(text.contains("queue:"));
+        assert!(text.contains("compute:"));
+        assert!(text.contains("req#1"));
+        assert!(!text.contains("warning"), "no drops => no warning line");
+    }
+
+    #[test]
+    fn dropped_records_warn() {
+        let snap = TraceSnapshot { dropped: 7, ..Default::default() };
+        let text = health_summary(&snap, &[]);
+        assert!(text.contains("7 records lost"));
+    }
+}

@@ -1,0 +1,51 @@
+//! Observability: end-to-end causal tracing + the metrics registry.
+//!
+//! The serving story so far was post-hoc: `BENCH_*.json` says *that* a
+//! p99 blew its deadline, never *where* the time went.  This module is
+//! the cross-layer spine that answers the second question:
+//!
+//! * [`recorder::TraceRecorder`] — a sharded, lock-light ring buffer of
+//!   typed span/event records stamped with **virtual time** and a
+//!   per-request [`recorder::TraceId`].  The id is born at
+//!   `serve::admission` intake and flows through EDF queue residency,
+//!   batch dispatch, bus-grant waits, cartridge compute, and the vdisk
+//!   unseal waves under a mount — one connected chain per request whose
+//!   span durations tile arrival → completion exactly.
+//! * [`registry::MetricsRegistry`] — named counters / gauges /
+//!   log-bucketed histograms the serve, engine, and vdisk layers publish
+//!   into (queue depth, credit occupancy, shard hit rate, shed-by-reason),
+//!   one place the reports read instead of ad-hoc tallies.
+//! * [`export`] — Chrome/Perfetto trace-event JSON and folded-stacks
+//!   flamegraph text, both emitted through the crate's own `json` module.
+//! * [`health`] — the end-of-run "SLO health" text surface: per-class and
+//!   per-tenant budget burn plus the top-5 slowest spans by stage.
+//!
+//! Two invariants the rest of the crate leans on:
+//!
+//! 1. **Zero-cost when disabled.**  [`TraceRecorder::off`] is the `None`
+//!    niche of an `Option<Arc<_>>`; every record method is an `#[inline]`
+//!    early return the optimizer folds away, and the disabled path records
+//!    exactly zero events (property-tested in `tests/obs_effect.rs`).
+//! 2. **Deterministic when enabled.**  Records carry only virtual-time
+//!    stamps and values already flowing through the call sites — no wall
+//!    clock, no RNG, no `HashMap` iteration order.  Snapshots sort by a
+//!    total key, so the same seed yields a bit-identical trace, and a
+//!    traced run's reports are bit-identical to an untraced run's.
+
+pub mod export;
+pub mod health;
+pub mod recorder;
+pub mod registry;
+
+pub use recorder::{EventKind, RecordKind, Stage, TraceId, TraceRecord, TraceRecorder};
+pub use registry::{HistSummary, MetricsRegistry, MetricsSnapshot};
+
+/// Everything a traced run hands its caller: the sorted record stream
+/// plus the registry snapshot taken at the same instant.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSnapshot {
+    pub records: Vec<TraceRecord>,
+    pub metrics: MetricsSnapshot,
+    /// Records lost to ring overflow (0 in every bundled workload).
+    pub dropped: u64,
+}

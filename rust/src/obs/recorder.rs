@@ -1,0 +1,407 @@
+//! The trace recorder: typed records in sharded ring buffers.
+//!
+//! A record is 48 bytes of plain data — no strings, no allocation on the
+//! hot path.  Shards are keyed by trace id, so concurrent writers (the
+//! vdisk unseal walk vs. the virtual-time event loop) rarely share a
+//! lock, and each shard is a fixed ring that overwrites its oldest entry
+//! rather than growing: tracing can never turn a serving run into an OOM.
+//!
+//! [`TraceRecorder`] is a newtype over `Option<Arc<Core>>`.  The disabled
+//! recorder is the `None` niche ([`TraceRecorder::off`], also available as
+//! the `const` [`TraceRecorder::OFF`]): every method is an `#[inline]`
+//! early return, so a build that never enables tracing pays a dead branch
+//! the optimizer removes — the compile-time no-op path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shards of the record buffer (writers hash by trace id).
+const SHARDS: usize = 8;
+
+/// Records retained per shard before the ring overwrites its oldest.
+const RING_CAP: usize = 1 << 15;
+
+/// The causal identity a record belongs to.
+///
+/// The id space is partitioned so the three record families never
+/// collide: serving requests keep their request id, engine device-frames
+/// are offset into a high band, and storage-side records share one
+/// sentinel id (they attach to the media, not to a request).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// Storage-track records (mount, unseal waves, cache sweeps).
+    pub const STORAGE: TraceId = TraceId(u64::MAX);
+
+    /// A serving-layer request, identified by its request id.
+    pub fn request(id: u64) -> TraceId {
+        TraceId(id)
+    }
+
+    /// An engine device-frame, identified by its batch head sequence.
+    pub fn frame(seq: u64) -> TraceId {
+        TraceId(0x0100_0000_0000_0000 | seq)
+    }
+
+    /// True for ids minted by [`TraceId::frame`].
+    pub fn is_frame(&self) -> bool {
+        *self != TraceId::STORAGE && self.0 & 0x0100_0000_0000_0000 != 0
+    }
+}
+
+/// Span stages, in causal order along a request's journey.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    /// Admission decision (token bucket + queue bound), zero-width.
+    Admission = 0,
+    /// EDF queue residency: admit → pop.
+    Queue = 1,
+    /// Batch formation at pop time, zero-width.
+    Dispatch = 2,
+    /// Waiting for the granted resource (shared wire / match server /
+    /// stage timeline) to come free: pop → service start.
+    BusGrant = 3,
+    /// Service on the granted resource: start → completion.
+    Compute = 4,
+    /// A transfer occupying the shared wire or a peer link.
+    Wire = 5,
+    /// Host-side submission preparation (engine dispatch).
+    HostPrep = 6,
+    /// One bounded wave of the vdisk parallel unseal walk.
+    UnsealWave = 7,
+}
+
+impl Stage {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::Dispatch => "dispatch",
+            Stage::BusGrant => "bus-grant",
+            Stage::Compute => "compute",
+            Stage::Wire => "wire",
+            Stage::HostPrep => "host-prep",
+            Stage::UnsealWave => "unseal-wave",
+        }
+    }
+
+    pub const ALL: [Stage; 8] = [
+        Stage::Admission,
+        Stage::Queue,
+        Stage::Dispatch,
+        Stage::BusGrant,
+        Stage::Compute,
+        Stage::Wire,
+        Stage::HostPrep,
+        Stage::UnsealWave,
+    ];
+}
+
+/// Instantaneous (zero-width) trace events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A request was offered to admission (`a` = class, `b` = tenant).
+    Offered = 0,
+    /// A request was shed (`a` = shed-reason code, `b` = class).
+    Shed = 1,
+    /// A request reached its terminal completion (`a` = on-time as 0/1).
+    Completed = 2,
+    /// Evicted in-flight work went back into its class queue.
+    Requeued = 3,
+    /// The wire arbiter postponed granting: an earlier event may add a
+    /// competing transfer (`a` = pending transfers at the decision).
+    BusDefer = 4,
+    /// Sealed media mounted (`a` = media uid).
+    MediaMount = 5,
+    /// Sealed media unmounted (`a` = media uid).
+    MediaUnmount = 6,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Offered => "offered",
+            EventKind::Shed => "shed",
+            EventKind::Completed => "completed",
+            EventKind::Requeued => "requeued",
+            EventKind::BusDefer => "bus-defer",
+            EventKind::MediaMount => "media-mount",
+            EventKind::MediaUnmount => "media-unmount",
+        }
+    }
+}
+
+/// Span or instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RecordKind {
+    Span(Stage),
+    Event(EventKind),
+}
+
+impl RecordKind {
+    /// Total order over record kinds (spans sort before events at equal
+    /// timestamps, each family by its discriminant).
+    fn code(&self) -> u8 {
+        match self {
+            RecordKind::Span(s) => *s as u8,
+            RecordKind::Event(e) => 0x40 | *e as u8,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RecordKind::Span(s) => s.as_str(),
+            RecordKind::Event(e) => e.as_str(),
+        }
+    }
+}
+
+/// One trace record.  `t0_us == t1_us` for instants; `a`/`b` are
+/// kind-specific payload words (documented on [`Stage`]/[`EventKind`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub trace: TraceId,
+    pub kind: RecordKind,
+    pub t0_us: u64,
+    pub t1_us: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl TraceRecord {
+    pub fn dur_us(&self) -> u64 {
+        self.t1_us.saturating_sub(self.t0_us)
+    }
+
+    /// Total sort key: time, then causal id, then kind, then payload —
+    /// independent of shard placement or writer interleaving, so a
+    /// snapshot is bit-identical across same-seed runs.
+    pub fn sort_key(&self) -> (u64, u64, u8, u64, u64, u64) {
+        (self.t0_us, self.trace.0, self.kind.code(), self.t1_us, self.a, self.b)
+    }
+}
+
+/// Fixed-capacity overwrite ring.
+struct Ring {
+    buf: Vec<TraceRecord>,
+    /// Next write position once the ring has wrapped.
+    head: usize,
+    wrapped: bool,
+}
+
+impl Ring {
+    fn new() -> Self {
+        Ring { buf: Vec::new(), head: 0, wrapped: false }
+    }
+
+    fn push(&mut self, r: TraceRecord) -> bool {
+        if self.wrapped {
+            self.buf[self.head] = r;
+            self.head = (self.head + 1) % RING_CAP;
+            return true;
+        }
+        self.buf.push(r);
+        if self.buf.len() == RING_CAP {
+            self.wrapped = true;
+        }
+        false
+    }
+}
+
+struct Core {
+    shards: Vec<Mutex<Ring>>,
+    /// Virtual "now" for writers that have no clock of their own (the
+    /// vdisk unseal walk runs on OS threads; the event loop publishes its
+    /// virtual time here before calling into storage).
+    vnow: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// The recorder handle: cheap to clone, `off()` is free to call into.
+#[derive(Clone, Default)]
+pub struct TraceRecorder(Option<Arc<Core>>);
+
+impl TraceRecorder {
+    /// The disabled recorder as a `const` (compile-time no-op path).
+    pub const OFF: TraceRecorder = TraceRecorder(None);
+
+    /// A recorder that records nothing and allocates nothing.
+    pub fn off() -> Self {
+        TraceRecorder(None)
+    }
+
+    /// A live recorder with empty rings.
+    pub fn enabled() -> Self {
+        TraceRecorder(Some(Arc::new(Core {
+            shards: (0..SHARDS).map(|_| Mutex::new(Ring::new())).collect(),
+            vnow: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        })))
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Publish the event loop's virtual time for clock-less writers.
+    #[inline]
+    pub fn set_vnow(&self, t_us: u64) {
+        if let Some(core) = &self.0 {
+            core.vnow.store(t_us, Ordering::Relaxed);
+        }
+    }
+
+    /// Last published virtual time (0 when disabled).
+    #[inline]
+    pub fn vnow(&self) -> u64 {
+        self.0.as_ref().map(|c| c.vnow.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    #[inline]
+    fn push(&self, r: TraceRecord) {
+        let Some(core) = &self.0 else { return };
+        let shard = (r.trace.0 as usize).wrapping_mul(0x9E37_79B9) % SHARDS;
+        let overwrote = core.shards[shard].lock().unwrap().push(r);
+        if overwrote {
+            core.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a completed span `[t0, t1]`.
+    #[inline]
+    pub fn span(&self, trace: TraceId, stage: Stage, t0_us: u64, t1_us: u64, a: u64, b: u64) {
+        if self.0.is_none() {
+            return;
+        }
+        self.push(TraceRecord { trace, kind: RecordKind::Span(stage), t0_us, t1_us, a, b });
+    }
+
+    /// Record an instant event at `t`.
+    #[inline]
+    pub fn event(&self, trace: TraceId, kind: EventKind, t_us: u64, a: u64, b: u64) {
+        if self.0.is_none() {
+            return;
+        }
+        self.push(TraceRecord {
+            trace,
+            kind: RecordKind::Event(kind),
+            t0_us: t_us,
+            t1_us: t_us,
+            a,
+            b,
+        });
+    }
+
+    /// Records overwritten by ring overflow since creation.
+    pub fn dropped(&self) -> u64 {
+        self.0.as_ref().map(|c| c.dropped.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// A deterministic copy of every retained record, sorted by
+    /// [`TraceRecord::sort_key`].  Empty when disabled.
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        let Some(core) = &self.0 else { return Vec::new() };
+        let mut out = Vec::new();
+        for shard in &core.shards {
+            let ring = shard.lock().unwrap();
+            out.extend_from_slice(&ring.buf);
+        }
+        out.sort_unstable_by_key(|r| r.sort_key());
+        out
+    }
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            None => write!(f, "TraceRecorder(off)"),
+            Some(_) => write!(f, "TraceRecorder(on, {} records)", self.snapshot().len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let r = TraceRecorder::off();
+        r.span(TraceId::request(1), Stage::Queue, 0, 10, 0, 0);
+        r.event(TraceId::request(1), EventKind::Offered, 0, 0, 0);
+        r.set_vnow(99);
+        assert!(!r.is_enabled());
+        assert!(r.snapshot().is_empty());
+        assert_eq!(r.vnow(), 0);
+        assert_eq!(r.dropped(), 0);
+        assert!(TraceRecorder::OFF.snapshot().is_empty());
+    }
+
+    #[test]
+    fn snapshot_is_sorted_regardless_of_insert_order() {
+        let r = TraceRecorder::enabled();
+        r.span(TraceId::request(9), Stage::Compute, 50, 80, 0, 0);
+        r.event(TraceId::request(2), EventKind::Offered, 10, 0, 0);
+        r.span(TraceId::request(2), Stage::Queue, 10, 40, 0, 0);
+        r.span(TraceId::request(1), Stage::Queue, 10, 30, 0, 0);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 4);
+        let keys: Vec<_> = snap.iter().map(TraceRecord::sort_key).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+        // Span sorts before the event at the same (t, trace).
+        assert_eq!(snap[0].trace, TraceId::request(1));
+        assert!(matches!(snap[1].kind, RecordKind::Span(Stage::Queue)));
+        assert!(matches!(snap[2].kind, RecordKind::Event(EventKind::Offered)));
+    }
+
+    #[test]
+    fn clones_share_the_buffer() {
+        let r = TraceRecorder::enabled();
+        let c = r.clone();
+        c.span(TraceId::request(1), Stage::Admission, 5, 5, 0, 0);
+        c.set_vnow(42);
+        assert_eq!(r.snapshot().len(), 1);
+        assert_eq!(r.vnow(), 42);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let r = TraceRecorder::enabled();
+        // All on one trace id => one shard; overflow it.
+        let n = (RING_CAP + 10) as u64;
+        for i in 0..n {
+            r.span(TraceId::request(8), Stage::Compute, i, i + 1, 0, 0);
+        }
+        assert_eq!(r.dropped(), 10);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), RING_CAP);
+        // The oldest 10 records are gone; the newest survive.
+        assert_eq!(snap.first().unwrap().t0_us, 10);
+        assert_eq!(snap.last().unwrap().t0_us, n - 1);
+    }
+
+    #[test]
+    fn trace_id_bands_do_not_collide() {
+        assert_ne!(TraceId::request(5), TraceId::frame(5));
+        assert!(TraceId::frame(5).is_frame());
+        assert!(!TraceId::request(5).is_frame());
+        assert!(!TraceId::STORAGE.is_frame());
+    }
+
+    #[test]
+    fn vnow_is_shared_with_storage_side_writers() {
+        let r = TraceRecorder::enabled();
+        r.set_vnow(1_000);
+        let t = r.vnow();
+        r.span(TraceId::STORAGE, Stage::UnsealWave, t, t, 4, 2);
+        let snap = r.snapshot();
+        assert_eq!(snap[0].t0_us, 1_000);
+        assert_eq!(snap[0].trace, TraceId::STORAGE);
+    }
+}

@@ -1,0 +1,210 @@
+//! The metrics registry: named counters, gauges, and log-bucketed
+//! histograms with one publication surface.
+//!
+//! Serve, engine, and vdisk layers each used to keep private tallies
+//! (`SloTracker` counts, `CacheStats`, `DecodeStats`) that reports had to
+//! chase individually.  The registry is the one place those numbers land:
+//! `count`/`gauge`/`observe` on the hot path, [`MetricsRegistry::snapshot`]
+//! at the end of a run.
+//!
+//! Determinism: names live in `BTreeMap`s, so a snapshot's iteration order
+//! is the lexicographic name order — never `HashMap` bucket order — and a
+//! same-seed run snapshots bit-identically.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Histogram;
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    /// Gauge = (last set value, max ever set).
+    gauges: BTreeMap<String, (u64, u64)>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+/// Shared, mutex-guarded metrics store.  Clones share the inner maps; the
+/// default value is a live, empty registry.
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` to the named counter (creating it at 0).  The steady-state
+    /// path (key already present) does not allocate.
+    pub fn count(&self, name: &str, n: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.counters.get_mut(name) {
+            Some(v) => *v += n,
+            None => {
+                inner.counters.insert(name.to_string(), n);
+            }
+        }
+    }
+
+    /// Set the named gauge; its max-ever value is tracked alongside.
+    pub fn gauge(&self, name: &str, v: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.gauges.get_mut(name) {
+            Some(g) => {
+                g.0 = v;
+                g.1 = g.1.max(v);
+            }
+            None => {
+                inner.gauges.insert(name.to_string(), (v, v));
+            }
+        }
+    }
+
+    /// Record one sample into the named log-bucketed histogram.
+    pub fn observe(&self, name: &str, v_us: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.hists.get_mut(name) {
+            Some(h) => h.record(v_us),
+            None => {
+                let mut h = Histogram::default();
+                h.record(v_us);
+                inner.hists.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Current counter value (0 if never touched).
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// A point-in-time copy, sorted by metric name.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            counters: inner.counters.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            gauges: inner.gauges.iter().map(|(k, (last, max))| (k.clone(), *last, *max)).collect(),
+            hists: inner
+                .hists
+                .iter()
+                .map(|(k, h)| (k.clone(), HistSummary::of(h)))
+                .collect(),
+        }
+    }
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        write!(
+            f,
+            "MetricsRegistry({} counters, {} gauges, {} hists)",
+            inner.counters.len(),
+            inner.gauges.len(),
+            inner.hists.len()
+        )
+    }
+}
+
+/// The five numbers a histogram is worth at report time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean_us: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl HistSummary {
+    fn of(h: &Histogram) -> Self {
+        HistSummary {
+            count: h.count(),
+            mean_us: h.mean_us(),
+            p50_us: h.percentile_us(50.0),
+            p99_us: h.percentile_us(99.0),
+            max_us: h.max_us(),
+        }
+    }
+}
+
+/// Name-sorted copy of the registry at one instant.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    /// (name, last value, max-ever value).
+    pub gauges: Vec<(String, u64, u64)>,
+    pub hists: Vec<(String, HistSummary)>,
+}
+
+impl MetricsSnapshot {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(k, _)| k == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    pub fn gauge_max(&self, name: &str) -> u64 {
+        self.gauges.iter().find(|(k, _, _)| k == name).map(|(_, _, m)| *m).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_read_back() {
+        let reg = MetricsRegistry::new();
+        reg.count("serve.shed.rate_limited", 3);
+        reg.count("serve.shed.rate_limited", 2);
+        reg.count("serve.offered", 1);
+        assert_eq!(reg.counter_value("serve.shed.rate_limited"), 5);
+        assert_eq!(reg.counter_value("never.touched"), 0);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("serve.offered"), 1);
+    }
+
+    #[test]
+    fn gauges_track_last_and_max() {
+        let reg = MetricsRegistry::new();
+        reg.gauge("serve.queue_depth", 4);
+        reg.gauge("serve.queue_depth", 9);
+        reg.gauge("serve.queue_depth", 2);
+        let snap = reg.snapshot();
+        assert_eq!(snap.gauges, vec![("serve.queue_depth".to_string(), 2, 9)]);
+        assert_eq!(snap.gauge_max("serve.queue_depth"), 9);
+    }
+
+    #[test]
+    fn histograms_summarize() {
+        let reg = MetricsRegistry::new();
+        for v in [100u64, 200, 400, 800] {
+            reg.observe("serve.latency_us", v);
+        }
+        let snap = reg.snapshot();
+        let (name, h) = &snap.hists[0];
+        assert_eq!(name, "serve.latency_us");
+        assert_eq!(h.count, 4);
+        assert_eq!(h.max_us, 800);
+        assert!(h.p99_us >= 800, "p99 upper bound covers the max sample");
+    }
+
+    #[test]
+    fn snapshot_order_is_name_sorted_not_insertion() {
+        let reg = MetricsRegistry::new();
+        reg.count("zz", 1);
+        reg.count("aa", 1);
+        reg.count("mm", 1);
+        let names: Vec<_> = reg.snapshot().counters.into_iter().map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["aa", "mm", "zz"]);
+    }
+
+    #[test]
+    fn clones_share_storage() {
+        let reg = MetricsRegistry::new();
+        let c = reg.clone();
+        c.count("shared", 7);
+        assert_eq!(reg.counter_value("shared"), 7);
+    }
+}

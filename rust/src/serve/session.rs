@@ -56,13 +56,14 @@ use crate::crypto::seal::SealKey;
 use crate::device::caps::CapDescriptor;
 use crate::device::timing::{stream_handoff_us, DeviceProfile};
 use crate::device::{Cartridge, DeviceKind};
+use crate::obs::{EventKind, Stage, TraceId, TraceRecorder, TraceSnapshot};
 use crate::power::{PowerModel, PowerReport};
 use crate::util::rng::Rng;
 use crate::vdisk::{MountEvent, MountSupervisor};
 use crate::workload::video::VideoSource;
 
 use super::admission::{Admission, AdmissionController, ShedReason};
-use super::slo::{ClassOutcome, SloTracker};
+use super::slo::{ClassOutcome, SloTracker, TenantOutcome};
 use super::traffic::{self, MissionProfile, Request, RequestKind};
 
 /// Health/expiry tick period (matches the orchestrator's heartbeat
@@ -113,6 +114,10 @@ pub struct ServeConfig {
     pub image: Option<PathBuf>,
     /// Seal passphrase for `image`.
     pub image_key: String,
+    /// Record a causal trace of the run (admission → queue → dispatch →
+    /// bus grant → compute → unseal).  Off = the no-op recorder path; the
+    /// outcome's reports are bit-identical either way.
+    pub trace: bool,
 }
 
 impl ServeConfig {
@@ -129,6 +134,7 @@ impl ServeConfig {
             k: 10,
             image: None,
             image_key: "champ-dev-key".to_string(),
+            trace: false,
         }
     }
 }
@@ -147,6 +153,9 @@ pub struct DispatchEntry {
 #[derive(Debug, Clone)]
 pub struct ServeOutcome {
     pub classes: Vec<ClassOutcome>,
+    /// Per-tenant fairness rows; counters are read back from the metrics
+    /// registry (schema-v2 report rows).
+    pub tenants: Vec<TenantOutcome>,
     pub offered: u64,
     pub completed: u64,
     pub shed: u64,
@@ -164,6 +173,8 @@ pub struct ServeOutcome {
     /// Mount lifecycle of the sealed gallery media (empty when serving
     /// purely in-memory).
     pub media_events: Vec<MountEvent>,
+    /// The causal trace + metrics snapshot (None unless `cfg.trace`).
+    pub trace: Option<TraceSnapshot>,
 }
 
 #[derive(Debug, Clone)]
@@ -216,6 +227,11 @@ pub struct ServeSession {
     next_batch: u64,
     dispatch_log: Vec<DispatchEntry>,
     requeued_total: u64,
+    /// Per-request EDF queue entry time (admit or requeue), for the Queue
+    /// span.  Only populated while tracing.
+    queue_since: BTreeMap<u64, u64>,
+    /// Clone of the orchestrator's recorder (off unless `cfg.trace`).
+    obs: TraceRecorder,
     t0: u64,
     capacity_rps: f64,
     offered_rps: f64,
@@ -234,6 +250,12 @@ impl ServeSession {
 
         // The inference substrate: the paper's §4.2 face stack.
         let mut o = Orchestrator::new(BusProfile::usb3_gen1(), 6);
+        if cfg.trace {
+            // Installed before calibration and mount, so the engine's
+            // warm-up spans and the boot-time unseal waves land in the
+            // trace too.
+            o.obs = TraceRecorder::enabled();
+        }
         let mut stage_uids = Vec::new();
         for (i, cap) in [
             CapDescriptor::face_detect(),
@@ -254,6 +276,7 @@ impl ServeSession {
         let mut mounted_index: Option<Arc<GalleryIndex>> = None;
         if let Some(path) = &cfg.image {
             let mut sup = MountSupervisor::with_key(SealKey::from_passphrase(&cfg.image_key));
+            sup.set_recorder(o.obs.clone());
             sup.register_media(STORAGE_MEDIA_UID, path.clone());
             if sup.handle_attach(STORAGE_MEDIA_UID, 0).is_none() {
                 let detail =
@@ -313,7 +336,11 @@ impl ServeSession {
         let t0 = o.clock.now();
         let reqs = traffic::generate(&cfg.profile, cfg.seed, cfg.requests, offered_rps, t0);
         let adm = AdmissionController::new(&cfg.profile, capacity_rps);
-        let slo = SloTracker::new(cfg.requests, cfg.profile.classes.len());
+        let slo = SloTracker::new(
+            cfg.requests,
+            cfg.profile.classes.len(),
+            cfg.profile.tenants.len(),
+        );
         let mut flow = CreditFlow::new(cfg.window);
         flow.register(stage_uids[0]);
 
@@ -323,6 +350,7 @@ impl ServeSession {
             .collect();
         busy0.sort_by_key(|&(uid, _)| uid);
 
+        let obs = o.obs.clone();
         Ok(ServeSession {
             cfg,
             o,
@@ -345,6 +373,8 @@ impl ServeSession {
             next_batch: 0,
             dispatch_log: Vec::new(),
             requeued_total: 0,
+            queue_since: BTreeMap::new(),
+            obs,
             t0,
             capacity_rps,
             offered_rps,
@@ -380,6 +410,9 @@ impl ServeSession {
         while let Some(c) = self.q.pop() {
             let now = c.at_us;
             self.o.clock.advance_to(now);
+            // Publish virtual "now" for clock-less writers (the vdisk
+            // unseal walk stamps its wave records with this).
+            self.obs.set_vnow(now);
             match c.payload {
                 SEv::Arrival(i) => self.on_arrival(i as usize, now),
                 SEv::MatchDone(id) => self.on_match_done(id, now),
@@ -397,10 +430,63 @@ impl ServeSession {
     fn on_arrival(&mut self, i: usize, now: u64) {
         let req = self.reqs[i];
         self.slo.offered(&req);
+        self.o.reg.count("serve.offered", 1);
+        self.o.reg.count(&format!("serve.tenant.{}.offered", req.tenant), 1);
+        self.obs.event(
+            TraceId::request(req.id),
+            EventKind::Offered,
+            now,
+            req.class as u64,
+            req.tenant as u64,
+        );
         match self.adm.offer(req, now) {
-            Admission::Admitted => {}
-            Admission::Shed(reason) => self.slo.shed(&req, reason, now),
+            Admission::Admitted => {
+                if self.obs.is_enabled() {
+                    self.obs.span(
+                        TraceId::request(req.id),
+                        Stage::Admission,
+                        now,
+                        now,
+                        req.class as u64,
+                        req.tenant as u64,
+                    );
+                    self.queue_since.insert(req.id, now);
+                }
+            }
+            Admission::Shed(reason) => self.record_shed(&req, reason, now),
         }
+    }
+
+    /// Terminal shed: SLO tally + registry counters + trace instant.
+    fn record_shed(&mut self, req: &Request, reason: ShedReason, now: u64) {
+        self.slo.shed(req, reason, now);
+        self.o.reg.count(&format!("serve.shed.{}", reason.as_str()), 1);
+        self.o.reg.count(&format!("serve.tenant.{}.shed", req.tenant), 1);
+        if self.obs.is_enabled() {
+            let code = match reason {
+                ShedReason::RateLimited => 0,
+                ShedReason::QueueFull => 1,
+                ShedReason::Expired => 2,
+                ShedReason::Evicted => 3,
+            };
+            self.obs.event(TraceId::request(req.id), EventKind::Shed, now, code, req.class as u64);
+            self.queue_since.remove(&req.id);
+        }
+    }
+
+    /// Terminal completion: SLO tally + registry counters + trace instant.
+    fn record_completed(&mut self, req: &Request, now: u64) {
+        self.slo.completed(req, now);
+        self.o.reg.count("serve.completed", 1);
+        self.o.reg.count(&format!("serve.tenant.{}.completed", req.tenant), 1);
+        self.o.reg.observe("serve.latency_us", now.saturating_sub(req.arrival_us));
+        self.obs.event(
+            TraceId::request(req.id),
+            EventKind::Completed,
+            now,
+            (now <= req.deadline_us) as u64,
+            req.class as u64,
+        );
     }
 
     fn on_match_done(&mut self, id: u64, now: u64) {
@@ -409,7 +495,7 @@ impl ServeSession {
         }
         let b = self.match_inflight.take().unwrap();
         for req in &b.reqs {
-            self.slo.completed(req, now);
+            self.record_completed(req, now);
         }
     }
 
@@ -422,7 +508,7 @@ impl ServeSession {
                 let vec = self.embedding_for(req.id);
                 self.index.upsert(format!("enrolled-{}", req.id), &vec);
             }
-            self.slo.completed(req, now);
+            self.record_completed(req, now);
         }
         self.flow.release(self.stage_uids[0]);
         for &uid in &self.stage_uids {
@@ -445,10 +531,24 @@ impl ServeSession {
                     HotplugKind::Detach => {
                         mounts.handle_detach(STORAGE_MEDIA_UID, now);
                         self.mounted_index = None;
+                        self.obs.event(
+                            TraceId::STORAGE,
+                            EventKind::MediaUnmount,
+                            now,
+                            STORAGE_MEDIA_UID,
+                            0,
+                        );
                     }
                     HotplugKind::Attach => {
                         if mounts.handle_attach(STORAGE_MEDIA_UID, now).is_some() {
                             self.mounted_index = mounts.gallery_index(STORAGE_MEDIA_UID);
+                            self.obs.event(
+                                TraceId::STORAGE,
+                                EventKind::MediaMount,
+                                now,
+                                STORAGE_MEDIA_UID,
+                                0,
+                            );
                         }
                     }
                 }
@@ -511,8 +611,13 @@ impl ServeSession {
         let mut overdue = Vec::new();
         self.adm.expire_overdue(now, &mut overdue);
         for req in overdue {
-            self.slo.shed(&req, ShedReason::Expired, now);
+            self.record_shed(&req, ShedReason::Expired, now);
         }
+        self.o.reg.gauge("serve.queue_depth", self.adm.queued() as u64);
+        self.o.reg.gauge(
+            "serve.credit_in_flight",
+            self.flow.in_flight(self.stage_uids[0]) as u64,
+        );
         // HealthMonitor-driven eviction: a cartridge that stopped beating
         // is declared dead, its cancelled work is requeued (exactly once),
         // and it leaves the monitor until a re-attach registers it anew.
@@ -537,11 +642,22 @@ impl ServeSession {
         for b in batches {
             for mut req in b.reqs {
                 if req.requeued {
-                    self.slo.shed(&req, ShedReason::Evicted, now);
+                    self.record_shed(&req, ShedReason::Evicted, now);
                 } else {
                     req.requeued = true;
                     self.slo.requeued(&req);
                     self.requeued_total += 1;
+                    self.o.reg.count("serve.requeued", 1);
+                    self.obs.event(
+                        TraceId::request(req.id),
+                        EventKind::Requeued,
+                        now,
+                        req.class as u64,
+                        req.tenant as u64,
+                    );
+                    if self.obs.is_enabled() {
+                        self.queue_since.insert(req.id, now);
+                    }
                     self.adm.requeue(req);
                 }
             }
@@ -577,7 +693,7 @@ impl ServeSession {
             }
         }
         for req in expired {
-            self.slo.shed(&req, ShedReason::Expired, now);
+            self.record_shed(&req, ShedReason::Expired, now);
         }
         if reqs.is_empty() {
             return;
@@ -590,9 +706,22 @@ impl ServeSession {
         // A mid-swap fallback index can legitimately be empty: zero-hit
         // identifies still complete (and account) normally.
         debug_assert!(rows == 0 || hits.iter().all(|h| !h.is_empty()));
-        let (_, done) = self.match_res.reserve(now, scan_pass_us(rows, self.cfg.dim, reqs.len()));
+        let (svc_start, done) =
+            self.match_res.reserve(now, scan_pass_us(rows, self.cfg.dim, reqs.len()));
         for r in &reqs {
             self.log_dispatch(r, now);
+        }
+        if self.obs.is_enabled() {
+            // Span tiling: queue[admit,pop] + grant[pop,start] +
+            // compute[start,done] sums exactly to completion − arrival.
+            for r in &reqs {
+                let t = TraceId::request(r.id);
+                let since = self.queue_since.remove(&r.id).unwrap_or(r.arrival_us);
+                self.obs.span(t, Stage::Queue, since, now, r.class as u64, r.tenant as u64);
+                self.obs.span(t, Stage::Dispatch, now, now, reqs.len() as u64, 0);
+                self.obs.span(t, Stage::BusGrant, now, svc_start, 0, 0);
+                self.obs.span(t, Stage::Compute, svc_start, done, rows as u64, reqs.len() as u64);
+            }
         }
         let id = self.next_batch;
         self.next_batch += 1;
@@ -626,7 +755,7 @@ impl ServeSession {
                 }
             }
             for req in expired {
-                self.slo.shed(&req, ShedReason::Expired, now);
+                self.record_shed(&req, ShedReason::Expired, now);
             }
             if reqs.is_empty() {
                 self.flow.release(head);
@@ -634,16 +763,34 @@ impl ServeSession {
             }
             let count = reqs.len() as u64;
             let mut t = now;
+            let mut chain_start = None;
             for &uid in &self.stage_uids {
                 let cart = self.o.carts.get_mut(&uid).unwrap();
                 let handoff = stream_handoff_us(cart.kind);
                 let dur = cart.service_us * count;
-                let (_, done) = cart.timeline.reserve(t + handoff, dur);
+                let (svc_start, done) = cart.timeline.reserve(t + handoff, dur);
+                if chain_start.is_none() {
+                    chain_start = Some(svc_start);
+                }
                 t = done;
             }
             t += TAIL_US;
             for r in &reqs {
                 self.log_dispatch(r, now);
+            }
+            if self.obs.is_enabled() {
+                // Same tiling as the match path: the chain (all stages +
+                // tail) is one Compute span from first-stage service start
+                // to result return.
+                let cs = chain_start.unwrap_or(now);
+                for r in &reqs {
+                    let tr = TraceId::request(r.id);
+                    let since = self.queue_since.remove(&r.id).unwrap_or(r.arrival_us);
+                    self.obs.span(tr, Stage::Queue, since, now, r.class as u64, r.tenant as u64);
+                    self.obs.span(tr, Stage::Dispatch, now, now, count, 0);
+                    self.obs.span(tr, Stage::BusGrant, now, cs, 0, 0);
+                    self.obs.span(tr, Stage::Compute, cs, t, self.stage_uids.len() as u64, count);
+                }
             }
             let id = self.next_batch;
             self.next_batch += 1;
@@ -701,6 +848,41 @@ impl ServeSession {
         let completed: u64 = classes.iter().map(|c| c.completed).sum();
         let shed: u64 = classes.iter().map(|c| c.shed).sum();
 
+        // Publish the storage-side tallies into the registry before the
+        // snapshot: cache effectiveness and the wave-admission savings.
+        if let Some(img) = self.mounts.as_ref().and_then(|m| m.image(STORAGE_MEDIA_UID)) {
+            let cs = img.cache_stats();
+            self.o.reg.count("vdisk.cache.hits", cs.hits);
+            self.o.reg.count("vdisk.cache.misses", cs.misses);
+            self.o.reg.count("vdisk.cache.evictions", cs.evictions);
+            self.o.reg.count("vdisk.cache.inserts", cs.inserts);
+            self.o.reg.gauge("vdisk.cache.hit_rate_pct", (cs.hit_rate() * 100.0) as u64);
+            self.o.reg.count(
+                "vdisk.wave.saved_lock_acquisitions",
+                img.cache_saved_lock_acquisitions(),
+            );
+        }
+
+        // Tenant fairness rows: the shape comes from the tracker (exact
+        // percentiles need the raw samples), the counters are read back
+        // from the registry — the one place all layers publish into.
+        let mut tenants = self.slo.summarize_tenants(&self.cfg.profile, elapsed_us);
+        for (i, row) in tenants.iter_mut().enumerate() {
+            row.offered = self.o.reg.counter_value(&format!("serve.tenant.{i}.offered"));
+            row.completed = self.o.reg.counter_value(&format!("serve.tenant.{i}.completed"));
+            row.shed = self.o.reg.counter_value(&format!("serve.tenant.{i}.shed"));
+        }
+
+        let trace = if self.obs.is_enabled() {
+            Some(TraceSnapshot {
+                records: self.obs.snapshot(),
+                metrics: self.o.reg.snapshot(),
+                dropped: self.obs.dropped(),
+            })
+        } else {
+            None
+        };
+
         // Power over the serving horizon: accelerator busy deltas (sorted
         // by uid for a deterministic f64 sum) plus the gallery-scan load
         // on the storage cartridge.
@@ -717,6 +899,7 @@ impl ServeSession {
 
         ServeOutcome {
             classes,
+            tenants,
             offered,
             completed,
             shed,
@@ -729,6 +912,7 @@ impl ServeSession {
             offered_rps: self.offered_rps,
             accounting_ok: self.slo.accounting_holds(),
             media_events: self.mounts.map(|m| m.events).unwrap_or_default(),
+            trace,
         }
     }
 }

@@ -67,6 +67,26 @@ pub struct ClassOutcome {
     pub shed_rate: f64,
 }
 
+/// Summarized per-tenant fairness row: the same terminal accounting as
+/// [`ClassOutcome`], keyed by the profile's tenant list (BENCH_serve.json
+/// schema v2 adds these alongside the class rows).
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    pub name: &'static str,
+    /// Traffic share the profile promises this tenant.
+    pub share: f64,
+    pub offered: u64,
+    pub completed: u64,
+    pub on_time: u64,
+    pub shed: u64,
+    pub requeued: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub goodput_rps: f64,
+    pub deadline_miss_rate: f64,
+    pub shed_rate: f64,
+}
+
 /// Exact percentile over an already-sorted sample set.
 fn percentile(sorted: &[u64], p: f64) -> u64 {
     if sorted.is_empty() {
@@ -81,6 +101,9 @@ fn percentile(sorted: &[u64], p: f64) -> u64 {
 pub struct SloTracker {
     state: Vec<ReqState>,
     classes: Vec<ClassSlo>,
+    /// Parallel tallies keyed by `Request::tenant` — the fairness axis the
+    /// class rows cannot show (every tenant offers traffic in every class).
+    tenants: Vec<ClassSlo>,
     /// Double-terminal / terminal-before-offer transitions observed (must
     /// stay 0; counted instead of panicking so overload tests can assert).
     pub violations: u64,
@@ -89,10 +112,11 @@ pub struct SloTracker {
 }
 
 impl SloTracker {
-    pub fn new(n_requests: u64, n_classes: usize) -> Self {
+    pub fn new(n_requests: u64, n_classes: usize, n_tenants: usize) -> Self {
         SloTracker {
             state: vec![ReqState::Unseen; n_requests as usize],
             classes: vec![ClassSlo::default(); n_classes],
+            tenants: vec![ClassSlo::default(); n_tenants],
             violations: 0,
             terminal_count: 0,
             last_terminal_us: 0,
@@ -103,11 +127,16 @@ impl SloTracker {
         &mut self.classes[req.class as usize]
     }
 
+    fn tenant_mut(&mut self, req: &Request) -> &mut ClassSlo {
+        &mut self.tenants[req.tenant as usize]
+    }
+
     pub fn offered(&mut self, req: &Request) {
         match self.state.get(req.id as usize) {
             Some(ReqState::Unseen) => {
                 self.state[req.id as usize] = ReqState::Open;
                 self.class_mut(req).offered += 1;
+                self.tenant_mut(req).offered += 1;
             }
             _ => self.violations += 1,
         }
@@ -134,43 +163,57 @@ impl SloTracker {
         }
         let lat = now_us.saturating_sub(req.arrival_us);
         let on_time = now_us <= req.deadline_us;
-        let c = self.class_mut(req);
-        c.completed += 1;
-        if on_time {
-            c.on_time += 1;
-        }
-        c.lat_us.push(lat);
+        self.tally(req, |c| {
+            c.completed += 1;
+            if on_time {
+                c.on_time += 1;
+            }
+            c.lat_us.push(lat);
+        });
     }
 
     pub fn shed(&mut self, req: &Request, reason: ShedReason, now_us: u64) {
         if !self.close(req, now_us) {
             return;
         }
-        let c = self.class_mut(req);
-        match reason {
+        self.tally(req, |c| match reason {
             ShedReason::RateLimited => c.shed_rate_limited += 1,
             ShedReason::QueueFull => c.shed_queue_full += 1,
             ShedReason::Expired => c.shed_expired += 1,
             ShedReason::Evicted => c.shed_evicted += 1,
-        }
+        });
+    }
+
+    /// Apply one tally mutation to both axes (the request's class row and
+    /// its tenant row).
+    fn tally(&mut self, req: &Request, f: impl Fn(&mut ClassSlo)) {
+        f(self.class_mut(req));
+        f(self.tenant_mut(req));
     }
 
     /// A request went back into the queue after eviction (not terminal).
     pub fn requeued(&mut self, req: &Request) {
         self.class_mut(req).requeued += 1;
+        self.tenant_mut(req).requeued += 1;
     }
 
     pub fn class(&self, i: usize) -> &ClassSlo {
         &self.classes[i]
     }
 
+    pub fn tenant(&self, i: usize) -> &ClassSlo {
+        &self.tenants[i]
+    }
+
     /// Per-class accounting identity: every offered request has exactly
-    /// one terminal outcome.
+    /// one terminal outcome.  The tenant axis tallies the same terminals,
+    /// so the identity must hold there too.
     pub fn accounting_holds(&self) -> bool {
         self.violations == 0
             && self
                 .classes
                 .iter()
+                .chain(&self.tenants)
                 .all(|c| c.offered == c.completed + c.shed_total())
     }
 
@@ -215,6 +258,46 @@ impl SloTracker {
             })
             .collect()
     }
+
+    /// Collapse the tenant axis into fairness rows (schema-v2 report).
+    pub fn summarize_tenants(
+        &self,
+        profile: &MissionProfile,
+        elapsed_us: u64,
+    ) -> Vec<TenantOutcome> {
+        let elapsed_s = (elapsed_us.max(1)) as f64 / 1e6;
+        profile
+            .tenants
+            .iter()
+            .zip(&self.tenants)
+            .map(|(spec, c)| {
+                let mut lat = c.lat_us.clone();
+                lat.sort_unstable();
+                TenantOutcome {
+                    name: spec.name,
+                    share: spec.share,
+                    offered: c.offered,
+                    completed: c.completed,
+                    on_time: c.on_time,
+                    shed: c.shed_total(),
+                    requeued: c.requeued,
+                    p50_us: percentile(&lat, 50.0),
+                    p99_us: percentile(&lat, 99.0),
+                    goodput_rps: c.on_time as f64 / elapsed_s,
+                    deadline_miss_rate: if c.completed > 0 {
+                        (c.completed - c.on_time) as f64 / c.completed as f64
+                    } else {
+                        0.0
+                    },
+                    shed_rate: if c.offered > 0 {
+                        c.shed_total() as f64 / c.offered as f64
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -237,7 +320,7 @@ mod tests {
 
     #[test]
     fn exactly_once_identity_holds() {
-        let mut t = SloTracker::new(4, 1);
+        let mut t = SloTracker::new(4, 1, 1);
         for i in 0..4 {
             t.offered(&req(i, 0));
         }
@@ -255,7 +338,7 @@ mod tests {
 
     #[test]
     fn double_terminal_is_a_violation_not_a_panic() {
-        let mut t = SloTracker::new(1, 1);
+        let mut t = SloTracker::new(1, 1, 1);
         t.offered(&req(0, 0));
         t.completed(&req(0, 0), 10_000);
         t.shed(&req(0, 0), ShedReason::Evicted, 20_000);
@@ -265,7 +348,7 @@ mod tests {
 
     #[test]
     fn terminal_before_offer_is_a_violation() {
-        let mut t = SloTracker::new(1, 1);
+        let mut t = SloTracker::new(1, 1, 1);
         t.completed(&req(0, 0), 10_000);
         assert_eq!(t.violations, 1);
     }
@@ -273,7 +356,7 @@ mod tests {
     #[test]
     fn summarize_computes_exact_percentiles_and_rates() {
         let p = MissionProfile::checkpoint();
-        let mut t = SloTracker::new(100, p.classes.len());
+        let mut t = SloTracker::new(100, p.classes.len(), p.tenants.len());
         for i in 0..100 {
             let mut r = req(i, 0);
             r.arrival_us = 0;
@@ -298,6 +381,37 @@ mod tests {
         assert_eq!(rows[1].p99_us, 0);
         assert_eq!(rows[1].goodput_rps, 0.0);
         assert_eq!(rows[1].deadline_miss_rate, 0.0);
+    }
+
+    #[test]
+    fn tenant_axis_tallies_the_same_terminals() {
+        let p = MissionProfile::checkpoint();
+        assert!(p.tenants.len() >= 2, "checkpoint profile must be multi-tenant");
+        let mut t = SloTracker::new(6, p.classes.len(), p.tenants.len());
+        for i in 0..6u64 {
+            let mut r = req(i, 0);
+            r.tenant = (i % 2) as u8;
+            r.arrival_us = 0;
+            t.offered(&r);
+            if i < 4 {
+                t.completed(&r, (i + 1) * 10_000);
+            } else {
+                t.shed(&r, ShedReason::QueueFull, 0);
+            }
+        }
+        assert!(t.accounting_holds());
+        assert_eq!(t.tenant(0).offered, 3);
+        assert_eq!(t.tenant(1).offered, 3);
+        assert_eq!(t.tenant(0).completed + t.tenant(1).completed, 4);
+        let rows = t.summarize_tenants(&p, 1_000_000);
+        assert_eq!(rows.len(), p.tenants.len());
+        assert_eq!(rows[0].offered + rows[1].offered, 6);
+        assert_eq!(rows[0].shed + rows[1].shed, 2);
+        // Tenant totals reconcile with class totals (same terminals).
+        let class_rows = t.summarize(&p, 1_000_000);
+        let class_offered: u64 = class_rows.iter().map(|r| r.offered).sum();
+        let tenant_offered: u64 = rows.iter().map(|r| r.offered).sum();
+        assert_eq!(class_offered, tenant_offered);
     }
 
     #[test]

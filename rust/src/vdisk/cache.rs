@@ -18,6 +18,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
 /// Hit/miss/eviction counters (monotone since creation).
@@ -164,6 +165,25 @@ struct Shard<V> {
 ///   so a tampered block fails every reader identically.
 pub struct ShardedBlockCache<V> {
     shards: Vec<Shard<V>>,
+    /// Shard-lock acquisitions avoided by wave admission relative to the
+    /// per-key path (see [`Self::begin_wave`]).
+    saved_locks: AtomicU64,
+}
+
+/// One key's admission outcome from [`ShardedBlockCache::begin_wave`].
+///
+/// Exactly one of three states:
+/// * `hit` is `Some` — the block was cached; nothing left to do.
+/// * `leader` is true — this caller owns the unseal and MUST follow up
+///   with [`publish`](ShardedBlockCache::publish) or
+///   [`abort`](ShardedBlockCache::abort), or waiters park forever.
+/// * neither — another reader is already unsealing it; call
+///   [`wait_for`](ShardedBlockCache::wait_for).
+#[derive(Debug)]
+pub struct WaveTicket<V> {
+    pub key: BlockKey,
+    pub hit: Option<V>,
+    pub leader: bool,
 }
 
 impl<V: Clone> ShardedBlockCache<V> {
@@ -182,6 +202,7 @@ impl<V: Clone> ShardedBlockCache<V> {
                     cv: Condvar::new(),
                 })
                 .collect(),
+            saved_locks: AtomicU64::new(0),
         }
     }
 
@@ -227,6 +248,95 @@ impl<V: Clone> ShardedBlockCache<V> {
         drop(st);
         shard.cv.notify_all();
         res
+    }
+
+    /// Admit a whole wave of keys in one pass: ONE lock acquisition per
+    /// *distinct shard touched* instead of one per key.  A streaming wave
+    /// of `W` blocks over `S` shards pays `min(W, S)` acquisitions where
+    /// the per-key path pays `W`; the difference is tallied in
+    /// [`saved_lock_acquisitions`](Self::saved_lock_acquisitions).
+    ///
+    /// Tickets come back in `keys` order.  Hit/miss accounting matches
+    /// the per-key path: every key counts exactly one hit or one miss
+    /// here; coalesced followers (neither hit nor leader) have their miss
+    /// recorded now and never insert.
+    pub fn begin_wave(&self, keys: &[BlockKey]) -> Vec<WaveTicket<V>> {
+        // Group key positions by shard so each shard lock is taken once.
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, k) in keys.iter().enumerate() {
+            by_shard[self.shard_of(k)].push(i);
+        }
+        let mut tickets: Vec<Option<WaveTicket<V>>> =
+            (0..keys.len()).map(|_| None).collect();
+        let mut acquisitions = 0u64;
+        for (s, idxs) in by_shard.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            acquisitions += 1;
+            let mut st = self.shards[s].state.lock().unwrap();
+            for &i in idxs {
+                let k = keys[i];
+                let t = if let Some(v) = st.lru.get(&k) {
+                    WaveTicket { key: k, hit: Some(v.clone()), leader: false }
+                } else if st.pending.contains(&k) {
+                    WaveTicket { key: k, hit: None, leader: false }
+                } else {
+                    st.pending.insert(k);
+                    WaveTicket { key: k, hit: None, leader: true }
+                };
+                tickets[i] = Some(t);
+            }
+        }
+        self.saved_locks
+            .fetch_add(keys.len() as u64 - acquisitions, Ordering::Relaxed);
+        tickets.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Leader hand-off: cache the unsealed block and release the wave
+    /// reservation taken by [`begin_wave`](Self::begin_wave).
+    pub fn publish(&self, k: BlockKey, v: V) {
+        let shard = &self.shards[self.shard_of(&k)];
+        let mut st = shard.state.lock().unwrap();
+        st.pending.remove(&k);
+        st.lru.put(k, v);
+        drop(st);
+        shard.cv.notify_all();
+    }
+
+    /// Leader bail-out: release a wave reservation without caching (the
+    /// unseal failed).  Waiters wake, find nothing, and re-derive the
+    /// (deterministic) failure themselves.
+    pub fn abort(&self, k: BlockKey) {
+        let shard = &self.shards[self.shard_of(&k)];
+        let mut st = shard.state.lock().unwrap();
+        st.pending.remove(&k);
+        drop(st);
+        shard.cv.notify_all();
+    }
+
+    /// Follower side of a coalesced wave miss: block until the in-flight
+    /// leader publishes or aborts.  `None` means the leader aborted (or
+    /// the block was already evicted again); the caller falls back to the
+    /// per-key path.
+    pub fn wait_for(&self, k: BlockKey) -> Option<V> {
+        let shard = &self.shards[self.shard_of(&k)];
+        let mut st = shard.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.lru.get_untracked(&k) {
+                return Some(v.clone());
+            }
+            if !st.pending.contains(&k) {
+                return None;
+            }
+            st = shard.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Shard-lock acquisitions avoided by wave admission relative to the
+    /// per-key path (monotone since creation).
+    pub fn saved_lock_acquisitions(&self) -> u64 {
+        self.saved_locks.load(Ordering::Relaxed)
     }
 
     /// Aggregate counters across all shards.  `inserts` counts actual
@@ -370,6 +480,64 @@ mod tests {
         }
         assert_eq!(c.len(), 8);
         assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn wave_admission_takes_one_lock_per_shard() {
+        let c: ShardedBlockCache<u64> = ShardedBlockCache::new(64, 8);
+        let keys: Vec<BlockKey> = (0..16u32).map(|b| (0, b)).collect();
+        let tickets = c.begin_wave(&keys);
+        assert!(tickets.iter().all(|t| t.leader && t.hit.is_none()));
+        // 16 keys land on all 8 shards = 8 acquisitions, 8 saved.
+        assert_eq!(c.saved_lock_acquisitions(), 8);
+        for t in &tickets {
+            c.publish(t.key, t.key.1 as u64 * 2);
+        }
+        // Re-admission is all hits (no leaders) and saves another 8.
+        let again = c.begin_wave(&keys);
+        assert!(again.iter().all(|t| !t.leader));
+        assert_eq!(again[5].hit, Some(10));
+        assert_eq!(c.saved_lock_acquisitions(), 16);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (16, 16, 16));
+    }
+
+    #[test]
+    fn wave_abort_unblocks_waiters_with_fallback() {
+        let c: ShardedBlockCache<u64> = ShardedBlockCache::new(8, 2);
+        let tickets = c.begin_wave(&[(0, 1)]);
+        assert!(tickets[0].leader);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| c.wait_for((0, 1)));
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            c.abort((0, 1));
+            assert_eq!(h.join().unwrap(), None, "abort wakes waiters empty-handed");
+        });
+        // Fallback path re-derives the block exactly once.
+        let v = c.get_or_try_insert_with::<()>((0, 1), || Ok(7)).unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(c.stats().inserts, 1);
+    }
+
+    #[test]
+    fn wave_leader_publish_feeds_waiters_and_per_key_readers() {
+        let c: ShardedBlockCache<u64> = ShardedBlockCache::new(8, 2);
+        let tickets = c.begin_wave(&[(2, 9)]);
+        assert!(tickets[0].leader);
+        std::thread::scope(|s| {
+            let w = s.spawn(|| c.wait_for((2, 9)));
+            let p = s.spawn(|| {
+                c.get_or_try_insert_with::<()>((2, 9), || Ok(0)).unwrap()
+            });
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            c.publish((2, 9), 99);
+            assert_eq!(w.join().unwrap(), Some(99));
+            // The per-key reader either coalesced onto the wave leader's
+            // publish (99) or raced ahead of the reservation (0); with the
+            // reservation taken before the spawn, it must coalesce.
+            assert_eq!(p.join().unwrap(), 99);
+        });
+        assert_eq!(c.stats().inserts, 1, "one unseal across all three readers");
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::biometric::gallery::{DecodeStats, Gallery};
 use crate::biometric::index::GalleryIndex;
 use crate::bus::hotplug::MediaBay;
 use crate::crypto::seal::{SealKey, SubkeyFactory, TAG_LEN};
+use crate::obs::TraceRecorder;
 
 use super::cache::{CacheStats, ShardedBlockCache, DEFAULT_CACHE_SHARDS};
 use super::extent::{unseal_block_with, ExtentKind};
@@ -47,6 +48,9 @@ pub struct MountedImage {
     factory: SubkeyFactory,
     raw: Vec<u8>,
     cache: ShardedBlockCache<Arc<[u8]>>,
+    /// Trace recorder for unseal-wave spans; off unless a supervisor
+    /// installs one at attach.
+    obs: TraceRecorder,
 }
 
 impl std::fmt::Debug for MountedImage {
@@ -128,6 +132,7 @@ impl MountedImage {
             factory: key.subkey_factory(),
             raw,
             cache: ShardedBlockCache::new(cache_blocks, DEFAULT_CACHE_SHARDS),
+            obs: TraceRecorder::off(),
         })
     }
 
@@ -246,6 +251,21 @@ impl MountedImage {
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }
+
+    /// Shard-lock acquisitions the streaming reader's wave admission
+    /// avoided (see [`ShardedBlockCache::begin_wave`]).
+    pub fn cache_saved_lock_acquisitions(&self) -> u64 {
+        self.cache.saved_lock_acquisitions()
+    }
+
+    /// The installed trace recorder (off unless a supervisor wired one).
+    pub(crate) fn recorder(&self) -> &TraceRecorder {
+        &self.obs
+    }
+
+    pub(crate) fn block_cache(&self) -> &ShardedBlockCache<Arc<[u8]>> {
+        &self.cache
+    }
 }
 
 /// What happened to a cartridge's media at a lifecycle edge.
@@ -278,6 +298,9 @@ pub struct MountSupervisor {
     /// it, so readers holding the old `Arc` drain safely.
     galleries: HashMap<u64, Arc<GalleryIndex>>,
     pub events: Vec<MountEvent>,
+    /// Handed to every subsequent mount so boot and remount unseal waves
+    /// land in the same trace as the serving-side spans.
+    obs: TraceRecorder,
 }
 
 impl MountSupervisor {
@@ -288,6 +311,12 @@ impl MountSupervisor {
     /// Install (or rotate) the deployment seal key.
     pub fn set_key(&mut self, key: SealKey) {
         self.key = Some(key);
+    }
+
+    /// Install the trace recorder passed along to every subsequent mount.
+    /// Already-mounted images keep their old (usually off) recorder.
+    pub fn set_recorder(&mut self, obs: TraceRecorder) {
+        self.obs = obs;
     }
 
     pub fn has_key(&self) -> bool {
@@ -318,7 +347,10 @@ impl MountSupervisor {
             None
         };
         let img = match MountedImage::mount(&path, key) {
-            Ok(img) => Arc::new(img),
+            Ok(mut img) => {
+                img.obs = self.obs.clone();
+                Arc::new(img)
+            }
             Err(e) => return rejected(&mut self.events, e),
         };
         // Serving-ready gallery: decode the sealed gallery (if the image

@@ -21,6 +21,9 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use crate::obs::{Stage, TraceId};
+
+use super::cache::{BlockKey, WaveTicket};
 use super::mount::MountedImage;
 use super::VdiskError;
 
@@ -109,6 +112,37 @@ impl<'a> ExtentReader<'a> {
         }
     }
 
+    /// Resolve one wave ticket: serve the hit, run our own unseal and
+    /// publish it, or sit out another walker's in-flight unseal (falling
+    /// back to the per-key path if that walker aborted).  A leader error
+    /// leaves the reservation held — the caller aborts it.
+    fn fetch_ticketed(&self, t: &WaveTicket<Arc<[u8]>>) -> Result<Arc<[u8]>, VdiskError> {
+        if let Some(v) = &t.hit {
+            return Ok(v.clone());
+        }
+        let (ext, b) = t.key;
+        if t.leader {
+            let v = self.img.unseal_block_raw(ext as usize, b)?;
+            self.img.block_cache().publish(t.key, v.clone());
+            return Ok(v);
+        }
+        match self.img.block_cache().wait_for(t.key) {
+            Some(v) => Ok(v),
+            None => self.img.read_block(ext as usize, b),
+        }
+    }
+
+    /// One trace record per wave, stamped with the recorder's current
+    /// virtual time (the walk itself runs in wall time, so the span is
+    /// zero-width at whatever instant the simulation has reached).
+    fn record_wave(&self, blocks: u64, hits: u64) {
+        let obs = self.img.recorder();
+        if obs.is_enabled() {
+            let t = obs.vnow();
+            obs.span(TraceId::STORAGE, Stage::UnsealWave, t, t, blocks, hits);
+        }
+    }
+
     /// Unseal the next wave of blocks into the in-order buffer.  On error
     /// the wave keeps every block *before* the lowest failing index and
     /// records the error for the iterator to yield after them.
@@ -119,6 +153,7 @@ impl<'a> ExtentReader<'a> {
         self.next_block = hi;
         let n = (hi - lo) as usize;
         if self.threads <= 1 || n <= 1 {
+            self.record_wave(n as u64, 0);
             for b in lo..hi {
                 match self.fetch(b) {
                     Ok(block) => self.wave.push_back(block),
@@ -130,12 +165,29 @@ impl<'a> ExtentReader<'a> {
             }
             return;
         }
+        // Wave admission: one pass over the shard locks classifies every
+        // block of the wave up front (hit / our unseal / another walker's
+        // in-flight unseal), so workers touch no cache lock on hits and
+        // exactly one publish per miss.
+        let tickets: Option<Vec<WaveTicket<Arc<[u8]>>>> = if self.use_cache {
+            let keys: Vec<BlockKey> =
+                (lo..hi).map(|b| (self.extent_idx as u32, b)).collect();
+            Some(self.img.block_cache().begin_wave(&keys))
+        } else {
+            None
+        };
+        let wave_hits = tickets
+            .as_ref()
+            .map(|ts| ts.iter().filter(|t| t.hit.is_some()).count() as u64)
+            .unwrap_or(0);
+        self.record_wave(n as u64, wave_hits);
         let per = n.div_ceil(self.threads);
         let threads = self.threads;
         // Workers borrow the reader immutably (fetch never mutates it);
         // contiguous ascending ranges keep order and make the lowest
         // failing block the first error seen in the merge.
         let this = &*self;
+        let tickets = &tickets;
         let mut results: Vec<ChunkResult> = Vec::with_capacity(threads);
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(threads);
@@ -148,9 +200,26 @@ impl<'a> ExtentReader<'a> {
                 handles.push(scope.spawn(move || {
                     let mut blocks = Vec::with_capacity((chi - clo) as usize);
                     for b in clo..chi {
-                        match this.fetch(b) {
+                        let got = match tickets {
+                            Some(ts) => this.fetch_ticketed(&ts[(b - lo) as usize]),
+                            None => this.fetch(b),
+                        };
+                        match got {
                             Ok(block) => blocks.push(block),
-                            Err(e) => return ChunkResult { blocks, err: Some(e) },
+                            Err(e) => {
+                                // Release this worker's remaining wave
+                                // reservations (including the failed
+                                // block's) or cross-walk waiters hang.
+                                if let Some(ts) = tickets {
+                                    for rb in b..chi {
+                                        let t = &ts[(rb - lo) as usize];
+                                        if t.leader {
+                                            this.img.block_cache().abort(t.key);
+                                        }
+                                    }
+                                }
+                                return ChunkResult { blocks, err: Some(e) };
+                            }
                         }
                     }
                     ChunkResult { blocks, err: None }
@@ -290,6 +359,26 @@ mod tests {
         for t in [2usize, 4, 8] {
             assert_eq!(walk(t), serial, "threads {t}: parallel must fail like serial");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cached_parallel_walk_uses_wave_admission() {
+        let key = SealKey::from_passphrase("stream");
+        let dir = tmp("wave");
+        let path = image_with_blob(&dir, 4000, 64, &key);
+        let img = MountedImage::mount(&path, &key).unwrap();
+        let serial = collect(img.extent_reader("payload").unwrap().threads(1)).unwrap();
+        // The serial walk goes through the per-key path: nothing saved.
+        assert_eq!(img.cache_saved_lock_acquisitions(), 0);
+        let par = collect(img.extent_reader("payload").unwrap().threads(4)).unwrap();
+        assert_eq!(par, serial, "wave-admitted walk must stream identical bytes");
+        assert!(
+            img.cache_saved_lock_acquisitions() > 0,
+            "multi-block waves must batch their shard-lock acquisitions"
+        );
+        let blocks: u64 = img.manifest.extents.iter().map(|e| e.blocks as u64).sum();
+        assert_eq!(img.cache_stats().inserts, blocks, "still one unseal per block ever");
         std::fs::remove_dir_all(&dir).ok();
     }
 

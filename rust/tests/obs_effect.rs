@@ -1,0 +1,163 @@
+//! Observer-effect property suite for the tracing subsystem (acceptance
+//! gates):
+//!
+//! * tracing is a pure side channel — a traced run and an untraced run at
+//!   the same seed produce bit-identical serving reports;
+//! * a disabled recorder records exactly zero events (zero-cost off);
+//! * same seed => equal trace snapshot (same machine), so traces are
+//!   replayable forensics, not samples;
+//! * per-request spans tile exactly: queue -> bus-grant -> compute are
+//!   contiguous and their durations sum to completion - arrival, and an
+//!   image-backed run shows the storage unseal-wave spans.
+
+use champ::cli::serve::serve_report;
+use champ::obs::{EventKind, RecordKind, Stage, TraceId, TraceRecorder};
+use champ::serve::session::{ServeConfig, ServeOutcome, ServeSession};
+use champ::serve::traffic::MissionProfile;
+
+fn cfg_with(trace: bool, seed: u64) -> ServeConfig {
+    let mut cfg = ServeConfig::new(MissionProfile::checkpoint());
+    cfg.requests = 100;
+    cfg.overload = 2.0;
+    cfg.gallery = 512;
+    cfg.dim = 32;
+    cfg.seed = seed;
+    cfg.trace = trace;
+    cfg
+}
+
+#[test]
+fn traced_and_untraced_reports_are_bit_identical() {
+    let (mut plain, out_plain) = serve_report(vec![cfg_with(false, 17)], false).unwrap();
+    let (mut traced, out_traced) = serve_report(vec![cfg_with(true, 17)], true).unwrap();
+    // The report (classes, tenants, power) must not feel the observer.
+    plain.commit = "x".into();
+    traced.commit = "x".into();
+    assert_eq!(
+        plain.to_json_pretty(),
+        traced.to_json_pretty(),
+        "tracing changed the serving report"
+    );
+    let (p, t) = (&out_plain[0].1, &out_traced[0].1);
+    assert_eq!((p.offered, p.completed, p.shed, p.requeued), (t.offered, t.completed, t.shed, t.requeued));
+    assert_eq!(p.elapsed_us, t.elapsed_us);
+    assert_eq!(p.power.total_w.to_bits(), t.power.total_w.to_bits());
+    assert!(p.trace.is_none(), "untraced run must not carry a snapshot");
+    assert!(t.trace.is_some(), "traced run must carry a snapshot");
+}
+
+#[test]
+fn disabled_recorder_records_exactly_zero() {
+    let r = TraceRecorder::off();
+    assert!(!r.is_enabled());
+    r.span(TraceId::request(1), Stage::Compute, 0, 10, 0, 0);
+    r.event(TraceId::request(1), EventKind::Completed, 10, 0, 0);
+    r.set_vnow(99);
+    assert_eq!(r.snapshot().len(), 0);
+    assert_eq!(r.dropped(), 0);
+    assert_eq!(r.vnow(), 0, "off recorder holds no clock");
+    // And through the serving layer: an untraced session leaves no trace.
+    let out = ServeSession::new(cfg_with(false, 23)).unwrap().run(vec![]);
+    assert!(out.trace.is_none());
+}
+
+#[test]
+fn same_seed_same_machine_equal_trace_snapshots() {
+    let run = || {
+        ServeSession::new(cfg_with(true, 29))
+            .unwrap()
+            .run(vec![])
+            .trace
+            .expect("traced run must snapshot")
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a, b, "same seed must replay to the same trace");
+    assert_eq!(a.dropped, 0, "the mini run must fit the ring");
+}
+
+/// Collect per-request (queue, bus-grant, compute) span triples.
+fn request_chains(out: &ServeOutcome) -> Vec<(TraceId, [champ::obs::TraceRecord; 3])> {
+    let snap = out.trace.as_ref().expect("trace snapshot");
+    let recs = &snap.records;
+    let mut chains = Vec::new();
+    for q in recs {
+        if q.kind != RecordKind::Span(Stage::Queue) || q.trace.is_frame() {
+            continue;
+        }
+        let grant = recs
+            .iter()
+            .find(|g| g.trace == q.trace && g.kind == RecordKind::Span(Stage::BusGrant));
+        let compute = recs
+            .iter()
+            .find(|c| c.trace == q.trace && c.kind == RecordKind::Span(Stage::Compute));
+        if let (Some(g), Some(c)) = (grant, compute) {
+            chains.push((q.trace, [*q, *g, *c]));
+        }
+    }
+    chains
+}
+
+#[test]
+fn request_spans_tile_admission_to_completion() {
+    let out = ServeSession::new(cfg_with(true, 31)).unwrap().run(vec![]);
+    let chains = request_chains(&out);
+    assert!(!chains.is_empty(), "no request produced a full span chain");
+    for (trace, [q, g, c]) in &chains {
+        // Contiguity: each stage starts where the previous one ends.
+        assert_eq!(q.t1_us, g.t0_us, "{trace:?}: queue/grant seam");
+        assert_eq!(g.t1_us, c.t0_us, "{trace:?}: grant/compute seam");
+        // Exact tiling: stage durations sum to completion - arrival.
+        let total = q.dur_us() + g.dur_us() + c.dur_us();
+        assert_eq!(total, c.t1_us - q.t0_us, "{trace:?}: span-sum drift");
+    }
+    // The registry agrees with the report on the terminal counts.
+    let snap = out.trace.as_ref().unwrap();
+    assert_eq!(snap.metrics.counter("serve.offered"), out.offered);
+    assert_eq!(snap.metrics.counter("serve.completed"), out.completed);
+}
+
+#[test]
+fn image_backed_run_traces_the_unseal_waves() {
+    use champ::biometric::gallery::Gallery;
+    use champ::biometric::index::GalleryIndex;
+    use champ::crypto::seal::SealKey;
+    use champ::util::rng::Rng;
+    use champ::vdisk::ImageBuilder;
+
+    let dir = std::env::temp_dir().join(format!("champ-obsimg-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(41);
+    let mut idx = GalleryIndex::with_capacity(32, 256);
+    for i in 0..256 {
+        idx.upsert(format!("sub{i}"), &rng.unit_vec(32));
+    }
+    let path = dir.join("media.vdisk");
+    ImageBuilder::new("obs-media")
+        .gallery(&Gallery::from_index(idx))
+        .block_size(512)
+        .write(&path, &SealKey::from_passphrase("serve-media-key"))
+        .unwrap();
+
+    let mut cfg = cfg_with(true, 37);
+    cfg.image = Some(path);
+    cfg.image_key = "serve-media-key".into();
+    let out = ServeSession::new(cfg).unwrap().run(vec![]);
+    assert!(out.accounting_ok);
+    assert!(out.completed > 0, "identify must serve from the sealed image");
+
+    let snap = out.trace.as_ref().expect("trace snapshot");
+    // The storage band carries the unseal-wave spans from the boot load.
+    let waves: Vec<_> = snap
+        .records
+        .iter()
+        .filter(|r| r.trace == TraceId::STORAGE && r.kind == RecordKind::Span(Stage::UnsealWave))
+        .collect();
+    assert!(!waves.is_empty(), "image-backed run recorded no unseal waves");
+    let blocks: u64 = waves.iter().map(|w| w.a).sum();
+    assert!(blocks > 0, "waves must carry their block counts");
+    // Request chains still tile in the image-backed path.
+    assert!(!request_chains(&out).is_empty(), "no chained request in image run");
+    // Cache tallies made it into the registry.
+    let inserts = snap.metrics.counter("vdisk.cache.inserts");
+    assert!(inserts > 0, "boot gallery load must populate the block cache");
+}
