@@ -74,7 +74,7 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
 /// Blocked i8 inner product with i32 accumulators (no overflow up to
 /// dim 130k: each product is <= 127^2 and i32 holds ~133k of those).
 #[inline]
-fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+pub(crate) fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     debug_assert_eq!(a.len(), b.len());
     let mut lanes = [0i32; LANES];
     let mut ca = a.chunks_exact(LANES);
@@ -92,7 +92,7 @@ fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
 }
 
 #[inline]
-fn inv_norm_of(v: &[f32]) -> f32 {
+pub(crate) fn inv_norm_of(v: &[f32]) -> f32 {
     1.0 / dot_f32(v, v).sqrt().max(NORM_EPS)
 }
 
@@ -101,9 +101,9 @@ fn inv_norm_of(v: &[f32]) -> f32 {
 /// order, exactly what a stable descending sort produces); NaN is ordered
 /// by `total_cmp`, so a NaN probe degrades results instead of panicking.
 #[derive(Debug, Clone, Copy)]
-struct Cand {
-    score: f32,
-    row: usize,
+pub(crate) struct Cand {
+    pub(crate) score: f32,
+    pub(crate) row: usize,
 }
 
 impl PartialEq for Cand {
@@ -125,18 +125,18 @@ impl Ord for Cand {
 }
 
 /// Bounded min-heap of the k best candidates seen so far.
-struct TopK {
+pub(crate) struct TopK {
     k: usize,
     heap: BinaryHeap<std::cmp::Reverse<Cand>>,
 }
 
 impl TopK {
-    fn new(k: usize) -> Self {
+    pub(crate) fn new(k: usize) -> Self {
         TopK { k, heap: BinaryHeap::with_capacity(k.saturating_add(1)) }
     }
 
     #[inline]
-    fn offer(&mut self, score: f32, row: usize) {
+    pub(crate) fn offer(&mut self, score: f32, row: usize) {
         if self.k == 0 {
             return;
         }
@@ -152,7 +152,7 @@ impl TopK {
     }
 
     /// Best-first drain.
-    fn into_sorted(self) -> Vec<Cand> {
+    pub(crate) fn into_sorted(self) -> Vec<Cand> {
         let mut v: Vec<Cand> = self.heap.into_iter().map(|r| r.0).collect();
         v.sort_by(|a, b| b.cmp(a));
         v
@@ -376,6 +376,27 @@ impl GalleryIndex {
         self.top_k_sharded(probe, k, default_shards())
     }
 
+    /// Top-k restricted to a candidate row subset — the exact re-rank
+    /// kernel of the IVF tier.  Scores, clamping, and tie-breaking are
+    /// bit-identical to what [`Self::top_k`] computes for the same rows,
+    /// so a candidate set containing the true top-k yields exactly
+    /// [`Self::top_k`]'s answer.  Rows out of range panic like any row
+    /// accessor; duplicate rows are the caller's bug (they would occupy
+    /// two heap slots).
+    pub fn top_k_rows<I>(&self, probe: &[f32], rows: I, k: usize) -> Vec<(usize, f32)>
+    where
+        I: IntoIterator<Item = usize>,
+    {
+        assert_eq!(probe.len(), self.dim, "probe dim mismatch");
+        let ip = inv_norm_of(probe);
+        let mut top = TopK::new(k);
+        for r in rows {
+            let s = (dot_f32(self.row(r), probe) * self.inv_norms[r] * ip).clamp(-1.0, 1.0);
+            top.offer(s, r);
+        }
+        top.into_sorted().into_iter().map(|c| (c.row, c.score)).collect()
+    }
+
     /// Score a whole probe batch in one gallery pass: rows are walked in
     /// L2-sized blocks and every probe scores the hot block before the
     /// scan moves on, so the gallery is streamed from memory once per
@@ -484,15 +505,23 @@ impl QuantIndex {
         (codes, scale)
     }
 
+    /// Score one row against a pre-quantized probe (from
+    /// [`Self::quantize_probe`]) — the IVF in-list scan kernel.  One i8
+    /// dot rescaled and clamped, bit-identical to the score
+    /// [`Self::top_k`] computes for that row.
+    #[inline]
+    pub fn score_quantized(&self, codes: &[i8], pscale: f32, row: usize) -> f32 {
+        let q = dot_i8(&self.codes[row * self.dim..(row + 1) * self.dim], codes);
+        (q as f32 * self.scales[row] * pscale).clamp(-1.0, 1.0)
+    }
+
     /// Top-k over the integer scan path.  Scores are approximate cosine
     /// (clamped), rank ties break identically to the f32 engine.
     pub fn top_k(&self, probe: &[f32], k: usize) -> Vec<(usize, f32)> {
         let (codes, pscale) = self.quantize_probe(probe);
         let mut top = TopK::new(k);
         for r in 0..self.len() {
-            let q = dot_i8(&self.codes[r * self.dim..(r + 1) * self.dim], &codes);
-            let s = (q as f32 * self.scales[r] * pscale).clamp(-1.0, 1.0);
-            top.offer(s, r);
+            top.offer(self.score_quantized(&codes, pscale, r), r);
         }
         top.into_sorted().into_iter().map(|c| (c.row, c.score)).collect()
     }
@@ -682,6 +711,33 @@ mod tests {
         assert_eq!(top[0], (0, 0.0), "zero row scores 0, like Template::cosine");
         let qtop = idx.quantize().top_k(&[1.0, 0.0, 0.0, 0.0], 1);
         assert_eq!(qtop[0], (0, 0.0));
+    }
+
+    #[test]
+    fn top_k_rows_matches_full_scan_on_covering_subsets() {
+        let idx = index(80, 16, 21);
+        let mut rng = Rng::new(22);
+        let probe = rng.unit_vec(16);
+        // A subset containing every row reproduces top_k bit for bit.
+        assert_eq!(idx.top_k_rows(&probe, 0..80, 5), idx.top_k(&probe, 5));
+        // A partial subset ranks exactly like the full scan restricted
+        // to those rows (prefix of rank_rows filtered to the subset).
+        let subset = [3usize, 9, 11, 40, 41, 42, 77];
+        let got = idx.top_k_rows(&probe, subset.iter().copied(), 3);
+        let want: Vec<(usize, f32)> = idx
+            .rank_rows(&probe)
+            .into_iter()
+            .filter(|(r, _)| subset.contains(r))
+            .take(3)
+            .collect();
+        assert_eq!(got, want);
+        // And the quantized per-row kernel agrees with the quantized scan.
+        let q = idx.quantize();
+        let (codes, pscale) = q.quantize_probe(&probe);
+        let full = q.top_k(&probe, 80);
+        for &(row, score) in &full {
+            assert_eq!(q.score_quantized(&codes, pscale, row), score, "row {row}");
+        }
     }
 
     #[test]

@@ -1,0 +1,637 @@
+//! IVF-ANN tier: sub-linear identification over a coarse quantizer.
+//!
+//! The exact engine ([`GalleryIndex`]) is a superbly-optimized O(n) scan;
+//! at millions of identities every probe still touches every row.  This
+//! module adds the inverted-file tier the ROADMAP names as the biggest
+//! raw-speed-at-scale lever left:
+//!
+//! * **Training** — a seeded, deterministic spherical k-means over the
+//!   normalized SoA rows (Lloyd iterations on a stride sample, then one
+//!   shard-parallel assignment pass over all rows).  Same seed, same
+//!   gallery ⇒ bit-identical centroids and postings, which is what makes
+//!   the sealed extent reproducible and the property suite meaningful.
+//! * **Routing** — a probe scores all `nlist` centroids exactly and
+//!   probes its `nprobe` best inverted lists.
+//! * **In-list scan** — the union of the probed postings is scored with
+//!   the existing [`QuantIndex`] i8 kernel (4x smaller rows, integer
+//!   inner loop) into a bounded rerank pool.
+//! * **Re-rank** — the pool is re-scored by the exact SoA kernel
+//!   ([`GalleryIndex::top_k_rows`]), so the returned scores and ordering
+//!   are bit-identical to what the exact scan computes for those rows.
+//!
+//! **Recall contract.** `tests/prop_ann.rs` gates recall@1 >= 99% against
+//! the exact oracle on the identification workload, the same style as
+//! the i8 agreement gate.  IVF presumes the gallery has manifold
+//! structure (real embedding models cluster identities; the uniform
+//! sphere is the no-structure adversarial case where *no* sub-linear
+//! index can help), so the gated workloads draw from
+//! [`clustered_index`].  Degenerate configurations — empty or tiny
+//! galleries, `nprobe >= nlist`, a tier that no longer matches its
+//! gallery — fall back to the exact scan, bit for bit.
+
+use crate::util::rng::Rng;
+
+use super::index::{default_shards, dot_f32, inv_norm_of, GalleryIndex, QuantIndex, TopK};
+
+/// Default lists probed per search.
+pub const DEFAULT_NPROBE: usize = 8;
+
+/// Galleries below this never train a real tier (the exact scan is
+/// already faster than a routed one at this size).
+const MIN_TRAIN_ROWS: usize = 256;
+
+/// A trained tier never has fewer lists than this (below it, routing
+/// saves nothing over the exact scan).
+const MIN_LISTS: usize = 4;
+
+/// Extent framing magic + version (see [`IvfIndex::encode`]).
+const MAGIC: [u8; 4] = *b"CIVF";
+const VERSION: u32 = 1;
+
+/// Training knobs.  The defaults are what `champd bench match` and the
+/// vdisk packer use.
+#[derive(Debug, Clone)]
+pub struct IvfParams {
+    /// Inverted lists; `None` picks `sqrt(n)` clamped to `[1, 4096]`.
+    pub nlist: Option<usize>,
+    /// Lloyd iterations over the training sample.
+    pub iters: usize,
+    /// Rows sampled per list for Lloyd (full gallery if smaller).
+    pub sample_per_list: usize,
+    /// Seed for centroid init and empty-list reseeding.
+    pub seed: u64,
+}
+
+impl Default for IvfParams {
+    fn default() -> Self {
+        IvfParams { nlist: None, iters: 6, sample_per_list: 32, seed: 0x495646 }
+    }
+}
+
+/// `sqrt(n)` lists, clamped: the classical IVF sizing (list length ~
+/// `sqrt(n)` balances routing cost against in-list scan cost).
+pub fn default_nlist(rows: usize) -> usize {
+    ((rows as f64).sqrt().round() as usize).clamp(1, 4096)
+}
+
+/// A trained IVF tier over one [`GalleryIndex`] snapshot.
+///
+/// The tier stores unit centroids, the inverted postings (every row in
+/// exactly one list), and the i8 shadow of the gallery for the in-list
+/// scan.  It does *not* own the rows: exact re-rank borrows the parent
+/// index at query time, and [`IvfIndex::covers`] checks the tier still
+/// matches it.
+#[derive(Debug, Clone)]
+pub struct IvfIndex {
+    dim: usize,
+    /// Gallery length at train time (the coverage cross-check).
+    rows: usize,
+    /// `nlist x dim` unit centroids; empty for a degenerate tier.
+    centroids: Vec<f32>,
+    /// Rows per list, ascending (enrollment order within a list).
+    postings: Vec<Vec<u32>>,
+    /// i8 shadow of all rows, numbering shared with the parent index.
+    quant: QuantIndex,
+}
+
+impl IvfIndex {
+    /// Train a tier over `idx`.  Deterministic: same seed + same gallery
+    /// produce bit-identical centroids and postings regardless of the
+    /// worker count used for assignment.
+    pub fn train(idx: &GalleryIndex, params: &IvfParams) -> IvfIndex {
+        let n = idx.len();
+        let dim = idx.dim();
+        let nlist = params.nlist.unwrap_or_else(|| default_nlist(n));
+        if n < MIN_TRAIN_ROWS || nlist < MIN_LISTS || nlist * 2 > n {
+            return IvfIndex::degenerate(idx);
+        }
+        let mut rng = Rng::new(params.seed);
+
+        // Stride sample for Lloyd (enrollment order carries no cluster
+        // structure, so a stride is as good as a shuffle and cheaper).
+        let sample_target = (nlist * params.sample_per_list.max(1)).min(n);
+        let stride = (n / sample_target).max(1);
+        let sample: Vec<u32> = (0..n as u32).step_by(stride).collect();
+
+        // Init: nlist distinct sample rows via a partial Fisher-Yates.
+        let mut pool = sample.clone();
+        let mut centroids = vec![0.0f32; nlist * dim];
+        for j in 0..nlist {
+            let pick = j + (rng.next_u64() as usize % (pool.len() - j));
+            pool.swap(j, pick);
+            write_normalized(idx, pool[j] as usize, &mut centroids[j * dim..(j + 1) * dim]);
+        }
+
+        // Lloyd: threaded assignment, then a *sequential* accumulation in
+        // sample order so the float reduction order (and therefore the
+        // trained bits) never depends on the worker count.
+        for _ in 0..params.iters.max(1) {
+            let assign = assign_rows(idx, &centroids, nlist, &sample);
+            let mut sums = vec![0.0f32; nlist * dim];
+            let mut counts = vec![0u32; nlist];
+            for (&r, &a) in sample.iter().zip(&assign) {
+                let row = idx.row(r as usize);
+                let inv = inv_norm_of(row);
+                let dst = &mut sums[a as usize * dim..(a as usize + 1) * dim];
+                for (d, x) in dst.iter_mut().zip(row) {
+                    *d += x * inv;
+                }
+                counts[a as usize] += 1;
+            }
+            for j in 0..nlist {
+                let dst = &mut centroids[j * dim..(j + 1) * dim];
+                let src = &sums[j * dim..(j + 1) * dim];
+                let norm = dot_f32(src, src).sqrt();
+                if counts[j] == 0 || norm < 1e-6 {
+                    // Empty (or collapsed) list: reseed from the sample.
+                    let r = sample[rng.next_u64() as usize % sample.len()];
+                    write_normalized(idx, r as usize, dst);
+                } else {
+                    for (d, x) in dst.iter_mut().zip(src) {
+                        *d = x / norm;
+                    }
+                }
+            }
+        }
+
+        // Final shard-parallel assignment of *all* rows; postings come
+        // out ascending because rows are walked in order.
+        let all: Vec<u32> = (0..n as u32).collect();
+        let assign = assign_rows(idx, &centroids, nlist, &all);
+        let mut postings: Vec<Vec<u32>> = vec![Vec::new(); nlist];
+        for (r, &a) in assign.iter().enumerate() {
+            postings[a as usize].push(r as u32);
+        }
+        IvfIndex { dim, rows: n, centroids, postings, quant: idx.quantize() }
+    }
+
+    /// The always-fallback tier (tiny gallery or absurd `nlist`).
+    fn degenerate(idx: &GalleryIndex) -> IvfIndex {
+        IvfIndex {
+            dim: idx.dim(),
+            rows: idx.len(),
+            centroids: Vec::new(),
+            postings: Vec::new(),
+            quant: idx.quantize(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Gallery length this tier was trained over.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn nlist(&self) -> usize {
+        self.postings.len()
+    }
+
+    /// True when this tier routes nothing and every search falls back.
+    pub fn is_degenerate(&self) -> bool {
+        self.postings.is_empty()
+    }
+
+    /// True when the tier still describes `idx` (same dim, same rows).
+    /// A tier over a stale snapshot must not route a fresher gallery.
+    pub fn covers(&self, idx: &GalleryIndex) -> bool {
+        self.dim == idx.dim() && self.rows == idx.len() && self.quant.len() == idx.len()
+    }
+
+    /// Rows a routed search touches (centroid scan + expected union),
+    /// the deterministic cost figure the serve layer's virtual-time
+    /// model charges per ANN pass.
+    pub fn expected_scan_rows(&self, nprobe: usize) -> usize {
+        if self.is_degenerate() {
+            return self.rows;
+        }
+        let probed = nprobe.clamp(1, self.nlist());
+        self.nlist() + (self.rows * probed) / self.nlist()
+    }
+
+    /// Top-k via route → i8 list scan → exact re-rank.  Returned scores
+    /// and ordering are bit-identical to the exact engine's for the rows
+    /// returned.  Falls back to [`GalleryIndex::top_k_auto`] (the exact
+    /// scan) whenever routing cannot help: degenerate tier, stale tier,
+    /// `nprobe >= nlist`, or a candidate union smaller than `k`.
+    pub fn search(
+        &self,
+        idx: &GalleryIndex,
+        probe: &[f32],
+        k: usize,
+        nprobe: usize,
+    ) -> Vec<(usize, f32)> {
+        let nprobe = nprobe.max(1);
+        if self.is_degenerate() || !self.covers(idx) || nprobe >= self.nlist() {
+            return idx.top_k_auto(probe, k);
+        }
+        assert_eq!(probe.len(), self.dim, "probe dim mismatch");
+
+        // Route: exact centroid scan (centroids are unit, so the dot
+        // ranking is the cosine ranking; the probe norm is constant).
+        let mut route = TopK::new(nprobe);
+        for j in 0..self.nlist() {
+            route.offer(dot_f32(&self.centroids[j * self.dim..(j + 1) * self.dim], probe), j);
+        }
+        let lists = route.into_sorted();
+        let union: usize = lists.iter().map(|c| self.postings[c.row].len()).sum();
+        if union < k {
+            return idx.top_k_auto(probe, k);
+        }
+
+        // In-list i8 scan into a bounded rerank pool: wide enough that
+        // quantization noise around the cut line cannot evict a true
+        // top-k row (the i8 rank-1 agreement gate bounds that noise).
+        let pool = (4 * k).max(k + 16).min(union);
+        let (codes, pscale) = self.quant.quantize_probe(probe);
+        let mut scan = TopK::new(pool);
+        for c in &lists {
+            for &r in &self.postings[c.row] {
+                scan.offer(self.quant.score_quantized(&codes, pscale, r as usize), r as usize);
+            }
+        }
+
+        // Exact re-rank of the pool: same kernel, clamp, and tie order
+        // as the exact scan — the output is exactly ordered by exact
+        // scores.
+        idx.top_k_rows(probe, scan.into_sorted().into_iter().map(|c| c.row), k)
+    }
+
+    // ---- persistence (the vdisk `ivf` extent payload) -------------------
+
+    /// Serialize centroids + postings to the sealed-extent framing:
+    /// `"CIVF" u32 version u32 dim u32 nlist u64 rows`, then the unit
+    /// centroids (`nlist x dim` f32 LE), then per list `u32 len` + `len`
+    /// u32 row ids.  The i8 shadow is *not* stored — it is a pure
+    /// function of the gallery and is rebuilt on decode.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            20 + self.centroids.len() * 4 + self.rows * 4 + self.postings.len() * 4,
+        );
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        out.extend_from_slice(&(self.nlist() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        for v in &self.centroids {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for list in &self.postings {
+            out.extend_from_slice(&(list.len() as u32).to_le_bytes());
+            for r in list {
+                out.extend_from_slice(&r.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Streaming decode from plaintext blocks as they come off the
+    /// unseal pipeline (no whole-extent buffer), rebuilding the i8
+    /// shadow from `idx`.  Fails typed on truncation, trailing bytes,
+    /// framing garbage, or a tier that does not cover `idx` — a sealed
+    /// image whose IVF extent disagrees with its gallery extent is
+    /// corrupt, not approximately usable.
+    pub fn decode_stream<B, E, I>(blocks: I, idx: &GalleryIndex) -> anyhow::Result<IvfIndex>
+    where
+        B: AsRef<[u8]>,
+        E: std::error::Error + Send + Sync + 'static,
+        I: IntoIterator<Item = Result<B, E>>,
+    {
+        let mut cur = BlockCursor::new(blocks.into_iter());
+        let mut hdr = [0u8; 24];
+        cur.read_exact(&mut hdr)?;
+        anyhow::ensure!(hdr[..4] == MAGIC, "ivf framing: bad magic");
+        let version = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+        anyhow::ensure!(version == VERSION, "ivf framing: unsupported version {version}");
+        let dim = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+        let nlist = u32::from_le_bytes(hdr[12..16].try_into().unwrap()) as usize;
+        let rows = u64::from_le_bytes(hdr[16..24].try_into().unwrap()) as usize;
+        anyhow::ensure!(dim == idx.dim(), "ivf tier dim {dim} != gallery dim {}", idx.dim());
+        anyhow::ensure!(
+            rows == idx.len(),
+            "ivf tier rows {rows} != gallery rows {}",
+            idx.len()
+        );
+        anyhow::ensure!(nlist <= rows.max(1), "ivf framing: {nlist} lists over {rows} rows");
+
+        let mut centroids = vec![0.0f32; nlist * dim];
+        let mut scratch = vec![0u8; dim.max(1) * 4];
+        for j in 0..nlist {
+            cur.read_exact(&mut scratch)?;
+            for (d, c) in centroids[j * dim..(j + 1) * dim].iter_mut().zip(scratch.chunks_exact(4))
+            {
+                *d = f32::from_le_bytes(c.try_into().unwrap());
+            }
+        }
+
+        let mut postings: Vec<Vec<u32>> = Vec::with_capacity(nlist);
+        let mut seen = vec![false; rows];
+        let mut total = 0usize;
+        let mut word = [0u8; 4];
+        for _ in 0..nlist {
+            cur.read_exact(&mut word)?;
+            let len = u32::from_le_bytes(word) as usize;
+            total = total.saturating_add(len);
+            anyhow::ensure!(total <= rows, "ivf framing: postings exceed row count");
+            let mut list = Vec::with_capacity(len);
+            for _ in 0..len {
+                cur.read_exact(&mut word)?;
+                let r = u32::from_le_bytes(word);
+                anyhow::ensure!((r as usize) < rows, "ivf framing: row {r} out of range");
+                anyhow::ensure!(!seen[r as usize], "ivf framing: row {r} listed twice");
+                seen[r as usize] = true;
+                list.push(r);
+            }
+            postings.push(list);
+        }
+        anyhow::ensure!(
+            nlist == 0 || total == rows,
+            "ivf framing: {total} rows posted, gallery has {rows}"
+        );
+        anyhow::ensure!(cur.exhausted()?, "ivf framing: trailing bytes");
+        Ok(IvfIndex { dim, rows, centroids, postings, quant: idx.quantize() })
+    }
+
+    /// Decode from a contiguous buffer (tests and tooling).
+    pub fn decode(bytes: &[u8], idx: &GalleryIndex) -> anyhow::Result<IvfIndex> {
+        let blocks: [Result<&[u8], std::io::Error>; 1] = [Ok(bytes)];
+        Self::decode_stream(blocks, idx)
+    }
+}
+
+/// Write `idx` row `r`, L2-normalized, into `dst`.
+fn write_normalized(idx: &GalleryIndex, r: usize, dst: &mut [f32]) {
+    let row = idx.row(r);
+    let inv = inv_norm_of(row);
+    for (d, x) in dst.iter_mut().zip(row) {
+        *d = x * inv;
+    }
+}
+
+/// Nearest-centroid assignment for `rows`, sharded across scoped worker
+/// threads.  Per-row results are independent, so the output is identical
+/// for any worker count; ties break toward the lower list.
+fn assign_rows(idx: &GalleryIndex, centroids: &[f32], nlist: usize, rows: &[u32]) -> Vec<u32> {
+    let dim = idx.dim();
+    let assign_one = |r: u32| -> u32 {
+        let row = idx.row(r as usize);
+        let mut best = 0u32;
+        let mut best_s = f32::NEG_INFINITY;
+        for j in 0..nlist {
+            let s = dot_f32(&centroids[j * dim..(j + 1) * dim], row);
+            if s > best_s {
+                best_s = s;
+                best = j as u32;
+            }
+        }
+        best
+    };
+    let shards = default_shards().min(rows.len().max(1));
+    if shards <= 1 || rows.len() < 1024 {
+        return rows.iter().map(|&r| assign_one(r)).collect();
+    }
+    let chunk = rows.len().div_ceil(shards);
+    let mut out = Vec::with_capacity(rows.len());
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(shards);
+        for part in rows.chunks(chunk) {
+            handles.push(scope.spawn(move || part.iter().map(|&r| assign_one(r)).collect::<Vec<u32>>()));
+        }
+        for h in handles {
+            out.extend(h.join().expect("assignment worker panicked"));
+        }
+    });
+    out
+}
+
+/// Byte cursor over a fallible block stream: `read_exact` semantics with
+/// typed truncation errors, no whole-stream buffer.
+struct BlockCursor<B, E, I>
+where
+    I: Iterator<Item = Result<B, E>>,
+{
+    blocks: I,
+    cur: Option<B>,
+    off: usize,
+}
+
+impl<B, E, I> BlockCursor<B, E, I>
+where
+    B: AsRef<[u8]>,
+    E: std::error::Error + Send + Sync + 'static,
+    I: Iterator<Item = Result<B, E>>,
+{
+    fn new(blocks: I) -> Self {
+        BlockCursor { blocks, cur: None, off: 0 }
+    }
+
+    /// Advance to a block with unread bytes; false at end of stream.
+    fn advance(&mut self) -> anyhow::Result<bool> {
+        loop {
+            if let Some(b) = &self.cur {
+                if self.off < b.as_ref().len() {
+                    return Ok(true);
+                }
+            }
+            match self.blocks.next() {
+                Some(b) => {
+                    self.cur = Some(b?);
+                    self.off = 0;
+                }
+                None => return Ok(false),
+            }
+        }
+    }
+
+    fn read_exact(&mut self, dst: &mut [u8]) -> anyhow::Result<()> {
+        let mut filled = 0usize;
+        while filled < dst.len() {
+            anyhow::ensure!(self.advance()?, "ivf framing: truncated payload");
+            let b = self.cur.as_ref().unwrap().as_ref();
+            let take = (dst.len() - filled).min(b.len() - self.off);
+            dst[filled..filled + take].copy_from_slice(&b[self.off..self.off + take]);
+            self.off += take;
+            filled += take;
+        }
+        Ok(())
+    }
+
+    /// True when no unread bytes remain (errors still propagate).
+    fn exhausted(&mut self) -> anyhow::Result<bool> {
+        Ok(!self.advance()?)
+    }
+}
+
+/// Synthetic gallery with manifold structure: identities drawn around
+/// `clusters` family directions with relative spread `spread`
+/// (`cos(identity, family) ~ 1/sqrt(1 + spread^2)`), ids `id0..idN`.
+/// This is the identification-workload generator the ANN bench and
+/// property gates use — real embedding models produce clustered
+/// manifolds, and the exact variants' throughput is data-independent so
+/// the comparison stays apples-to-apples.
+pub fn clustered_index(
+    rng: &mut Rng,
+    n: usize,
+    dim: usize,
+    clusters: usize,
+    spread: f32,
+) -> GalleryIndex {
+    let clusters = clusters.max(1);
+    let centers: Vec<Vec<f32>> = (0..clusters).map(|_| rng.unit_vec(dim)).collect();
+    let mut idx = GalleryIndex::with_capacity(dim, n);
+    let mut v = vec![0.0f32; dim];
+    for i in 0..n {
+        let c = &centers[(rng.next_u64() % clusters as u64) as usize];
+        let noise = rng.unit_vec(dim);
+        for ((d, x), e) in v.iter_mut().zip(c).zip(&noise) {
+            *d = x + spread * e;
+        }
+        idx.upsert(format!("id{i}"), &v);
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trained(n: usize, dim: usize, seed: u64) -> (GalleryIndex, IvfIndex) {
+        let mut rng = Rng::new(seed);
+        let idx = clustered_index(&mut rng, n, dim, default_nlist(n), 0.5);
+        let ivf = IvfIndex::train(&idx, &IvfParams::default());
+        (idx, ivf)
+    }
+
+    #[test]
+    fn postings_partition_the_gallery() {
+        let (idx, ivf) = trained(1500, 32, 31);
+        assert!(!ivf.is_degenerate());
+        assert!(ivf.covers(&idx));
+        let mut seen = vec![false; idx.len()];
+        for j in 0..ivf.nlist() {
+            let mut prev = None;
+            for &r in &ivf.postings[j] {
+                assert!(!seen[r as usize], "row {r} in two lists");
+                seen[r as usize] = true;
+                assert!(prev.map(|p| p < r).unwrap_or(true), "list {j} not ascending");
+                prev = Some(r);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every row must land in a list");
+    }
+
+    #[test]
+    fn tiny_gallery_trains_degenerate_and_searches_exact() {
+        let mut rng = Rng::new(33);
+        let idx = clustered_index(&mut rng, 40, 16, 4, 0.5);
+        let ivf = IvfIndex::train(&idx, &IvfParams::default());
+        assert!(ivf.is_degenerate());
+        let probe = rng.unit_vec(16);
+        assert_eq!(ivf.search(&idx, &probe, 5, DEFAULT_NPROBE), idx.top_k_auto(&probe, 5));
+        assert_eq!(ivf.expected_scan_rows(DEFAULT_NPROBE), 40);
+    }
+
+    #[test]
+    fn nprobe_at_or_above_nlist_is_exact() {
+        let (idx, ivf) = trained(800, 16, 35);
+        let mut rng = Rng::new(36);
+        let probe = rng.unit_vec(16);
+        for nprobe in [ivf.nlist(), ivf.nlist() + 7] {
+            assert_eq!(ivf.search(&idx, &probe, 4, nprobe), idx.top_k_auto(&probe, 4));
+        }
+    }
+
+    #[test]
+    fn stale_tier_falls_back_instead_of_misrouting() {
+        let (mut idx, ivf) = trained(600, 16, 37);
+        let mut rng = Rng::new(38);
+        idx.upsert("fresh", &rng.unit_vec(16));
+        assert!(!ivf.covers(&idx));
+        let probe = rng.unit_vec(16);
+        assert_eq!(ivf.search(&idx, &probe, 3, 4), idx.top_k_auto(&probe, 3));
+    }
+
+    #[test]
+    fn routed_self_probe_is_rank_one_with_exact_score() {
+        let (idx, ivf) = trained(2000, 32, 39);
+        for r in [0usize, 700, 1999] {
+            let got = ivf.search(&idx, idx.row(r), 3, DEFAULT_NPROBE);
+            let want = idx.top_k(idx.row(r), 3);
+            assert_eq!(got[0], want[0], "self-probe row {r}");
+            assert!((got[0].1 - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn same_seed_trains_bit_identical_tiers() {
+        let (idx, _) = trained(1200, 24, 41);
+        let a = IvfIndex::train(&idx, &IvfParams::default());
+        let b = IvfIndex::train(&idx, &IvfParams::default());
+        assert_eq!(a.encode(), b.encode(), "training must be deterministic");
+        let c = IvfIndex::train(&idx, &IvfParams { seed: 99, ..IvfParams::default() });
+        assert_ne!(a.encode(), c.encode(), "seed must matter");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_through_blocks() {
+        let (idx, ivf) = trained(900, 16, 43);
+        let bytes = ivf.encode();
+        // Whole-buffer and awkward block geometries all reproduce the
+        // tier bit for bit (re-encode equality covers all fields).
+        for bs in [usize::MAX, 1usize, 7, 64, 4096] {
+            let blocks: Vec<Result<Vec<u8>, std::io::Error>> =
+                bytes.chunks(bs.min(bytes.len())).map(|c| Ok(c.to_vec())).collect();
+            let back = IvfIndex::decode_stream(blocks, &idx).unwrap();
+            assert_eq!(back.encode(), bytes, "bs {bs}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage_truncation_and_mismatch() {
+        let (idx, ivf) = trained(700, 16, 45);
+        let bytes = ivf.encode();
+        assert!(IvfIndex::decode(b"nope", &idx).is_err(), "bad magic");
+        for cut in [3usize, 10, 30, bytes.len() - 1] {
+            assert!(IvfIndex::decode(&bytes[..cut], &idx).is_err(), "cut {cut}");
+        }
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(IvfIndex::decode(&trailing, &idx).is_err(), "trailing byte");
+        // A tier over a different gallery is corrupt, not usable.
+        let mut rng = Rng::new(46);
+        let other = clustered_index(&mut rng, 701, 16, 8, 0.5);
+        assert!(IvfIndex::decode(&bytes, &other).is_err(), "row-count mismatch");
+    }
+
+    #[test]
+    fn recall_smoke_on_clustered_identification() {
+        // The full gate lives in tests/prop_ann.rs; this is the fast
+        // in-crate smoke: noisy probes of enrolled identities stay
+        // rank-1 through the routed path.
+        let (idx, ivf) = trained(3000, 32, 47);
+        let mut rng = Rng::new(48);
+        let mut hit = 0;
+        let probes = 60;
+        for p in 0..probes {
+            let base = p * idx.len() / probes;
+            let noisy: Vec<f32> =
+                idx.row(base).iter().map(|v| v + 0.05 * rng.normal()).collect();
+            let exact = idx.top_k(&noisy, 1)[0].0;
+            let ann = ivf.search(&idx, &noisy, 1, DEFAULT_NPROBE)[0].0;
+            if ann == exact {
+                hit += 1;
+            }
+        }
+        assert!(hit as f64 / probes as f64 >= 0.99, "recall {hit}/{probes}");
+    }
+
+    #[test]
+    fn expected_scan_rows_is_sublinear() {
+        let (_, ivf) = trained(4000, 16, 49);
+        let cost = ivf.expected_scan_rows(DEFAULT_NPROBE);
+        assert!(cost < 4000 / 2, "routed cost {cost} must beat the exact scan");
+        assert!(cost >= ivf.nlist());
+    }
+}

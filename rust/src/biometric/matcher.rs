@@ -12,6 +12,7 @@
 //! degrades its scores instead of panicking the match loop.
 
 use super::gallery::Gallery;
+use super::search::{SearchBackend, SearchParams};
 use super::template::Template;
 
 /// Plaintext top-k cosine matcher.
@@ -38,17 +39,44 @@ impl Matcher {
             .collect()
     }
 
-    /// Top-k `(row, score)` via the bounded-heap engine: no full sort, no
-    /// id clones.  Rows map to ids with [`Gallery::id_at`].
+    /// Top-k `(row, score)` through the [`SearchBackend`] API (the exact
+    /// SoA backend).  Rows map to ids with [`Gallery::id_at`].
     pub fn top_k(&self, probe: &Template, gallery: &Gallery, k: usize) -> Vec<(usize, f32)> {
-        gallery.index().top_k_auto(probe.as_slice(), k)
+        self.top_k_with(gallery.index(), probe, &SearchParams::default().with_k(k))
+            .into_iter()
+            .map(|n| (n.row, n.score))
+            .collect()
     }
 
-    /// Best match above threshold, if any (one bounded-heap pass).
+    /// Best match above threshold, if any (one bounded-heap pass through
+    /// the exact backend).
     pub fn identify(&self, probe: &Template, gallery: &Gallery) -> Option<(String, f32)> {
-        let idx = gallery.index();
-        let (row, score) = idx.top_k_auto(probe.as_slice(), 1).into_iter().next()?;
-        (score >= self.threshold).then(|| (idx.id_of(row).to_string(), score))
+        self.identify_with(gallery.index(), probe)
+    }
+
+    /// Top-k against *any* [`SearchBackend`] — exact, quantized, or the
+    /// IVF tier.
+    pub fn top_k_with<B: SearchBackend>(
+        &self,
+        backend: &B,
+        probe: &Template,
+        params: &SearchParams,
+    ) -> Vec<super::search::Neighbor> {
+        backend.search(probe.as_slice(), params)
+    }
+
+    /// Identify against *any* [`SearchBackend`], applying this matcher's
+    /// acceptance threshold to the backend's best answer.
+    pub fn identify_with<B: SearchBackend>(
+        &self,
+        backend: &B,
+        probe: &Template,
+    ) -> Option<(String, f32)> {
+        let best = backend
+            .search(probe.as_slice(), &SearchParams::default().with_k(1))
+            .into_iter()
+            .next()?;
+        (best.score >= self.threshold).then_some((best.id, best.score))
     }
 }
 

@@ -9,11 +9,15 @@
 pub mod fusion;
 pub mod gallery;
 pub mod index;
+pub mod ivf;
 pub mod matcher;
 pub mod quality;
+pub mod search;
 pub mod template;
 
 pub use gallery::Gallery;
 pub use index::{GalleryIndex, QuantIndex};
+pub use ivf::{clustered_index, IvfIndex, IvfParams, DEFAULT_NPROBE};
 pub use matcher::{rank_of, Matcher};
+pub use search::{IvfBackend, NaiveOracle, Neighbor, QuantBackend, SearchBackend, SearchParams};
 pub use template::Template;

@@ -1,0 +1,249 @@
+//! `SearchBackend`: one API over every scan path.
+//!
+//! PRs 3–7 grew four ways to answer "who is this probe": the preserved
+//! naive AoS oracle, the exact SoA scan (single-thread and sharded),
+//! the i8 quantized scan, and now the IVF-ANN tier.  Each had its own
+//! inherent method shape, so every consumer (`Matcher`,
+//! `StorageCartridge`, `serve::session`, the property suites) hard-coded
+//! one path.  This module is the paper's hot-swappable-capability idea
+//! applied to compute tiers: callers pick a [`SearchBackend`] and the
+//! call site stays identical whether the answer comes from a naive
+//! rescore or a routed million-identity index.
+//!
+//! The inherent methods on the concrete types remain the primitive
+//! layer — the trait impls here are thin adapters over them, so no
+//! existing call site breaks and no fast path gains an abstraction tax
+//! it didn't opt into.
+
+use super::index::{GalleryIndex, QuantIndex};
+use super::ivf::{IvfIndex, DEFAULT_NPROBE};
+use super::template::Template;
+
+/// One ranked answer: the SoA row (or enrollment position for the
+/// naive oracle), the enrolled identity, and the cosine score.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Neighbor {
+    pub row: usize,
+    pub id: String,
+    pub score: f32,
+}
+
+/// Knobs shared by every backend.  Backends ignore what they cannot
+/// use (`nprobe` only steers the IVF tier).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchParams {
+    /// Neighbors returned (fewer if the gallery is smaller).
+    pub k: usize,
+    /// Inverted lists probed by the ANN tier.
+    pub nprobe: usize,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        SearchParams { k: 10, nprobe: DEFAULT_NPROBE }
+    }
+}
+
+impl SearchParams {
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    pub fn with_nprobe(mut self, nprobe: usize) -> Self {
+        self.nprobe = nprobe;
+        self
+    }
+}
+
+/// A gallery-backed scan that answers top-k identification queries.
+pub trait SearchBackend {
+    /// Enrolled identities visible to this backend.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Top-`params.k` neighbors of `probe`, best first.  Ties break
+    /// deterministically (identical inputs, identical output) on every
+    /// backend.
+    fn search(&self, probe: &[f32], params: &SearchParams) -> Vec<Neighbor>;
+
+    /// Batch variant; backends with a real batch kernel override this.
+    fn search_batch(&self, probes: &[&[f32]], params: &SearchParams) -> Vec<Vec<Neighbor>> {
+        probes.iter().map(|p| self.search(p, params)).collect()
+    }
+}
+
+fn neighbors_from(idx: &GalleryIndex, ranked: Vec<(usize, f32)>) -> Vec<Neighbor> {
+    ranked
+        .into_iter()
+        .map(|(row, score)| Neighbor { row, id: idx.id_of(row).to_string(), score })
+        .collect()
+}
+
+/// Exact scan (single-thread under [`super::index::SHARD_MIN_ROWS`],
+/// sharded above — the `top_k_auto` policy).
+impl SearchBackend for GalleryIndex {
+    fn len(&self) -> usize {
+        GalleryIndex::len(self)
+    }
+
+    fn search(&self, probe: &[f32], params: &SearchParams) -> Vec<Neighbor> {
+        neighbors_from(self, self.top_k_auto(probe, params.k))
+    }
+
+    fn search_batch(&self, probes: &[&[f32]], params: &SearchParams) -> Vec<Vec<Neighbor>> {
+        self.top_k_batch(probes, params.k)
+            .into_iter()
+            .map(|ranked| neighbors_from(self, ranked))
+            .collect()
+    }
+}
+
+/// The preserved naive AoS oracle: per-entry `Template::cosine` and a
+/// stable descending sort, so ties keep enrollment order — the
+/// reference semantics every fast path is gated against.
+#[derive(Debug, Clone, Default)]
+pub struct NaiveOracle {
+    entries: Vec<(String, Template)>,
+}
+
+impl NaiveOracle {
+    pub fn from_entries(entries: Vec<(String, Template)>) -> Self {
+        NaiveOracle { entries }
+    }
+
+    /// Snapshot a [`GalleryIndex`] into oracle (AoS) form.
+    pub fn from_index(idx: &GalleryIndex) -> Self {
+        let entries = (0..idx.len())
+            .map(|r| (idx.id_of(r).to_string(), Template::new(idx.row(r).to_vec())))
+            .collect();
+        NaiveOracle { entries }
+    }
+}
+
+impl SearchBackend for NaiveOracle {
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn search(&self, probe: &[f32], params: &SearchParams) -> Vec<Neighbor> {
+        let probe = Template::new(probe.to_vec());
+        let mut scored: Vec<Neighbor> = self
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(row, (id, t))| Neighbor { row, id: id.clone(), score: probe.cosine(t) })
+            .collect();
+        scored.sort_by(|a, b| b.score.total_cmp(&a.score));
+        scored.truncate(params.k);
+        scored
+    }
+}
+
+/// i8 quantized scan.  `QuantIndex` carries no identities, so the
+/// backend pairs it with the index it was derived from.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantBackend<'a> {
+    pub quant: &'a QuantIndex,
+    pub index: &'a GalleryIndex,
+}
+
+impl SearchBackend for QuantBackend<'_> {
+    fn len(&self) -> usize {
+        self.quant.len()
+    }
+
+    fn search(&self, probe: &[f32], params: &SearchParams) -> Vec<Neighbor> {
+        neighbors_from(self.index, self.quant.top_k(probe, params.k))
+    }
+}
+
+/// IVF-ANN tier: routed i8 list scan with exact re-rank, falling back
+/// to the exact scan on degeneracy (see [`IvfIndex::search`]).
+#[derive(Debug, Clone, Copy)]
+pub struct IvfBackend<'a> {
+    pub ivf: &'a IvfIndex,
+    pub index: &'a GalleryIndex,
+}
+
+impl SearchBackend for IvfBackend<'_> {
+    fn len(&self) -> usize {
+        GalleryIndex::len(self.index)
+    }
+
+    fn search(&self, probe: &[f32], params: &SearchParams) -> Vec<Neighbor> {
+        neighbors_from(self.index, self.ivf.search(self.index, probe, params.k, params.nprobe))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ivf::{clustered_index, IvfParams};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn neighbors_eq(a: &[Neighbor], b: &[Neighbor]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.row == y.row && x.id == y.id && x.score.to_bits() == y.score.to_bits()
+            })
+    }
+
+    #[test]
+    fn exact_backends_agree_and_ids_resolve() {
+        let mut rng = Rng::new(71);
+        let idx = clustered_index(&mut rng, 400, 16, 8, 0.5);
+        let oracle = NaiveOracle::from_index(&idx);
+        let params = SearchParams::default().with_k(5);
+        for _ in 0..20 {
+            let probe = rng.unit_vec(16);
+            let soa = SearchBackend::search(&idx, &probe, &params);
+            let naive = oracle.search(&probe, &params);
+            assert_eq!(soa.len(), 5);
+            // Same identities in the same order; scores equal to the
+            // cross-kernel tolerance the prop suite uses.
+            for (a, b) in soa.iter().zip(&naive) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.row, b.row);
+                assert!((a.score - b.score).abs() < 1e-4);
+                assert_eq!(a.id, idx.id_of(a.row));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_default_and_override_agree() {
+        let mut rng = Rng::new(72);
+        let idx = clustered_index(&mut rng, 300, 16, 6, 0.5);
+        let params = SearchParams::default().with_k(4);
+        let probes: Vec<Vec<f32>> = (0..7).map(|_| rng.unit_vec(16)).collect();
+        let refs: Vec<&[f32]> = probes.iter().map(|p| p.as_slice()).collect();
+        let batched = SearchBackend::search_batch(&idx, &refs, &params);
+        for (p, got) in refs.iter().zip(&batched) {
+            let single = SearchBackend::search(&idx, p, &params);
+            assert!(neighbors_eq(got, &single), "batch must match single-probe");
+        }
+    }
+
+    #[test]
+    fn ivf_backend_routes_and_quant_backend_agrees_on_rank1() {
+        let mut rng = Rng::new(73);
+        let idx = clustered_index(&mut rng, 1500, 32, 38, 0.5);
+        let ivf = IvfIndex::train(&idx, &IvfParams::default());
+        let quant = idx.quantize();
+        let ib = IvfBackend { ivf: &ivf, index: &idx };
+        let qb = QuantBackend { quant: &quant, index: &idx };
+        let params = SearchParams::default().with_k(3);
+        for r in [0usize, 600, 1499] {
+            let probe: Vec<f32> = idx.row(r).iter().map(|v| v + 0.05 * rng.normal()).collect();
+            let exact = SearchBackend::search(&idx, &probe, &params);
+            assert_eq!(ib.search(&probe, &params)[0].id, exact[0].id);
+            assert_eq!(qb.search(&probe, &params)[0].id, exact[0].id);
+        }
+        assert_eq!(SearchBackend::len(&ib), idx.len());
+        assert_eq!(SearchBackend::len(&qb), idx.len());
+    }
+}

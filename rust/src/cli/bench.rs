@@ -9,14 +9,19 @@
 //!
 //! `champd bench match` sweeps the gallery match engine over gallery
 //! sizes and scan variants (`naive` legacy AoS, `soa` index, `soa-i8`
-//! quantized, `sharded` thread-parallel), writes `BENCH_match.json`, and
-//! gates both against the committed floor file and the engine's speedup
-//! contract (SoA >= 5x naive at >= 100k identities; sharded >= 2x SoA at
-//! >= 1M).
+//! quantized, `sharded` thread-parallel, `ann` IVF tier), writes
+//! `BENCH_match.json` (schema v2), and gates against the committed floor
+//! file plus the engine's machine-independent contracts (SoA >= 5x naive
+//! at >= 100k identities; sharded >= 2x SoA at >= 1M; ANN >= 10x sharded
+//! at >= 1M with recall@1 >= 99% at >= 100k).
 //!
 //! `champd bench vdisk` (see [`super::bench_vdisk`]) measures the sealed
 //! cartridge read pipeline — mount-to-first-match, parallel unseal MB/s,
 //! cache hit rate, bytes-copied-per-template — into `BENCH_vdisk.json`.
+//!
+//! The shared flag surface (`--sizes/--out/--baseline/--tolerance/
+//! --no-guard/--trace`) is resolved through [`super::CommonOpts`] with
+//! per-verb defaults.
 //!
 //! Flags (scaling):
 //!   --frames N        source frames per point (default 200)
@@ -35,12 +40,15 @@
 //!   --dim D           embedding dimension (default 128)
 //!   --probes N        probes timed per point (default 32)
 //!   --k K             top-k retrieved per probe (default 10)
+//!   --huge            allow sizes above 1m (a 10m sweep takes minutes
+//!                     and several GB of RAM; local/nightly only)
 //!   --out/--baseline/--tolerance/--no-guard as above
 //!                     (defaults BENCH_match.json / match_baseline.json)
 
 use std::time::Instant;
 
 use crate::biometric::index::{default_shards, GalleryIndex};
+use crate::biometric::ivf::{clustered_index, default_nlist, IvfIndex, IvfParams, DEFAULT_NPROBE};
 use crate::biometric::matcher::rank_naive_aos;
 use crate::biometric::template::Template;
 use crate::bus::topology::SlotId;
@@ -55,7 +63,7 @@ use crate::metrics::report::{
 use crate::util::rng::Rng;
 use crate::workload::video::VideoSource;
 
-use super::Args;
+use super::{Args, BenchDefaults, CommonOpts};
 
 /// The committed perf floor (see `benches/common/scaling_baseline.json`).
 const DEFAULT_BASELINE: &str = include_str!("../../benches/common/scaling_baseline.json");
@@ -71,6 +79,17 @@ const NAIVE_MAX_ROWS: usize = 100_000;
 
 /// Gallery size at which the sharded-vs-single speedup gate applies.
 const SHARD_GATE_ROWS: usize = 1_000_000;
+
+/// Gallery size at which the ANN >= 10x sharded-exact gate applies.
+const ANN_GATE_ROWS: usize = 1_000_000;
+
+/// Gallery size at which the ANN recall@1 >= 99% gate applies (below it
+/// the tier is too small for the ratio to be stable; the prop suite
+/// covers small galleries exactly).
+const RECALL_GATE_ROWS: usize = 100_000;
+
+/// Sizes beyond this need the explicit `--huge` opt-in.
+const HUGE_GATE_ROWS: usize = 1_000_000;
 
 /// Batch sizes the sweep exercises for the engine path.
 const BATCHES: [u32; 3] = [1, 4, 8];
@@ -179,34 +198,40 @@ fn export_scaling_trace(path: &str, frames: u64, n: usize) -> anyhow::Result<()>
 }
 
 fn run_scaling(args: &Args) -> anyhow::Result<()> {
+    let opts = CommonOpts::build(
+        args,
+        BenchDefaults { sizes: None, out: "BENCH_scaling.json", trace: "TRACE_bench.json" },
+    )?;
     let frames = args.flag_u64("frames", 200);
     let max_devices = args.flag_u64("max-devices", 5) as usize;
-    let out = args.flag("out").unwrap_or("BENCH_scaling.json").to_string();
-    let tolerance = args.flag_f64("tolerance", 10.0) / 100.0;
 
     let report = scaling_report(frames, max_devices.max(1))?;
     print_table(&report);
-    report.write(&out)?;
-    println!("\nwrote {out} ({} records, commit {})", report.records.len(), report.commit);
+    report.write(&opts.out)?;
+    println!(
+        "\nwrote {} ({} records, commit {})",
+        opts.out,
+        report.records.len(),
+        report.commit
+    );
 
-    if args.switch("trace") {
-        let tpath = args.flag("trace").unwrap_or("TRACE_bench.json");
+    if let Some(tpath) = &opts.trace {
         export_scaling_trace(tpath, frames, max_devices.max(1))?;
     }
 
-    if args.switch("no-guard") {
+    if opts.no_guard {
         return Ok(());
     }
-    let baseline = match args.flag("baseline") {
+    let baseline = match &opts.baseline {
         Some(p) => BenchReport::load(p)?,
         None => BenchReport::parse(DEFAULT_BASELINE)?,
     };
-    let violations = report.check_against(&baseline, tolerance);
+    let violations = report.check_against(&baseline, opts.tolerance);
     if violations.is_empty() {
         println!(
             "regression guard OK ({} baseline records, tolerance {:.0}%)",
             baseline.records.len(),
-            tolerance * 100.0
+            opts.tolerance * 100.0
         );
         Ok(())
     } else {
@@ -218,25 +243,6 @@ fn run_scaling(args: &Args) -> anyhow::Result<()> {
 }
 
 // ---- `bench match`: the gallery match engine sweep ----------------------
-
-/// Parse `"1k,10k,100k,1m"`-style size lists.
-pub fn parse_sizes(s: &str) -> anyhow::Result<Vec<usize>> {
-    let mut out = Vec::new();
-    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
-        let (digits, mult) = match tok.as_bytes().last() {
-            Some(b'k') | Some(b'K') => (&tok[..tok.len() - 1], 1_000usize),
-            Some(b'm') | Some(b'M') => (&tok[..tok.len() - 1], 1_000_000usize),
-            _ => (tok, 1),
-        };
-        let n: usize = digits
-            .parse()
-            .map_err(|_| anyhow::anyhow!("bad gallery size {tok:?} (use e.g. 10k, 1m)"))?;
-        anyhow::ensure!(n > 0, "gallery size must be positive: {tok:?}");
-        out.push(n * mult);
-    }
-    anyhow::ensure!(!out.is_empty(), "no gallery sizes given");
-    Ok(out)
-}
 
 /// Wall-clock one scan variant: warm up, then time `probes` calls.
 /// Returns (probes/s, p50 us, p99 us).
@@ -261,7 +267,11 @@ fn time_variant<F: FnMut(usize)>(probes: usize, mut scan: F) -> (f64, u64, u64) 
 
 /// Run the match-engine sweep and assemble the telemetry report.
 ///
-/// Probes are noisy copies of enrolled identities (the identification
+/// Galleries are clustered identities (centers + per-identity offsets,
+/// [`clustered_index`]) — the structure real embedding sets have and the
+/// regime the IVF tier is built for; the exact variants scan every row
+/// regardless of data layout, so their numbers are unaffected.  Probes
+/// are noisy copies of enrolled identities (the identification
 /// workload), regenerated per gallery size from a fixed seed.
 pub fn match_report(
     sizes: &[usize],
@@ -275,10 +285,7 @@ pub fn match_report(
         // Enrollment goes through the SoA upsert path — linear, so even
         // the 1M point builds in seconds.
         let mut rng = Rng::new(0x6d61_7463u64 ^ n as u64);
-        let mut idx = GalleryIndex::with_capacity(dim, n);
-        for i in 0..n {
-            idx.upsert(format!("id{i}"), &rng.unit_vec(dim));
-        }
+        let idx = clustered_index(&mut rng, n, dim, default_nlist(n), 0.5);
         let probe_set: Vec<Template> = (0..probes)
             .map(|p| {
                 let base = idx.row((p * n.max(1) / probes.max(1)) % n.max(1));
@@ -286,7 +293,10 @@ pub fn match_report(
             })
             .collect();
 
-        let mut push = |variant: &str, (pps, p50, p99): (f64, u64, u64)| {
+        let mut push = |variant: &str,
+                        (pps, p50, p99): (f64, u64, u64),
+                        recall_at1: Option<f64>,
+                        nprobe: Option<u64>| {
             report.push(MatchRecord {
                 gallery_size: n,
                 dim,
@@ -294,6 +304,8 @@ pub fn match_report(
                 probes_per_s: pps,
                 p50_us: p50,
                 p99_us: p99,
+                recall_at1,
+                nprobe,
             });
         };
 
@@ -308,6 +320,8 @@ pub fn match_report(
                     let r = rank_naive_aos(&probe_set[p], &entries);
                     assert_eq!(r.len(), n);
                 }),
+                None,
+                None,
             );
         }
 
@@ -316,6 +330,8 @@ pub fn match_report(
             time_variant(probes, |p| {
                 assert!(!idx.top_k(probe_set[p].as_slice(), k).is_empty());
             }),
+            None,
+            None,
         );
 
         let quant = idx.quantize();
@@ -324,6 +340,8 @@ pub fn match_report(
             time_variant(probes, |p| {
                 assert!(!quant.top_k(probe_set[p].as_slice(), k).is_empty());
             }),
+            None,
+            None,
         );
 
         let shards = default_shards();
@@ -332,7 +350,41 @@ pub fn match_report(
             time_variant(probes, |p| {
                 assert!(!idx.top_k_sharded(probe_set[p].as_slice(), k, shards).is_empty());
             }),
+            None,
+            None,
         );
+
+        // The IVF-ANN tier: trained outside the timer (a one-off cost on
+        // the enrollment path), recall@1 measured against the exact
+        // oracle on the same probe set the timers use.
+        let ivf = IvfIndex::train(&idx, &IvfParams::default());
+        if !ivf.is_degenerate() {
+            let exact1: Vec<usize> = probe_set
+                .iter()
+                .map(|p| idx.top_k(p.as_slice(), 1)[0].0)
+                .collect();
+            let hits = probe_set
+                .iter()
+                .zip(&exact1)
+                .filter(|(p, &want)| {
+                    ivf.search(&idx, p.as_slice(), 1, DEFAULT_NPROBE)
+                        .first()
+                        .map(|g| g.0)
+                        == Some(want)
+                })
+                .count();
+            let recall = hits as f64 / probe_set.len() as f64;
+            push(
+                "ann",
+                time_variant(probes, |p| {
+                    assert!(!ivf
+                        .search(&idx, probe_set[p].as_slice(), k, DEFAULT_NPROBE)
+                        .is_empty());
+                }),
+                Some(recall),
+                Some(DEFAULT_NPROBE as u64),
+            );
+        }
     }
     Ok(report)
 }
@@ -343,8 +395,12 @@ fn print_match_table(report: &MatchReport) {
         "gallery", "dim", "variant", "probes/s", "p50 ms", "p99 ms"
     );
     for r in &report.records {
+        let extra = match r.recall_at1 {
+            Some(rc) => format!("  recall@1 {rc:.4} (nprobe {})", r.nprobe.unwrap_or(0)),
+            None => String::new(),
+        };
         println!(
-            "{:<9} {:>5} {:<8} | {:>11.1} {:>9.2} {:>9.2}",
+            "{:<9} {:>5} {:<8} | {:>11.1} {:>9.2} {:>9.2}{extra}",
             r.gallery_size,
             r.dim,
             r.variant,
@@ -367,6 +423,7 @@ fn match_speedup_gate(report: &MatchReport, dim: usize) -> Vec<String> {
     };
     for &n in &sizes {
         let soa = report.find(n, dim, "soa").map(|r| r.probes_per_s);
+        let sharded = report.find(n, dim, "sharded").map(|r| r.probes_per_s);
         if let (Some(naive), Some(soa)) =
             (report.find(n, dim, "naive").map(|r| r.probes_per_s), soa)
         {
@@ -378,9 +435,7 @@ fn match_speedup_gate(report: &MatchReport, dim: usize) -> Vec<String> {
                 ));
             }
         }
-        if let (Some(soa), Some(sharded)) =
-            (soa, report.find(n, dim, "sharded").map(|r| r.probes_per_s))
-        {
+        if let (Some(soa), Some(sharded)) = (soa, sharded) {
             let ratio = sharded / soa.max(1e-9);
             println!("speedup sharded/soa @ {n}: {ratio:.2}x");
             if n >= SHARD_GATE_ROWS && ratio < 2.0 {
@@ -389,28 +444,62 @@ fn match_speedup_gate(report: &MatchReport, dim: usize) -> Vec<String> {
                 ));
             }
         }
+        if let Some(ann) = report.find(n, dim, "ann") {
+            if let Some(sharded) = sharded {
+                let ratio = ann.probes_per_s / sharded.max(1e-9);
+                println!("speedup ann/sharded @ {n}: {ratio:.1}x");
+                if n >= ANN_GATE_ROWS && ratio < 10.0 {
+                    violations.push(format!(
+                        "ann only {ratio:.1}x sharded-exact at {n} identities (contract: >= 10x)"
+                    ));
+                }
+            }
+            if let Some(recall) = ann.recall_at1 {
+                println!("recall@1 ann @ {n}: {recall:.4}");
+                if n >= RECALL_GATE_ROWS && recall < 0.99 {
+                    violations.push(format!(
+                        "ann recall@1 only {recall:.4} at {n} identities (contract: >= 0.99)"
+                    ));
+                }
+            }
+        }
     }
     violations
 }
 
 fn run_match(args: &Args) -> anyhow::Result<()> {
-    let sizes = parse_sizes(args.flag("sizes").unwrap_or("1k,10k,100k"))?;
+    let opts = CommonOpts::build(
+        args,
+        BenchDefaults {
+            sizes: Some("1k,10k,100k"),
+            out: "BENCH_match.json",
+            trace: "TRACE_match.json",
+        },
+    )?;
+    let sizes = &opts.sizes;
+    anyhow::ensure!(
+        args.switch("huge") || sizes.iter().all(|&n| n <= HUGE_GATE_ROWS),
+        "sizes above 1m need --huge (a 10m sweep takes minutes and several GB of RAM)"
+    );
     let dim = args.flag_u64("dim", 128) as usize;
     let probes = args.flag_u64("probes", 32) as usize;
     let k = args.flag_u64("k", 10) as usize;
-    let out = args.flag("out").unwrap_or("BENCH_match.json").to_string();
-    let tolerance = args.flag_f64("tolerance", 10.0) / 100.0;
 
-    let report = match_report(&sizes, dim, probes.max(1), k.max(1))?;
+    let report = match_report(sizes, dim, probes.max(1), k.max(1))?;
     print_match_table(&report);
-    report.write(&out)?;
-    println!("\nwrote {out} ({} records, commit {})", report.records.len(), report.commit);
+    report.write(&opts.out)?;
+    println!(
+        "\nwrote {} ({} records, commit {})",
+        opts.out,
+        report.records.len(),
+        report.commit
+    );
 
     let mut violations = match_speedup_gate(&report, dim);
-    if args.switch("no-guard") {
+    if opts.no_guard {
         return Ok(());
     }
-    let baseline = match args.flag("baseline") {
+    let baseline = match &opts.baseline {
         Some(p) => MatchReport::load(p)?,
         None => MatchReport::parse(DEFAULT_MATCH_BASELINE)?,
     };
@@ -428,12 +517,12 @@ fn run_match(args: &Args) -> anyhow::Result<()> {
         "no baseline records cover this sweep (sizes {sizes:?}, dim {dim}); \
          add floors to the baseline or pass --no-guard"
     );
-    violations.extend(report.check_against(&scoped, tolerance));
+    violations.extend(report.check_against(&scoped, opts.tolerance));
     if violations.is_empty() {
         println!(
             "match guard OK ({} baseline records, tolerance {:.0}%)",
             scoped.records.len(),
-            tolerance * 100.0
+            opts.tolerance * 100.0
         );
         Ok(())
     } else {
@@ -483,38 +572,81 @@ mod tests {
     }
 
     #[test]
-    fn parse_sizes_accepts_suffixes() {
-        assert_eq!(parse_sizes("1k,10k,100k").unwrap(), vec![1_000, 10_000, 100_000]);
-        assert_eq!(parse_sizes("1m").unwrap(), vec![1_000_000]);
-        assert_eq!(parse_sizes(" 512 , 2K ").unwrap(), vec![512, 2_000]);
-        assert!(parse_sizes("").is_err());
-        assert!(parse_sizes("10q").is_err());
-        assert!(parse_sizes("0").is_err());
-    }
-
-    #[test]
     fn embedded_match_baseline_parses() {
         let b = MatchReport::parse(DEFAULT_MATCH_BASELINE).unwrap();
         assert!(!b.records.is_empty());
         // The CI sweep's sizes are all floored, every variant.
         for n in [1_000usize, 10_000, 100_000] {
-            for variant in ["naive", "soa", "soa-i8", "sharded"] {
+            for variant in ["naive", "soa", "soa-i8", "sharded", "ann"] {
                 assert!(b.find(n, 128, variant).is_some(), "{variant}@{n}");
             }
         }
+        // The 1M nightly point floors the ANN tier too.
+        assert!(b.find(1_000_000, 128, "ann").is_some(), "ann@1m floor missing");
     }
 
     #[test]
     fn match_report_smoke_sweep() {
         // Tiny sweep: every variant present, sane numbers, schema roundtrip.
         let report = match_report(&[300], 32, 4, 5).unwrap();
-        for variant in ["naive", "soa", "soa-i8", "sharded"] {
+        for variant in ["naive", "soa", "soa-i8", "sharded", "ann"] {
             let r = report.find(300, 32, variant).unwrap_or_else(|| panic!("{variant} missing"));
             assert!(r.probes_per_s > 0.0, "{variant}: {}", r.probes_per_s);
             assert!(r.p50_us <= r.p99_us, "{variant}");
         }
+        // Only the ann record carries the schema-v2 recall fields.
+        let ann = report.find(300, 32, "ann").unwrap();
+        assert!(ann.recall_at1.is_some() && ann.nprobe.is_some());
+        assert!(report.find(300, 32, "soa").unwrap().recall_at1.is_none());
         let back = MatchReport::parse(&report.to_json_pretty()).unwrap();
         assert_eq!(back.records.len(), report.records.len());
+        assert_eq!(back.find(300, 32, "ann").unwrap().recall_at1, ann.recall_at1);
+    }
+
+    #[test]
+    fn ann_contracts_gate_only_at_scale() {
+        let mut rep = MatchReport::new("x");
+        let rec = |variant: &str, n: usize, pps: f64, recall: Option<f64>| MatchRecord {
+            gallery_size: n,
+            dim: 128,
+            variant: variant.into(),
+            probes_per_s: pps,
+            p50_us: 0,
+            p99_us: 0,
+            recall_at1: recall,
+            nprobe: recall.map(|_| 8),
+        };
+        // 100k: slow ann (1.5x sharded) is fine, weak recall is not.
+        rep.push(rec("sharded", 100_000, 20.0, None));
+        rep.push(rec("ann", 100_000, 30.0, Some(0.95)));
+        let v = match_speedup_gate(&rep, 128);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("recall@1"));
+        // 1M: both the >=10x speedup and the recall floor apply.
+        let mut rep = MatchReport::new("x");
+        rep.push(rec("sharded", 1_000_000, 10.0, None));
+        rep.push(rec("ann", 1_000_000, 50.0, Some(0.999)));
+        let v = match_speedup_gate(&rep, 128);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains(">= 10x"));
+        // Healthy 1M point: no violations.
+        let mut rep = MatchReport::new("x");
+        rep.push(rec("sharded", 1_000_000, 10.0, None));
+        rep.push(rec("ann", 1_000_000, 150.0, Some(0.999)));
+        assert!(match_speedup_gate(&rep, 128).is_empty());
+    }
+
+    #[test]
+    fn match_report_ann_agrees_with_clustered_recall() {
+        // On a clustered gallery at small scale the tier must already be
+        // near-exact — the CI-gated 100k point only tightens this.
+        let report = match_report(&[2_000], 32, 16, 5).unwrap();
+        let ann = report.find(2_000, 32, "ann").unwrap();
+        assert!(
+            ann.recall_at1.unwrap() >= 0.9,
+            "clustered recall@1 collapsed: {:?}",
+            ann.recall_at1
+        );
     }
 
     #[test]

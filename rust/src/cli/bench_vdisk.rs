@@ -38,8 +38,7 @@ use crate::util::rng::Rng;
 use crate::vdisk::image::GALLERY_EXTENT;
 use crate::vdisk::{ImageBuilder, MountedImage};
 
-use super::bench::parse_sizes;
-use super::Args;
+use super::{Args, BenchDefaults, CommonOpts};
 
 /// Committed unseal-throughput floors (very conservative: they catch
 /// collapses in the read path, not runner-to-runner noise; the parallel
@@ -196,22 +195,33 @@ fn vdisk_contract_gate(report: &VdiskReport) -> Vec<String> {
 
 /// Entry point for `champd bench vdisk`.
 pub fn run(args: &Args) -> anyhow::Result<()> {
-    let sizes = parse_sizes(args.flag("sizes").unwrap_or("10k,100k"))?;
+    let opts = CommonOpts::build(
+        args,
+        BenchDefaults {
+            sizes: Some("10k,100k"),
+            out: "BENCH_vdisk.json",
+            trace: "TRACE_vdisk.json",
+        },
+    )?;
+    let sizes = &opts.sizes;
     let dim = args.flag_u64("dim", 128) as usize;
     let block_size = args.flag_u64("block-size", 4096) as u32;
-    let out = args.flag("out").unwrap_or("BENCH_vdisk.json").to_string();
-    let tolerance = args.flag_f64("tolerance", 10.0) / 100.0;
 
-    let report = vdisk_report(&sizes, dim, block_size)?;
+    let report = vdisk_report(sizes, dim, block_size)?;
     print_table(&report);
-    report.write(&out)?;
-    println!("\nwrote {out} ({} records, commit {})", report.records.len(), report.commit);
+    report.write(&opts.out)?;
+    println!(
+        "\nwrote {} ({} records, commit {})",
+        opts.out,
+        report.records.len(),
+        report.commit
+    );
 
     let mut violations = vdisk_contract_gate(&report);
-    if args.switch("no-guard") {
+    if opts.no_guard {
         return Ok(());
     }
-    let baseline = match args.flag("baseline") {
+    let baseline = match &opts.baseline {
         Some(p) => VdiskReport::load(p)?,
         None => VdiskReport::parse(DEFAULT_BASELINE)?,
     };
@@ -228,12 +238,12 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         "no baseline records cover this sweep (sizes {sizes:?}, dim {dim}); \
          add floors to the baseline or pass --no-guard"
     );
-    violations.extend(report.check_against(&scoped, tolerance));
+    violations.extend(report.check_against(&scoped, opts.tolerance));
     if violations.is_empty() {
         println!(
             "vdisk guard OK ({} baseline records, tolerance {:.0}%)",
             scoped.records.len(),
-            tolerance * 100.0
+            opts.tolerance * 100.0
         );
         Ok(())
     } else {

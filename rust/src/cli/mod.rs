@@ -3,6 +3,12 @@
 //! Supports the subcommand + `--flag value` + `--switch` shape `champd`
 //! needs.  Unknown flags are errors; `--help` text is the caller's job.
 //! A repeated flag follows the conventional "last one wins" rule.
+//!
+//! The bench/serve verbs share a flag surface (`--sizes`, `--out`,
+//! `--baseline`, `--tolerance`, `--no-guard`, `--trace`); [`CommonOpts`]
+//! resolves it once per verb so parse behavior (k/m size suffixes,
+//! percent-to-fraction tolerance, bare `--trace` defaulting) cannot
+//! drift between subcommands.
 
 pub mod bench;
 pub mod bench_vdisk;
@@ -69,6 +75,79 @@ impl Args {
 
     pub fn flag_f64(&self, name: &str, default: f64) -> f64 {
         self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// Parse `"1k,10k,100k,1m"`-style size lists.
+pub fn parse_sizes(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let (digits, mult) = match tok.as_bytes().last() {
+            Some(b'k') | Some(b'K') => (&tok[..tok.len() - 1], 1_000usize),
+            Some(b'm') | Some(b'M') => (&tok[..tok.len() - 1], 1_000_000usize),
+            _ => (tok, 1),
+        };
+        let n: usize = digits
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad gallery size {tok:?} (use e.g. 10k, 1m)"))?;
+        anyhow::ensure!(n > 0, "gallery size must be positive: {tok:?}");
+        out.push(n * mult);
+    }
+    anyhow::ensure!(!out.is_empty(), "no gallery sizes given");
+    Ok(out)
+}
+
+/// Per-verb defaults for the shared bench flag surface.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchDefaults {
+    /// Default `--sizes` list, or `None` when the verb has no size sweep
+    /// (then a user-supplied `--sizes` is rejected instead of ignored).
+    pub sizes: Option<&'static str>,
+    /// Default `--out` telemetry path.
+    pub out: &'static str,
+    /// Default artifact path for a bare `--trace` switch.
+    pub trace: &'static str,
+}
+
+/// The flags every bench/serve verb shares, resolved once per run.
+/// Built on [`Args::flag`], so a repeated flag keeps last-wins.
+#[derive(Debug, Clone)]
+pub struct CommonOpts {
+    /// Parsed `--sizes` (empty when the verb has no size sweep).
+    pub sizes: Vec<usize>,
+    pub out: String,
+    /// `--baseline PATH`; `None` means the verb's embedded floors.
+    pub baseline: Option<String>,
+    /// `--tolerance PCT`, converted to a fraction.
+    pub tolerance: f64,
+    pub no_guard: bool,
+    /// `Some(path)` iff `--trace` was given; a bare switch resolves to
+    /// the verb's default artifact path.
+    pub trace: Option<String>,
+}
+
+impl CommonOpts {
+    pub fn build(args: &Args, d: BenchDefaults) -> anyhow::Result<CommonOpts> {
+        let sizes = match d.sizes {
+            Some(default) => parse_sizes(args.flag("sizes").unwrap_or(default))?,
+            None => {
+                anyhow::ensure!(
+                    !args.switch("sizes"),
+                    "this subcommand takes no --sizes flag"
+                );
+                Vec::new()
+            }
+        };
+        Ok(CommonOpts {
+            sizes,
+            out: args.flag("out").unwrap_or(d.out).to_string(),
+            baseline: args.flag("baseline").map(String::from),
+            tolerance: args.flag_f64("tolerance", 10.0) / 100.0,
+            no_guard: args.switch("no-guard"),
+            trace: args
+                .switch("trace")
+                .then(|| args.flag("trace").unwrap_or(d.trace).to_string()),
+        })
     }
 }
 
@@ -148,5 +227,75 @@ mod tests {
         assert_eq!(a.subcommand, None);
         assert!(a.positional.is_empty());
         assert!(!a.switch("anything"));
+    }
+
+    #[test]
+    fn parse_sizes_accepts_suffixes() {
+        assert_eq!(parse_sizes("1k,10k,100k").unwrap(), vec![1_000, 10_000, 100_000]);
+        assert_eq!(parse_sizes("1m").unwrap(), vec![1_000_000]);
+        assert_eq!(parse_sizes(" 512 , 2K ").unwrap(), vec![512, 2_000]);
+        assert!(parse_sizes("").is_err());
+        assert!(parse_sizes("10q").is_err());
+        assert!(parse_sizes("0").is_err());
+    }
+
+    const D: BenchDefaults = BenchDefaults {
+        sizes: Some("1k,10k"),
+        out: "OUT.json",
+        trace: "TRACE.json",
+    };
+
+    #[test]
+    fn common_opts_resolve_defaults() {
+        let o = CommonOpts::build(&args("bench match"), D).unwrap();
+        assert_eq!(o.sizes, vec![1_000, 10_000]);
+        assert_eq!(o.out, "OUT.json");
+        assert_eq!(o.baseline, None);
+        assert!((o.tolerance - 0.10).abs() < 1e-12);
+        assert!(!o.no_guard);
+        assert_eq!(o.trace, None);
+    }
+
+    #[test]
+    fn common_opts_read_explicit_flags() {
+        let o = CommonOpts::build(
+            &args("bench match --sizes 2m --out x.json --baseline b.json --tolerance 25 --no-guard"),
+            D,
+        )
+        .unwrap();
+        assert_eq!(o.sizes, vec![2_000_000]);
+        assert_eq!(o.out, "x.json");
+        assert_eq!(o.baseline.as_deref(), Some("b.json"));
+        assert!((o.tolerance - 0.25).abs() < 1e-12);
+        assert!(o.no_guard);
+    }
+
+    #[test]
+    fn common_opts_preserve_last_wins() {
+        let o = CommonOpts::build(
+            &args("bench match --sizes 1k --sizes 5k --out a.json --out b.json"),
+            D,
+        )
+        .unwrap();
+        assert_eq!(o.sizes, vec![5_000], "--sizes repeated: last wins");
+        assert_eq!(o.out, "b.json", "--out repeated: last wins");
+    }
+
+    #[test]
+    fn common_opts_trace_switch_vs_path() {
+        let o = CommonOpts::build(&args("bench scaling --trace"), D).unwrap();
+        assert_eq!(o.trace.as_deref(), Some("TRACE.json"), "bare switch = default path");
+        let o = CommonOpts::build(&args("bench scaling --trace t.json"), D).unwrap();
+        assert_eq!(o.trace.as_deref(), Some("t.json"));
+    }
+
+    #[test]
+    fn common_opts_reject_sizes_on_sizeless_verbs() {
+        let sizeless = BenchDefaults { sizes: None, ..D };
+        let o = CommonOpts::build(&args("serve"), sizeless).unwrap();
+        assert!(o.sizes.is_empty());
+        assert!(CommonOpts::build(&args("serve --sizes 1k"), sizeless).is_err());
+        // Bad size tokens surface as errors, not silent defaults.
+        assert!(CommonOpts::build(&args("bench match --sizes nope"), D).is_err());
     }
 }

@@ -47,7 +47,7 @@ use crate::serve::session::{ServeConfig, ServeOutcome, ServeSession};
 use crate::serve::traffic::MissionProfile;
 use crate::workload::traces::MissionTrace;
 
-use super::Args;
+use super::{Args, BenchDefaults, CommonOpts};
 
 /// Committed goodput floors (very conservative: they catch collapses in
 /// the serving path, not run-to-run noise).
@@ -297,11 +297,13 @@ fn print_outcome(profile: &MissionProfile, out: &ServeOutcome) {
 
 /// Entry point for `champd serve`.
 pub fn run(args: &Args) -> anyhow::Result<()> {
+    let opts = CommonOpts::build(
+        args,
+        BenchDefaults { sizes: None, out: "BENCH_serve.json", trace: "TRACE_serve.json" },
+    )?;
     let profiles = profiles_from(args.flag("profile").unwrap_or("all"))?;
-    let out_path = args.flag("out").unwrap_or("BENCH_serve.json").to_string();
-    let tolerance = args.flag_f64("tolerance", 10.0) / 100.0;
     let overload = args.flag_f64("overload", 2.0);
-    let with_trace = args.switch("trace");
+    let with_trace = opts.trace.is_some();
 
     let run_profiles: Vec<&'static str> = profiles.iter().map(|p| p.name).collect();
     let configs: Vec<ServeConfig> =
@@ -310,26 +312,26 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     for (profile, out) in &outcomes {
         print_outcome(profile, out);
     }
-    if with_trace {
-        let base = args.flag("trace").unwrap_or("TRACE_serve.json").to_string();
+    if let Some(base) = &opts.trace {
         let multi = outcomes.len() > 1;
         for (profile, out) in &outcomes {
-            emit_trace_artifacts(&base, profile, out, multi)?;
+            emit_trace_artifacts(base, profile, out, multi)?;
         }
     }
-    report.write(&out_path)?;
+    report.write(&opts.out)?;
     println!(
-        "\nwrote {out_path} ({} records, {} tenant rows, {} power rows, commit {})",
+        "\nwrote {} ({} records, {} tenant rows, {} power rows, commit {})",
+        opts.out,
         report.records.len(),
         report.tenants.len(),
         report.power.len(),
         report.commit
     );
 
-    if args.switch("no-guard") {
+    if opts.no_guard {
         return Ok(());
     }
-    let baseline = match args.flag("baseline") {
+    let baseline = match &opts.baseline {
         Some(p) => ServeReport::load(p)?,
         None => ServeReport::parse(DEFAULT_BASELINE)?,
     };
@@ -348,12 +350,12 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         "no baseline records cover this run (profiles {run_profiles:?} @ {overload}x); \
          add floors to the baseline or pass --no-guard"
     );
-    let violations = report.check_against(&scoped, tolerance);
+    let violations = report.check_against(&scoped, opts.tolerance);
     if violations.is_empty() {
         println!(
             "serve guard OK ({} baseline records, tolerance {:.0}%)",
             scoped.records.len(),
-            tolerance * 100.0
+            opts.tolerance * 100.0
         );
         Ok(())
     } else {

@@ -3,6 +3,9 @@
 //! * `pack`    — synthesize (or gather) a gallery + optional artifact set
 //!   and seal it into an image.  The gallery is rotation-protected before
 //!   a single byte hits the builder: images never hold plaintext templates.
+//!   `--ivf` additionally trains an IVF-ANN tier over the rotated gallery
+//!   and packs it as an `ivf` extent, so a mount serves `Identify`
+//!   sub-linearly out of the box.
 //! * `inspect` — print the superblock (keyless, unauthenticated peek) or,
 //!   with `--key`, the full verified manifest and extent table.
 //! * `verify`  — mount and read back every extent; any torn write or
@@ -15,6 +18,7 @@ use std::fmt::Write as _;
 use std::path::PathBuf;
 
 use crate::biometric::gallery::Gallery;
+use crate::biometric::ivf::{IvfIndex, IvfParams};
 use crate::crypto::seal::SealKey;
 use crate::crypto::KeyChain;
 use crate::device::caps::CapabilityId;
@@ -37,6 +41,9 @@ pub struct PackOptions {
     /// Optional artifacts directory to carry on the image.
     pub artifacts: Option<PathBuf>,
     pub block_size: u32,
+    /// Train and pack an IVF-ANN tier over the (rotated) gallery so the
+    /// mounted cartridge serves `Identify` sub-linearly.
+    pub ivf: bool,
 }
 
 /// Parse pack flags out of `argv` (after `vdisk pack`).
@@ -53,6 +60,7 @@ pub fn pack_options_from(args: &Args) -> anyhow::Result<PackOptions> {
         seed: args.flag_u64("seed", 7),
         artifacts: args.flag("artifacts").map(PathBuf::from),
         block_size: args.flag_u64("block-size", 4096) as u32,
+        ivf: args.switch("ivf"),
     })
 }
 
@@ -71,6 +79,18 @@ pub fn pack(opts: &PackOptions) -> anyhow::Result<ImageSummary> {
         for (name, bytes) in Manifest::collect_artifact_files(dir)? {
             b = b.artifact(&name, bytes);
         }
+    }
+    if opts.ivf {
+        // Train over the rotated rows — the exact matrix a mount loads —
+        // so the decoded tier covers the on-image gallery bit for bit.
+        let tier = IvfIndex::train(rotated.index(), &IvfParams::default());
+        anyhow::ensure!(
+            !tier.is_degenerate(),
+            "--ivf: gallery of {} identities is below the ANN training floor; \
+             pack without --ivf (the exact scan serves it fine)",
+            opts.gallery
+        );
+        b = b.ivf(tier.encode());
     }
     Ok(b.write(&opts.out, &keys.seal)?)
 }
@@ -191,7 +211,36 @@ mod tests {
         assert_eq!(o.passphrase, "secret");
         assert_eq!(o.block_size, 4096);
         assert!(o.artifacts.is_none());
+        assert!(!o.ivf, "--ivf is opt-in");
         assert!(pack_options_from(&args("vdisk pack")).is_err(), "--out is required");
+    }
+
+    #[test]
+    fn pack_with_ivf_carries_a_loadable_tier() {
+        let dir = tmp("ivf");
+        let out = dir.join("ann.vdisk");
+        let a = args(&format!(
+            "vdisk pack --out {} --gallery 600 --dim 32 --key k1 --ivf",
+            out.display()
+        ));
+        let sum = pack(&pack_options_from(&a).unwrap()).unwrap();
+        assert_eq!(sum.extents.len(), 2, "gallery + ivf");
+
+        // The mounted tier decodes and covers the on-image gallery.
+        let img = MountedImage::mount(&out, &SealKey::from_passphrase("k1")).unwrap();
+        let (gidx, _) = img.load_gallery_index().unwrap();
+        let tier = img.load_ivf_index(&gidx).unwrap().expect("ivf extent present");
+        assert!(!tier.is_degenerate());
+        assert!(tier.covers(&gidx));
+
+        // Below the training floor, --ivf refuses instead of silently
+        // packing a useless tier.
+        let small = args(&format!(
+            "vdisk pack --out {} --gallery 50 --dim 32 --key k1 --ivf",
+            dir.join("small.vdisk").display()
+        ));
+        assert!(pack(&pack_options_from(&small).unwrap()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -13,6 +13,7 @@
 use std::path::Path;
 
 use crate::biometric::gallery::Gallery;
+use crate::biometric::search::{Neighbor, SearchBackend, SearchParams};
 use crate::biometric::template::Template;
 use crate::crypto::rotation::RotationKey;
 use crate::crypto::seal::SealKey;
@@ -77,9 +78,9 @@ impl StorageCartridge {
     /// touched.
     pub fn match_probe(&self, probe: &Template, k: usize) -> Option<MatchOutcome> {
         let probe_rot = self.rotation.apply(probe);
-        let idx = self.gallery_rot.index();
-        let top = idx.top_k_auto(probe_rot.as_slice(), k.max(1));
-        Self::outcome_from(idx, top, k)
+        let params = SearchParams::default().with_k(k.max(1));
+        let top = self.gallery_rot.index().search(probe_rot.as_slice(), &params);
+        Self::outcome_of(top, k)
     }
 
     /// Match a whole probe batch in one gallery pass (the dispatch
@@ -88,27 +89,22 @@ impl StorageCartridge {
     pub fn match_batch(&self, probes: &[Template], k: usize) -> Vec<Option<MatchOutcome>> {
         let rotated: Vec<Template> = probes.iter().map(|p| self.rotation.apply(p)).collect();
         let refs: Vec<&[f32]> = rotated.iter().map(Template::as_slice).collect();
-        let idx = self.gallery_rot.index();
-        idx.top_k_batch(&refs, k.max(1))
+        let params = SearchParams::default().with_k(k.max(1));
+        self.gallery_rot
+            .index()
+            .search_batch(&refs, &params)
             .into_iter()
-            .map(|top| Self::outcome_from(idx, top, k))
+            .map(|top| Self::outcome_of(top, k))
             .collect()
     }
 
-    fn outcome_from(
-        idx: &crate::biometric::index::GalleryIndex,
-        top: Vec<(usize, f32)>,
-        k: usize,
-    ) -> Option<MatchOutcome> {
-        let &(best_row, best_score) = top.first()?;
+    fn outcome_of(top: Vec<Neighbor>, k: usize) -> Option<MatchOutcome> {
+        let first = top.first()?;
+        let (best_id, best_score) = (first.id.clone(), first.score);
         Some(MatchOutcome {
-            best_id: idx.id_of(best_row).to_string(),
+            best_id,
             best_score,
-            topk: top
-                .into_iter()
-                .take(k)
-                .map(|(r, s)| (idx.id_of(r).to_string(), s))
-                .collect(),
+            topk: top.into_iter().take(k).map(|n| (n.id, n.score)).collect(),
         })
     }
 

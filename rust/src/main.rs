@@ -49,8 +49,9 @@ USAGE: champd <subcommand> [flags]
         [--batch B]
   bench scaling [--frames N] [--max-devices N] [--trace [PATH]] [--out PATH]
         [--baseline PATH] [--tolerance PCT] [--no-guard]
-  bench match [--sizes 1k,10k,100k[,1m]] [--dim D] [--probes N] [--k K]
-        [--out PATH] [--baseline PATH] [--tolerance PCT] [--no-guard]
+  bench match [--sizes 1k,10k,100k[,1m[,10m]]] [--huge] [--dim D] [--probes N]
+        [--k K] [--out PATH] [--baseline PATH] [--tolerance PCT] [--no-guard]
+        (sizes above 1m need --huge; the ann variant gates recall@1 >= 0.99)
   bench vdisk [--sizes 10k,100k] [--dim D] [--block-size B] [--out PATH]
         [--baseline PATH] [--tolerance PCT] [--no-guard]
   hotswap [--fps F]
@@ -58,7 +59,7 @@ USAGE: champd <subcommand> [flags]
   export-workflow [config.json]
   check-artifacts [--dir artifacts]
   vdisk pack --out img.vdisk [--key K] [--label L] [--gallery N] [--dim D]
-             [--seed S] [--artifacts DIR] [--block-size B]
+             [--seed S] [--artifacts DIR] [--block-size B] [--ivf]
   vdisk inspect img.vdisk [--key K]
   vdisk verify img.vdisk [--key K]
 ";

@@ -202,25 +202,37 @@ pub struct MatchRecord {
     pub gallery_size: usize,
     /// Embedding dimension.
     pub dim: usize,
-    /// Scan path: `"naive"`, `"soa"`, `"soa-i8"`, or `"sharded"`.
+    /// Scan path: `"naive"`, `"soa"`, `"soa-i8"`, `"sharded"`, or `"ann"`.
     pub variant: String,
     /// Identification throughput (probes scored per second).
     pub probes_per_s: f64,
     /// Per-probe latency percentiles, wall-clock us.
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Rank-1 agreement with the exact oracle on the identification
+    /// workload (schema v2; only approximate variants carry it).
+    pub recall_at1: Option<f64>,
+    /// Inverted lists probed per search (schema v2; `ann` only).
+    pub nprobe: Option<u64>,
 }
 
 impl MatchRecord {
     fn to_value(&self) -> Value {
-        json::obj(vec![
+        let mut fields = vec![
             ("gallery_size", json::num(self.gallery_size as f64)),
             ("dim", json::num(self.dim as f64)),
             ("variant", json::s(&self.variant)),
             ("probes_per_s", json::num(self.probes_per_s)),
             ("p50_us", json::num(self.p50_us as f64)),
             ("p99_us", json::num(self.p99_us as f64)),
-        ])
+        ];
+        if let Some(r) = self.recall_at1 {
+            fields.push(("recall_at1", json::num(r)));
+        }
+        if let Some(np) = self.nprobe {
+            fields.push(("nprobe", json::num(np as f64)));
+        }
+        json::obj(fields)
     }
 
     fn from_value(v: &Value) -> Option<MatchRecord> {
@@ -231,11 +243,19 @@ impl MatchRecord {
             probes_per_s: v.get("probes_per_s")?.as_f64()?,
             p50_us: v.get("p50_us").and_then(Value::as_u64).unwrap_or(0),
             p99_us: v.get("p99_us").and_then(Value::as_u64).unwrap_or(0),
+            recall_at1: v.get("recall_at1").and_then(Value::as_f64),
+            nprobe: v.get("nprobe").and_then(Value::as_u64),
         })
     }
 }
 
-/// The match-engine telemetry file (`BENCH_match.json`, schema v1).
+/// `BENCH_match.json` schema: v2 added the optional `recall_at1` and
+/// `nprobe` record fields for the ANN tier.  The parser ignores the
+/// schema field and treats the new fields as optional, so v1 and v2
+/// files read interchangeably.
+pub const MATCH_SCHEMA_VERSION: u64 = 2;
+
+/// The match-engine telemetry file (`BENCH_match.json`, schema v2).
 #[derive(Debug, Clone, Default)]
 pub struct MatchReport {
     pub commit: String,
@@ -259,7 +279,7 @@ impl MatchReport {
 
     pub fn to_value(&self) -> Value {
         json::obj(vec![
-            ("schema", json::num(SCHEMA_VERSION as f64)),
+            ("schema", json::num(MATCH_SCHEMA_VERSION as f64)),
             ("commit", json::s(&self.commit)),
             ("records", Value::Arr(self.records.iter().map(MatchRecord::to_value).collect())),
         ])
@@ -904,6 +924,8 @@ mod tests {
             probes_per_s: pps,
             p50_us: 1_000,
             p99_us: 2_000,
+            recall_at1: None,
+            nprobe: None,
         }
     }
 
@@ -912,12 +934,25 @@ mod tests {
         let mut rep = MatchReport::new("cafe");
         rep.push(match_record("naive", 100_000, 25.0));
         rep.push(match_record("soa", 100_000, 300.0));
+        let mut ann = match_record("ann", 100_000, 4_000.0);
+        ann.recall_at1 = Some(0.997);
+        ann.nprobe = Some(8);
+        rep.push(ann);
         let back = MatchReport::parse(&rep.to_json_pretty()).unwrap();
         assert_eq!(back.commit, "cafe");
         assert_eq!(back.records, rep.records);
         assert!(back.find(100_000, 128, "soa").is_some());
         assert!(back.find(100_000, 64, "soa").is_none());
         assert!(back.find(100_000, 128, "soa-i8").is_none());
+        let ann = back.find(100_000, 128, "ann").unwrap();
+        assert_eq!(ann.recall_at1, Some(0.997));
+        assert_eq!(ann.nprobe, Some(8));
+        // v1 files (no recall/nprobe fields) still parse.
+        let v1 = r#"{"schema": 1, "commit": "old", "records": [{"gallery_size": 10,
+            "dim": 4, "variant": "soa", "probes_per_s": 5.0, "p50_us": 1, "p99_us": 2}]}"#;
+        let old = MatchReport::parse(v1).unwrap();
+        assert_eq!(old.records[0].recall_at1, None);
+        assert_eq!(old.records[0].nprobe, None);
     }
 
     #[test]

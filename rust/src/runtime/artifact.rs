@@ -142,10 +142,15 @@ impl Manifest {
     /// artifact extents are spilled (decrypted) into `spill_dir`, then
     /// loaded exactly like an on-disk artifacts directory.  The image is
     /// MAC-verified at mount, so everything spilled here is authentic.
+    ///
+    /// Extents stream block by block through [`MountedImage::extent_reader`]
+    /// straight into the spill file — peak memory is one sealed block, not
+    /// a whole (possibly hundreds-of-MB) model artifact.
     pub fn load_from_image(
         img: &MountedImage,
         spill_dir: impl AsRef<Path>,
     ) -> anyhow::Result<Self> {
+        use std::io::Write as _;
         let spill = spill_dir.as_ref();
         std::fs::create_dir_all(spill)?;
         let names = img.artifact_names();
@@ -161,7 +166,19 @@ impl Manifest {
                 !name.contains('/') && !name.contains('\\') && !name.starts_with('.'),
                 "artifact extent name {name:?} is not a flat file name"
             );
-            std::fs::write(spill.join(name), img.read_extent(name)?)?;
+            let reader = img.extent_reader(name)?;
+            let expect = reader.plain_len();
+            let mut f = std::fs::File::create(spill.join(name))?;
+            let mut written = 0u64;
+            for block in reader {
+                let block = block?;
+                f.write_all(&block)?;
+                written += block.len() as u64;
+            }
+            anyhow::ensure!(
+                written == expect,
+                "artifact extent {name:?}: streamed {written} of {expect} bytes"
+            );
         }
         Manifest::load(spill)
     }

@@ -43,6 +43,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::biometric::index::GalleryIndex;
+use crate::biometric::ivf::{IvfIndex, DEFAULT_NPROBE};
 use crate::bus::clock::Resource;
 use crate::bus::hotplug::{HotplugEvent, HotplugKind};
 use crate::bus::topology::SlotId;
@@ -168,6 +169,9 @@ pub struct ServeOutcome {
     /// Calibrated capacity (overload 1.0 offered rate), requests/s.
     pub capacity_rps: f64,
     pub offered_rps: f64,
+    /// Identify requests answered through the mounted ANN tier (0 when
+    /// the image carries no IVF extent or the media is out).
+    pub ann_served: u64,
     /// Exactly-once terminal accounting held for every class.
     pub accounting_ok: bool,
     /// Mount lifecycle of the sealed gallery media (empty when serving
@@ -212,6 +216,9 @@ pub struct ServeSession {
     /// Snapshot of the mounted image's gallery; swapped atomically on
     /// hot-swap (None while the media is out).
     mounted_index: Option<Arc<GalleryIndex>>,
+    /// The mounted image's ANN tier, if it carries one; rides the same
+    /// swap lifecycle as `mounted_index`.
+    mounted_ivf: Option<Arc<IvfIndex>>,
     match_res: Resource,
     flow: CreditFlow,
     adm: AdmissionController,
@@ -274,6 +281,7 @@ impl ServeSession {
         // empty as the enroll overlay + detach fallback.
         let mut mounts = None;
         let mut mounted_index: Option<Arc<GalleryIndex>> = None;
+        let mut mounted_ivf: Option<Arc<IvfIndex>> = None;
         if let Some(path) = &cfg.image {
             let mut sup = MountSupervisor::with_key(SealKey::from_passphrase(&cfg.image_key));
             sup.set_recorder(o.obs.clone());
@@ -294,6 +302,9 @@ impl ServeSession {
                 idx.dim()
             );
             anyhow::ensure!(!idx.is_empty(), "image gallery is empty");
+            // ANN tier, when the image carries one (decoded and
+            // cross-checked at attach by the supervisor).
+            mounted_ivf = sup.ivf_index(STORAGE_MEDIA_UID);
             mounted_index = Some(idx);
             mounts = Some(sup);
         }
@@ -358,6 +369,7 @@ impl ServeSession {
             index,
             mounts,
             mounted_index,
+            mounted_ivf,
             match_res: Resource::new(),
             flow,
             adm,
@@ -391,6 +403,17 @@ impl ServeSession {
     /// when media is in the bay, the in-memory index otherwise.
     fn active_index(&self) -> &GalleryIndex {
         self.mounted_index.as_deref().unwrap_or(&self.index)
+    }
+
+    /// The ANN tier Identify routes through, when one is usable: the
+    /// media must be in the bay, the tier must cover the mounted snapshot,
+    /// and a degenerate (tiny-gallery) tier is skipped — its searches
+    /// would all fall back to exact anyway, so the exact batch kernel is
+    /// strictly better.
+    fn ann_tier(&self) -> Option<Arc<IvfIndex>> {
+        let ivf = self.mounted_ivf.as_ref()?;
+        let idx = self.mounted_index.as_ref()?;
+        (!ivf.is_degenerate() && ivf.covers(idx)).then(|| ivf.clone())
     }
 
     /// Run to completion.  `events` are hot-plug actions with `at_us`
@@ -531,6 +554,7 @@ impl ServeSession {
                     HotplugKind::Detach => {
                         mounts.handle_detach(STORAGE_MEDIA_UID, now);
                         self.mounted_index = None;
+                        self.mounted_ivf = None;
                         self.obs.event(
                             TraceId::STORAGE,
                             EventKind::MediaUnmount,
@@ -542,6 +566,7 @@ impl ServeSession {
                     HotplugKind::Attach => {
                         if mounts.handle_attach(STORAGE_MEDIA_UID, now).is_some() {
                             self.mounted_index = mounts.gallery_index(STORAGE_MEDIA_UID);
+                            self.mounted_ivf = mounts.ivf_index(STORAGE_MEDIA_UID);
                             self.obs.event(
                                 TraceId::STORAGE,
                                 EventKind::MediaMount,
@@ -680,10 +705,15 @@ impl ServeSession {
             return;
         }
         let rows = self.active_index().len();
+        // The ANN tier makes a pass sub-linear: its virtual cost is the
+        // rows a routed search actually touches (centroid scan + probed
+        // lists) instead of the whole gallery.
+        let ivf = self.ann_tier();
+        let cost_rows = ivf.as_ref().map_or(rows, |t| t.expected_scan_rows(DEFAULT_NPROBE));
         // Dispatch guard at the max coalesced batch size (like the
         // pipeline's): the pass the request actually rides may carry up
         // to `batch` probes, and the guard must cover that completion.
-        let est = scan_pass_us(rows, self.cfg.dim, self.cfg.batch as usize);
+        let est = scan_pass_us(cost_rows, self.cfg.dim, self.cfg.batch as usize);
         let mut expired = Vec::new();
         let mut reqs: Vec<Request> = Vec::new();
         while reqs.len() < self.cfg.batch as usize {
@@ -698,16 +728,27 @@ impl ServeSession {
         if reqs.is_empty() {
             return;
         }
-        // The actual engine call: one pass scores the whole batch.
+        // The actual engine call: the ANN tier routes each probe through
+        // its lists (exact re-rank, exact fallback inside `search`);
+        // otherwise one exact pass scores the whole batch.
         let probes: Vec<Vec<f32>> = reqs.iter().map(|r| self.probe_for(r.id)).collect();
         let refs: Vec<&[f32]> = probes.iter().map(|p| p.as_slice()).collect();
-        let hits = self.active_index().top_k_batch(&refs, self.cfg.k);
+        let hits = match &ivf {
+            Some(tier) => {
+                let idx = self.active_index();
+                refs.iter().map(|p| tier.search(idx, p, self.cfg.k, DEFAULT_NPROBE)).collect()
+            }
+            None => self.active_index().top_k_batch(&refs, self.cfg.k),
+        };
         debug_assert_eq!(hits.len(), reqs.len());
         // A mid-swap fallback index can legitimately be empty: zero-hit
         // identifies still complete (and account) normally.
         debug_assert!(rows == 0 || hits.iter().all(|h| !h.is_empty()));
+        if ivf.is_some() {
+            self.o.reg.count("serve.ann_served", reqs.len() as u64);
+        }
         let (svc_start, done) =
-            self.match_res.reserve(now, scan_pass_us(rows, self.cfg.dim, reqs.len()));
+            self.match_res.reserve(now, scan_pass_us(cost_rows, self.cfg.dim, reqs.len()));
         for r in &reqs {
             self.log_dispatch(r, now);
         }
@@ -720,7 +761,7 @@ impl ServeSession {
                 self.obs.span(t, Stage::Queue, since, now, r.class as u64, r.tenant as u64);
                 self.obs.span(t, Stage::Dispatch, now, now, reqs.len() as u64, 0);
                 self.obs.span(t, Stage::BusGrant, now, svc_start, 0, 0);
-                self.obs.span(t, Stage::Compute, svc_start, done, rows as u64, reqs.len() as u64);
+                self.obs.span(t, Stage::Compute, svc_start, done, cost_rows as u64, reqs.len() as u64);
             }
         }
         let id = self.next_batch;
@@ -910,6 +951,7 @@ impl ServeSession {
             dispatch_log: self.dispatch_log,
             capacity_rps: self.capacity_rps,
             offered_rps: self.offered_rps,
+            ann_served: self.o.reg.counter_value("serve.ann_served"),
             accounting_ok: self.slo.accounting_holds(),
             media_events: self.mounts.map(|m| m.events).unwrap_or_default(),
             trace,
@@ -1108,6 +1150,54 @@ mod tests {
         assert!(out.completed > 0);
         let kinds: Vec<_> = out.media_events.iter().map(|e| e.kind).collect();
         assert_eq!(kinds, vec![Mounted, Unmounted, Mounted], "{:?}", out.media_events);
+    }
+
+    #[test]
+    fn identify_routes_through_the_mounted_ann_tier() {
+        use crate::biometric::gallery::Gallery;
+        use crate::biometric::ivf::{clustered_index, IvfIndex, IvfParams};
+        use crate::vdisk::ImageBuilder;
+
+        // A clustered gallery big enough to train a real (non-degenerate)
+        // tier, packed with its IVF extent.
+        let dir =
+            std::env::temp_dir().join(format!("champ-servann-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(83);
+        let idx = clustered_index(&mut rng, 800, 32, 28, 0.5);
+        let ivf = IvfIndex::train(&idx, &IvfParams::default());
+        assert!(!ivf.is_degenerate());
+        let path = dir.join("ann-media.vdisk");
+        ImageBuilder::new("ann-serve")
+            .gallery(&Gallery::from_index(idx))
+            .ivf(ivf.encode())
+            .block_size(512)
+            .write(&path, &SealKey::from_passphrase("serve-media-key"))
+            .unwrap();
+
+        let out = ServeSession::new(image_cfg(path.clone(), 100)).unwrap().run(vec![]);
+        assert!(out.accounting_ok);
+        assert!(out.completed > 0);
+        assert!(out.ann_served > 0, "identify must resolve through the ANN tier");
+
+        // Yank the media: identify falls back to the exact overlay and the
+        // ANN counter stops advancing; re-attach resumes routed serving.
+        let events = vec![
+            HotplugEvent {
+                at_us: 500_000,
+                slot: SlotId(STORAGE_SLOT),
+                kind: HotplugKind::Detach,
+                uid: 0,
+            },
+        ];
+        let swapped = ServeSession::new(image_cfg(path, 200)).unwrap().run(events);
+        assert!(swapped.accounting_ok, "ANN fallback must not break accounting");
+        assert!(swapped.completed > 0);
+        assert!(
+            swapped.ann_served < swapped.completed,
+            "post-detach identifies must not count as ANN-served"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -20,6 +20,9 @@ pub enum ExtentKind {
     Gallery,
     /// An AOT artifact file (HLO text or `manifest.json`).
     Artifact,
+    /// Trained IVF-ANN tier over the gallery extent (wire framing of
+    /// [`crate::biometric::ivf::IvfIndex::encode`]).
+    Ivf,
     /// Uninterpreted bytes.
     Blob,
 }
@@ -29,6 +32,7 @@ impl ExtentKind {
         match self {
             ExtentKind::Gallery => "gallery",
             ExtentKind::Artifact => "artifact",
+            ExtentKind::Ivf => "ivf",
             ExtentKind::Blob => "blob",
         }
     }
@@ -37,6 +41,7 @@ impl ExtentKind {
         match s {
             "gallery" => Some(ExtentKind::Gallery),
             "artifact" => Some(ExtentKind::Artifact),
+            "ivf" => Some(ExtentKind::Ivf),
             "blob" => Some(ExtentKind::Blob),
             _ => None,
         }
@@ -308,7 +313,7 @@ mod tests {
 
     #[test]
     fn kind_names_roundtrip() {
-        for k in [ExtentKind::Gallery, ExtentKind::Artifact, ExtentKind::Blob] {
+        for k in [ExtentKind::Gallery, ExtentKind::Artifact, ExtentKind::Ivf, ExtentKind::Blob] {
             assert_eq!(ExtentKind::from_name(k.name()), Some(k));
         }
         assert_eq!(ExtentKind::from_name("nope"), None);

@@ -24,6 +24,8 @@ use super::{manifest_tweak, trailer_tweak, VdiskError};
 pub const DEFAULT_BLOCK_SIZE: u32 = 4096;
 /// Reserved name of the gallery extent.
 pub const GALLERY_EXTENT: &str = "gallery";
+/// Reserved name of the IVF-ANN tier extent.
+pub const IVF_EXTENT: &str = "ivf";
 
 /// What [`ImageBuilder::write`] produced.
 #[derive(Debug, Clone)]
@@ -74,6 +76,14 @@ impl ImageBuilder {
     pub fn gallery(mut self, g: &Gallery) -> Self {
         self.gallery_dim = g.dim() as u32;
         self.extents.push((GALLERY_EXTENT.to_string(), ExtentKind::Gallery, g.encode()));
+        self
+    }
+
+    /// Add a trained IVF tier (the [`crate::biometric::ivf::IvfIndex::encode`]
+    /// payload).  The tier must have been trained over the same gallery
+    /// this image carries — the mount path cross-checks and fails closed.
+    pub fn ivf(mut self, bytes: Vec<u8>) -> Self {
+        self.extents.push((IVF_EXTENT.to_string(), ExtentKind::Ivf, bytes));
         self
     }
 

@@ -47,7 +47,7 @@ pub mod superblock;
 
 pub use cache::{CacheStats, LruCache, ShardedBlockCache};
 pub use extent::{ExtentKind, ExtentMeta};
-pub use image::{ImageBuilder, ImageSummary};
+pub use image::{ImageBuilder, ImageSummary, GALLERY_EXTENT, IVF_EXTENT};
 pub use manifest::ImageManifest;
 pub use mount::{MountEvent, MountEventKind, MountSupervisor, MountedImage};
 pub use stream::ExtentReader;

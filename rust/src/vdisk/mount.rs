@@ -23,13 +23,14 @@ use std::sync::Arc;
 
 use crate::biometric::gallery::{DecodeStats, Gallery};
 use crate::biometric::index::GalleryIndex;
+use crate::biometric::ivf::IvfIndex;
 use crate::bus::hotplug::MediaBay;
 use crate::crypto::seal::{SealKey, SubkeyFactory, TAG_LEN};
 use crate::obs::TraceRecorder;
 
 use super::cache::{CacheStats, ShardedBlockCache, DEFAULT_CACHE_SHARDS};
 use super::extent::{unseal_block_with, ExtentKind};
-use super::image::GALLERY_EXTENT;
+use super::image::{GALLERY_EXTENT, IVF_EXTENT};
 use super::manifest::ImageManifest;
 use super::stream::ExtentReader;
 use super::superblock::{Superblock, SB_LEN};
@@ -229,6 +230,25 @@ impl MountedImage {
             })
     }
 
+    /// Streaming decode of the IVF tier extent, cross-checked against the
+    /// gallery index decoded from this same image.  `Ok(None)` when the
+    /// image simply carries no tier (the exact-scan cartridge shape);
+    /// any framing or coverage failure is `Corrupt` — a tier that
+    /// disagrees with its own gallery must reject the media, not route
+    /// probes into the wrong lists.
+    pub fn load_ivf_index(&self, idx: &GalleryIndex) -> Result<Option<IvfIndex>, VdiskError> {
+        if self.manifest.find(IVF_EXTENT).is_none() {
+            return Ok(None);
+        }
+        let reader = self.extent_reader(IVF_EXTENT)?;
+        IvfIndex::decode_stream(reader, idx)
+            .map(Some)
+            .map_err(|e| match e.downcast::<VdiskError>() {
+                Ok(v) => v,
+                Err(e) => VdiskError::Corrupt(format!("ivf extent: {e}")),
+            })
+    }
+
     /// Flip one raw image byte in place (tamper-injection for tests; the
     /// mount-time MACs make this unreachable through a file).
     #[cfg(test)]
@@ -297,6 +317,10 @@ pub struct MountSupervisor {
     /// attach.  A remount replaces the `Arc` atomically; a detach drops
     /// it, so readers holding the old `Arc` drain safely.
     galleries: HashMap<u64, Arc<GalleryIndex>>,
+    /// Serving-ready ANN tier per mounted uid (only for images that carry
+    /// an IVF extent), decoded and cross-checked at attach like the
+    /// gallery.
+    ivf_tiers: HashMap<u64, Arc<IvfIndex>>,
     pub events: Vec<MountEvent>,
     /// Handed to every subsequent mount so boot and remount unseal waves
     /// land in the same trace as the serving-side spans.
@@ -360,6 +384,18 @@ impl MountSupervisor {
         if img.manifest.find(GALLERY_EXTENT).is_some() {
             match img.load_gallery_index() {
                 Ok((idx, _)) => {
+                    // ANN tier rides the same decode-before-publish rule: a
+                    // corrupt or mismatched tier rejects the media outright.
+                    match img.load_ivf_index(&idx) {
+                        Ok(Some(ivf)) => {
+                            self.ivf_tiers.insert(uid, Arc::new(ivf));
+                        }
+                        Ok(None) => {}
+                        Err(e) => {
+                            self.galleries.remove(&uid);
+                            return rejected(&mut self.events, e);
+                        }
+                    }
                     self.galleries.insert(uid, Arc::new(idx));
                 }
                 Err(e) => return rejected(&mut self.events, e),
@@ -379,6 +415,7 @@ impl MountSupervisor {
     /// bay registration stays so a re-insert can remount).
     pub fn handle_detach(&mut self, uid: u64, at_us: u64) {
         self.galleries.remove(&uid);
+        self.ivf_tiers.remove(&uid);
         if self.mounted.remove(&uid).is_some() {
             self.events.push(MountEvent {
                 uid,
@@ -403,6 +440,12 @@ impl MountSupervisor {
     /// scanning a consistent snapshot across hot-swaps.
     pub fn gallery_index(&self, uid: u64) -> Option<Arc<GalleryIndex>> {
         self.galleries.get(&uid).cloned()
+    }
+
+    /// The serving-ready ANN tier of mounted uid `uid` (None when the
+    /// image carries no IVF extent — callers fall back to the exact scan).
+    pub fn ivf_index(&self, uid: u64) -> Option<Arc<IvfIndex>> {
+        self.ivf_tiers.get(&uid).cloned()
     }
 
     pub fn mounted_count(&self) -> usize {
@@ -631,6 +674,69 @@ mod tests {
         let mut keyless = MountSupervisor::default();
         keyless.register_media(1, &path);
         assert!(keyless.handle_attach(1, 0).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ivf_extent_mounts_serves_and_fails_closed() {
+        use crate::biometric::ivf::{clustered_index, IvfIndex, IvfParams};
+
+        let key = SealKey::from_passphrase("ivf");
+        let dir = tmp_dir("ivf");
+        let mut rng = Rng::new(61);
+        let idx = clustered_index(&mut rng, 600, 16, 24, 0.5);
+        let ivf = IvfIndex::train(&idx, &IvfParams::default());
+        assert!(!ivf.is_degenerate(), "fixture must exercise a real tier");
+        let path = dir.join("ann.vdisk");
+        ImageBuilder::new("ann-cart")
+            .cap(CapabilityId::Database)
+            .gallery(&Gallery::from_index(idx.clone()))
+            .ivf(ivf.encode())
+            .block_size(256)
+            .write(&path, &key)
+            .unwrap();
+
+        // Attach publishes both the gallery and the ANN tier; the decoded
+        // tier answers identically to the one that was packed.
+        let mut sup = MountSupervisor::with_key(key.clone());
+        sup.register_media(9, &path);
+        assert!(sup.handle_attach(9, 100).is_some());
+        let g = sup.gallery_index(9).unwrap();
+        let tier = sup.ivf_index(9).expect("ivf extent must publish a tier");
+        assert_eq!(tier.encode(), ivf.encode(), "mounted tier is bit-identical");
+        let probe = rng.unit_vec(16);
+        assert_eq!(tier.search(&g, &probe, 5, 4), ivf.search(&idx, &probe, 5, 4));
+        sup.handle_detach(9, 200);
+        assert!(sup.ivf_index(9).is_none(), "detach must drop the tier");
+
+        // An image with no ivf extent mounts with no tier.
+        let plain = dir.join("plain.vdisk");
+        ImageBuilder::new("plain")
+            .gallery(&Gallery::from_index(idx.clone()))
+            .write(&plain, &key)
+            .unwrap();
+        sup.register_media(9, &plain);
+        assert!(sup.handle_attach(9, 300).is_some());
+        assert!(sup.gallery_index(9).is_some());
+        assert!(sup.ivf_index(9).is_none());
+        sup.handle_detach(9, 400);
+
+        // A tier trained over a *different* gallery is corrupt media: the
+        // attach is rejected and nothing is published.
+        let mut rng2 = Rng::new(62);
+        let other = clustered_index(&mut rng2, 601, 16, 24, 0.5);
+        let wrong = IvfIndex::train(&other, &IvfParams::default());
+        let bad = dir.join("mismatch.vdisk");
+        ImageBuilder::new("mismatch")
+            .gallery(&Gallery::from_index(idx))
+            .ivf(wrong.encode())
+            .write(&bad, &key)
+            .unwrap();
+        sup.register_media(9, &bad);
+        assert!(sup.handle_attach(9, 500).is_none());
+        assert!(!sup.is_mounted(9));
+        assert!(sup.gallery_index(9).is_none() && sup.ivf_index(9).is_none());
+        assert_eq!(sup.events.last().unwrap().kind, MountEventKind::Rejected);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

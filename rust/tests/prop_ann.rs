@@ -1,0 +1,176 @@
+//! Property suite for the IVF-ANN tier (`biometric::ivf`).
+//!
+//! The tier is an *approximate* accelerator over the exact engine, so
+//! the contract has two halves:
+//!
+//! * quality — recall@1 >= 99% against the preserved exact oracle on
+//!   the identification workload (clustered galleries, noisy probes of
+//!   enrolled identities), across seeds, sizes, and `nprobe`;
+//! * exactness where it claims it — returned scores are bit-identical
+//!   to the exact engine for the returned rows (the re-rank runs the
+//!   same kernel), training is deterministic per seed, and every
+//!   degenerate configuration (tiny/empty gallery, `nprobe >= nlist`)
+//!   falls back bit-identically to the exact scan instead of silently
+//!   degrading.
+//!
+//! Persistence: a tier packed as a sealed `ivf` extent must decode back
+//! bit-identical through a mounted image.
+
+use champ::biometric::gallery::Gallery;
+use champ::biometric::index::GalleryIndex;
+use champ::biometric::ivf::{
+    clustered_index, default_nlist, IvfIndex, IvfParams, DEFAULT_NPROBE,
+};
+use champ::crypto::seal::SealKey;
+use champ::util::prop;
+use champ::util::rng::Rng;
+use champ::vdisk::{ImageBuilder, MountedImage};
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("champ-pann-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Noisy copy of enrolled identity `r` — the identification workload.
+fn noisy_probe(rng: &mut Rng, idx: &GalleryIndex, r: usize) -> Vec<f32> {
+    idx.row(r).iter().map(|v| v + 0.05 * rng.normal()).collect()
+}
+
+#[test]
+fn recall_at1_is_at_least_99_percent_across_seeds_sizes_and_nprobe() {
+    for (seed, n, nprobe) in [
+        (1u64, 1_000usize, DEFAULT_NPROBE),
+        (2, 2_000, DEFAULT_NPROBE),
+        (3, 4_000, 12),
+        (4, 2_000, 16),
+    ] {
+        let mut rng = Rng::new(seed);
+        let idx = clustered_index(&mut rng, n, 32, default_nlist(n), 0.5);
+        let ivf = IvfIndex::train(&idx, &IvfParams::default());
+        assert!(!ivf.is_degenerate(), "n={n} must train a real tier");
+        let probes = 200;
+        let mut hits = 0;
+        for p in 0..probes {
+            let probe = noisy_probe(&mut rng, &idx, p * n / probes);
+            let want = idx.top_k(&probe, 1)[0].0;
+            if ivf.search(&idx, &probe, 1, nprobe).first().map(|g| g.0) == Some(want) {
+                hits += 1;
+            }
+        }
+        let recall = hits as f64 / probes as f64;
+        assert!(
+            recall >= 0.99,
+            "seed {seed}, n {n}, nprobe {nprobe}: recall@1 {recall:.3} < 0.99"
+        );
+    }
+}
+
+#[test]
+fn training_is_deterministic_per_seed() {
+    prop::check("ivf-determinism", 137, 6, |rng, _| {
+        let n = 600 + (rng.next_u64() % 600) as usize;
+        let idx = clustered_index(rng, n, 16, 20, 0.5);
+        let params = IvfParams::default();
+        let a = IvfIndex::train(&idx, &params);
+        let b = IvfIndex::train(&idx, &params);
+        assert_eq!(a.encode(), b.encode(), "same seed, same gallery => bit-identical tier");
+        // A different seed still trains a usable (non-degenerate) tier.
+        let other = IvfIndex::train(&idx, &IvfParams { seed: 0xD1F7, ..params });
+        assert!(!other.is_degenerate());
+    });
+}
+
+#[test]
+fn routed_results_carry_exact_scores_in_exact_order() {
+    prop::check("ivf-rerank", 139, 10, |rng, _| {
+        let n = 1_000;
+        let idx = clustered_index(rng, n, 24, 30, 0.5);
+        let ivf = IvfIndex::train(&idx, &IvfParams::default());
+        assert!(!ivf.is_degenerate());
+        let probe = noisy_probe(rng, &idx, rng.next_u64() as usize % n);
+        let got = ivf.search(&idx, &probe, 10, DEFAULT_NPROBE);
+        assert_eq!(got.len(), 10);
+        for w in got.windows(2) {
+            assert!(w[0].1 >= w[1].1, "re-rank must be descending: {w:?}");
+        }
+        // Every returned score is the exact engine's, bit for bit.
+        let exact: std::collections::HashMap<usize, f32> =
+            idx.top_k_auto(&probe, n).into_iter().collect();
+        for (row, score) in &got {
+            assert_eq!(
+                score.to_bits(),
+                exact[row].to_bits(),
+                "row {row}: ANN score must be the exact kernel's"
+            );
+        }
+    });
+}
+
+#[test]
+fn degenerate_and_saturated_routing_fall_back_to_exact() {
+    let mut rng = Rng::new(141);
+    // Tiny gallery: below the training floor, the tier is degenerate
+    // and every search is the exact scan, bit for bit.
+    let tiny = clustered_index(&mut rng, 40, 16, 4, 0.5);
+    let ivf = IvfIndex::train(&tiny, &IvfParams::default());
+    assert!(ivf.is_degenerate());
+    for _ in 0..5 {
+        let probe = rng.unit_vec(16);
+        assert_eq!(ivf.search(&tiny, &probe, 5, DEFAULT_NPROBE), tiny.top_k_auto(&probe, 5));
+    }
+    // Empty gallery: degenerate, searches are empty, never a panic.
+    let empty = GalleryIndex::with_capacity(16, 0);
+    let ivf = IvfIndex::train(&empty, &IvfParams::default());
+    assert!(ivf.is_degenerate());
+    assert!(ivf.search(&empty, &rng.unit_vec(16), 3, DEFAULT_NPROBE).is_empty());
+    // nprobe at or above nlist on a real tier: routing cannot help, so
+    // the search is the exact scan, bit for bit.
+    let idx = clustered_index(&mut rng, 900, 16, 30, 0.5);
+    let ivf = IvfIndex::train(&idx, &IvfParams::default());
+    assert!(!ivf.is_degenerate());
+    let nlist = ivf.nlist();
+    for _ in 0..5 {
+        let probe = rng.unit_vec(16);
+        assert_eq!(ivf.search(&idx, &probe, 7, nlist), idx.top_k_auto(&probe, 7));
+        assert_eq!(ivf.search(&idx, &probe, 7, nlist + 3), idx.top_k_auto(&probe, 7));
+    }
+    // A stale tier (gallery grew after training) must also fall back.
+    let mut grown = idx.clone();
+    grown.upsert("late-arrival", &rng.unit_vec(16));
+    assert!(!ivf.covers(&grown));
+    let probe = rng.unit_vec(16);
+    assert_eq!(ivf.search(&grown, &probe, 5, DEFAULT_NPROBE), grown.top_k_auto(&probe, 5));
+}
+
+#[test]
+fn tier_roundtrips_through_a_sealed_image() {
+    let dir = tmp("roundtrip");
+    let mut rng = Rng::new(143);
+    let (n, dim) = (800, 16);
+    let idx = clustered_index(&mut rng, n, dim, 28, 0.5);
+    let ivf = IvfIndex::train(&idx, &IvfParams::default());
+    assert!(!ivf.is_degenerate());
+    let key = SealKey::from_passphrase("prop-ann");
+    let path = dir.join("ann.vdisk");
+    ImageBuilder::new("prop-ann")
+        .gallery(&Gallery::from_index(idx.clone()))
+        .ivf(ivf.encode())
+        .block_size(256)
+        .write(&path, &key)
+        .unwrap();
+
+    let img = MountedImage::mount(&path, &key).unwrap();
+    let (gidx, _) = img.load_gallery_index().unwrap();
+    let tier = img.load_ivf_index(&gidx).unwrap().expect("ivf extent present");
+    assert_eq!(tier.encode(), ivf.encode(), "decode(encode) must be bit-identical");
+    // Search through the decoded tier equals the in-memory tier.
+    for r in [0usize, n / 2, n - 1] {
+        let probe = noisy_probe(&mut rng, &idx, r);
+        assert_eq!(
+            tier.search(&gidx, &probe, 5, DEFAULT_NPROBE),
+            ivf.search(&idx, &probe, 5, DEFAULT_NPROBE)
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -12,10 +12,18 @@
 //! * within the engine, top-k / sharded / batch paths are bit-identical
 //!   to the single-threaded full ranking;
 //! * the bulk rotation is bit-identical to per-template rotation.
+//!
+//! Since the `SearchBackend` redesign the suite is backend-generic: the
+//! ladder contract is asserted through the trait against [`NaiveOracle`]
+//! (so any exact backend can be dropped in), and the approximate
+//! backends (`soa-i8`, `ivf-ann`) are gated on >= 99% rank-1 agreement
+//! over the identification workload.
 
 use champ::biometric::gallery::Gallery;
 use champ::biometric::index::GalleryIndex;
+use champ::biometric::ivf::{clustered_index, IvfIndex, IvfParams};
 use champ::biometric::matcher::{rank_naive_aos, Matcher};
+use champ::biometric::search::{IvfBackend, NaiveOracle, QuantBackend, SearchBackend, SearchParams};
 use champ::biometric::template::Template;
 use champ::crypto::rotation::RotationKey;
 use champ::util::prop;
@@ -62,6 +70,61 @@ fn assert_rank_equiv(naive: &[(String, f32)], engine: &[(String, f32)]) {
             );
         }
     }
+}
+
+/// Backend-generic form of [`assert_rank_equiv`]: the backend's top-k
+/// ladder must match the oracle's — scores within eps at every rank,
+/// ids displaced only on genuine near-ties (oracle scores within eps).
+fn assert_backend_matches_oracle(
+    oracle: &NaiveOracle,
+    backend: &impl SearchBackend,
+    probe: &[f32],
+    k: usize,
+) {
+    let full = oracle.search(probe, &SearchParams::default().with_k(oracle.len()));
+    let oracle_score: std::collections::HashMap<&str, f32> =
+        full.iter().map(|nb| (nb.id.as_str(), nb.score)).collect();
+    let want = &full[..k.min(full.len())];
+    let got = backend.search(probe, &SearchParams::default().with_k(k));
+    assert_eq!(want.len(), got.len(), "k={k}");
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        assert!(
+            (w.score - g.score).abs() < SCORE_EPS,
+            "rank {i}: ladder diverged ({} {} vs {} {})",
+            w.id,
+            w.score,
+            g.id,
+            g.score
+        );
+        if w.id != g.id {
+            let swapped = oracle_score[g.id.as_str()];
+            assert!(
+                (swapped - w.score).abs() < SCORE_EPS,
+                "rank {i}: {} displaced {} without a near-tie",
+                g.id,
+                w.id
+            );
+        }
+    }
+}
+
+#[test]
+fn exact_backend_matches_oracle_through_the_trait() {
+    prop::check("backend-ladder", 131, 25, |rng, case| {
+        let n = 1 + (rng.next_u64() % 80) as usize;
+        let dim = 8 + 8 * (rng.next_u64() % 6) as usize;
+        let g = random_gallery(rng, n, dim);
+        let idx = g.index();
+        let oracle = NaiveOracle::from_index(idx);
+        let probe = if case % 3 == 0 {
+            idx.row(rng.next_u64() as usize % n).to_vec()
+        } else {
+            rng.unit_vec(dim)
+        };
+        for k in [1usize, 3, n, n + 2] {
+            assert_backend_matches_oracle(&oracle, idx, &probe, k);
+        }
+    });
 }
 
 #[test]
@@ -176,6 +239,41 @@ fn quantized_rank1_agreement_at_least_99_percent() {
     }
     let rate = agree as f64 / probes as f64;
     assert!(rate >= 0.99, "i8 rank-1 agreement {rate:.3} < 0.99");
+}
+
+#[test]
+fn approx_backends_rank1_agreement_at_least_99_percent() {
+    // The backend-generic agreement gate: every approximate backend
+    // behind `SearchBackend` (i8 quantized, IVF-ANN) must agree with the
+    // exact engine's rank-1 decision on >= 99% of identification probes.
+    let mut rng = Rng::new(227);
+    let dim = 64;
+    let n = 3_000;
+    let idx = clustered_index(&mut rng, n, dim, 54, 0.5);
+    let quant = idx.quantize();
+    let ivf = IvfIndex::train(&idx, &IvfParams::default());
+    assert!(!ivf.is_degenerate(), "3k gallery must train a real tier");
+    let probes: Vec<Vec<f32>> = (0..300)
+        .map(|p| idx.row(p * n / 300).iter().map(|v| v + 0.05 * rng.normal()).collect())
+        .collect();
+    let exact: Vec<usize> = probes.iter().map(|p| idx.top_k(p, 1)[0].0).collect();
+
+    let qb = QuantBackend { quant: &quant, index: &idx };
+    let ib = IvfBackend { ivf: &ivf, index: &idx };
+    let params = SearchParams::default().with_k(1);
+    for (name, backend) in
+        [("soa-i8", &qb as &dyn SearchBackend), ("ivf-ann", &ib as &dyn SearchBackend)]
+    {
+        let agree = probes
+            .iter()
+            .zip(&exact)
+            .filter(|(p, &want)| {
+                backend.search(p, &params).first().map(|nb| nb.row) == Some(want)
+            })
+            .count();
+        let rate = agree as f64 / probes.len() as f64;
+        assert!(rate >= 0.99, "{name} rank-1 agreement {rate:.3} < 0.99");
+    }
 }
 
 #[test]

@@ -110,6 +110,67 @@ fn streaming_decode_edge_geometries() {
 }
 
 #[test]
+fn artifact_spill_streams_block_by_block() {
+    // Artifact extents feed the executor spill dir through the same
+    // streaming walk as the gallery path: every yielded chunk is bounded
+    // by the image block size (never a whole-extent buffer), and the
+    // spilled file is bit-identical to the packed bytes.
+    use champ::runtime::artifact::Manifest;
+    let dir = tmp("artspill");
+    let key = SealKey::from_passphrase("prop-stream");
+    let bs = 128u32;
+    // A model artifact spanning many blocks at this block size.
+    let hlo = format!("HloModule big\n{}", "f".repeat(5_000));
+    let manifest = format!(
+        "{{\"models\": [{{\"name\": \"big\", \"file\": \"big.hlo\", \
+         \"inputs\": [{{\"shape\": [4], \"dtype\": \"f32\"}}], \
+         \"outputs\": [{{\"shape\": [], \"dtype\": \"f32\"}}], \
+         \"hlo_bytes\": {}}}]}}",
+        hlo.len()
+    );
+    let path = dir.join("art.vdisk");
+    ImageBuilder::new("prop-art")
+        .artifact("manifest.json", manifest.clone().into_bytes())
+        .artifact("big.hlo", hlo.clone().into_bytes())
+        .block_size(bs)
+        .write(&path, &key)
+        .unwrap();
+    let img = MountedImage::mount(&path, &key).unwrap();
+
+    // Bytes-buffered bound: the streaming walk never hands back more
+    // than one block's worth of plaintext at a time.
+    for name in ["manifest.json", "big.hlo"] {
+        let reader = img.extent_reader(name).unwrap();
+        let expect = reader.plain_len();
+        let mut total = 0u64;
+        let mut cat = Vec::new();
+        for block in reader {
+            let block = block.unwrap();
+            assert!(
+                block.len() <= bs as usize,
+                "{name}: streamed chunk of {} bytes > block size {bs}",
+                block.len()
+            );
+            total += block.len() as u64;
+            cat.extend_from_slice(&block);
+        }
+        assert_eq!(total, expect, "{name}: stream covers the whole extent");
+        assert_eq!(cat, img.read_extent(name).unwrap(), "{name}: bit-identical");
+    }
+
+    // The spill path lands byte-identical files for the executor.
+    let spill = dir.join("spill");
+    let m = Manifest::load_from_image(&img, &spill).unwrap();
+    assert_eq!(m.models.len(), 1);
+    assert_eq!(std::fs::read(spill.join("big.hlo")).unwrap(), hlo.as_bytes());
+    assert_eq!(
+        std::fs::read(spill.join("manifest.json")).unwrap(),
+        manifest.as_bytes()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn concurrent_full_extent_walks_unseal_each_block_once() {
     // The read_block miss path is single-entry even when whole-extent
     // streaming walks race: cache telemetry proves one unseal per block.
