@@ -7,7 +7,10 @@
 //! the number is the unseal rate, not an `Arc` clone), block-cache hit
 //! rate over repeated walks, and the zero-copy proof: intermediate bytes
 //! copied per template on the streaming decode vs the legacy
-//! `read_extent` + `decode` path.
+//! `read_extent` + `decode` path.  The write path rides along: each
+//! sweep point measures durable (fsync'd) sealed-frame appends into an
+//! enrollment journal bound to the image, and the cold replay rate —
+//! both gated against the committed floors like the read columns.
 //!
 //! Two gates run after the sweep (unless `--no-guard`):
 //! * the committed MB/s floors in `benches/common/vdisk_baseline.json`
@@ -36,7 +39,7 @@ use crate::crypto::seal::SealKey;
 use crate::metrics::report::{current_commit, VdiskRecord, VdiskReport};
 use crate::util::rng::Rng;
 use crate::vdisk::image::GALLERY_EXTENT;
-use crate::vdisk::{ImageBuilder, MountedImage};
+use crate::vdisk::{EnrollJournal, ImageBuilder, MountedImage};
 
 use super::{Args, BenchDefaults, CommonOpts};
 
@@ -61,6 +64,38 @@ fn unseal_mb_s(img: &MountedImage, threads: usize) -> anyhow::Result<f64> {
     let secs = t0.elapsed().as_secs_f64().max(1e-9);
     anyhow::ensure!(total as f64 / 1e6 >= mb, "walk shorter than the extent");
     Ok(mb / secs)
+}
+
+/// Sealed appends written (and fsync'd) into the bench journal per
+/// sweep point.  Small enough that the fsync train stays under a second
+/// even on slow disks; large enough to average out per-call jitter.
+const JOURNAL_APPENDS: usize = 128;
+
+/// Measure the enrollment-journal write and replay rates against a
+/// mounted image: `JOURNAL_APPENDS` durable appends (each one sealed +
+/// fsync'd, exactly the serve ack path), then one cold replay.
+fn journal_rates(
+    image_path: &std::path::Path,
+    key: &SealKey,
+    image_uid: u64,
+    dim: usize,
+) -> anyhow::Result<(f64, f64)> {
+    let jpath = image_path.with_extension("cjl");
+    let (mut j, recs) = EnrollJournal::open_for_image(&jpath, key, image_uid, None)?;
+    anyhow::ensure!(recs.is_empty(), "bench journal must start empty");
+    let mut rng = Rng::new(0x0a99_e57a ^ image_uid);
+    let t0 = Instant::now();
+    for i in 0..JOURNAL_APPENDS {
+        j.append(&format!("bench-enroll-{i}"), &rng.unit_vec(dim))?;
+    }
+    let append_per_s = JOURNAL_APPENDS as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    drop(j);
+    let t0 = Instant::now();
+    let recs = EnrollJournal::replay(&jpath, key, image_uid, None)?;
+    let replay_per_s = recs.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    anyhow::ensure!(recs.len() == JOURNAL_APPENDS, "replay must recover every sealed frame");
+    std::fs::remove_file(&jpath).ok();
+    Ok((append_per_s, replay_per_s))
 }
 
 /// Run the read-path sweep and assemble the telemetry report.
@@ -116,6 +151,11 @@ pub fn vdisk_report(sizes: &[usize], dim: usize, block_size: u32) -> anyhow::Res
         img.read_extent(GALLERY_EXTENT)?;
         let cache_hit_rate = img.cache_stats().hit_rate();
 
+        // The write path: durable sealed appends + cold replay, bound to
+        // this image's uid exactly like `serve --journal`.
+        let (journal_append_per_s, journal_replay_per_s) =
+            journal_rates(&path, &key, img.image_uid(), dim)?;
+
         // The zero-copy proof.  Streaming staging is *measured* exactly
         // by DecodeStats; the legacy column is an analytic accounting of
         // that path's structure (whole-extent assembly = plain_len, plus
@@ -137,6 +177,8 @@ pub fn vdisk_report(sizes: &[usize], dim: usize, block_size: u32) -> anyhow::Res
             cache_hit_rate,
             stream_bytes_per_template: stats.bytes_copied_per_template(),
             legacy_bytes_per_template,
+            journal_append_per_s: Some(journal_append_per_s),
+            journal_replay_per_s: Some(journal_replay_per_s),
         });
         std::fs::remove_file(&path).ok();
     }
@@ -146,13 +188,13 @@ pub fn vdisk_report(sizes: &[usize], dim: usize, block_size: u32) -> anyhow::Res
 
 fn print_table(report: &VdiskReport) {
     println!(
-        "{:<9} {:>5} {:>6} | {:>9} {:>10} | {:>8} {:>8} {:>8} | {:>5} | {:>7} {:>7}",
+        "{:<9} {:>5} {:>6} | {:>9} {:>10} | {:>8} {:>8} {:>8} | {:>5} | {:>7} {:>7} | {:>8} {:>9}",
         "image", "dim", "blk B", "mount ms", "match ms", "1T MB/s", "2T MB/s", "4T MB/s",
-        "hit%", "cp/tpl", "legacy"
+        "hit%", "cp/tpl", "legacy", "jrnl w/s", "replay/s"
     );
     for r in &report.records {
         println!(
-            "{:<9} {:>5} {:>6} | {:>9.1} {:>10.1} | {:>8.1} {:>8.1} {:>8.1} | {:>4.0}% | {:>7.1} {:>7.1}",
+            "{:<9} {:>5} {:>6} | {:>9.1} {:>10.1} | {:>8.1} {:>8.1} {:>8.1} | {:>4.0}% | {:>7.1} {:>7.1} | {:>8.1} {:>9.0}",
             r.identities,
             r.dim,
             r.block_size,
@@ -163,7 +205,9 @@ fn print_table(report: &VdiskReport) {
             r.par4_mb_s,
             r.cache_hit_rate * 100.0,
             r.stream_bytes_per_template,
-            r.legacy_bytes_per_template
+            r.legacy_bytes_per_template,
+            r.journal_append_per_s.unwrap_or(0.0),
+            r.journal_replay_per_s.unwrap_or(0.0)
         );
     }
 }
@@ -266,6 +310,12 @@ mod tests {
         // the >=2x parallel gate.  Both must carry floors.
         assert!(b.find(10_000, 128).is_some(), "10k floor missing");
         assert!(b.find(100_000, 128).is_some(), "100k floor missing");
+        // Journal floors ride the same records so the write path is
+        // gated wherever the read path is.
+        for r in &b.records {
+            assert!(r.journal_append_per_s.is_some(), "journal append floor missing");
+            assert!(r.journal_replay_per_s.is_some(), "journal replay floor missing");
+        }
     }
 
     #[test]
@@ -286,8 +336,17 @@ mod tests {
             r.stream_bytes_per_template
         );
         assert!(r.legacy_bytes_per_template >= 3.0 * width);
+        assert!(
+            r.journal_append_per_s.unwrap_or(0.0) > 0.0,
+            "journal append rate must be measured"
+        );
+        assert!(
+            r.journal_replay_per_s.unwrap_or(0.0) > 0.0,
+            "journal replay rate must be measured"
+        );
         let back = VdiskReport::parse(&report.to_json_pretty()).unwrap();
         assert_eq!(back.records.len(), 1);
+        assert_eq!(back.records[0].journal_append_per_s, r.journal_append_per_s);
     }
 
     #[test]
@@ -305,6 +364,8 @@ mod tests {
             cache_hit_rate: 0.5,
             stream_bytes_per_template: 60.0,
             legacy_bytes_per_template: 1600.0,
+            journal_append_per_s: None,
+            journal_replay_per_s: None,
         });
         assert!(vdisk_contract_gate(&rep).is_empty());
         rep.records[0].identities = 100_000;

@@ -32,6 +32,12 @@
 //!                     (packed with `champd vdisk pack`); the in-memory
 //!                     index then only backs enrolls + detach fallback
 //!   --image-key K     seal passphrase for --image (default champ-dev-key)
+//!   --journal PATH    durable enrollment journal (requires --image):
+//!                     every acked Enroll is sealed + fsynced here before
+//!                     the ack, and a previous run's acked frames are
+//!                     replayed (and rank-1 verified) at session start —
+//!                     a mismatch exits nonzero.  Fold with
+//!                     `champd vdisk compact`
 //!   --out PATH        output JSON (default BENCH_serve.json)
 //!   --baseline PATH   baseline JSON (default: the committed floors)
 //!   --tolerance PCT   allowed goodput drop below baseline (default 10)
@@ -88,6 +94,7 @@ pub fn config_for(profile: MissionProfile, args: &Args) -> ServeConfig {
     cfg.k = args.flag_u64("k", 10) as usize;
     cfg.image = args.flag("image").map(std::path::PathBuf::from);
     cfg.image_key = args.flag("image-key").unwrap_or("champ-dev-key").to_string();
+    cfg.journal = args.flag("journal").map(std::path::PathBuf::from);
     cfg.trace = args.switch("trace");
     cfg
 }
@@ -177,7 +184,16 @@ pub fn serve_report(
         let profile = cfg.profile.clone();
         let overload = cfg.overload;
         let events = if with_trace { trace_events_for(&profile) } else { Vec::new() };
-        let out = ServeSession::new(cfg)?.run(events);
+        let session = ServeSession::new(cfg)?;
+        // A journaled session proves its recovery before taking traffic:
+        // every record replayed from the journal must identify rank-1
+        // with its exact stored template.  A mismatch is a hard error —
+        // an acked enrollment the remount cannot serve.
+        if session.recovered_count() > 0 {
+            let n = session.verify_replay()?;
+            println!("{}: journal replay verified ({n} recovered enrollments)", profile.name);
+        }
+        let out = session.run(events);
         anyhow::ensure!(
             out.accounting_ok,
             "{}: terminal accounting violated (offered != completed + shed)",
@@ -290,6 +306,18 @@ fn print_outcome(profile: &MissionProfile, out: &ServeOutcome) {
         "power : {:.2} W avg, {:.2} frames/J",
         out.power.total_w, out.power.frames_per_joule
     );
+    if out.journal_appends > 0 || out.journal_recovered > 0 {
+        println!(
+            "journal: {} recovered, {} appended (every ack durable before completion)",
+            out.journal_recovered, out.journal_appends
+        );
+    }
+    if out.ann_boosted > 0 {
+        println!(
+            "ann   : {} served routed, {} rode a widened nprobe (deadline headroom)",
+            out.ann_served, out.ann_boosted
+        );
+    }
     for a in &out.alerts {
         println!("alert : t={:.2}s uid={} {}", a.at_us as f64 / 1e6, a.uid, a.text);
     }
@@ -412,11 +440,14 @@ mod tests {
         assert!(cfg.image.is_none());
 
         let a = parse_args(
-            "serve --image cart.vdisk --image-key op-key".split_whitespace().map(String::from),
+            "serve --image cart.vdisk --image-key op-key --journal cart.cjl"
+                .split_whitespace()
+                .map(String::from),
         );
         let cfg = config_for(MissionProfile::checkpoint(), &a);
         assert_eq!(cfg.image.as_deref(), Some(std::path::Path::new("cart.vdisk")));
         assert_eq!(cfg.image_key, "op-key");
+        assert_eq!(cfg.journal.as_deref(), Some(std::path::Path::new("cart.cjl")));
     }
 
     #[test]

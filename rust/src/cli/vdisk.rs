@@ -1,4 +1,4 @@
-//! `champd vdisk <pack|inspect|verify>` — cartridge image tooling.
+//! `champd vdisk <pack|inspect|verify|compact>` — cartridge image tooling.
 //!
 //! * `pack`    — synthesize (or gather) a gallery + optional artifact set
 //!   and seal it into an image.  The gallery is rotation-protected before
@@ -10,6 +10,13 @@
 //!   with `--key`, the full verified manifest and extent table.
 //! * `verify`  — mount and read back every extent; any torn write or
 //!   flipped bit fails the MAC walk and exits nonzero.
+//! * `compact` — fold a serve session's enrollment journal into the base
+//!   image: SCAN (replay the sealed frames), FOLD (upsert into the decoded
+//!   gallery), RETRAIN (a fresh IVF tier when the source carried one),
+//!   PUBLISH (atomic temp+rename, trailer MAC durable), RESET-JOURNAL
+//!   (truncate, rebound to the new image uid).  Crash anywhere before the
+//!   final step and the journal still replays — against the old image
+//!   directly, or against the new one via its compaction provenance.
 //!
 //! The subcommand bodies are plain library functions so the integration
 //! tests drive the exact CLI code path without spawning a process.
@@ -23,7 +30,10 @@ use crate::crypto::seal::SealKey;
 use crate::crypto::KeyChain;
 use crate::device::caps::CapabilityId;
 use crate::runtime::Manifest;
-use crate::vdisk::{ImageBuilder, ImageSummary, MountedImage, Superblock};
+use crate::vdisk::{
+    fold_records, EnrollJournal, ExtentKind, ImageBuilder, ImageSummary, MountedImage, Superblock,
+    GALLERY_EXTENT, IVF_EXTENT,
+};
 use crate::workload::faces::FaceDataset;
 
 use super::Args;
@@ -132,6 +142,128 @@ pub fn inspect(path: &str, passphrase: Option<&str>) -> anyhow::Result<String> {
     Ok(out)
 }
 
+/// Everything `vdisk compact` needs.
+#[derive(Debug, Clone)]
+pub struct CompactOptions {
+    pub image: PathBuf,
+    pub journal: PathBuf,
+    pub passphrase: String,
+    /// Output path; defaults to republishing over the input image (the
+    /// builder's temp+rename keeps that atomic).
+    pub out: Option<PathBuf>,
+}
+
+/// Parse compact flags out of `argv` (after `vdisk compact <image>`).
+pub fn compact_options_from(args: &Args) -> anyhow::Result<CompactOptions> {
+    let image = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("vdisk compact requires an image path"))?;
+    let journal = args
+        .flag("journal")
+        .ok_or_else(|| anyhow::anyhow!("vdisk compact requires --journal <path>"))?;
+    Ok(CompactOptions {
+        image: PathBuf::from(image),
+        journal: PathBuf::from(journal),
+        passphrase: args.flag("key").unwrap_or("champ-dev-key").to_string(),
+        out: args.flag("out").map(PathBuf::from),
+    })
+}
+
+/// What a compaction did.
+#[derive(Debug, Clone)]
+pub struct CompactSummary {
+    pub image: ImageSummary,
+    pub source_uid: u64,
+    /// Journal frames folded into the published gallery.
+    pub folded: u64,
+    /// Gallery rows in the compacted image.
+    pub rows: usize,
+    /// True when the source carried an IVF tier and a fresh one was
+    /// trained over the folded gallery.
+    pub retrained_ivf: bool,
+}
+
+/// Fold `journal` into `image` and publish the result atomically.
+///
+/// The state machine is SCAN → FOLD → RETRAIN → PUBLISH → RESET-JOURNAL;
+/// every step before the last is read-only or writes only the temp file,
+/// and the journal is truncated strictly *after* the new image (trailer
+/// MAC included) is durable at its final path.  A crash in the window
+/// between PUBLISH and RESET leaves a journal bound to the old uid —
+/// exactly what the new image's compaction provenance lets the next
+/// mount recognize and rebind.
+pub fn compact(opts: &CompactOptions) -> anyhow::Result<CompactSummary> {
+    let key = SealKey::from_passphrase(&opts.passphrase);
+    let img = MountedImage::mount(&opts.image, &key)?;
+    anyhow::ensure!(
+        img.manifest.find(GALLERY_EXTENT).is_some(),
+        "{}: no gallery extent to compact into",
+        opts.image.display()
+    );
+    let (mut idx, _) = img.load_gallery_index()?;
+
+    // SCAN: recover every acked frame (read-only, torn tail tolerated —
+    // the media may still be write-protected here).
+    let recs =
+        EnrollJournal::replay(&opts.journal, &key, img.image_uid(), img.manifest.compacted_from())?;
+    // FOLD: idempotent upsert in sequence order.
+    let folded = fold_records(&recs, &mut idx)? as u64;
+
+    // Carry every non-gallery, non-ivf extent byte-for-byte.  Read them
+    // *before* publishing: the default out path is the input image.
+    let carried: Vec<(String, ExtentKind, Vec<u8>)> = img
+        .manifest
+        .extents
+        .iter()
+        .filter(|e| e.name != GALLERY_EXTENT && e.name != IVF_EXTENT)
+        .map(|e| Ok((e.name.clone(), e.kind, img.read_extent(&e.name)?)))
+        .collect::<anyhow::Result<_>>()?;
+
+    // RETRAIN: the old tier is stale the moment a frame folds; a fresh
+    // one is trained over the folded gallery iff the source carried one.
+    let had_ivf = img.manifest.find(IVF_EXTENT).is_some();
+    let tier = had_ivf.then(|| IvfIndex::train(&idx, &IvfParams::default()));
+    let retrained_ivf = tier.as_ref().map(|t| !t.is_degenerate()).unwrap_or(false);
+
+    let rows = idx.len();
+    let mut b = ImageBuilder::new(img.label())
+        .block_size(img.superblock.block_size)
+        .gallery(&Gallery::from_index(idx))
+        .compacted_from(img.image_uid(), folded);
+    for cap in img.superblock.caps() {
+        b = b.cap(cap);
+    }
+    if let Some(t) = tier.filter(|t| !t.is_degenerate()) {
+        b = b.ivf(t.encode());
+    }
+    for (name, kind, bytes) in carried {
+        b = match kind {
+            ExtentKind::Artifact => b.artifact(&name, bytes),
+            _ => b.blob(&name, bytes),
+        };
+    }
+
+    // PUBLISH: temp + atomic rename; `write` syncs before the rename, so
+    // the trailer MAC is durable at the destination when this returns.
+    let out = opts.out.clone().unwrap_or_else(|| opts.image.clone());
+    let summary = b.write(&out, &key)?;
+
+    // RESET-JOURNAL: truncate and rebind to the new uid.  Everything the
+    // journal held is now inside the sealed image.
+    let (mut j, _) =
+        EnrollJournal::open_for_image(&opts.journal, &key, img.image_uid(), None)?;
+    j.reset(summary.image_uid)?;
+
+    Ok(CompactSummary {
+        image: summary,
+        source_uid: img.image_uid(),
+        folded,
+        rows,
+        retrained_ivf,
+    })
+}
+
 /// Mount and read back every extent; returns a report or the first error.
 pub fn verify(path: &str, passphrase: &str) -> anyhow::Result<String> {
     let img = MountedImage::mount(path, &SealKey::from_passphrase(passphrase))?;
@@ -180,8 +312,22 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
             println!("{}", verify(path, args.flag("key").unwrap_or("champ-dev-key"))?);
             Ok(())
         }
+        Some("compact") => {
+            let opts = compact_options_from(args)?;
+            let sum = compact(&opts)?;
+            println!(
+                "compacted {} (uid {:#x} -> {:#x}, {} frames folded, {} rows, ivf {})",
+                sum.image.path.display(),
+                sum.source_uid,
+                sum.image.image_uid,
+                sum.folded,
+                sum.rows,
+                if sum.retrained_ivf { "retrained" } else { "none" }
+            );
+            Ok(())
+        }
         other => anyhow::bail!(
-            "usage: champd vdisk <pack|inspect|verify> (got {other:?})"
+            "usage: champd vdisk <pack|inspect|verify|compact> (got {other:?})"
         ),
     }
 }
@@ -283,5 +429,84 @@ mod tests {
     fn run_rejects_unknown_subsubcommand() {
         assert!(run(&args("vdisk frobnicate")).is_err());
         assert!(run(&args("vdisk")).is_err());
+    }
+
+    #[test]
+    fn compact_flags_parse() {
+        let a = args("vdisk compact /tmp/x.vdisk --journal /tmp/x.cjl --key secret");
+        let o = compact_options_from(&a).unwrap();
+        assert_eq!(o.image, PathBuf::from("/tmp/x.vdisk"));
+        assert_eq!(o.journal, PathBuf::from("/tmp/x.cjl"));
+        assert_eq!(o.passphrase, "secret");
+        assert!(o.out.is_none(), "default republishes over the input");
+        assert!(compact_options_from(&args("vdisk compact")).is_err(), "image required");
+        assert!(
+            compact_options_from(&args("vdisk compact /tmp/x.vdisk")).is_err(),
+            "--journal required"
+        );
+    }
+
+    #[test]
+    fn compact_folds_the_journal_retrains_ivf_and_resets() {
+        let dir = tmp("compact");
+        let out = dir.join("base.vdisk");
+        let a = args(&format!(
+            "vdisk pack --out {} --gallery 600 --dim 32 --key k1 --ivf",
+            out.display()
+        ));
+        pack(&pack_options_from(&a).unwrap()).unwrap();
+        let key = SealKey::from_passphrase("k1");
+        let base = MountedImage::mount(&out, &key).unwrap();
+        let base_uid = base.image_uid();
+        drop(base);
+
+        // A serve session's worth of journaled enrollments.
+        let jpath = dir.join("enroll.cjl");
+        let mut rng = crate::util::rng::Rng::new(5);
+        let (mut j, recovered) =
+            EnrollJournal::open_for_image(&jpath, &key, base_uid, None).unwrap();
+        assert!(recovered.is_empty());
+        let enrolled: Vec<(String, Vec<f32>)> =
+            (0..7).map(|i| (format!("enrolled-{i}"), rng.unit_vec(32))).collect();
+        for (id, v) in &enrolled {
+            j.append(id, v).unwrap();
+        }
+        drop(j);
+
+        let opts = CompactOptions {
+            image: out.clone(),
+            journal: jpath.clone(),
+            passphrase: "k1".into(),
+            out: None,
+        };
+        let sum = compact(&opts).unwrap();
+        assert_eq!(sum.folded, 7);
+        assert_eq!(sum.rows, 607);
+        assert_ne!(sum.image.image_uid, base_uid, "content changed, uid changed");
+        assert!(sum.retrained_ivf, "source carried a tier: it must be retrained");
+
+        // The compacted image mounts clean: folded gallery, covering
+        // tier, provenance pointing at the source.
+        let img = MountedImage::mount(&out, &key).unwrap();
+        let (idx, _) = img.load_gallery_index().unwrap();
+        assert_eq!(idx.len(), 607);
+        let tier = img.load_ivf_index(&idx).unwrap().expect("ivf extent");
+        assert!(tier.covers(&idx));
+        assert_eq!(img.manifest.compacted_from(), Some((base_uid, 7)));
+        for (id, v) in &enrolled {
+            let r = idx.row_of(id).unwrap_or_else(|| panic!("{id} missing after fold"));
+            assert_eq!(idx.row(r), v.as_slice(), "{id} template must fold bit-identically");
+        }
+
+        // The journal is reset and rebound: empty, bound to the new uid.
+        let replayed =
+            EnrollJournal::replay(&jpath, &key, img.image_uid(), None).unwrap();
+        assert!(replayed.is_empty(), "reset journal must replay empty");
+        // Re-running compact is a no-op fold (idempotent at the tool
+        // level): zero frames, same row count.
+        let again = compact(&opts).unwrap();
+        assert_eq!(again.folded, 0);
+        assert_eq!(again.rows, 607);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

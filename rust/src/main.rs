@@ -14,7 +14,7 @@
 //!                    + SLO health summary
 //!   export-workflow  dump the ComfyUI-style graph for the live pipeline
 //!   check-artifacts  compile every artifact and run a smoke inference
-//!   vdisk            pack / inspect / verify sealed cartridge images
+//!   vdisk            pack / inspect / verify / compact sealed cartridge images
 //!
 //! `--help` prints this.
 
@@ -41,7 +41,8 @@ USAGE: champd <subcommand> [flags]
   serve [--profile checkpoint|watchlist|disaster|all] [--overload F]
         [--frames N] [--seed S] [--batch B] [--window W] [--gallery N]
         [--dim D] [--k K] [--trace [PATH]] [--image IMG.vdisk] [--image-key K]
-        [--out PATH] [--baseline PATH] [--tolerance PCT] [--no-guard]
+        [--journal J.cjl] [--out PATH] [--baseline PATH] [--tolerance PCT]
+        [--no-guard]
   trace [--profile checkpoint|watchlist|disaster|all] [--out PATH]
         [--overload F] [--frames N] [--seed S] [--image IMG.vdisk]
         [--image-key K] (serving knobs as in serve; tracing always on)
@@ -62,6 +63,7 @@ USAGE: champd <subcommand> [flags]
              [--seed S] [--artifacts DIR] [--block-size B] [--ivf]
   vdisk inspect img.vdisk [--key K]
   vdisk verify img.vdisk [--key K]
+  vdisk compact img.vdisk --journal J.cjl [--key K] [--out PATH]
 ";
 
 fn kind_from(name: &str) -> anyhow::Result<DeviceKind> {

@@ -684,11 +684,17 @@ pub struct VdiskRecord {
     /// ~3x the template width) — derived from the path's structure, not
     /// measured, and never gated.
     pub legacy_bytes_per_template: f64,
+    /// Durable (fsync'd) sealed-frame appends per second into the
+    /// enrollment journal.  `None` on reports from builds that predate
+    /// the journal; gated only when both sides carry the column.
+    pub journal_append_per_s: Option<f64>,
+    /// Journal replay throughput at mount, records per second.
+    pub journal_replay_per_s: Option<f64>,
 }
 
 impl VdiskRecord {
     fn to_value(&self) -> Value {
-        json::obj(vec![
+        let mut fields = vec![
             ("identities", json::num(self.identities as f64)),
             ("dim", json::num(self.dim as f64)),
             ("block_size", json::num(self.block_size as f64)),
@@ -700,7 +706,14 @@ impl VdiskRecord {
             ("cache_hit_rate", json::num(self.cache_hit_rate)),
             ("stream_bytes_per_template", json::num(self.stream_bytes_per_template)),
             ("legacy_bytes_per_template", json::num(self.legacy_bytes_per_template)),
-        ])
+        ];
+        if let Some(v) = self.journal_append_per_s {
+            fields.push(("journal_append_per_s", json::num(v)));
+        }
+        if let Some(v) = self.journal_replay_per_s {
+            fields.push(("journal_replay_per_s", json::num(v)));
+        }
+        json::obj(fields)
     }
 
     fn from_value(v: &Value) -> Option<VdiskRecord> {
@@ -722,6 +735,8 @@ impl VdiskRecord {
                 .get("legacy_bytes_per_template")
                 .and_then(Value::as_f64)
                 .unwrap_or(0.0),
+            journal_append_per_s: v.get("journal_append_per_s").and_then(Value::as_f64),
+            journal_replay_per_s: v.get("journal_replay_per_s").and_then(Value::as_f64),
         })
     }
 }
@@ -813,10 +828,24 @@ impl VdiskReport {
                     b.identities, b.dim, b.serial_mb_s
                 )),
                 Some(cur) => {
-                    for (what, got, base) in [
+                    let mut gated = vec![
                         ("serial", cur.serial_mb_s, b.serial_mb_s),
                         ("par4", cur.par4_mb_s, b.par4_mb_s),
-                    ] {
+                    ];
+                    // Journal columns gate only when both sides carry
+                    // them — baselines from pre-journal builds and
+                    // sweeps that skipped the journal pass stay green.
+                    if let (Some(got), Some(base)) =
+                        (cur.journal_append_per_s, b.journal_append_per_s)
+                    {
+                        gated.push(("journal-append", got, base));
+                    }
+                    if let (Some(got), Some(base)) =
+                        (cur.journal_replay_per_s, b.journal_replay_per_s)
+                    {
+                        gated.push(("journal-replay", got, base));
+                    }
+                    for (what, got, base) in gated {
                         let floor = base * (1.0 - tolerance);
                         if got < floor {
                             violations.push(format!(
@@ -1094,6 +1123,8 @@ mod tests {
             cache_hit_rate: 0.5,
             stream_bytes_per_template: 66.0,
             legacy_bytes_per_template: 1545.0,
+            journal_append_per_s: None,
+            journal_replay_per_s: None,
         }
     }
 
@@ -1128,5 +1159,43 @@ mod tests {
     #[test]
     fn malformed_vdisk_record_is_an_error() {
         assert!(VdiskReport::parse(r#"{"records": [{"identities": 10}]}"#).is_err());
+    }
+
+    #[test]
+    fn journal_columns_roundtrip_and_gate_only_when_both_sides_have_them() {
+        let with = |append: f64, replay: f64| {
+            let mut r = vdisk_record(10_000, 50.0, 100.0);
+            r.journal_append_per_s = Some(append);
+            r.journal_replay_per_s = Some(replay);
+            r
+        };
+        // Round trip preserves the optional columns (and their absence).
+        let mut rep = VdiskReport::new("j");
+        rep.push(with(40.0, 9_000.0));
+        rep.push(vdisk_record(100_000, 85.0, 290.0));
+        let back = VdiskReport::parse(&rep.to_json_pretty()).unwrap();
+        assert_eq!(back.records, rep.records);
+        assert_eq!(back.records[0].journal_append_per_s, Some(40.0));
+        assert_eq!(back.records[1].journal_append_per_s, None);
+
+        let mut baseline = VdiskReport::new("base");
+        baseline.push(with(40.0, 9_000.0));
+        // Current lacks the columns: read-path floors still gate, the
+        // journal ones are skipped rather than flagged missing.
+        let mut cur = VdiskReport::new("cur");
+        cur.push(vdisk_record(10_000, 50.0, 100.0));
+        assert!(cur.check_against(&baseline, 0.10).is_empty());
+        // Current carries them and regressed: gated.
+        let mut cur = VdiskReport::new("cur");
+        cur.push(with(20.0, 9_500.0)); // append -50%
+        let v = cur.check_against(&baseline, 0.10);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("journal-append"));
+        // Baseline lacks them (pre-journal): nothing to gate against.
+        let mut old_base = VdiskReport::new("base");
+        old_base.push(vdisk_record(10_000, 50.0, 100.0));
+        let mut cur = VdiskReport::new("cur");
+        cur.push(with(1.0, 1.0));
+        assert!(cur.check_against(&old_base, 0.10).is_empty());
     }
 }

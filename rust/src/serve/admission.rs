@@ -27,6 +27,10 @@ pub enum ShedReason {
     /// In-flight work was evicted more than once (repeat cartridge loss);
     /// requeue happens exactly once, a second eviction sheds.
     Evicted,
+    /// The durable enrollment journal could not accept the write-ahead
+    /// record: an Enroll is never acked without a synced frame, so it is
+    /// shed typed instead of completed volatile.
+    JournalStalled,
 }
 
 impl ShedReason {
@@ -36,6 +40,7 @@ impl ShedReason {
             ShedReason::QueueFull => "queue-full",
             ShedReason::Expired => "expired",
             ShedReason::Evicted => "evicted",
+            ShedReason::JournalStalled => "journal-stalled",
         }
     }
 }

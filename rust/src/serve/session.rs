@@ -60,7 +60,7 @@ use crate::device::{Cartridge, DeviceKind};
 use crate::obs::{EventKind, Stage, TraceId, TraceRecorder, TraceSnapshot};
 use crate::power::{PowerModel, PowerReport};
 use crate::util::rng::Rng;
-use crate::vdisk::{MountEvent, MountSupervisor};
+use crate::vdisk::{fold_records, EnrollJournal, JournalRecord, MountEvent, MountSupervisor};
 use crate::workload::video::VideoSource;
 
 use super::admission::{Admission, AdmissionController, ShedReason};
@@ -91,6 +91,49 @@ pub fn scan_pass_us(rows: usize, dim: usize, count: usize) -> u64 {
     fixed + per_probe * count.max(1) as u64
 }
 
+/// Widest `nprobe` for this pass: doubling up from [`DEFAULT_NPROBE`]
+/// while the widened pass still costs at most a quarter of the tightest
+/// deadline slack, capped at `nlist` (at which the tier's own fallback
+/// makes the search exact).  Never returns below the default, so the
+/// recall floor committed by the default probe width holds for every
+/// request ever served.
+pub fn boosted_nprobe(
+    tier: &IvfIndex,
+    dim: usize,
+    batch: usize,
+    overlay_rows: usize,
+    slack_us: u64,
+) -> usize {
+    let mut np = DEFAULT_NPROBE;
+    loop {
+        let next = np * 2;
+        if next > tier.nlist() {
+            break;
+        }
+        let cost = scan_pass_us(tier.expected_scan_rows(next) + overlay_rows, dim, batch);
+        if cost.saturating_mul(4) > slack_us {
+            break;
+        }
+        np = next;
+    }
+    np
+}
+
+/// Score-merge two ranked hit lists (mounted pass + overlay scan) into
+/// one top-k.  Row numbers keep their source index's numbering — the
+/// serve loop treats them as opaque; identity resolution goes through
+/// [`ServeSession::verify_replay`]'s merged rank-1 path.
+fn merge_hits(
+    mut a: Vec<(usize, f32)>,
+    b: Vec<(usize, f32)>,
+    k: usize,
+) -> Vec<(usize, f32)> {
+    a.extend(b);
+    a.sort_by(|x, y| y.1.total_cmp(&x.1));
+    a.truncate(k);
+    a
+}
+
 /// Serving-run configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -115,6 +158,11 @@ pub struct ServeConfig {
     pub image: Option<PathBuf>,
     /// Seal passphrase for `image`.
     pub image_key: String,
+    /// Durable enrollment journal (requires `image`).  Every acked
+    /// `Enroll` is sealed and synced to this file *before* the ack; at
+    /// session start, frames from a previous run (or crash) are replayed
+    /// into the overlay so the acked set survives a power cycle.
+    pub journal: Option<PathBuf>,
     /// Record a causal trace of the run (admission → queue → dispatch →
     /// bus grant → compute → unseal).  Off = the no-op recorder path; the
     /// outcome's reports are bit-identical either way.
@@ -135,6 +183,7 @@ impl ServeConfig {
             k: 10,
             image: None,
             image_key: "champ-dev-key".to_string(),
+            journal: None,
             trace: false,
         }
     }
@@ -172,6 +221,15 @@ pub struct ServeOutcome {
     /// Identify requests answered through the mounted ANN tier (0 when
     /// the image carries no IVF extent or the media is out).
     pub ann_served: u64,
+    /// Identify requests whose pass widened `nprobe` beyond the default
+    /// because every coalesced request had deadline headroom.
+    pub ann_boosted: u64,
+    /// Enrollments durably journaled before their ack (0 without a
+    /// journal configured).
+    pub journal_appends: u64,
+    /// Journal records recovered and replayed into the overlay at
+    /// session start (a previous run's acked enrollments).
+    pub journal_recovered: u64,
     /// Exactly-once terminal accounting held for every class.
     pub accounting_ok: bool,
     /// Mount lifecycle of the sealed gallery media (empty when serving
@@ -219,6 +277,12 @@ pub struct ServeSession {
     /// The mounted image's ANN tier, if it carries one; rides the same
     /// swap lifecycle as `mounted_index`.
     mounted_ivf: Option<Arc<IvfIndex>>,
+    /// Write-ahead enrollment journal: an `Enroll` acks only after its
+    /// sealed frame is synced here (None without [`ServeConfig::journal`]).
+    journal: Option<EnrollJournal>,
+    /// Records recovered from the journal at open (already folded into
+    /// the overlay), kept for [`ServeSession::verify_replay`].
+    recovered: Vec<JournalRecord>,
     match_res: Resource,
     flow: CreditFlow,
     adm: AdmissionController,
@@ -323,6 +387,28 @@ impl ServeSession {
             }
         }
 
+        // Durable enrollment journal: open (write-ahead, fail-closed on
+        // tamper), recover every acked frame from a previous run, and
+        // fold the recovered set into the overlay before any traffic —
+        // a power-cycled unit serves its acked enrollments immediately.
+        let mut journal = None;
+        let mut recovered: Vec<JournalRecord> = Vec::new();
+        if let Some(jpath) = &cfg.journal {
+            let img = mounts
+                .as_ref()
+                .and_then(|m| m.image(STORAGE_MEDIA_UID))
+                .ok_or_else(|| anyhow::anyhow!("--journal requires a mounted --image"))?;
+            let (j, recs) = EnrollJournal::open_for_image(
+                jpath,
+                &SealKey::from_passphrase(&cfg.image_key),
+                img.image_uid(),
+                img.manifest.compacted_from(),
+            )?;
+            fold_records(&recs, &mut index)?;
+            journal = Some(j);
+            recovered = recs;
+        }
+
         // Calibrate pipeline capacity with a real engine run at the same
         // batch/window, so "overload 1.0" means what the event-driven
         // engine actually sustains through its credit windows.
@@ -370,6 +456,8 @@ impl ServeSession {
             mounts,
             mounted_index,
             mounted_ivf,
+            journal,
+            recovered,
             match_res: Resource::new(),
             flow,
             adm,
@@ -397,6 +485,51 @@ impl ServeSession {
     /// Calibrated overload-1.0 offered rate, requests/s.
     pub fn capacity_rps(&self) -> f64 {
         self.capacity_rps
+    }
+
+    /// Journal records recovered (and folded into the overlay) at open.
+    pub fn recovered_count(&self) -> usize {
+        self.recovered.len()
+    }
+
+    /// Prove the replayed journal is actually serving: probe each
+    /// recovered record with its exact stored template through the same
+    /// two populations the identify path merges (mounted snapshot +
+    /// overlay) and require rank-1 identity agreement.  Returns the
+    /// number of records verified.
+    pub fn verify_replay(&self) -> anyhow::Result<usize> {
+        for r in &self.recovered {
+            let best = self
+                .identify_best(&r.template)
+                .ok_or_else(|| anyhow::anyhow!("no population to resolve {:?} against", r.id))?;
+            anyhow::ensure!(
+                best == r.id,
+                "recovered enrollment {:?} resolves to {best:?} after replay",
+                r.id
+            );
+        }
+        Ok(self.recovered.len())
+    }
+
+    /// Rank-1 identity across the mounted snapshot and the overlay.
+    fn identify_best(&self, probe: &[f32]) -> Option<String> {
+        let mut best: Option<(f32, String)> = None;
+        for idx in [Some(&self.index), self.mounted_index.as_deref()].into_iter().flatten() {
+            if idx.is_empty() {
+                continue;
+            }
+            for (row, score) in idx.top_k(probe, 1) {
+                if best.as_ref().map_or(true, |(s, _)| score > *s) {
+                    best = Some((score, idx.id_of(row).to_string()));
+                }
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    #[cfg(test)]
+    fn journal_mut(&mut self) -> Option<&mut EnrollJournal> {
+        self.journal.as_mut()
     }
 
     /// The index Identify resolves against: the mounted image's gallery
@@ -491,6 +624,7 @@ impl ServeSession {
                 ShedReason::QueueFull => 1,
                 ShedReason::Expired => 2,
                 ShedReason::Evicted => 3,
+                ShedReason::JournalStalled => 4,
             };
             self.obs.event(TraceId::request(req.id), EventKind::Shed, now, code, req.class as u64);
             self.queue_since.remove(&req.id);
@@ -529,7 +663,19 @@ impl ServeSession {
         for req in &b.reqs {
             if req.kind == RequestKind::Enroll {
                 let vec = self.embedding_for(req.id);
-                self.index.upsert(format!("enrolled-{}", req.id), &vec);
+                let eid = format!("enrolled-{}", req.id);
+                // Write-ahead: the sealed frame must be durable before
+                // the ack.  A journal that cannot take the write sheds
+                // typed — never an ack the next mount cannot reproduce.
+                if let Some(j) = self.journal.as_mut() {
+                    if j.append(&eid, &vec).is_err() {
+                        self.o.reg.count("serve.journal_stalled", 1);
+                        self.record_shed(req, ShedReason::JournalStalled, now);
+                        continue;
+                    }
+                    self.o.reg.count("serve.journal_appends", 1);
+                }
+                self.index.upsert(eid, &vec);
             }
             self.record_completed(req, now);
         }
@@ -707,13 +853,16 @@ impl ServeSession {
         let rows = self.active_index().len();
         // The ANN tier makes a pass sub-linear: its virtual cost is the
         // rows a routed search actually touches (centroid scan + probed
-        // lists) instead of the whole gallery.
+        // lists) instead of the whole gallery.  Overlay rows (enrollments
+        // journaled but not yet compacted into the image) ride the same
+        // pass as an exact scan, so they are charged on top.
         let ivf = self.ann_tier();
-        let cost_rows = ivf.as_ref().map_or(rows, |t| t.expected_scan_rows(DEFAULT_NPROBE));
+        let overlay = if self.mounted_index.is_some() { self.index.len() } else { 0 };
+        let base_rows = ivf.as_ref().map_or(rows, |t| t.expected_scan_rows(DEFAULT_NPROBE));
         // Dispatch guard at the max coalesced batch size (like the
         // pipeline's): the pass the request actually rides may carry up
         // to `batch` probes, and the guard must cover that completion.
-        let est = scan_pass_us(cost_rows, self.cfg.dim, self.cfg.batch as usize);
+        let est = scan_pass_us(base_rows + overlay, self.cfg.dim, self.cfg.batch as usize);
         let mut expired = Vec::new();
         let mut reqs: Vec<Request> = Vec::new();
         while reqs.len() < self.cfg.batch as usize {
@@ -728,22 +877,47 @@ impl ServeSession {
         if reqs.is_empty() {
             return;
         }
+        // Adaptive nprobe: when the tightest deadline in the coalesced
+        // batch leaves headroom, widen the probed lists (recall only goes
+        // up — the default floor is the minimum ever probed), capped at
+        // `nlist` where the tier's own fallback makes the pass exact.
+        let mut nprobe = DEFAULT_NPROBE;
+        if let Some(tier) = &ivf {
+            let slack =
+                reqs.iter().map(|r| r.deadline_us.saturating_sub(now)).min().unwrap_or(0);
+            nprobe = boosted_nprobe(tier, self.cfg.dim, reqs.len(), overlay, slack);
+            if nprobe > DEFAULT_NPROBE {
+                self.o.reg.count("serve.ann_nprobe_boosted", reqs.len() as u64);
+            }
+        }
+        let cost_rows = ivf.as_ref().map_or(rows, |t| t.expected_scan_rows(nprobe)) + overlay;
         // The actual engine call: the ANN tier routes each probe through
         // its lists (exact re-rank, exact fallback inside `search`);
         // otherwise one exact pass scores the whole batch.
         let probes: Vec<Vec<f32>> = reqs.iter().map(|r| self.probe_for(r.id)).collect();
         let refs: Vec<&[f32]> = probes.iter().map(|p| p.as_slice()).collect();
-        let hits = match &ivf {
+        let hits: Vec<Vec<(usize, f32)>> = match &ivf {
             Some(tier) => {
                 let idx = self.active_index();
-                refs.iter().map(|p| tier.search(idx, p, self.cfg.k, DEFAULT_NPROBE)).collect()
+                refs.iter().map(|p| tier.search(idx, p, self.cfg.k, nprobe)).collect()
             }
             None => self.active_index().top_k_batch(&refs, self.cfg.k),
+        };
+        // Journal-only identities live in the overlay until compaction
+        // folds them into the image: merge an exact overlay scan into
+        // every mounted pass so they identify immediately.
+        let hits: Vec<Vec<(usize, f32)>> = if overlay > 0 {
+            hits.into_iter()
+                .zip(&refs)
+                .map(|(h, p)| merge_hits(h, self.index.top_k(p, self.cfg.k), self.cfg.k))
+                .collect()
+        } else {
+            hits
         };
         debug_assert_eq!(hits.len(), reqs.len());
         // A mid-swap fallback index can legitimately be empty: zero-hit
         // identifies still complete (and account) normally.
-        debug_assert!(rows == 0 || hits.iter().all(|h| !h.is_empty()));
+        debug_assert!(rows + overlay == 0 || hits.iter().all(|h| !h.is_empty()));
         if ivf.is_some() {
             self.o.reg.count("serve.ann_served", reqs.len() as u64);
         }
@@ -952,6 +1126,9 @@ impl ServeSession {
             capacity_rps: self.capacity_rps,
             offered_rps: self.offered_rps,
             ann_served: self.o.reg.counter_value("serve.ann_served"),
+            ann_boosted: self.o.reg.counter_value("serve.ann_nprobe_boosted"),
+            journal_appends: self.o.reg.counter_value("serve.journal_appends"),
+            journal_recovered: self.recovered.len() as u64,
             accounting_ok: self.slo.accounting_holds(),
             media_events: self.mounts.map(|m| m.events).unwrap_or_default(),
             trace,
@@ -1013,7 +1190,13 @@ mod tests {
         let typed: u64 = out
             .classes
             .iter()
-            .map(|c| c.shed_rate_limited + c.shed_queue_full + c.shed_expired + c.shed_evicted)
+            .map(|c| {
+                c.shed_rate_limited
+                    + c.shed_queue_full
+                    + c.shed_expired
+                    + c.shed_evicted
+                    + c.shed_journal_stalled
+            })
             .sum();
         assert_eq!(typed, out.shed);
     }
@@ -1198,6 +1381,135 @@ mod tests {
             "post-detach identifies must not count as ANN-served"
         );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- durable enrollment journal -------------------------------------
+
+    fn enrolls_of(out: &ServeOutcome) -> u64 {
+        out.classes
+            .iter()
+            .filter(|c| c.kind == RequestKind::Enroll)
+            .map(|c| c.completed)
+            .sum()
+    }
+
+    #[test]
+    fn enrollments_survive_a_power_cycle_through_the_journal() {
+        let path = packed_image("jrnl", 256, 32, "serve-media-key");
+        let jpath = path.with_file_name("enroll.cjl");
+        let mut cfg = image_cfg(path, 150);
+        cfg.journal = Some(jpath.clone());
+
+        let out = ServeSession::new(cfg.clone()).unwrap().run(vec![]);
+        assert!(out.accounting_ok);
+        let enrolled = enrolls_of(&out);
+        assert!(enrolled > 0, "profile must complete some enrollments");
+        assert_eq!(out.journal_appends, enrolled, "every ack needs a durable frame");
+        assert_eq!(out.journal_recovered, 0, "first boot recovers nothing");
+
+        // "Power cycle": a fresh session over the same media + journal
+        // recovers exactly the acked set, and every recovered identity
+        // resolves rank-1 through the merged identify path.
+        let s2 = ServeSession::new(cfg.clone()).unwrap();
+        assert_eq!(s2.recovered_count() as u64, enrolled);
+        assert_eq!(s2.verify_replay().unwrap() as u64, enrolled);
+        let out2 = s2.run(vec![]);
+        assert!(out2.accounting_ok);
+        assert_eq!(out2.journal_recovered, enrolled);
+
+        // Third boot: the journal holds both runs' acked enrollments.
+        let s3 = ServeSession::new(cfg).unwrap();
+        assert_eq!(s3.recovered_count() as u64, enrolled + enrolls_of(&out2));
+        assert_eq!(s3.verify_replay().unwrap(), s3.recovered_count());
+    }
+
+    #[test]
+    fn journal_stall_sheds_typed_instead_of_acking_volatile() {
+        let path = packed_image("stall", 256, 32, "serve-media-key");
+        let jpath = path.with_file_name("stall.cjl");
+        let mut cfg = image_cfg(path, 150);
+        cfg.journal = Some(jpath);
+
+        let mut s = ServeSession::new(cfg.clone()).unwrap();
+        s.journal_mut().unwrap().fail_next_appends(u32::MAX);
+        let out = s.run(vec![]);
+        assert!(out.accounting_ok, "stalls must stay exactly-once accounted");
+        assert_eq!(out.journal_appends, 0);
+        assert_eq!(enrolls_of(&out), 0, "no ack without a durable frame");
+        let stalled: u64 = out.classes.iter().map(|c| c.shed_journal_stalled).sum();
+        assert!(stalled > 0, "enrolls must shed typed while the journal is down");
+
+        // The next boot sees an empty journal: nothing was ever acked,
+        // so nothing may be recovered.
+        let s2 = ServeSession::new(cfg).unwrap();
+        assert_eq!(s2.recovered_count(), 0);
+    }
+
+    #[test]
+    fn journal_without_image_is_rejected() {
+        let mut cfg = small_cfg(MissionProfile::checkpoint(), 1.0, 50);
+        cfg.journal = Some(std::env::temp_dir().join("champ-no-image.cjl"));
+        let e = ServeSession::new(cfg).unwrap_err().to_string();
+        assert!(e.contains("requires a mounted --image"), "{e}");
+    }
+
+    // ---- adaptive nprobe ------------------------------------------------
+
+    fn ann_image(tag: &str) -> std::path::PathBuf {
+        use crate::biometric::gallery::Gallery;
+        use crate::biometric::ivf::{clustered_index, IvfIndex, IvfParams};
+        use crate::vdisk::ImageBuilder;
+        let dir =
+            std::env::temp_dir().join(format!("champ-servnp-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(83);
+        let idx = clustered_index(&mut rng, 800, 32, 28, 0.5);
+        let ivf = IvfIndex::train(&idx, &IvfParams::default());
+        assert!(!ivf.is_degenerate());
+        let path = dir.join("np-media.vdisk");
+        ImageBuilder::new("np-serve")
+            .gallery(&Gallery::from_index(idx))
+            .ivf(ivf.encode())
+            .block_size(512)
+            .write(&path, &SealKey::from_passphrase("serve-media-key"))
+            .unwrap();
+        path
+    }
+
+    #[test]
+    fn boosted_nprobe_never_drops_below_the_floor_and_caps_at_nlist() {
+        use crate::biometric::ivf::{clustered_index, IvfIndex, IvfParams};
+        let mut rng = Rng::new(91);
+        let idx = clustered_index(&mut rng, 800, 32, 28, 0.5);
+        let tier = IvfIndex::train(&idx, &IvfParams::default());
+        assert!(tier.nlist() > DEFAULT_NPROBE);
+        // No slack: the committed default, never narrower.
+        assert_eq!(boosted_nprobe(&tier, 32, 2, 0, 0), DEFAULT_NPROBE);
+        // Unbounded slack: widened, but never past nlist.
+        let wide = boosted_nprobe(&tier, 32, 2, 0, u64::MAX);
+        assert!(wide > DEFAULT_NPROBE, "headroom must widen the probe");
+        assert!(wide <= tier.nlist());
+        // Monotone in slack, floored at the default everywhere.
+        let mut prev = 0usize;
+        for slack in [0u64, 1_000, 10_000, 100_000, 10_000_000] {
+            let np = boosted_nprobe(&tier, 32, 2, 0, slack);
+            assert!(np >= DEFAULT_NPROBE && np >= prev, "slack {slack}: {np}");
+            prev = np;
+        }
+    }
+
+    #[test]
+    fn deadline_headroom_widens_the_ann_probe() {
+        let path = ann_image("boost");
+        let mut cfg = image_cfg(path, 100);
+        cfg.overload = 0.25;
+        let out = ServeSession::new(cfg).unwrap().run(vec![]);
+        assert!(out.accounting_ok);
+        assert!(out.ann_served > 0);
+        assert!(
+            out.ann_boosted > 0,
+            "underloaded identify with 250ms+ deadlines must widen nprobe"
+        );
     }
 
     #[test]

@@ -32,13 +32,18 @@ pub struct ClassSlo {
     pub shed_queue_full: u64,
     pub shed_expired: u64,
     pub shed_evicted: u64,
+    pub shed_journal_stalled: u64,
     /// Completion latencies (arrival → completion), virtual us.
     pub lat_us: Vec<u64>,
 }
 
 impl ClassSlo {
     pub fn shed_total(&self) -> u64 {
-        self.shed_rate_limited + self.shed_queue_full + self.shed_expired + self.shed_evicted
+        self.shed_rate_limited
+            + self.shed_queue_full
+            + self.shed_expired
+            + self.shed_evicted
+            + self.shed_journal_stalled
     }
 }
 
@@ -57,6 +62,7 @@ pub struct ClassOutcome {
     pub shed_queue_full: u64,
     pub shed_expired: u64,
     pub shed_evicted: u64,
+    pub shed_journal_stalled: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     /// On-time completions per second over the serving horizon.
@@ -181,6 +187,7 @@ impl SloTracker {
             ShedReason::QueueFull => c.shed_queue_full += 1,
             ShedReason::Expired => c.shed_expired += 1,
             ShedReason::Evicted => c.shed_evicted += 1,
+            ShedReason::JournalStalled => c.shed_journal_stalled += 1,
         });
     }
 
@@ -241,6 +248,7 @@ impl SloTracker {
                     shed_queue_full: c.shed_queue_full,
                     shed_expired: c.shed_expired,
                     shed_evicted: c.shed_evicted,
+                    shed_journal_stalled: c.shed_journal_stalled,
                     p50_us: percentile(&lat, 50.0),
                     p99_us: percentile(&lat, 99.0),
                     goodput_rps: c.on_time as f64 / elapsed_s,

@@ -45,6 +45,7 @@ pub struct ImageBuilder {
     caps: Vec<CapabilityId>,
     gallery_dim: u32,
     extents: Vec<(String, ExtentKind, Vec<u8>)>,
+    compacted_from: Option<(u64, u64)>,
 }
 
 impl ImageBuilder {
@@ -55,6 +56,7 @@ impl ImageBuilder {
             caps: Vec::new(),
             gallery_dim: 0,
             extents: Vec::new(),
+            compacted_from: None,
         }
     }
 
@@ -96,6 +98,14 @@ impl ImageBuilder {
     /// Add uninterpreted bytes.
     pub fn blob(mut self, name: &str, bytes: Vec<u8>) -> Self {
         self.extents.push((name.to_string(), ExtentKind::Blob, bytes));
+        self
+    }
+
+    /// Stamp compaction provenance into the manifest: this image folds
+    /// `frames` journal frames over the gallery of image `uid`.  Lets a
+    /// later mount rebind a journal the compactor crashed before resetting.
+    pub fn compacted_from(mut self, uid: u64, frames: u64) -> Self {
+        self.compacted_from = Some((uid, frames));
         self
     }
 
@@ -155,6 +165,8 @@ impl ImageBuilder {
             caps: self.caps.iter().map(|c| c.name().to_string()).collect(),
             gallery_dim: self.gallery_dim,
             extents: metas.clone(),
+            compacted_from_uid: self.compacted_from.map(|(uid, _)| uid),
+            compacted_frames: self.compacted_from.map(|(_, frames)| frames),
         };
         let manifest_plain = manifest.to_json().to_json_pretty();
         let sealed_manifest =

@@ -1,0 +1,620 @@
+//! The sealed enrollment delta-journal: crash-safe write-ahead persistence
+//! for `serve --image` enrollments (DESIGN.md §Writable cartridges).
+//!
+//! A cartridge image is read-only after `pack`; live enrollments used to
+//! exist only in the serve session's memory overlay and died on power-off.
+//! The journal is an append-only sidecar file next to the image: each
+//! acked `Enroll` is one self-authenticating frame, sealed under a
+//! per-frame subkey of the image key, appended with write-ahead semantics
+//! — [`EnrollJournal::append`] returns only after the frame bytes are
+//! synced to stable storage, and the serve session acks the request only
+//! after `append` returns.
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! +------------------------------+ 0
+//! | file header (24 B)           |  magic "CHAMPCJL" | u32 version |
+//! +------------------------------+  u32 reserved | u64 image_uid
+//! | frame 0                      |  header (24 B): magic "CJL1" |
+//! | frame 1                      |    u64 seq | u64 nonce | u32 len
+//! | ...                          |  sealed payload: ct[len] || tag[32]
+//! +------------------------------+
+//! ```
+//!
+//! The frame payload is one gallery wire record
+//! (`[u32 id_len][id][dim × f32 LE]`), sealed under
+//! `key.subkey("vdisk/{image_uid}/journal/{seq}/{nonce:016x}")` — the
+//! tweak binds every frame to its image, its position, and its content,
+//! so splicing frames between journals or reordering them fails the MAC.
+//! The nonce is the first 8 bytes of SHA-256(payload): a torn append that
+//! is later retried with the *same* record re-derives the same subkey and
+//! produces bit-identical ciphertext (no keystream reuse hazard), while a
+//! different record lands under an unrelated keystream.
+//!
+//! ## Torn-tail policy (mirrors the image trailer)
+//!
+//! An append is a single `write_all` + `sync_data`; a crash or media yank
+//! mid-append therefore leaves a *prefix* of the final frame.  On open:
+//!
+//! * fewer than 24 trailing bytes → torn frame header: truncated;
+//! * full header but the sealed payload is short → torn body/MAC:
+//!   truncated;
+//! * anything else that fails verification (bad frame magic with a full
+//!   header present, out-of-order seq, MAC failure, nonce mismatch) can
+//!   never result from a torn prefix — it is tampering, and the open
+//!   fails closed with [`VdiskError::Tamper`].
+//!
+//! Nothing acked is ever truncated (acked ⇒ synced ⇒ complete frame);
+//! nothing torn is ever replayed (a partial frame was never acked).
+//! Replay folds records through [`GalleryIndex::upsert`] in seq order —
+//! last-wins, so double replay is bit-identical (idempotent).
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use sha2::{Digest, Sha256};
+
+use crate::biometric::index::GalleryIndex;
+use crate::crypto::seal::{SealKey, TAG_LEN};
+
+use super::{journal_tweak, VdiskError};
+
+/// Journal file magic.
+pub const JOURNAL_MAGIC: [u8; 8] = *b"CHAMPCJL";
+/// Journal format revision.
+pub const JOURNAL_VERSION: u32 = 1;
+/// File header: magic(8) + version(4) + reserved(4) + image_uid(8).
+const FILE_HDR_LEN: usize = 24;
+/// Frame header: magic(4) + seq(8) + nonce(8) + payload_len(4).
+const FRAME_HDR_LEN: usize = 24;
+const FRAME_MAGIC: [u8; 4] = *b"CJL1";
+/// Upper bound on one sealed record (a 4 KiB id + a 64k-dim template is
+/// far inside this); anything larger is structural corruption.
+const MAX_PAYLOAD: usize = 1 << 24;
+/// Ids longer than this are structural corruption, not data.
+const MAX_ID_LEN: usize = 4096;
+
+/// One recovered journal entry, in ack order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalRecord {
+    pub seq: u64,
+    pub id: String,
+    pub template: Vec<f32>,
+}
+
+/// The append handle + recovery scanner for one journal file.
+pub struct EnrollJournal {
+    path: PathBuf,
+    key: SealKey,
+    image_uid: u64,
+    next_seq: u64,
+    file: File,
+    #[cfg(test)]
+    fail_appends: u32,
+}
+
+impl std::fmt::Debug for EnrollJournal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EnrollJournal")
+            .field("path", &self.path)
+            .field("image_uid", &self.image_uid)
+            .field("next_seq", &self.next_seq)
+            .finish()
+    }
+}
+
+fn file_header(image_uid: u64) -> [u8; FILE_HDR_LEN] {
+    let mut h = [0u8; FILE_HDR_LEN];
+    h[..8].copy_from_slice(&JOURNAL_MAGIC);
+    h[8..12].copy_from_slice(&JOURNAL_VERSION.to_le_bytes());
+    h[16..24].copy_from_slice(&image_uid.to_le_bytes());
+    h
+}
+
+/// Content nonce: first 8 bytes of SHA-256(payload), little-endian.
+fn payload_nonce(payload: &[u8]) -> u64 {
+    let mut h = Sha256::new();
+    h.update(b"champ-journal-nonce-v1");
+    h.update(payload);
+    let d = h.finalize();
+    u64::from_le_bytes(d[..8].try_into().unwrap())
+}
+
+/// One gallery wire record: `[u32 id_len][id][dim × f32 LE]`.
+fn encode_payload(id: &str, template: &[f32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(4 + id.len() + template.len() * 4);
+    p.extend_from_slice(&(id.len() as u32).to_le_bytes());
+    p.extend_from_slice(id.as_bytes());
+    for v in template {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p
+}
+
+fn decode_payload(p: &[u8]) -> Result<(String, Vec<f32>), VdiskError> {
+    let corrupt = |why: &str| VdiskError::Corrupt(format!("journal record: {why}"));
+    if p.len() < 4 {
+        return Err(corrupt("shorter than the id header"));
+    }
+    let id_len = u32::from_le_bytes(p[..4].try_into().unwrap()) as usize;
+    if id_len > MAX_ID_LEN {
+        return Err(corrupt("id length out of range"));
+    }
+    if p.len() < 4 + id_len {
+        return Err(corrupt("truncated id"));
+    }
+    let id = std::str::from_utf8(&p[4..4 + id_len])
+        .map_err(|_| corrupt("id is not utf-8"))?
+        .to_string();
+    let rest = &p[4 + id_len..];
+    if rest.is_empty() || rest.len() % 4 != 0 {
+        return Err(corrupt("template bytes not a whole f32 vector"));
+    }
+    let template = rest.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+    Ok((id, template))
+}
+
+/// Build one complete sealed frame (header + ciphertext + tag).
+fn seal_frame(key: &SealKey, image_uid: u64, seq: u64, payload: &[u8]) -> Vec<u8> {
+    let nonce = payload_nonce(payload);
+    let sealed = key.subkey(&journal_tweak(image_uid, seq, nonce)).seal(payload);
+    let mut frame = Vec::with_capacity(FRAME_HDR_LEN + sealed.len());
+    frame.extend_from_slice(&FRAME_MAGIC);
+    frame.extend_from_slice(&seq.to_le_bytes());
+    frame.extend_from_slice(&nonce.to_le_bytes());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&sealed);
+    frame
+}
+
+/// Scan every frame after the file header.  Returns the recovered records
+/// plus the byte length of the valid prefix (torn tail excluded).  Any
+/// failure a torn prefix cannot explain fails closed.
+fn scan_frames(
+    key: &SealKey,
+    image_uid: u64,
+    bytes: &[u8],
+) -> Result<(Vec<JournalRecord>, u64), VdiskError> {
+    let fac = key.subkey_factory();
+    let mut off = FILE_HDR_LEN.min(bytes.len());
+    let mut seq = 0u64;
+    let mut recs = Vec::new();
+    while off < bytes.len() {
+        let rem = bytes.len() - off;
+        if rem < FRAME_HDR_LEN {
+            break; // torn frame header: never acked, truncate
+        }
+        let hdr = &bytes[off..off + FRAME_HDR_LEN];
+        // A torn append leaves a *prefix*: with >= 24 bytes present, the
+        // whole header of a legitimate frame is present and valid.  A
+        // mismatch here is tampering, not tearing.
+        if hdr[..4] != FRAME_MAGIC {
+            return Err(VdiskError::Tamper("journal frame magic"));
+        }
+        let fseq = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+        let nonce = u64::from_le_bytes(hdr[12..20].try_into().unwrap());
+        let plen = u32::from_le_bytes(hdr[20..24].try_into().unwrap()) as usize;
+        if fseq != seq {
+            return Err(VdiskError::Tamper("journal frame sequence"));
+        }
+        if plen == 0 || plen > MAX_PAYLOAD {
+            return Err(VdiskError::Corrupt(format!("journal frame payload length {plen}")));
+        }
+        let frame_len = FRAME_HDR_LEN + plen + TAG_LEN;
+        if rem < frame_len {
+            break; // torn body or torn MAC: never acked, truncate
+        }
+        let sealed = &bytes[off + FRAME_HDR_LEN..off + frame_len];
+        let sub = fac.derive(&journal_tweak(image_uid, fseq, nonce));
+        let payload = sub.unseal(sealed).map_err(|_| VdiskError::Tamper("journal frame"))?;
+        if payload_nonce(&payload) != nonce {
+            return Err(VdiskError::Tamper("journal frame nonce"));
+        }
+        let (id, template) = decode_payload(&payload)?;
+        recs.push(JournalRecord { seq: fseq, id, template });
+        off += frame_len;
+        seq += 1;
+    }
+    Ok((recs, off as u64))
+}
+
+/// Parse + validate the 24-byte file header; returns the bound image uid.
+fn parse_header(bytes: &[u8]) -> Result<u64, VdiskError> {
+    debug_assert!(bytes.len() >= FILE_HDR_LEN);
+    if bytes[..8] != JOURNAL_MAGIC {
+        return Err(VdiskError::BadMagic);
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != JOURNAL_VERSION {
+        return Err(VdiskError::UnsupportedVersion(version));
+    }
+    Ok(u64::from_le_bytes(bytes[16..24].try_into().unwrap()))
+}
+
+impl EnrollJournal {
+    /// Open (or create) the journal bound to image `image_uid`, recovering
+    /// every acked record and truncating a torn tail in place.
+    ///
+    /// `compacted_from` is the mounted image's provenance (manifest
+    /// `compacted_from_uid` / `compacted_frames`): a journal still bound
+    /// to the *pre-compaction* uid is recognized, its already-folded
+    /// prefix is dropped, any frames acked after the compaction snapshot
+    /// are carried over, and the file is rebound to the new image — this
+    /// closes the crash window between "new image published" and "journal
+    /// reset".
+    pub fn open_for_image(
+        path: &Path,
+        key: &SealKey,
+        image_uid: u64,
+        compacted_from: Option<(u64, u64)>,
+    ) -> Result<(Self, Vec<JournalRecord>), VdiskError> {
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(false).open(path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+
+        // A torn *file header* means no append was ever acked (the header
+        // is synced before the first append can return): safe to reinit.
+        if bytes.len() < FILE_HDR_LEN {
+            return Self::reinit(path, file, key, image_uid);
+        }
+        let bound_uid = parse_header(&bytes)?;
+        if bound_uid == image_uid {
+            let (recs, valid_len) = scan_frames(key, image_uid, &bytes)?;
+            if valid_len < bytes.len() as u64 {
+                file.set_len(valid_len)?;
+                file.sync_data()?;
+            }
+            let j = EnrollJournal {
+                path: path.to_path_buf(),
+                key: key.clone(),
+                image_uid,
+                next_seq: recs.len() as u64,
+                file,
+                #[cfg(test)]
+                fail_appends: 0,
+            };
+            return Ok((j, recs));
+        }
+        if let Some((old_uid, folded)) = compacted_from {
+            if bound_uid == old_uid {
+                // Stale journal from before the compaction that produced
+                // this image: the first `folded` frames are already in the
+                // base gallery; anything after them was acked post-snapshot
+                // and must be carried into the rebound journal.
+                let (recs, _) = scan_frames(key, old_uid, &bytes)?;
+                let tail: Vec<JournalRecord> =
+                    recs.into_iter().filter(|r| r.seq >= folded).collect();
+                let (mut j, _) = Self::reinit(path, file, key, image_uid)?;
+                let mut rebound = Vec::with_capacity(tail.len());
+                for r in &tail {
+                    let seq = j.append(&r.id, &r.template)?;
+                    rebound.push(JournalRecord { seq, id: r.id.clone(), template: r.template.clone() });
+                }
+                return Ok((j, rebound));
+            }
+        }
+        Err(VdiskError::Corrupt(format!(
+            "journal is bound to image uid {bound_uid:#x}, not {image_uid:#x}"
+        )))
+    }
+
+    fn reinit(
+        path: &Path,
+        mut file: File,
+        key: &SealKey,
+        image_uid: u64,
+    ) -> Result<(Self, Vec<JournalRecord>), VdiskError> {
+        file.set_len(0)?;
+        file.write_all(&file_header(image_uid))?;
+        file.sync_data()?;
+        Ok((
+            EnrollJournal {
+                path: path.to_path_buf(),
+                key: key.clone(),
+                image_uid,
+                next_seq: 0,
+                file,
+                #[cfg(test)]
+                fail_appends: 0,
+            },
+            Vec::new(),
+        ))
+    }
+
+    /// Write-ahead append: the record is on stable storage when this
+    /// returns `Ok` — the caller may ack.  On `Err` nothing may be acked
+    /// (the frame is at worst a torn tail the next open truncates).
+    pub fn append(&mut self, id: &str, template: &[f32]) -> Result<u64, VdiskError> {
+        #[cfg(test)]
+        if self.fail_appends > 0 {
+            self.fail_appends -= 1;
+            return Err(VdiskError::Io(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "injected journal append failure",
+            )));
+        }
+        let payload = encode_payload(id, template);
+        let frame = seal_frame(&self.key, self.image_uid, self.next_seq, &payload);
+        self.file.write_all(&frame)?;
+        self.file.sync_data()?;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        Ok(seq)
+    }
+
+    /// Rebind the journal to a freshly compacted image: truncate every
+    /// folded frame and stamp the new uid.  Called only after the new
+    /// image's trailer MAC is durable (the compactor's publish step).
+    pub fn reset(&mut self, new_image_uid: u64) -> Result<(), VdiskError> {
+        self.file.set_len(0)?;
+        self.file.write_all(&file_header(new_image_uid))?;
+        self.file.sync_data()?;
+        self.image_uid = new_image_uid;
+        self.next_seq = 0;
+        Ok(())
+    }
+
+    /// Frames acked so far (recovered + appended this session).
+    pub fn frames(&self) -> u64 {
+        self.next_seq
+    }
+
+    pub fn image_uid(&self) -> u64 {
+        self.image_uid
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read-only recovery scan: every acked record, torn tail tolerated
+    /// (ignored, not truncated — the media may be mounted read-only).
+    /// A missing or header-only file is a valid empty journal.  Tampering
+    /// fails closed.  `compacted_from` behaves as in
+    /// [`EnrollJournal::open_for_image`]: a stale pre-compaction journal
+    /// yields only the frames acked after the compaction snapshot.
+    pub fn replay(
+        path: &Path,
+        key: &SealKey,
+        image_uid: u64,
+        compacted_from: Option<(u64, u64)>,
+    ) -> Result<Vec<JournalRecord>, VdiskError> {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e.into()),
+        };
+        if bytes.len() < FILE_HDR_LEN {
+            return Ok(Vec::new());
+        }
+        let bound_uid = parse_header(&bytes)?;
+        if bound_uid == image_uid {
+            return scan_frames(key, image_uid, &bytes).map(|(recs, _)| recs);
+        }
+        if let Some((old_uid, folded)) = compacted_from {
+            if bound_uid == old_uid {
+                let (recs, _) = scan_frames(key, old_uid, &bytes)?;
+                return Ok(recs.into_iter().filter(|r| r.seq >= folded).collect());
+            }
+        }
+        Err(VdiskError::Corrupt(format!(
+            "journal is bound to image uid {bound_uid:#x}, not {image_uid:#x}"
+        )))
+    }
+
+    /// Make the next `n` appends fail with an io error (without touching
+    /// the file), for deterministic journal-stalled shedding tests.
+    #[cfg(test)]
+    pub(crate) fn fail_next_appends(&mut self, n: u32) {
+        self.fail_appends = n;
+    }
+}
+
+/// Fold recovered records into a gallery index in ack order.  `upsert` is
+/// last-wins, so folding twice is bit-identical to folding once.
+pub fn fold_records(records: &[JournalRecord], index: &mut GalleryIndex) -> Result<usize, VdiskError> {
+    for r in records {
+        if r.template.len() != index.dim() {
+            return Err(VdiskError::Corrupt(format!(
+                "journal record {:?} has dim {}, gallery has {}",
+                r.id,
+                r.template.len(),
+                index.dim()
+            )));
+        }
+        index.upsert(r.id.clone(), &r.template);
+    }
+    Ok(records.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("champ-journal-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("serve.cjl")
+    }
+
+    fn key() -> SealKey {
+        SealKey::from_passphrase("journal-test-key")
+    }
+
+    fn rec(i: u64, dim: usize) -> (String, Vec<f32>) {
+        (format!("enrolled-{i}"), (0..dim).map(|d| (i as f32) + d as f32 * 0.25).collect())
+    }
+
+    #[test]
+    fn append_then_reopen_recovers_every_record() {
+        let path = tmp("roundtrip");
+        let (mut j, recovered) = EnrollJournal::open_for_image(&path, &key(), 7, None).unwrap();
+        assert!(recovered.is_empty());
+        for i in 0..5 {
+            let (id, t) = rec(i, 8);
+            assert_eq!(j.append(&id, &t).unwrap(), i);
+        }
+        drop(j);
+        let (j, recovered) = EnrollJournal::open_for_image(&path, &key(), 7, None).unwrap();
+        assert_eq!(j.frames(), 5);
+        assert_eq!(recovered.len(), 5);
+        for (i, r) in recovered.iter().enumerate() {
+            let (id, t) = rec(i as u64, 8);
+            assert_eq!((r.seq, &r.id, &r.template), (i as u64, &id, &t));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_earlier_records_survive() {
+        let path = tmp("torn");
+        let (mut j, _) = EnrollJournal::open_for_image(&path, &key(), 9, None).unwrap();
+        for i in 0..4 {
+            let (id, t) = rec(i, 6);
+            j.append(&id, &t).unwrap();
+        }
+        drop(j);
+        let full = std::fs::metadata(&path).unwrap().len();
+        // Simulate a yank mid-append at every cut depth of a fifth frame.
+        let frame = seal_frame(&key(), 9, 4, &encode_payload("enrolled-4", &[1.0; 6]));
+        for cut in [1, FRAME_HDR_LEN - 1, FRAME_HDR_LEN, FRAME_HDR_LEN + 3, frame.len() - 1] {
+            let mut bytes = std::fs::read(&path).unwrap();
+            bytes.extend_from_slice(&frame[..cut]);
+            std::fs::write(&path, &bytes).unwrap();
+            let (jj, recovered) = EnrollJournal::open_for_image(&path, &key(), 9, None).unwrap();
+            assert_eq!(recovered.len(), 4, "cut {cut}: acked prefix must survive");
+            assert_eq!(jj.frames(), 4);
+            drop(jj);
+            assert_eq!(std::fs::metadata(&path).unwrap().len(), full, "cut {cut}: tail truncated");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn every_interior_bit_flip_fails_closed() {
+        let path = tmp("flip");
+        let (mut j, _) = EnrollJournal::open_for_image(&path, &key(), 3, None).unwrap();
+        j.append("enrolled-0", &[0.5; 4]).unwrap();
+        j.append("enrolled-1", &[0.25; 4]).unwrap();
+        drop(j);
+        let good = std::fs::read(&path).unwrap();
+        // Flips inside the frame region (past the plaintext file header)
+        // must all be rejected — header flips are exercised separately.
+        for i in FILE_HDR_LEN..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 1;
+            std::fs::write(&path, &bad).unwrap();
+            let r = EnrollJournal::replay(&path, &key(), 3, None);
+            match r {
+                Err(e) => assert!(
+                    e.is_integrity_failure() || matches!(e, VdiskError::Corrupt(_)),
+                    "byte {i}: wrong error class {e}"
+                ),
+                Ok(recs) => panic!("byte {i}: flip accepted, {} records", recs.len()),
+            }
+        }
+        std::fs::write(&path, &good).unwrap();
+        assert_eq!(EnrollJournal::replay(&path, &key(), 3, None).unwrap().len(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fold_is_idempotent() {
+        let path = tmp("fold");
+        let (mut j, _) = EnrollJournal::open_for_image(&path, &key(), 1, None).unwrap();
+        for i in 0..6 {
+            let (id, t) = rec(i, 8);
+            j.append(&id, &t).unwrap();
+        }
+        // A re-enroll of the same id: last write must win.
+        j.append("enrolled-2", &[9.0; 8]).unwrap();
+        drop(j);
+        let recs = EnrollJournal::replay(&path, &key(), 1, None).unwrap();
+        let mut once = GalleryIndex::with_capacity(8, 8);
+        fold_records(&recs, &mut once).unwrap();
+        let mut twice = GalleryIndex::with_capacity(8, 8);
+        fold_records(&recs, &mut twice).unwrap();
+        fold_records(&recs, &mut twice).unwrap();
+        assert_eq!(once.len(), 6);
+        assert_eq!(twice.len(), once.len());
+        for r in 0..once.len() {
+            assert_eq!(once.id_of(r), twice.id_of(r));
+            assert_eq!(once.row(r), twice.row(r), "double replay must be bit-identical");
+        }
+        let r2 = once.row_of("enrolled-2").unwrap();
+        assert_eq!(once.row(r2), &[9.0f32; 8][..], "last write wins");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_key_and_wrong_uid_fail_closed() {
+        let path = tmp("keys");
+        let (mut j, _) = EnrollJournal::open_for_image(&path, &key(), 5, None).unwrap();
+        j.append("enrolled-0", &[1.0; 4]).unwrap();
+        drop(j);
+        let wrong = SealKey::from_passphrase("not-the-key");
+        assert!(EnrollJournal::replay(&path, &wrong, 5, None).unwrap_err().is_integrity_failure());
+        let e = EnrollJournal::replay(&path, &key(), 6, None).unwrap_err();
+        assert!(matches!(e, VdiskError::Corrupt(_)), "uid mismatch must be rejected: {e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_or_headerless_journal_is_empty() {
+        let path = tmp("empty");
+        std::fs::remove_file(&path).ok();
+        assert!(EnrollJournal::replay(&path, &key(), 2, None).unwrap().is_empty());
+        // A torn *file header* (crash before the first append could ack).
+        std::fs::write(&path, b"CHAMP").unwrap();
+        assert!(EnrollJournal::replay(&path, &key(), 2, None).unwrap().is_empty());
+        let (j, recovered) = EnrollJournal::open_for_image(&path, &key(), 2, None).unwrap();
+        assert!(recovered.is_empty());
+        assert_eq!(j.frames(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stale_journal_after_compaction_rebinds_and_keeps_the_tail() {
+        let path = tmp("stale");
+        let (mut j, _) = EnrollJournal::open_for_image(&path, &key(), 10, None).unwrap();
+        for i in 0..5 {
+            let (id, t) = rec(i, 4);
+            j.append(&id, &t).unwrap();
+        }
+        drop(j);
+        // Compaction folded the first 3 frames into image 11, then crashed
+        // before resetting the journal.  Frames 3..5 were acked after the
+        // snapshot and must survive the rebind.
+        let (j, recovered) = EnrollJournal::open_for_image(&path, &key(), 11, Some((10, 3))).unwrap();
+        assert_eq!(j.image_uid(), 11);
+        assert_eq!(recovered.len(), 2);
+        assert_eq!(recovered[0].id, "enrolled-3");
+        assert_eq!(recovered[1].id, "enrolled-4");
+        drop(j);
+        // The rebound journal now replays standalone against the new uid.
+        let recs = EnrollJournal::replay(&path, &key(), 11, None).unwrap();
+        assert_eq!(recs.len(), 2);
+        // An unrelated uid is still rejected.
+        assert!(EnrollJournal::replay(&path, &key(), 99, Some((10, 3))).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn injected_append_failure_leaves_the_journal_consistent() {
+        let path = tmp("inject");
+        let (mut j, _) = EnrollJournal::open_for_image(&path, &key(), 4, None).unwrap();
+        j.append("enrolled-0", &[1.0; 4]).unwrap();
+        j.fail_next_appends(2);
+        assert!(j.append("enrolled-1", &[2.0; 4]).is_err());
+        assert!(j.append("enrolled-2", &[3.0; 4]).is_err());
+        assert_eq!(j.append("enrolled-3", &[4.0; 4]).unwrap(), 1, "seq never burns on failure");
+        drop(j);
+        let recs = EnrollJournal::replay(&path, &key(), 4, None).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].id, "enrolled-3");
+        std::fs::remove_file(&path).ok();
+    }
+}

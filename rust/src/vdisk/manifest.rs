@@ -22,11 +22,19 @@ pub struct ImageManifest {
     /// Template dimension of the gallery extent (0 if none).
     pub gallery_dim: u32,
     pub extents: Vec<ExtentMeta>,
+    /// Compaction provenance: the uid of the image this one was compacted
+    /// from, when `vdisk compact` built it (None for a fresh `pack`).
+    /// Lets a mount recognize — and safely rebind — an enrollment journal
+    /// still bound to the pre-compaction image (the crash window between
+    /// publishing the new image and resetting the journal).
+    pub compacted_from_uid: Option<u64>,
+    /// Journal frames folded into this image by that compaction.
+    pub compacted_frames: Option<u64>,
 }
 
 impl ImageManifest {
     pub fn to_json(&self) -> Value {
-        json::obj(vec![
+        let mut fields = vec![
             ("format_version", json::num(self.format_version as f64)),
             ("label", json::s(&self.label)),
             ("image_uid", json::num(self.image_uid as f64)),
@@ -39,7 +47,14 @@ impl ImageManifest {
                 "extents",
                 Value::Arr(self.extents.iter().map(|e| e.to_json()).collect()),
             ),
-        ])
+        ];
+        if let Some(uid) = self.compacted_from_uid {
+            fields.push(("compacted_from_uid", json::num(uid as f64)));
+        }
+        if let Some(n) = self.compacted_frames {
+            fields.push(("compacted_frames", json::num(n as f64)));
+        }
+        json::obj(fields)
     }
 
     pub fn from_json(v: &Value) -> Result<Self, VdiskError> {
@@ -78,7 +93,16 @@ impl ImageManifest {
             caps,
             gallery_dim: num("gallery_dim")? as u32,
             extents,
+            // Optional provenance: absent in pre-compaction images.
+            compacted_from_uid: v.get("compacted_from_uid").and_then(|x| x.as_u64()),
+            compacted_frames: v.get("compacted_frames").and_then(|x| x.as_u64()),
         })
+    }
+
+    /// `(source uid, folded frames)` when this image came out of
+    /// `vdisk compact`, in the shape the journal's rebind check takes.
+    pub fn compacted_from(&self) -> Option<(u64, u64)> {
+        Some((self.compacted_from_uid?, self.compacted_frames?))
     }
 
     /// Parse from sealed-then-unsealed plaintext bytes.
@@ -134,6 +158,8 @@ mod tests {
                     blocks: 1,
                 },
             ],
+            compacted_from_uid: None,
+            compacted_frames: None,
         }
     }
 
@@ -143,6 +169,18 @@ mod tests {
         let text = m.to_json().to_json_pretty();
         let back = ImageManifest::from_bytes(text.as_bytes()).unwrap();
         assert_eq!(back, m);
+        assert_eq!(back.compacted_from(), None);
+    }
+
+    #[test]
+    fn compaction_provenance_roundtrips() {
+        let mut m = manifest();
+        m.compacted_from_uid = Some(41);
+        m.compacted_frames = Some(12);
+        let text = m.to_json().to_json_pretty();
+        let back = ImageManifest::from_bytes(text.as_bytes()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.compacted_from(), Some((41, 12)));
     }
 
     #[test]

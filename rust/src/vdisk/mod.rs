@@ -40,6 +40,7 @@
 pub mod cache;
 pub mod extent;
 pub mod image;
+pub mod journal;
 pub mod manifest;
 pub mod mount;
 pub mod stream;
@@ -48,6 +49,7 @@ pub mod superblock;
 pub use cache::{CacheStats, LruCache, ShardedBlockCache};
 pub use extent::{ExtentKind, ExtentMeta};
 pub use image::{ImageBuilder, ImageSummary, GALLERY_EXTENT, IVF_EXTENT};
+pub use journal::{fold_records, EnrollJournal, JournalRecord};
 pub use manifest::ImageManifest;
 pub use mount::{MountEvent, MountEventKind, MountSupervisor, MountedImage};
 pub use stream::ExtentReader;
@@ -131,4 +133,10 @@ pub(crate) fn trailer_tweak(image_uid: u64) -> String {
 /// Subkey tweak binding a sealed block to (image, extent, block).
 pub(crate) fn block_tweak(image_uid: u64, extent_idx: usize, block_idx: u32) -> String {
     format!("vdisk/{image_uid}/ext/{extent_idx}/blk/{block_idx}")
+}
+
+/// Subkey tweak binding an enrollment-journal frame to (image, seq,
+/// payload nonce) — see [`journal`].
+pub(crate) fn journal_tweak(image_uid: u64, seq: u64, nonce: u64) -> String {
+    format!("vdisk/{image_uid}/journal/{seq}/{nonce:016x}")
 }

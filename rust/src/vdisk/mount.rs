@@ -31,6 +31,7 @@ use crate::obs::TraceRecorder;
 use super::cache::{CacheStats, ShardedBlockCache, DEFAULT_CACHE_SHARDS};
 use super::extent::{unseal_block_with, ExtentKind};
 use super::image::{GALLERY_EXTENT, IVF_EXTENT};
+use super::journal::{fold_records, EnrollJournal};
 use super::manifest::ImageManifest;
 use super::stream::ExtentReader;
 use super::superblock::{Superblock, SB_LEN};
@@ -321,6 +322,10 @@ pub struct MountSupervisor {
     /// an IVF extent), decoded and cross-checked at attach like the
     /// gallery.
     ivf_tiers: HashMap<u64, Arc<IvfIndex>>,
+    /// Enrollment-journal sidecar per bay uid: replayed (read-only) over
+    /// the decoded gallery at every attach, so a remount after a mid-write
+    /// yank recovers exactly the acked enrollments.
+    journals: HashMap<u64, PathBuf>,
     pub events: Vec<MountEvent>,
     /// Handed to every subsequent mount so boot and remount unseal waves
     /// land in the same trace as the serving-side spans.
@@ -350,6 +355,14 @@ impl MountSupervisor {
     /// Declare that cartridge `uid` carries the image at `path`.
     pub fn register_media(&mut self, uid: u64, path: impl Into<PathBuf>) {
         self.bay.insert(uid, path.into());
+    }
+
+    /// Declare that cartridge `uid` also carries the enrollment journal at
+    /// `path`.  Every subsequent attach replays it (crash-safe, torn tail
+    /// ignored) into the published gallery snapshot; a journal that fails
+    /// verification rejects the media exactly like a tampered image.
+    pub fn register_journal(&mut self, uid: u64, path: impl Into<PathBuf>) {
+        self.journals.insert(uid, path.into());
     }
 
     /// Attach edge: mount the cartridge's media if it has any and a key is
@@ -382,24 +395,39 @@ impl MountSupervisor {
         // corrupt gallery rejects the media instead of surfacing later on
         // the identify path.
         if img.manifest.find(GALLERY_EXTENT).is_some() {
-            match img.load_gallery_index() {
-                Ok((idx, _)) => {
-                    // ANN tier rides the same decode-before-publish rule: a
-                    // corrupt or mismatched tier rejects the media outright.
-                    match img.load_ivf_index(&idx) {
-                        Ok(Some(ivf)) => {
-                            self.ivf_tiers.insert(uid, Arc::new(ivf));
-                        }
-                        Ok(None) => {}
-                        Err(e) => {
-                            self.galleries.remove(&uid);
-                            return rejected(&mut self.events, e);
-                        }
-                    }
-                    self.galleries.insert(uid, Arc::new(idx));
-                }
+            let mut idx = match img.load_gallery_index() {
+                Ok((idx, _)) => idx,
                 Err(e) => return rejected(&mut self.events, e),
+            };
+            // ANN tier rides the same decode-before-publish rule: a
+            // corrupt or mismatched tier rejects the media outright.  It
+            // is cross-checked against the *base* gallery — journal folds
+            // land after, and a stale tier falls back to exact inside
+            // `search` until compaction retrains it.
+            let ivf = match img.load_ivf_index(&idx) {
+                Ok(v) => v,
+                Err(e) => return rejected(&mut self.events, e),
+            };
+            // Crash-safe replay: fold the acked enrollment journal over
+            // the decoded gallery before the snapshot is published, so a
+            // remount after a mid-append yank serves exactly the acked
+            // set.  Fails closed like any other extent.
+            if let Some(jpath) = self.journals.get(&uid).cloned() {
+                let replayed = EnrollJournal::replay(
+                    &jpath,
+                    key,
+                    img.image_uid(),
+                    img.manifest.compacted_from(),
+                )
+                .and_then(|recs| fold_records(&recs, &mut idx));
+                if let Err(e) = replayed {
+                    return rejected(&mut self.events, e);
+                }
             }
+            if let Some(ivf) = ivf {
+                self.ivf_tiers.insert(uid, Arc::new(ivf));
+            }
+            self.galleries.insert(uid, Arc::new(idx));
         }
         self.events.push(MountEvent {
             uid,
@@ -674,6 +702,63 @@ mod tests {
         let mut keyless = MountSupervisor::default();
         keyless.register_media(1, &path);
         assert!(keyless.handle_attach(1, 0).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn attach_replays_the_enrollment_journal_and_fails_closed() {
+        let key = SealKey::from_passphrase("jrnl");
+        let dir = tmp_dir("jrnl");
+        let path = build(&dir, &key);
+        let uid = MountedImage::mount(&path, &key).unwrap().image_uid();
+        let jpath = dir.join("serve.cjl");
+        let (mut j, _) = EnrollJournal::open_for_image(&jpath, &key, uid, None).unwrap();
+        let mut rng = Rng::new(17);
+        let acked: Vec<(String, Vec<f32>)> =
+            (0..5).map(|i| (format!("enrolled-{i}"), rng.unit_vec(16))).collect();
+        for (id, t) in &acked {
+            j.append(id, t).unwrap();
+        }
+        drop(j);
+
+        // A remount after the journal was written serves base + acked.
+        let mut sup = MountSupervisor::with_key(key.clone());
+        sup.register_media(4, &path);
+        sup.register_journal(4, &jpath);
+        assert!(sup.handle_attach(4, 100).is_some());
+        let idx = sup.gallery_index(4).unwrap();
+        assert_eq!(idx.len(), 20 + 5, "base gallery + every acked enrollment");
+        for (id, t) in &acked {
+            let row = idx.row_of(id).expect("acked enrollment present after remount");
+            assert_eq!(idx.row(row), &t[..], "replayed template is bit-identical");
+        }
+
+        // A torn tail (yank mid-append) is truncated, never replayed: the
+        // acked set is still exactly what mounts.
+        let good = std::fs::read(&jpath).unwrap();
+        let mut torn = good.clone();
+        torn.extend_from_slice(&[0x43, 0x4a, 0x4c, 0x31, 9, 9]); // partial frame
+        std::fs::write(&jpath, &torn).unwrap();
+        assert!(sup.handle_attach(4, 200).is_some());
+        assert_eq!(sup.gallery_index(4).unwrap().len(), 25, "torn tail ignored");
+
+        // A tampered journal rejects the media like a tampered image.
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 10] ^= 0x40;
+        std::fs::write(&jpath, &bad).unwrap();
+        assert!(sup.handle_attach(4, 300).is_none());
+        assert!(!sup.is_mounted(4));
+        assert!(sup.gallery_index(4).is_none());
+        assert_eq!(sup.events.last().unwrap().kind, MountEventKind::Rejected);
+
+        // Restore: a clean journal mounts again (replay is idempotent
+        // across remounts — same snapshot both times).
+        std::fs::write(&jpath, &good).unwrap();
+        assert!(sup.handle_attach(4, 400).is_some());
+        let again = sup.gallery_index(4).unwrap();
+        assert_eq!(again.len(), 25);
+        assert_eq!(again.data(), idx.data(), "double replay is bit-identical");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,12 +1,19 @@
-//! Integration: §4.2 hot-swap through the full orchestrator + bus stack.
+//! Integration: §4.2 hot-swap through the full orchestrator + bus stack,
+//! including a storage-cartridge yank mid-append (the enrollment journal's
+//! survival guarantee).
 
+use champ::biometric::gallery::Gallery;
+use champ::biometric::template::Template;
 use champ::bus::hotplug::{HotplugEvent, HotplugKind};
 use champ::bus::topology::SlotId;
 use champ::bus::usb3::BusProfile;
 use champ::coordinator::hotswap::SwapAction;
 use champ::coordinator::scheduler::Orchestrator;
-use champ::device::caps::CapDescriptor;
+use champ::crypto::seal::SealKey;
+use champ::device::caps::{CapDescriptor, CapabilityId};
 use champ::device::{Cartridge, DeviceKind};
+use champ::util::rng::Rng;
+use champ::vdisk::{EnrollJournal, ImageBuilder, MountEventKind, MountedImage};
 use champ::workload::traces::MissionTrace;
 use champ::workload::video::VideoSource;
 
@@ -70,6 +77,105 @@ fn removing_embedder_without_rescue_drops_frames() {
     let rep = o.run_pipelined(&mut src, 60, events);
     assert!(rep.frames_dropped > 0, "no operator rescue -> capability lost");
     assert!(rep.frames_out > 0, "frames before the halt still processed");
+}
+
+#[test]
+fn yank_mid_append_remounts_exactly_the_acked_enrollments() {
+    // A storage cartridge carrying a sealed gallery image + enrollment
+    // journal is yanked while an enrollment append is in flight.  The
+    // remount (through the live bus hotplug script, not a direct mount
+    // call) must publish the base gallery plus *exactly* the acked
+    // enrollments — the torn in-flight frame is truncated, never served.
+    let dir = std::env::temp_dir().join(format!("champ-yankjrnl-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("storage.vdisk");
+    let jpath = dir.join("enroll.cjl");
+    let key = SealKey::from_passphrase("yank-journal");
+    let dim = 16;
+    let mut rng = Rng::new(11);
+    let mut g = Gallery::new(dim);
+    for i in 0..20 {
+        g.add(format!("id{i}"), Template::new(rng.unit_vec(dim)));
+    }
+    ImageBuilder::new("storage-cart")
+        .cap(CapabilityId::Database)
+        .gallery(&g)
+        .block_size(256)
+        .write(&path, &key)
+        .unwrap();
+    let image_uid = MountedImage::mount(&path, &key).unwrap().image_uid();
+
+    // A first enrollment burst acked before boot.
+    std::fs::remove_file(&jpath).ok();
+    let (mut j, _) = EnrollJournal::open_for_image(&jpath, &key, image_uid, None).unwrap();
+    let mut acked: Vec<(String, Vec<f32>)> = Vec::new();
+    for i in 0..4 {
+        let (id, t) = (format!("enrolled-{i}"), rng.unit_vec(dim));
+        j.append(&id, &t).unwrap();
+        acked.push((id, t));
+    }
+    drop(j);
+
+    // Full rig with the storage cartridge as the terminal database stage.
+    let (mut o, _) = face_rig();
+    o.set_seal_key(key.clone());
+    let db = o
+        .plug(SlotId(3), Cartridge::new(0, DeviceKind::Storage, CapDescriptor::database()))
+        .unwrap();
+    o.swap.mounts.register_journal(db, &jpath);
+    o.register_cartridge_media(db, &path);
+    assert_eq!(
+        o.swap.mounts.gallery_index(db).unwrap().len(),
+        24,
+        "boot mount folds the pre-existing journal"
+    );
+
+    // Serving continues: three more enrollments ack, and a fourth is
+    // mid-append (synced prefix only) when the module is yanked.
+    let (mut j, recovered) =
+        EnrollJournal::open_for_image(&jpath, &key, image_uid, None).unwrap();
+    assert_eq!(recovered.len(), 4);
+    for i in 4..7 {
+        let (id, t) = (format!("enrolled-{i}"), rng.unit_vec(dim));
+        j.append(&id, &t).unwrap();
+        acked.push((id, t));
+    }
+    j.append("enrolled-torn", &rng.unit_vec(dim)).unwrap();
+    drop(j);
+    let full = std::fs::read(&jpath).unwrap();
+    std::fs::write(&jpath, &full[..full.len() - 7]).unwrap(); // torn MAC
+
+    // Live yank + re-insert of the storage cartridge through the bus.
+    let events = vec![
+        HotplugEvent { at_us: 2_000_000, slot: SlotId(3), kind: HotplugKind::Detach, uid: 0 },
+        HotplugEvent { at_us: 6_000_000, slot: SlotId(3), kind: HotplugKind::Attach, uid: db },
+    ];
+    let mut src = VideoSource::paper_stream(5).with_rate_fps(8.0);
+    let _ = o.run_pipelined(&mut src, 80, events);
+
+    assert!(o.swap.mounts.is_mounted(db), "re-insert must remount the media");
+    let snap = o.swap.mounts.gallery_index(db).unwrap();
+    assert_eq!(
+        snap.len(),
+        20 + acked.len(),
+        "remount must serve base + exactly the acked enrollments"
+    );
+    for (id, t) in &acked {
+        let row = snap.row_of(id).expect("acked enrollment survives the yank");
+        assert_eq!(snap.row(row), &t[..], "replayed template is bit-identical");
+    }
+    assert!(
+        snap.row_of("enrolled-torn").is_none(),
+        "the never-acked in-flight append must not be served"
+    );
+    let kinds: Vec<_> =
+        o.swap.mounts.events.iter().filter(|e| e.uid == db).map(|e| e.kind).collect();
+    assert_eq!(
+        kinds,
+        vec![MountEventKind::Mounted, MountEventKind::Unmounted, MountEventKind::Mounted],
+        "yank unmounts before reroute; re-insert remounts"
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -42,7 +42,11 @@ fn accounting_is_exact_at_every_overload_and_profile() {
             for c in &out.classes {
                 assert_eq!(
                     c.shed,
-                    c.shed_rate_limited + c.shed_queue_full + c.shed_expired + c.shed_evicted,
+                    c.shed_rate_limited
+                        + c.shed_queue_full
+                        + c.shed_expired
+                        + c.shed_evicted
+                        + c.shed_journal_stalled,
                     "{}/{} @{overload}x: untyped shed",
                     profile.name,
                     c.name

@@ -1,0 +1,256 @@
+//! Property suite for the sealed enrollment journal (acceptance gates):
+//!
+//! * random append/crash-point geometries — a cut anywhere inside frame
+//!   `i+1` (torn header, torn body, torn MAC, straddling a storage-block
+//!   boundary) recovers exactly the acked prefix `0..=i`, bit-identical,
+//!   and truncates the tail in place;
+//! * replay idempotency — folding the recovered records twice is
+//!   bit-identical to folding them once (`GalleryIndex::data` equality);
+//! * exhaustive bit-flip rejection — every single-bit flip inside the
+//!   frame region fails closed (tamper/corrupt), never yields records;
+//! * rank agreement — journal-only identities served from the exact
+//!   overlay scan merge with the ANN tier without changing rank-1 vs a
+//!   single exact scan over the folded union gallery.
+
+use champ::biometric::index::GalleryIndex;
+use champ::biometric::ivf::{clustered_index, IvfIndex, IvfParams, DEFAULT_NPROBE};
+use champ::crypto::seal::SealKey;
+use champ::util::rng::Rng;
+use champ::vdisk::{fold_records, EnrollJournal, JournalRecord};
+use std::path::PathBuf;
+
+const FILE_HDR_LEN: u64 = 24;
+const FRAME_HDR_LEN: u64 = 24;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("champ-prop-journal-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("enroll.cjl")
+}
+
+fn key() -> SealKey {
+    SealKey::from_passphrase("prop-journal-key")
+}
+
+/// Append `n` random records, returning them plus the file length after
+/// the header and after every append (the frame boundaries).
+fn build_journal(
+    path: &PathBuf,
+    image_uid: u64,
+    n: usize,
+    dim: usize,
+    rng: &mut Rng,
+) -> (Vec<JournalRecord>, Vec<u64>) {
+    std::fs::remove_file(path).ok();
+    let (mut j, recovered) = EnrollJournal::open_for_image(path, &key(), image_uid, None).unwrap();
+    assert!(recovered.is_empty());
+    let mut recs = Vec::with_capacity(n);
+    let mut bounds = vec![std::fs::metadata(path).unwrap().len()];
+    assert_eq!(bounds[0], FILE_HDR_LEN);
+    for i in 0..n {
+        // Random-length ids so frame sizes vary (and some frames straddle
+        // 512-byte storage blocks).
+        let id = format!("enrolled-{i}-{:0width$}", 0, width = (rng.range(0, 40)) as usize + 1);
+        let template = rng.unit_vec(dim);
+        let seq = j.append(&id, &template).unwrap();
+        assert_eq!(seq, i as u64);
+        recs.push(JournalRecord { seq, id, template });
+        bounds.push(std::fs::metadata(path).unwrap().len());
+    }
+    (recs, bounds)
+}
+
+#[test]
+fn every_crash_point_recovers_exactly_the_acked_prefix() {
+    let path = tmp("crash");
+    let mut rng = Rng::new(0xc4a5_4001);
+    let (recs, bounds) = build_journal(&path, 77, 10, 16, &mut rng);
+    let full = std::fs::read(&path).unwrap();
+    assert_eq!(*bounds.last().unwrap(), full.len() as u64);
+
+    for i in 0..recs.len() {
+        let (lo, hi) = (bounds[i], bounds[i + 1]);
+        // Deterministic geometries: torn header (1 byte, header-1), the
+        // exact header boundary (torn empty body), torn body, torn MAC
+        // (frame-1) — plus any 512-block boundaries the frame straddles,
+        // plus a few random interior cuts.
+        let mut cuts = vec![lo + 1, lo + FRAME_HDR_LEN - 1, lo + FRAME_HDR_LEN, hi - 1];
+        let mut blk = (lo / 512 + 1) * 512;
+        while blk < hi {
+            cuts.push(blk);
+            blk += 512;
+        }
+        for _ in 0..4 {
+            cuts.push(lo + 1 + rng.range(0, hi - lo - 1));
+        }
+        for cut in cuts {
+            assert!(cut > lo && cut < hi, "cut {cut} outside frame {i} [{lo}, {hi})");
+            std::fs::write(&path, &full[..cut as usize]).unwrap();
+            let (j, recovered) =
+                EnrollJournal::open_for_image(&path, &key(), 77, None).unwrap();
+            assert_eq!(recovered.len(), i, "cut {cut} in frame {i}");
+            assert_eq!(j.frames(), i as u64);
+            // Bit-identity of everything acked before the crash.
+            for (want, got) in recs[..i].iter().zip(&recovered) {
+                assert_eq!(want, got, "cut {cut}: acked record diverged");
+            }
+            drop(j);
+            // The torn tail was truncated in place, back to the boundary.
+            assert_eq!(
+                std::fs::metadata(&path).unwrap().len(),
+                lo,
+                "cut {cut}: tail must be truncated to the last acked frame"
+            );
+            // The writable open + truncate must itself be crash-safe: a
+            // second, read-only replay sees the same prefix.
+            let again = EnrollJournal::replay(&path, &key(), 77, None).unwrap();
+            assert_eq!(again.len(), i);
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn replay_and_fold_are_idempotent_bit_identical() {
+    let path = tmp("idem");
+    let mut rng = Rng::new(0x1de3_2002);
+    let dim = 12;
+    let (_, _) = build_journal(&path, 5, 9, dim, &mut rng);
+    // Overwrite one id so last-wins matters.
+    {
+        let (mut j, recovered) =
+            EnrollJournal::open_for_image(&path, &key(), 5, None).unwrap();
+        let dup = recovered[3].id.clone();
+        j.append(&dup, &rng.unit_vec(dim)).unwrap();
+    }
+    let recs = EnrollJournal::replay(&path, &key(), 5, None).unwrap();
+    assert_eq!(recs.len(), 10);
+
+    let mut once = GalleryIndex::with_capacity(dim, recs.len());
+    fold_records(&recs, &mut once).unwrap();
+    let mut twice = GalleryIndex::with_capacity(dim, recs.len());
+    fold_records(&recs, &mut twice).unwrap();
+    fold_records(&recs, &mut twice).unwrap();
+    assert_eq!(once.len(), 9, "one duplicate id must fold last-wins");
+    assert_eq!(twice.len(), once.len());
+    assert_eq!(once.data(), twice.data(), "double replay must be bit-identical");
+    for r in 0..once.len() {
+        assert_eq!(once.id_of(r), twice.id_of(r));
+    }
+    // And a second replay of the file itself is bit-identical too.
+    let recs2 = EnrollJournal::replay(&path, &key(), 5, None).unwrap();
+    assert_eq!(recs, recs2);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn every_bit_flip_in_the_frame_region_fails_closed() {
+    let path = tmp("flip");
+    let mut rng = Rng::new(0xf11b_3003);
+    let (_, _) = build_journal(&path, 21, 2, 4, &mut rng);
+    let good = std::fs::read(&path).unwrap();
+    // Exhaustive: all 8 bits of every byte past the plaintext file header.
+    for i in FILE_HDR_LEN as usize..good.len() {
+        for bit in 0..8 {
+            let mut bad = good.clone();
+            bad[i] ^= 1 << bit;
+            std::fs::write(&path, &bad).unwrap();
+            match EnrollJournal::replay(&path, &key(), 21, None) {
+                Err(_) => {}
+                Ok(recs) => panic!("byte {i} bit {bit}: flip accepted ({} records)", recs.len()),
+            }
+        }
+    }
+    std::fs::write(&path, &good).unwrap();
+    assert_eq!(EnrollJournal::replay(&path, &key(), 21, None).unwrap().len(), 2);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Merge two score lists keeping the global top-k by score (the serve
+/// session's overlay merge).
+fn merge_top(
+    a: Vec<(String, f32)>,
+    b: Vec<(String, f32)>,
+    k: usize,
+) -> Vec<(String, f32)> {
+    let mut all = a;
+    all.extend(b);
+    all.sort_by(|x, y| y.1.total_cmp(&x.1));
+    all.truncate(k);
+    all
+}
+
+fn named(idx: &GalleryIndex, hits: Vec<(usize, f32)>) -> Vec<(String, f32)> {
+    hits.into_iter().map(|(r, s)| (idx.id_of(r).to_string(), s)).collect()
+}
+
+#[test]
+fn journal_overlay_merge_preserves_rank_agreement_with_an_exact_union_scan() {
+    let mut rng = Rng::new(0x4a6e_4004);
+    let dim = 32;
+    let base = clustered_index(&mut rng, 800, dim, 24, 0.15);
+    let tier = IvfIndex::train(&base, &IvfParams::default());
+    assert!(!tier.is_degenerate(), "800x32 must train a real tier");
+
+    // Journal-only identities: enrolled after pack, served from the
+    // exact overlay scan until the next compaction folds them.
+    let path = tmp("rank");
+    std::fs::remove_file(&path).ok();
+    let (mut j, _) = EnrollJournal::open_for_image(&path, &key(), 42, None).unwrap();
+    let mut overlay = GalleryIndex::with_capacity(dim, 40);
+    for i in 0..40 {
+        let v = rng.unit_vec(dim);
+        j.append(&format!("enrolled-{i}"), &v).unwrap();
+        overlay.upsert(format!("enrolled-{i}"), &v);
+    }
+    drop(j);
+    let recs = EnrollJournal::replay(&path, &key(), 42, None).unwrap();
+    assert_eq!(recs.len(), 40);
+
+    // The union gallery a compaction would produce.
+    let mut union = GalleryIndex::with_capacity(dim, base.len() + overlay.len());
+    for (id, row) in base.iter() {
+        union.upsert(id, row);
+    }
+    fold_records(&recs, &mut union).unwrap();
+    assert_eq!(union.len(), 840);
+
+    // Probes: every journal-only template plus a sample of base rows.
+    let mut probes: Vec<Vec<f32>> = (0..overlay.len()).map(|r| overlay.row(r).to_vec()).collect();
+    for i in 0..40 {
+        probes.push(base.row((i * 19) % base.len()).to_vec());
+    }
+
+    for (pi, probe) in probes.iter().enumerate() {
+        let exact = named(&union, union.top_k(probe, 3));
+        // With the probe widened to nlist the tier falls back to an exact
+        // base scan: the merged ranking must agree with the union scan on
+        // rank-1 for every probe.
+        let merged_exact = merge_top(
+            named(&base, tier.search(&base, probe, 3, tier.nlist())),
+            named(&overlay, overlay.top_k(probe, 3)),
+            3,
+        );
+        assert_eq!(
+            merged_exact[0].0, exact[0].0,
+            "probe {pi}: exact-merge rank-1 diverged from union scan"
+        );
+        // At the default probe width the tier is approximate on the base
+        // side, but journal-only winners are found by the exact overlay
+        // scan: whenever the true rank-1 is a journal identity the merge
+        // must surface it.
+        if exact[0].0.starts_with("enrolled-") {
+            let merged = merge_top(
+                named(&base, tier.search(&base, probe, 3, DEFAULT_NPROBE)),
+                named(&overlay, overlay.top_k(probe, 3)),
+                3,
+            );
+            assert_eq!(
+                merged[0].0, exact[0].0,
+                "probe {pi}: journal-only rank-1 lost in the ANN merge"
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
