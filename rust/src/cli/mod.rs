@@ -12,6 +12,7 @@
 
 pub mod bench;
 pub mod bench_vdisk;
+pub mod monitor;
 pub mod serve;
 pub mod trace;
 pub mod vdisk;

@@ -1,0 +1,221 @@
+//! `champd monitor` — decode a sealed flight-recorder dump and attribute
+//! the regression to a pipeline stage.
+//!
+//! Usage:
+//!   champd monitor DUMP.bbx [--key K]
+//!
+//! The dump is the `.bbx` sidecar a `serve --flight` run seals on its
+//! first trigger (shed spike, miss burst, eviction, journal stall,
+//! panic).  Decode fails closed on tamper or a wrong key; a dump torn by
+//! the crash it was recording decodes to its valid prefix and is
+//! reported as truncated.
+//!
+//! The post-mortem splits the ring's span records at the midpoint of its
+//! time range — the older half is the baseline, the newer half the
+//! run-up to the trigger — and tiles each half by stage
+//! (queue / bus-grant / compute / unseal-wave / ...).  The stage whose
+//! share of span time grew the most across that split is named as the
+//! likely culprit: a queue-share jump means admission outran service, a
+//! bus-grant jump means the shared wire starved the stage, an
+//! unseal-wave jump points at the storage path.
+
+use crate::crypto::seal::SealKey;
+use crate::obs::flight::{decode_dump, FlightDump};
+use crate::obs::{AnomalyAlert, EventKind, RecordKind, Stage};
+
+use super::Args;
+
+/// Per-stage span-time tiling of one half of the ring.
+struct Tile {
+    us: [u64; Stage::ALL.len()],
+    total_us: u64,
+}
+
+impl Tile {
+    fn new() -> Tile {
+        Tile { us: [0; Stage::ALL.len()], total_us: 0 }
+    }
+
+    fn add(&mut self, stage: Stage, dur_us: u64) {
+        self.us[stage as usize] += dur_us;
+        self.total_us += dur_us;
+    }
+
+    fn share(&self, stage: Stage) -> f64 {
+        if self.total_us == 0 {
+            return 0.0;
+        }
+        self.us[stage as usize] as f64 / self.total_us as f64
+    }
+}
+
+/// Render the decoded dump as the monitor's text report (pure, so tests
+/// and the CLI share one surface).
+pub fn render(dump: &FlightDump) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "flight dump: trigger {} at t={:.3}s (detail {:#x}), seed {}\n",
+        dump.trigger.as_str(),
+        dump.trigger_t_us as f64 / 1e6,
+        dump.detail,
+        dump.seed
+    ));
+    out.push_str(&format!(
+        "ring       : {} records{}\n",
+        dump.records.len(),
+        if dump.truncated { " (TRUNCATED: dump torn mid-write, valid prefix shown)" } else { "" }
+    ));
+    if dump.records.is_empty() {
+        return out;
+    }
+
+    // Span tiling: baseline (older half of the ring's time range) vs
+    // run-up (newer half, ending at the trigger).
+    let t_min = dump.records.iter().map(|r| r.t0_us).min().unwrap_or(0);
+    let t_max = dump.records.iter().map(|r| r.t1_us).max().unwrap_or(0).max(dump.trigger_t_us);
+    let split = t_min + (t_max - t_min) / 2;
+    let (mut base, mut runup) = (Tile::new(), Tile::new());
+    let mut events = [0u64; 16];
+    let mut alerts: Vec<AnomalyAlert> = Vec::new();
+    let mut samples: Vec<(u64, &'static str, f64)> = Vec::new();
+    for r in &dump.records {
+        if let Some(series) = r.series() {
+            samples.push((r.t0_us, series.as_str(), f64::from_bits(r.a)));
+            continue;
+        }
+        let Some(tr) = r.as_trace_record() else { continue };
+        match tr.kind {
+            RecordKind::Span(stage) => {
+                if tr.t1_us <= split {
+                    base.add(stage, tr.dur_us());
+                } else {
+                    runup.add(stage, tr.dur_us());
+                }
+            }
+            RecordKind::Event(kind) => {
+                events[(kind as usize).min(events.len() - 1)] += 1;
+                if kind == EventKind::Alert {
+                    if let Some(a) = AnomalyAlert::from_words(tr.t0_us, tr.a, tr.b) {
+                        alerts.push(a);
+                    }
+                }
+            }
+        }
+    }
+
+    out.push_str(&format!(
+        "tiling     : baseline [{:.3}s..{:.3}s] {:.1}ms spanned | run-up [{:.3}s..{:.3}s] {:.1}ms spanned\n",
+        t_min as f64 / 1e6,
+        split as f64 / 1e6,
+        base.total_us as f64 / 1e3,
+        split as f64 / 1e6,
+        t_max as f64 / 1e6,
+        runup.total_us as f64 / 1e3
+    ));
+    let mut culprit: Option<(Stage, f64)> = None;
+    for stage in Stage::ALL {
+        let (b, r) = (base.share(stage), runup.share(stage));
+        if b == 0.0 && r == 0.0 {
+            continue;
+        }
+        out.push_str(&format!(
+            "  {:<12} {:>5.1}% -> {:>5.1}%  ({:+.1} pts)\n",
+            stage.as_str(),
+            b * 100.0,
+            r * 100.0,
+            (r - b) * 100.0
+        ));
+        let better = match culprit {
+            Some((_, best)) => r - b > best,
+            None => true,
+        };
+        if better {
+            culprit = Some((stage, r - b));
+        }
+    }
+    match culprit {
+        Some((stage, delta)) if delta > 0.0 => out.push_str(&format!(
+            "attribution: {} grew {:+.1} pts of span share into the trigger\n",
+            stage.as_str(),
+            delta * 100.0
+        )),
+        _ => out.push_str("attribution: stage shares were stable into the trigger\n"),
+    }
+
+    let named: Vec<String> = (0..events.len())
+        .filter(|&c| events[c] > 0)
+        .filter_map(|c| {
+            EventKind::from_code(c as u8).map(|k| format!("{} x{}", k.as_str(), events[c]))
+        })
+        .collect();
+    if !named.is_empty() {
+        out.push_str(&format!("events     : {}\n", named.join(", ")));
+    }
+    for a in &alerts {
+        out.push_str(&format!("alert      : {}\n", a.describe()));
+    }
+    if !samples.is_empty() {
+        out.push_str(&format!("samples    : {} metric points", samples.len()));
+        if let Some((t, series, v)) = samples.last() {
+            out.push_str(&format!(" (last: {series}={v:.3} at t={:.3}s)", *t as f64 / 1e6));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Entry point for `champd monitor`.
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let Some(path) = args.positional.first() else {
+        anyhow::bail!("usage: champd monitor DUMP.bbx [--key K]");
+    };
+    let key = SealKey::from_passphrase(args.flag("key").unwrap_or("champ-dev-key"));
+    let dump = decode_dump(std::path::Path::new(path), &key)?;
+    print!("{}", render(&dump));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{FlightRecorder, FlightTrigger, TraceId};
+
+    #[test]
+    fn monitor_renders_a_synthetic_dump_and_names_the_culprit_stage() {
+        let d = std::env::temp_dir().join(format!("champ-monitor-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let key = SealKey::from_passphrase("monitor-key");
+        let rec = FlightRecorder::armed(9, key.clone(), d.join("mon.bbx"));
+        // Baseline half [0, 1s): compute-dominated spans.
+        for i in 0..20u64 {
+            let t = i * 50_000;
+            rec.span(TraceId::request(i), Stage::Queue, t, t + 5_000, 0, 0);
+            rec.span(TraceId::request(i), Stage::Compute, t + 5_000, t + 45_000, 0, 0);
+        }
+        // Run-up half [1s, 2s): queue residency explodes.
+        for i in 20..40u64 {
+            let t = i * 50_000;
+            rec.span(TraceId::request(i), Stage::Queue, t, t + 40_000, 0, 0);
+            rec.span(TraceId::request(i), Stage::Compute, t + 40_000, t + 45_000, 0, 0);
+            rec.event(TraceId::request(i), EventKind::Shed, t + 45_000, 2, 0);
+        }
+        rec.set_vnow(2_000_000);
+        let path = rec.dump(FlightTrigger::ShedSpike, 7).unwrap();
+        let text = render(&decode_dump(&path, &key).unwrap());
+        assert!(text.contains("trigger shed-spike"), "{text}");
+        assert!(text.contains("seed 9"), "{text}");
+        assert!(text.contains("queue"), "{text}");
+        assert!(text.contains("compute"), "{text}");
+        assert!(text.contains("attribution: queue grew"), "{text}");
+        assert!(text.contains("shed x20"), "{text}");
+        // Wrong key fails closed rather than rendering garbage.
+        assert!(decode_dump(&path, &SealKey::from_passphrase("wrong")).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn monitor_run_requires_a_dump_path() {
+        let args = crate::cli::parse_args("monitor".split_whitespace().map(String::from));
+        assert!(run(&args).is_err());
+    }
+}

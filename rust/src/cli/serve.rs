@@ -38,6 +38,21 @@
 //!                     replayed (and rank-1 verified) at session start —
 //!                     a mismatch exits nonzero.  Fold with
 //!                     `champd vdisk compact`
+//!   --flight PATH     arm the black-box flight recorder: a bounded ring
+//!                     of recent spans/events/metric samples, sealed and
+//!                     dumped to PATH on the first trigger (shed spike,
+//!                     miss burst, eviction, journal stall, panic).
+//!                     Decode with `champd monitor PATH`
+//!   --governor        close the loop: the anomaly engine's burn level
+//!                     scales admission refill down under sustained burn
+//!                     and back up hysteretically once it clears
+//!   --compact-threshold N
+//!                     background journal compaction: fold the journal
+//!                     into the image mid-run once it holds N frames
+//!                     (default 0 = never; requires --journal)
+//!   --inject-swap     script the §5 mid-run cartridge swap as hot-plug
+//!                     events regardless of profile or --trace (the
+//!                     anomaly-injection CI job's fault)
 //!   --out PATH        output JSON (default BENCH_serve.json)
 //!   --baseline PATH   baseline JSON (default: the committed floors)
 //!   --tolerance PCT   allowed goodput drop below baseline (default 10)
@@ -45,7 +60,8 @@
 
 use crate::bus::hotplug::HotplugEvent;
 use crate::metrics::report::{
-    current_commit, ServePowerRecord, ServeRecord, ServeReport, ServeTenantRecord,
+    current_commit, ServeAnomalyRecord, ServePowerRecord, ServeRecord, ServeReport,
+    ServeTenantRecord,
 };
 use crate::obs::export;
 use crate::obs::health::{health_summary, BudgetRow};
@@ -96,6 +112,9 @@ pub fn config_for(profile: MissionProfile, args: &Args) -> ServeConfig {
     cfg.image_key = args.flag("image-key").unwrap_or("champ-dev-key").to_string();
     cfg.journal = args.flag("journal").map(std::path::PathBuf::from);
     cfg.trace = args.switch("trace");
+    cfg.flight = args.flag("flight").map(std::path::PathBuf::from);
+    cfg.governor = args.switch("governor");
+    cfg.compact_threshold = args.flag_u64("compact-threshold", 0);
     cfg
 }
 
@@ -175,6 +194,7 @@ pub(crate) fn emit_trace_artifacts(
 pub fn serve_report(
     configs: Vec<ServeConfig>,
     with_trace: bool,
+    inject_swap: bool,
 ) -> anyhow::Result<(ServeReport, Vec<(MissionProfile, ServeOutcome)>)> {
     anyhow::ensure!(!configs.is_empty(), "no profiles to serve");
     let seed = configs[0].seed;
@@ -183,7 +203,16 @@ pub fn serve_report(
     for cfg in configs {
         let profile = cfg.profile.clone();
         let overload = cfg.overload;
-        let events = if with_trace { trace_events_for(&profile) } else { Vec::new() };
+        // --inject-swap forces the §5 mid-run cartridge swap onto any
+        // profile (the anomaly-injection CI fault); otherwise the swap
+        // only rides the disaster profile under --trace.
+        let events = if inject_swap {
+            MissionTrace::disaster_response().to_hotplug_events(1)
+        } else if with_trace {
+            trace_events_for(&profile)
+        } else {
+            Vec::new()
+        };
         let session = ServeSession::new(cfg)?;
         // A journaled session proves its recovery before taking traffic:
         // every record replayed from the journal must identify rank-1
@@ -240,6 +269,21 @@ pub fn serve_report(
             total_w: out.power.total_w,
             frames_per_joule: out.power.frames_per_joule,
         });
+        // Anomaly rows only exist when the closed loop engaged, the
+        // journal compacted, or the black box dumped — an
+        // armed-but-untriggered flight pass stays bit-identical to a
+        // plain run.
+        if out.governor_min_scale < 1.0 || out.compactions > 0 || out.flight_dump.is_some() {
+            report.push_anomaly(ServeAnomalyRecord {
+                profile: profile.name.to_string(),
+                overload,
+                alerts: out.anomaly_alerts.len() as u64,
+                governor_min_scale: out.governor_min_scale,
+                compactions: out.compactions,
+                deadline_misses: out.deadline_misses,
+                post_admission_sheds: out.post_admission_sheds,
+            });
+        }
         outcomes.push((profile, out));
     }
     Ok((report, outcomes))
@@ -321,6 +365,26 @@ fn print_outcome(profile: &MissionProfile, out: &ServeOutcome) {
     for a in &out.alerts {
         println!("alert : t={:.2}s uid={} {}", a.at_us as f64 / 1e6, a.uid, a.text);
     }
+    if out.compactions > 0 {
+        println!(
+            "compact: {} background fold(s); journal rebound to the compacted image",
+            out.compactions
+        );
+    }
+    if out.governor_min_scale < 1.0 {
+        println!(
+            "governor: engaged, min refill scale {:.0}%; {} deadline misses, {} post-admission sheds",
+            out.governor_min_scale * 100.0,
+            out.deadline_misses,
+            out.post_admission_sheds
+        );
+    }
+    for a in &out.anomaly_alerts {
+        println!("anomaly: {}", a.describe());
+    }
+    if let Some(p) = &out.flight_dump {
+        println!("flight : sealed dump {} (decode with `champd monitor`)", p.display());
+    }
 }
 
 /// Entry point for `champd serve`.
@@ -336,7 +400,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let run_profiles: Vec<&'static str> = profiles.iter().map(|p| p.name).collect();
     let configs: Vec<ServeConfig> =
         profiles.into_iter().map(|p| config_for(p, args)).collect();
-    let (report, outcomes) = serve_report(configs, with_trace)?;
+    let (report, outcomes) = serve_report(configs, with_trace, args.switch("inject-swap"))?;
     for (profile, out) in &outcomes {
         print_outcome(profile, out);
     }
@@ -448,6 +512,19 @@ mod tests {
         assert_eq!(cfg.image.as_deref(), Some(std::path::Path::new("cart.vdisk")));
         assert_eq!(cfg.image_key, "op-key");
         assert_eq!(cfg.journal.as_deref(), Some(std::path::Path::new("cart.cjl")));
+        assert!(cfg.flight.is_none());
+        assert!(!cfg.governor);
+        assert_eq!(cfg.compact_threshold, 0);
+
+        let a = parse_args(
+            "serve --flight box.bbx --governor --compact-threshold 64"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = config_for(MissionProfile::checkpoint(), &a);
+        assert_eq!(cfg.flight.as_deref(), Some(std::path::Path::new("box.bbx")));
+        assert!(cfg.governor);
+        assert_eq!(cfg.compact_threshold, 64);
     }
 
     #[test]
@@ -458,7 +535,7 @@ mod tests {
         cfg.requests = 60;
         cfg.gallery = 512;
         cfg.dim = 32;
-        let (report, outcomes) = serve_report(vec![cfg], false).unwrap();
+        let (report, outcomes) = serve_report(vec![cfg], false, false).unwrap();
         assert_eq!(outcomes.len(), 1);
         assert_eq!(report.records.len(), 4);
         // Checkpoint has two tenants (lane-a / lane-b); their terminal
@@ -492,7 +569,7 @@ mod tests {
         // otherwise.  The committed goodput floors must hold here so a
         // floor regression is caught by tier-1 before the CI gate.
         let cfg = ServeConfig::new(MissionProfile::checkpoint());
-        let (report, _) = serve_report(vec![cfg], false).unwrap();
+        let (report, _) = serve_report(vec![cfg], false, false).unwrap();
         let baseline = ServeReport::parse(DEFAULT_BASELINE).unwrap();
         let violations = report.check_against(&baseline, 0.10);
         assert!(violations.is_empty(), "{violations:?}");
@@ -506,7 +583,7 @@ mod tests {
             cfg.gallery = 512;
             cfg.dim = 32;
             cfg.overload = 2.0;
-            serve_report(vec![cfg], false).unwrap().0
+            serve_report(vec![cfg], false, false).unwrap().0
         };
         let (mut a, mut b) = (mk(), mk());
         // The commit field is environment-derived, not run-derived.

@@ -43,7 +43,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     let multi = configs.len() > 1;
     // with_trace also applies each profile's scripted hot-plug events, so
     // the disaster trace shows the mid-run cartridge swap.
-    let (_report, outcomes) = serve_report(configs, true)?;
+    let (_report, outcomes) = serve_report(configs, true, false)?;
     for (profile, out) in &outcomes {
         anyhow::ensure!(
             out.trace.is_some(),
@@ -80,7 +80,7 @@ mod tests {
         cfg.gallery = 256;
         cfg.dim = 32;
         cfg.trace = true;
-        let (_r, outcomes) = serve_report(vec![cfg], true).unwrap();
+        let (_r, outcomes) = serve_report(vec![cfg], true, false).unwrap();
         let snap = outcomes[0].1.trace.as_ref().expect("trace snapshot");
         assert!(snap.dropped == 0, "mini run must fit the ring");
         assert!(!snap.records.is_empty());

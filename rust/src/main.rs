@@ -12,6 +12,8 @@
 //!   power            §4.3 power report over the Table-1 sweep
 //!   trace            traced serving run -> Perfetto JSON + folded stacks
 //!                    + SLO health summary
+//!   monitor          decode a sealed flight-recorder dump (.bbx) and
+//!                    attribute the regression to a pipeline stage
 //!   export-workflow  dump the ComfyUI-style graph for the live pipeline
 //!   check-artifacts  compile every artifact and run a smoke inference
 //!   vdisk            pack / inspect / verify / compact sealed cartridge images
@@ -41,11 +43,13 @@ USAGE: champd <subcommand> [flags]
   serve [--profile checkpoint|watchlist|disaster|all] [--overload F]
         [--frames N] [--seed S] [--batch B] [--window W] [--gallery N]
         [--dim D] [--k K] [--trace [PATH]] [--image IMG.vdisk] [--image-key K]
-        [--journal J.cjl] [--out PATH] [--baseline PATH] [--tolerance PCT]
-        [--no-guard]
+        [--journal J.cjl] [--flight BOX.bbx] [--governor]
+        [--compact-threshold N] [--inject-swap] [--out PATH]
+        [--baseline PATH] [--tolerance PCT] [--no-guard]
   trace [--profile checkpoint|watchlist|disaster|all] [--out PATH]
         [--overload F] [--frames N] [--seed S] [--image IMG.vdisk]
         [--image-key K] (serving knobs as in serve; tracing always on)
+  monitor DUMP.bbx [--key K]
   sweep --kind ncs2|coral [--max-devices N] [--frames N] [--engine barrier|batched]
         [--batch B]
   bench scaling [--frames N] [--max-devices N] [--trace [PATH]] [--out PATH]
@@ -241,6 +245,7 @@ fn main() -> anyhow::Result<()> {
         "run" => cmd_run(&args),
         "serve" => cli::serve::run(&args),
         "trace" => cli::trace::run(&args),
+        "monitor" => cli::monitor::run(&args),
         "sweep" => cmd_sweep(&args),
         "bench" => cli::bench::run(&args),
         "hotswap" => cmd_hotswap(&args),

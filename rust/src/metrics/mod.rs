@@ -118,18 +118,34 @@ impl Histogram {
         self.max
     }
 
-    /// Approximate percentile from the log buckets (upper bound of bucket).
+    /// Approximate percentile from the log buckets, linearly interpolated
+    /// within the target bucket.
+    ///
+    /// Bucket `i` covers `[2^(i-1), 2^i)`; the rank is placed inside the
+    /// bucket proportionally to how far it sits among the bucket's
+    /// samples, then clamped to the observed `[min, max]`.  The error is
+    /// therefore bounded by **one bucket width** (a factor of 2 in value)
+    /// regardless of how adversarially the samples cluster — versus the
+    /// old upper-bound rule, which could overstate a percentile by a full
+    /// factor of 2 even for a constant distribution.
     pub fn percentile_us(&self, p: f64) -> u64 {
         if self.count == 0 {
             return 0;
         }
-        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
-        let mut seen = 0;
+        let target = (((p / 100.0) * self.count as f64).ceil().max(1.0)) as u64;
+        let mut seen = 0u64;
         for (i, n) in self.buckets.iter().enumerate() {
-            seen += n;
-            if seen >= target.max(1) {
-                return 1u64 << i;
+            if *n == 0 {
+                continue;
             }
+            if seen + n >= target {
+                let lo = if i == 0 { 0 } else { 1u64 << (i - 1) };
+                let hi = 1u64 << i;
+                let frac = (target - seen) as f64 / *n as f64;
+                let v = lo as f64 + frac * (hi - lo) as f64;
+                return (v.round() as u64).clamp(self.min, self.max);
+            }
+            seen += n;
         }
         self.max
     }
@@ -234,5 +250,42 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.percentile_us(99.0), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn interpolated_quantiles_stay_within_one_bucket_of_exact() {
+        // Exact rank rule matching serve::slo::percentile.
+        let exact = |sorted: &[u64], p: f64| -> u64 {
+            let idx =
+                ((sorted.len() as f64 * p / 100.0).ceil() as usize).clamp(1, sorted.len()) - 1;
+            sorted[idx]
+        };
+        let check = |vals: &mut Vec<u64>, name: &str| {
+            let mut h = Histogram::default();
+            for &v in vals.iter() {
+                h.record(v);
+            }
+            vals.sort_unstable();
+            for p in [50.0, 90.0, 99.0] {
+                let e = exact(vals, p);
+                let got = h.percentile_us(p);
+                // Documented bound: within one log2 bucket (factor of 2)
+                // of exact, and never outside the observed range.
+                let lo = (e / 2).max(h.min_us());
+                let hi = (e.saturating_mul(2)).min(h.max_us());
+                assert!(
+                    got >= lo && got <= hi,
+                    "{name} p{p}: got {got}, exact {e} (bound [{lo}, {hi}])"
+                );
+            }
+        };
+        // Constant: interpolation must collapse to the exact value.
+        check(&mut vec![300; 1_000], "constant");
+        // Uniform ramp across many buckets.
+        check(&mut (1..=1024).collect(), "ramp");
+        // Adversarial bimodal mass at opposite ends of the range.
+        let mut bimodal = vec![10u64; 900];
+        bimodal.extend(vec![100_000u64; 100]);
+        check(&mut bimodal, "bimodal");
     }
 }

@@ -502,9 +502,63 @@ impl ServePowerRecord {
     }
 }
 
-/// Serve-report schema: v2 adds the per-tenant `tenants` rows.  Readers
-/// stay lenient — a v1 file (no `tenants` key) parses with an empty list.
-pub const SERVE_SCHEMA_VERSION: u64 = 2;
+/// One per-profile anomaly/closed-loop row (schema v3).  Only emitted
+/// when the admission governor engaged, background compaction ran, or
+/// the flight recorder dumped, so an armed-but-quiet flight run's
+/// report stays byte-identical to a plain run at the same seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeAnomalyRecord {
+    pub profile: String,
+    pub overload: f64,
+    /// Anomaly alerts (spikes + burn-rate) the engine raised.
+    pub alerts: u64,
+    /// Lowest admission refill scale the governor reached (1.0 = never
+    /// engaged).
+    pub governor_min_scale: f64,
+    /// Background journal-compaction folds performed mid-run.
+    pub compactions: u64,
+    /// Completions past their deadline, run total.
+    pub deadline_misses: u64,
+    /// Sheds after admission (expired/evicted/queue-full/stalled) —
+    /// work accepted and then wasted, the quantity the governor exists
+    /// to reduce.
+    pub post_admission_sheds: u64,
+}
+
+impl ServeAnomalyRecord {
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("profile", json::s(&self.profile)),
+            ("overload", json::num(self.overload)),
+            ("alerts", json::num(self.alerts as f64)),
+            ("governor_min_scale", json::num(self.governor_min_scale)),
+            ("compactions", json::num(self.compactions as f64)),
+            ("deadline_misses", json::num(self.deadline_misses as f64)),
+            ("post_admission_sheds", json::num(self.post_admission_sheds as f64)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Option<ServeAnomalyRecord> {
+        Some(ServeAnomalyRecord {
+            profile: v.get("profile")?.as_str()?.to_string(),
+            overload: v.get("overload")?.as_f64()?,
+            alerts: v.get("alerts").and_then(Value::as_u64).unwrap_or(0),
+            governor_min_scale: v.get("governor_min_scale").and_then(Value::as_f64).unwrap_or(1.0),
+            compactions: v.get("compactions").and_then(Value::as_u64).unwrap_or(0),
+            deadline_misses: v.get("deadline_misses").and_then(Value::as_u64).unwrap_or(0),
+            post_admission_sheds: v
+                .get("post_admission_sheds")
+                .and_then(Value::as_u64)
+                .unwrap_or(0),
+        })
+    }
+}
+
+/// Serve-report schema: v2 adds the per-tenant `tenants` rows, v3 the
+/// optional `anomaly` rows.  Readers stay lenient — a v1 file (no
+/// `tenants` key) or v2 file (no `anomaly` key) parses with empty lists,
+/// and `check_against` never gates the anomaly section.
+pub const SERVE_SCHEMA_VERSION: u64 = 3;
 
 /// The serving-layer telemetry file (`BENCH_serve.json`, schema v2).
 ///
@@ -539,6 +593,7 @@ pub struct ServeReport {
     pub records: Vec<ServeRecord>,
     pub tenants: Vec<ServeTenantRecord>,
     pub power: Vec<ServePowerRecord>,
+    pub anomaly: Vec<ServeAnomalyRecord>,
 }
 
 impl ServeReport {
@@ -549,6 +604,7 @@ impl ServeReport {
             records: Vec::new(),
             tenants: Vec::new(),
             power: Vec::new(),
+            anomaly: Vec::new(),
         }
     }
 
@@ -564,6 +620,10 @@ impl ServeReport {
         self.power.push(p);
     }
 
+    pub fn push_anomaly(&mut self, a: ServeAnomalyRecord) {
+        self.anomaly.push(a);
+    }
+
     pub fn find(&self, profile: &str, class: &str, overload: f64) -> Option<&ServeRecord> {
         self.records.iter().find(|r| {
             r.profile == profile && r.class == class && (r.overload - overload).abs() < 1e-9
@@ -571,7 +631,7 @@ impl ServeReport {
     }
 
     pub fn to_value(&self) -> Value {
-        json::obj(vec![
+        let mut fields = vec![
             ("schema", json::num(SERVE_SCHEMA_VERSION as f64)),
             ("commit", json::s(&self.commit)),
             ("seed", json::num(self.seed as f64)),
@@ -581,7 +641,16 @@ impl ServeReport {
                 Value::Arr(self.tenants.iter().map(ServeTenantRecord::to_value).collect()),
             ),
             ("power", Value::Arr(self.power.iter().map(ServePowerRecord::to_value).collect())),
-        ])
+        ];
+        // The anomaly section only appears when it has rows, so files
+        // from ungoverned runs keep the v2 key set.
+        if !self.anomaly.is_empty() {
+            fields.push((
+                "anomaly",
+                Value::Arr(self.anomaly.iter().map(ServeAnomalyRecord::to_value).collect()),
+            ));
+        }
+        json::obj(fields)
     }
 
     pub fn to_json_pretty(&self) -> String {
@@ -614,7 +683,15 @@ impl ServeReport {
                     .ok_or_else(|| anyhow::anyhow!("malformed power record: {}", p.to_json()))?,
             );
         }
-        Ok(ServeReport { commit, seed, records, tenants, power })
+        // v2 back-compat: no "anomaly" key parses as an empty list.
+        let mut anomaly = Vec::new();
+        for a in v.get("anomaly").and_then(Value::as_arr).unwrap_or(&[]) {
+            anomaly.push(
+                ServeAnomalyRecord::from_value(a)
+                    .ok_or_else(|| anyhow::anyhow!("malformed anomaly record: {}", a.to_json()))?,
+            );
+        }
+        Ok(ServeReport { commit, seed, records, tenants, power, anomaly })
     }
 
     pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
@@ -1064,9 +1141,34 @@ mod tests {
             p99_us: 4_700,
         });
         let text = rep.to_json_pretty();
-        assert!(text.contains("\"schema\": 2"), "{text}");
+        assert!(text.contains("\"schema\": 3"), "{text}");
         let back = ServeReport::parse(&text).unwrap();
         assert_eq!(back.tenants, rep.tenants);
+    }
+
+    #[test]
+    fn serve_report_v3_anomaly_rows_are_optional_and_roundtrip() {
+        // No rows: the key is omitted entirely (v2-shaped file) and a
+        // v2 file parses back with an empty anomaly list.
+        let quiet = ServeReport::new("f00d", 7);
+        assert!(!quiet.to_json_pretty().contains("anomaly"));
+        assert!(ServeReport::parse(&quiet.to_json_pretty()).unwrap().anomaly.is_empty());
+
+        let mut rep = ServeReport::new("f00d", 7);
+        rep.push_anomaly(ServeAnomalyRecord {
+            profile: "disaster".into(),
+            overload: 8.0,
+            alerts: 5,
+            governor_min_scale: 0.25,
+            compactions: 1,
+            deadline_misses: 12,
+            post_admission_sheds: 31,
+        });
+        let back = ServeReport::parse(&rep.to_json_pretty()).unwrap();
+        assert_eq!(back.anomaly, rep.anomaly);
+        // The goodput guard never gates the anomaly section.
+        assert!(rep.check_against(&ServeReport::new("base", 7), 0.10).is_empty());
+        assert!(ServeReport::parse(r#"{"anomaly": [{"overload": 1}]}"#).is_err());
     }
 
     #[test]

@@ -1,0 +1,594 @@
+//! Streaming anomaly detection and SLO burn-rate alerting in virtual time.
+//!
+//! The serve session feeds one [`TickSample`] per health tick (100 ms of
+//! virtual time): per-class and per-tenant deltas of "bad" terminal
+//! outcomes, plus instantaneous values of the global series it already
+//! tracks (goodput, p99, shed rate, cache hit rate, bus defer rate).  The
+//! [`AnomalyEngine`] runs two detector families over those feeds:
+//!
+//! * **EWMA z-score spike detectors** ([`ZScore`]) over each global
+//!   series — a cheap change-point test that flags a sample more than
+//!   `threshold` deviations from the exponentially-weighted mean.  The
+//!   mean/variance update *after* the test, so a genuine step change is
+//!   seen before the baseline absorbs it.
+//! * **Multi-window SLO burn-rate alerts** ([`BurnScope`]) per class and
+//!   per tenant.  The SLO budget is a bad-outcome fraction
+//!   ([`SloBudget::DEFAULT_BAD_BUDGET`]); a window's *burn rate* is the
+//!   observed bad fraction over that window divided by the budget.  An
+//!   alert fires only when both a long window and its short confirmation
+//!   window exceed the factor — the long window gives significance, the
+//!   short one makes the alert reset quickly once the burn stops
+//!   (multi-window burn alerting per Google SRE workbook ch. 5, scaled
+//!   to virtual-time ticks).
+//!
+//! "Bad" deliberately **excludes rate-limited sheds**: those are the
+//! admission governor's own action, and counting them as burn would lock
+//! the control loop at its floor (shed → burn → scale down → more shed).
+//! Deadline misses and the post-admission shed reasons (queue-full,
+//! expired, evicted, journal-stalled) count.
+//!
+//! Everything here is pure arithmetic over caller-supplied virtual-time
+//! samples — no wall clock, no RNG, iteration in index order — so the
+//! alert stream is bit-identical across same-seed runs.
+
+/// Virtual-time tick width the engine is calibrated for (matches the
+/// serve session's health tick).
+pub const TICK_US: u64 = 100_000;
+
+/// The global metric series the spike detectors watch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SeriesId {
+    /// On-time completions per tick.
+    Goodput = 0,
+    /// p99 of terminal latencies observed this tick (µs).
+    P99 = 1,
+    /// Sheds per offered request this tick.
+    ShedRate = 2,
+    /// Block-cache hit fraction this tick.
+    CacheHitRate = 3,
+    /// Wire-arbiter defers per dispatch this tick.
+    BusDeferRate = 4,
+}
+
+impl SeriesId {
+    pub const ALL: [SeriesId; 5] = [
+        SeriesId::Goodput,
+        SeriesId::P99,
+        SeriesId::ShedRate,
+        SeriesId::CacheHitRate,
+        SeriesId::BusDeferRate,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SeriesId::Goodput => "goodput",
+            SeriesId::P99 => "p99",
+            SeriesId::ShedRate => "shed-rate",
+            SeriesId::CacheHitRate => "cache-hit-rate",
+            SeriesId::BusDeferRate => "bus-defer-rate",
+        }
+    }
+
+    /// Inverse of the discriminant (for flight-ring decode).
+    pub fn from_code(c: u8) -> Option<SeriesId> {
+        SeriesId::ALL.get(c as usize).copied()
+    }
+}
+
+/// Exponentially-weighted mean/variance z-score detector.
+///
+/// `observe` tests the incoming sample against the *current* baseline and
+/// only then folds it in, so a step change scores against the pre-step
+/// mean.  A relative floor on the standard deviation keeps a flat series
+/// from turning numerical dust into infinite z-scores.
+#[derive(Debug, Clone)]
+pub struct ZScore {
+    mean: f64,
+    var: f64,
+    alpha: f64,
+    threshold: f64,
+    warmup: u32,
+    seen: u32,
+}
+
+impl ZScore {
+    pub fn new(alpha: f64, threshold: f64, warmup: u32) -> Self {
+        ZScore { mean: 0.0, var: 0.0, alpha, threshold, warmup, seen: 0 }
+    }
+
+    /// Feed one sample; returns `Some(z)` when the sample is anomalous
+    /// (past warmup and `|z| > threshold`).
+    pub fn observe(&mut self, x: f64) -> Option<f64> {
+        let fired = if self.seen >= self.warmup {
+            let std = self.var.sqrt().max(1e-9 + 0.05 * self.mean.abs());
+            let z = (x - self.mean) / std;
+            (z.abs() > self.threshold).then_some(z)
+        } else {
+            None
+        };
+        if self.seen == 0 {
+            self.mean = x;
+        } else {
+            let d = x - self.mean;
+            self.mean += self.alpha * d;
+            self.var = (1.0 - self.alpha) * (self.var + self.alpha * d * d);
+        }
+        self.seen = self.seen.saturating_add(1);
+        fired
+    }
+}
+
+/// One burn-rate window pair: a long window for significance and a short
+/// confirmation window for fast reset.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowSpec {
+    /// Long-window length in ticks.
+    pub long: usize,
+    /// Short confirmation-window length in ticks.
+    pub short: usize,
+    /// Burn-rate factor both windows must exceed.
+    pub factor: f64,
+    pub label: &'static str,
+}
+
+/// The two window pairs every scope is evaluated against.
+pub const BURN_WINDOWS: [WindowSpec; 2] = [
+    WindowSpec { long: 25, short: 5, factor: 8.0, label: "fast" },
+    WindowSpec { long: 100, short: 25, factor: 2.0, label: "slow" },
+];
+
+/// SLO error budget: the tolerated fraction of bad terminal outcomes.
+#[derive(Debug, Clone, Copy)]
+pub struct SloBudget(pub f64);
+
+impl SloBudget {
+    pub const DEFAULT_BAD_BUDGET: f64 = 0.1;
+}
+
+impl Default for SloBudget {
+    fn default() -> Self {
+        SloBudget(Self::DEFAULT_BAD_BUDGET)
+    }
+}
+
+/// Per-scope (class or tenant) burn-rate state: a ring of per-tick
+/// `(bad, total)` deltas plus the firing edge per window pair.
+#[derive(Debug, Clone)]
+pub struct BurnScope {
+    ring: std::collections::VecDeque<(u64, u64)>,
+    firing: [bool; BURN_WINDOWS.len()],
+}
+
+impl BurnScope {
+    pub fn new() -> Self {
+        BurnScope {
+            ring: std::collections::VecDeque::with_capacity(BURN_WINDOWS[1].long),
+            firing: [false; BURN_WINDOWS.len()],
+        }
+    }
+
+    fn window_burn(&self, len: usize, budget: f64) -> f64 {
+        let take = len.min(self.ring.len());
+        let (mut bad, mut total) = (0u64, 0u64);
+        for &(b, t) in self.ring.iter().rev().take(take) {
+            bad += b;
+            total += t;
+        }
+        if total == 0 {
+            return 0.0;
+        }
+        (bad as f64 / total as f64) / budget
+    }
+
+    /// Push one tick's delta; returns `(newly_fired, burning)` where
+    /// `newly_fired` holds `(window_index, long_window_burn)` for each
+    /// pair that transitioned into the firing state this tick, and
+    /// `burning` is true while *any* pair's condition holds (level
+    /// signal for the admission governor).
+    pub fn push(&mut self, bad: u64, total: u64, budget: f64) -> (Vec<(usize, f64)>, bool) {
+        self.ring.push_back((bad, total));
+        while self.ring.len() > BURN_WINDOWS[BURN_WINDOWS.len() - 1].long {
+            self.ring.pop_front();
+        }
+        let mut fired = Vec::new();
+        let mut burning = false;
+        for (i, w) in BURN_WINDOWS.iter().enumerate() {
+            let long = self.window_burn(w.long, budget);
+            let short = self.window_burn(w.short, budget);
+            let hot = long > w.factor && short > w.factor;
+            if hot && !self.firing[i] {
+                fired.push((i, long));
+            }
+            self.firing[i] = hot;
+            burning |= hot;
+        }
+        (fired, burning)
+    }
+}
+
+impl Default for BurnScope {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// What fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum AlertKind {
+    /// Fast burn-rate pair (8× over 2.5 s confirmed over 0.5 s).
+    BurnFast = 0,
+    /// Slow burn-rate pair (2× over 10 s confirmed over 2.5 s).
+    BurnSlow = 1,
+    /// A z-score spike on a global series.
+    Spike = 2,
+}
+
+impl AlertKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AlertKind::BurnFast => "burn-fast",
+            AlertKind::BurnSlow => "burn-slow",
+            AlertKind::Spike => "spike",
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<AlertKind> {
+        Some(match c {
+            0 => AlertKind::BurnFast,
+            1 => AlertKind::BurnSlow,
+            2 => AlertKind::Spike,
+            _ => return None,
+        })
+    }
+}
+
+/// Whose budget (or series) the alert concerns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertScope {
+    Global,
+    Class(u8),
+    Tenant(u8),
+}
+
+impl AlertScope {
+    fn code(&self) -> (u8, u8) {
+        match self {
+            AlertScope::Global => (0, 0),
+            AlertScope::Class(i) => (1, *i),
+            AlertScope::Tenant(i) => (2, *i),
+        }
+    }
+
+    fn from_code(kind: u8, idx: u8) -> Option<AlertScope> {
+        Some(match kind {
+            0 => AlertScope::Global,
+            1 => AlertScope::Class(idx),
+            2 => AlertScope::Tenant(idx),
+            _ => return None,
+        })
+    }
+}
+
+/// One typed anomaly alert, edge-triggered and deterministic per seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnomalyAlert {
+    /// Virtual time of the tick that fired.
+    pub t_us: u64,
+    pub kind: AlertKind,
+    pub scope: AlertScope,
+    /// The series a spike fired on; `None` for burn alerts.
+    pub series: Option<SeriesId>,
+    /// Burn rate (burn alerts) or z-score (spikes).
+    pub value: f64,
+}
+
+impl AnomalyAlert {
+    /// Pack kind/scope/series into the trace event's `a` word:
+    /// `kind | scope_kind<<8 | scope_idx<<16 | (series+1)<<24`.
+    pub fn code(&self) -> u64 {
+        let (sk, si) = self.scope.code();
+        let series = self.series.map(|s| s as u64 + 1).unwrap_or(0);
+        self.kind as u64 | (sk as u64) << 8 | (si as u64) << 16 | series << 24
+    }
+
+    /// Inverse of [`AnomalyAlert::code`] (`value` from the event's `b`
+    /// word as `f64::from_bits`).
+    pub fn from_words(t_us: u64, a: u64, b: u64) -> Option<AnomalyAlert> {
+        Some(AnomalyAlert {
+            t_us,
+            kind: AlertKind::from_code((a & 0xFF) as u8)?,
+            scope: AlertScope::from_code(((a >> 8) & 0xFF) as u8, ((a >> 16) & 0xFF) as u8)?,
+            series: match ((a >> 24) & 0xFF) as u8 {
+                0 => None,
+                s => Some(SeriesId::from_code(s - 1)?),
+            },
+            value: f64::from_bits(b),
+        })
+    }
+
+    pub fn describe(&self) -> String {
+        let scope = match self.scope {
+            AlertScope::Global => "global".to_string(),
+            AlertScope::Class(i) => format!("class {i}"),
+            AlertScope::Tenant(i) => format!("tenant {i}"),
+        };
+        match self.kind {
+            AlertKind::Spike => format!(
+                "{} {} spike z={:+.1}",
+                scope,
+                self.series.map(|s| s.as_str()).unwrap_or("?"),
+                self.value
+            ),
+            k => format!("{scope} {} burn {:.1}x budget", k.as_str(), self.value),
+        }
+    }
+}
+
+/// One tick's worth of observations, assembled by the serve session from
+/// its cumulative tallies (the session diffs; the engine only sees
+/// deltas).
+#[derive(Debug, Clone, Default)]
+pub struct TickSample {
+    pub t_us: u64,
+    /// Per-class `(bad, total)` terminal-outcome deltas this tick.
+    pub class_bad: Vec<(u64, u64)>,
+    /// Per-tenant `(bad, total)` terminal-outcome deltas this tick.
+    pub tenant_bad: Vec<(u64, u64)>,
+    /// Instantaneous global series values this tick, indexed by
+    /// [`SeriesId`] discriminant order (missing entries are skipped).
+    pub series: Vec<(SeriesId, f64)>,
+}
+
+/// The engine's per-tick verdict.
+#[derive(Debug, Clone, Default)]
+pub struct TickVerdict {
+    /// Edge-triggered alerts that fired this tick.
+    pub alerts: Vec<AnomalyAlert>,
+    /// Level signal: true while any burn-window condition holds on any
+    /// scope.  The admission governor keys off this, not off alerts, so
+    /// it reacts to sustained burn rather than edges.
+    pub burning: bool,
+}
+
+/// All detector state for one serve run.
+pub struct AnomalyEngine {
+    budget: f64,
+    classes: Vec<BurnScope>,
+    tenants: Vec<BurnScope>,
+    spikes: Vec<(SeriesId, ZScore, bool)>,
+}
+
+impl AnomalyEngine {
+    pub fn new(classes: usize, tenants: usize, budget: SloBudget) -> Self {
+        AnomalyEngine {
+            budget: budget.0,
+            classes: (0..classes).map(|_| BurnScope::new()).collect(),
+            tenants: (0..tenants).map(|_| BurnScope::new()).collect(),
+            spikes: SeriesId::ALL
+                .iter()
+                .map(|&s| (s, ZScore::new(0.2, 4.0, 10), false))
+                .collect(),
+        }
+    }
+
+    /// Feed one tick; returns the edge alerts plus the burning level.
+    pub fn tick(&mut self, sample: &TickSample) -> TickVerdict {
+        let mut v = TickVerdict::default();
+        for (i, &(bad, total)) in sample.class_bad.iter().enumerate() {
+            if i >= self.classes.len() {
+                break;
+            }
+            let (fired, burning) = self.classes[i].push(bad, total, self.budget);
+            v.burning |= burning;
+            for (w, burn) in fired {
+                v.alerts.push(AnomalyAlert {
+                    t_us: sample.t_us,
+                    kind: if w == 0 { AlertKind::BurnFast } else { AlertKind::BurnSlow },
+                    scope: AlertScope::Class(i as u8),
+                    series: None,
+                    value: burn,
+                });
+            }
+        }
+        for (i, &(bad, total)) in sample.tenant_bad.iter().enumerate() {
+            if i >= self.tenants.len() {
+                break;
+            }
+            let (fired, burning) = self.tenants[i].push(bad, total, self.budget);
+            v.burning |= burning;
+            for (w, burn) in fired {
+                v.alerts.push(AnomalyAlert {
+                    t_us: sample.t_us,
+                    kind: if w == 0 { AlertKind::BurnFast } else { AlertKind::BurnSlow },
+                    scope: AlertScope::Tenant(i as u8),
+                    series: None,
+                    value: burn,
+                });
+            }
+        }
+        for &(series, x) in &sample.series {
+            let Some(slot) =
+                self.spikes.iter_mut().find(|(s, _, _)| *s == series)
+            else {
+                continue;
+            };
+            let z = slot.1.observe(x);
+            // Edge-trigger: one alert per excursion, re-armed once the
+            // series returns inside the band.
+            if let Some(z) = z {
+                if !slot.2 {
+                    slot.2 = true;
+                    v.alerts.push(AnomalyAlert {
+                        t_us: sample.t_us,
+                        kind: AlertKind::Spike,
+                        scope: AlertScope::Global,
+                        series: Some(series),
+                        value: z,
+                    });
+                }
+            } else {
+                slot.2 = false;
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zscore_flags_step_change_once_warm() {
+        let mut d = ZScore::new(0.2, 4.0, 10);
+        for _ in 0..20 {
+            assert!(d.observe(100.0).is_none(), "flat series must not fire");
+        }
+        let z = d.observe(1_000.0).expect("step change must fire");
+        assert!(z > 4.0);
+    }
+
+    #[test]
+    fn zscore_warmup_swallows_early_samples() {
+        let mut d = ZScore::new(0.2, 4.0, 10);
+        for i in 0..10 {
+            assert!(d.observe((i * 1000) as f64).is_none(), "sample {i} in warmup");
+        }
+    }
+
+    #[test]
+    fn burn_scope_requires_both_windows() {
+        let budget = 0.1;
+        let mut s = BurnScope::new();
+        // One hot tick inside a cold history: the short window exceeds
+        // the factor but the long window dilutes it — no fire.
+        for _ in 0..24 {
+            s.push(0, 10, budget);
+        }
+        let (fired, burning) = s.push(10, 10, budget);
+        assert!(fired.is_empty(), "single hot tick must not fire: {fired:?}");
+        assert!(!burning);
+        // Sustained burn lights both windows.
+        let mut any = Vec::new();
+        for _ in 0..25 {
+            let (f, _) = s.push(10, 10, budget);
+            any.extend(f);
+        }
+        assert!(any.iter().any(|&(w, _)| w == 0), "fast pair must fire under sustained burn");
+    }
+
+    #[test]
+    fn burn_alerts_are_edge_triggered_and_rearm() {
+        let budget = 0.1;
+        let mut s = BurnScope::new();
+        let mut fast_fires = 0;
+        for _ in 0..60 {
+            let (f, _) = s.push(10, 10, budget);
+            fast_fires += f.iter().filter(|&&(w, _)| w == 0).count();
+        }
+        assert_eq!(fast_fires, 1, "sustained burn fires the fast pair exactly once");
+        // Cool down until the short window clears, then burn again.
+        for _ in 0..30 {
+            s.push(0, 10, budget);
+        }
+        let mut refired = 0;
+        for _ in 0..30 {
+            let (f, _) = s.push(10, 10, budget);
+            refired += f.iter().filter(|&&(w, _)| w == 0).count();
+        }
+        assert_eq!(refired, 1, "cleared alert must re-arm");
+    }
+
+    #[test]
+    fn engine_is_deterministic_and_scoped() {
+        let run = || {
+            let mut e = AnomalyEngine::new(3, 2, SloBudget::default());
+            let mut all = Vec::new();
+            for t in 0..80u64 {
+                let hot = t >= 30;
+                let sample = TickSample {
+                    t_us: t * TICK_US,
+                    class_bad: vec![
+                        (if hot { 8 } else { 0 }, 10),
+                        (0, 10),
+                        (0, 0),
+                    ],
+                    tenant_bad: vec![(if hot { 4 } else { 0 }, 10), (0, 10)],
+                    series: vec![(SeriesId::Goodput, if hot { 2.0 } else { 90.0 })],
+                };
+                all.extend(e.tick(&sample).alerts);
+            }
+            all
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same feed must produce bit-identical alerts");
+        assert!(
+            a.iter().any(|x| x.scope == AlertScope::Class(0)),
+            "burning class must alert: {a:?}"
+        );
+        assert!(
+            !a.iter().any(|x| x.scope == AlertScope::Class(1)),
+            "healthy class must stay quiet: {a:?}"
+        );
+        assert!(
+            a.iter().any(|x| x.kind == AlertKind::Spike),
+            "goodput collapse must trip the spike detector: {a:?}"
+        );
+    }
+
+    #[test]
+    fn alert_words_roundtrip() {
+        let alerts = [
+            AnomalyAlert {
+                t_us: 700_000,
+                kind: AlertKind::BurnFast,
+                scope: AlertScope::Class(2),
+                series: None,
+                value: 9.25,
+            },
+            AnomalyAlert {
+                t_us: 1_200_000,
+                kind: AlertKind::Spike,
+                scope: AlertScope::Global,
+                series: Some(SeriesId::BusDeferRate),
+                value: -5.5,
+            },
+            AnomalyAlert {
+                t_us: 0,
+                kind: AlertKind::BurnSlow,
+                scope: AlertScope::Tenant(1),
+                series: None,
+                value: 2.125,
+            },
+        ];
+        for a in alerts {
+            let got = AnomalyAlert::from_words(a.t_us, a.code(), a.value.to_bits()).unwrap();
+            assert_eq!(got, a);
+        }
+    }
+
+    #[test]
+    fn governor_feedback_does_not_count_rate_limited_sheds() {
+        // Documented invariant check: the "bad" definition is assembled
+        // by the session, but the engine must stay quiet when fed zero
+        // bad (i.e. when only rate-limited sheds occur the session
+        // reports bad=0 and the loop cannot self-sustain).
+        let mut e = AnomalyEngine::new(1, 1, SloBudget::default());
+        let mut burning_ticks = 0;
+        for t in 0..200u64 {
+            let sample = TickSample {
+                t_us: t * TICK_US,
+                class_bad: vec![(0, 10)],
+                tenant_bad: vec![(0, 10)],
+                series: Vec::new(),
+            };
+            let v = e.tick(&sample);
+            assert!(v.alerts.is_empty());
+            burning_ticks += v.burning as u32;
+        }
+        assert_eq!(burning_ticks, 0);
+    }
+}

@@ -1,0 +1,721 @@
+//! The flight recorder: an always-on, bounded, crash-persistent black
+//! box for the serve plane (DESIGN.md §Flight recorder & anomaly
+//! detection).
+//!
+//! Tracing (`--trace`) is opt-in and verbose; the flight recorder is the
+//! opposite trade: a single small overwrite-oldest ring of recent
+//! span/event/metric-sample records that costs nothing when disarmed
+//! (same `Option<Arc<_>>` niche discipline as
+//! [`TraceRecorder`](super::TraceRecorder)) and, when armed, persists
+//! itself *only* when something goes wrong.  On a trigger —
+//! shed-rate spike, deadline-miss burst, health eviction, journal stall,
+//! or panic (via [`install_panic_hook`]) — the ring is sealed and dumped
+//! to a sidecar `.bbx` file that `champd monitor` can decode after the
+//! fact, even if the process never got to print a report.
+//!
+//! ## Dump format (`.bbx`)
+//!
+//! ```text
+//! +------------------------------+ 0
+//! | file header (24 B)           |  magic "CHAMPBBX" | u32 version |
+//! +------------------------------+  u32 reserved | u64 seed
+//! | frame 0: trigger metadata    |  sealed frames, magic "BBX1",
+//! | frame 1: record batch        |  same 24-B header + CTR+HMAC body
+//! | ...                          |  as the enrollment journal
+//! +------------------------------+  (vdisk frame codec, shared)
+//! ```
+//!
+//! Frames reuse the [`crate::vdisk::frames`] codec: subkeys are bound to
+//! `champ/flight/{seed}/{seq}/{nonce}` with a content-derived nonce, so
+//! a dump for a given seed and ring content is **byte-identical** across
+//! runs (the obs-effect tests pin this down), splicing frames between
+//! dumps fails the MAC, and a dump torn by the very crash it was
+//! recording decodes to a valid truncated prefix rather than an error.
+//!
+//! Frame 0 is 32 bytes of trigger metadata (`trigger | pad ×7 | u64 t_us
+//! | u64 detail | u64 record_count`); frames 1..N carry batches of up to
+//! 256 records, each 48 bytes LE (`kind_code | pad ×7 | u64 trace | u64
+//! t0 | u64 t1 | u64 a | u64 b`).  `kind_code` shares the
+//! [`RecordKind::code`] namespace: spans `0x00..=0x3F`, events
+//! `0x40..=0x7F`, and `0x80 | SeriesId` for metric samples that exist
+//! only in the flight ring.
+//!
+//! **First trigger wins**: the dump latches, later triggers are no-ops —
+//! the interesting state is the ring *at the first fault*, and a
+//! deterministic file beats a last-writer race.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::crypto::seal::SealKey;
+use crate::vdisk::frames;
+
+use super::detect::SeriesId;
+use super::recorder::{EventKind, RecordKind, Stage, TraceId, TraceRecord};
+
+/// Sidecar dump file magic.
+pub const FLIGHT_MAGIC: [u8; 8] = *b"CHAMPBBX";
+/// Dump format revision.
+pub const FLIGHT_VERSION: u32 = 1;
+/// File header: magic(8) + version(4) + reserved(4) + seed(8).
+const FILE_HDR_LEN: usize = 24;
+/// Sealed-frame magic inside a dump.
+const FRAME_MAGIC: [u8; 4] = *b"BBX1";
+/// Domain string mixed into the content-derived frame nonce.
+const NONCE_DOMAIN: &[u8] = b"champ-flight-nonce-v1";
+/// Records retained before the ring overwrites its oldest.
+pub const RING_CAP: usize = 4096;
+/// Records per sealed batch frame.
+const BATCH: usize = 256;
+/// Trigger-metadata payload length (frame 0).
+const TRIGGER_LEN: usize = 32;
+
+/// Subkey tweak binding a dump frame to (seed, seq, content nonce).
+fn flight_tweak(seed: u64, seq: u64, nonce: u64) -> String {
+    format!("champ/flight/{seed}/{seq}/{nonce:016x}")
+}
+
+/// Why the black box dumped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FlightTrigger {
+    /// Shed-rate spike detected by the anomaly engine.
+    ShedSpike = 0,
+    /// Deadline-miss burn-rate alert.
+    DeadlineMissBurst = 1,
+    /// HealthMonitor evicted in-flight work.
+    Eviction = 2,
+    /// The enrollment journal stalled (fail-safe shedding engaged).
+    JournalStalled = 3,
+    /// Process panic (via [`install_panic_hook`]).
+    Panic = 4,
+    /// Operator- or test-requested dump.
+    Manual = 5,
+}
+
+impl FlightTrigger {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FlightTrigger::ShedSpike => "shed-spike",
+            FlightTrigger::DeadlineMissBurst => "deadline-miss-burst",
+            FlightTrigger::Eviction => "eviction",
+            FlightTrigger::JournalStalled => "journal-stalled",
+            FlightTrigger::Panic => "panic",
+            FlightTrigger::Manual => "manual",
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<FlightTrigger> {
+        Some(match c {
+            0 => FlightTrigger::ShedSpike,
+            1 => FlightTrigger::DeadlineMissBurst,
+            2 => FlightTrigger::Eviction,
+            3 => FlightTrigger::JournalStalled,
+            4 => FlightTrigger::Panic,
+            5 => FlightTrigger::Manual,
+            _ => return None,
+        })
+    }
+}
+
+/// One flight-ring record: 48 bytes LE on the wire.  `kind_code` shares
+/// the trace [`RecordKind::code`] namespace, extended with
+/// `0x80 | SeriesId` for metric samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlightRecord {
+    pub kind_code: u8,
+    pub trace: u64,
+    pub t0_us: u64,
+    pub t1_us: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl FlightRecord {
+    pub const WIRE_LEN: usize = 48;
+
+    fn encode(&self) -> [u8; Self::WIRE_LEN] {
+        let mut w = [0u8; Self::WIRE_LEN];
+        w[0] = self.kind_code;
+        w[8..16].copy_from_slice(&self.trace.to_le_bytes());
+        w[16..24].copy_from_slice(&self.t0_us.to_le_bytes());
+        w[24..32].copy_from_slice(&self.t1_us.to_le_bytes());
+        w[32..40].copy_from_slice(&self.a.to_le_bytes());
+        w[40..48].copy_from_slice(&self.b.to_le_bytes());
+        w
+    }
+
+    fn decode(w: &[u8]) -> Option<FlightRecord> {
+        if w.len() != Self::WIRE_LEN {
+            return None;
+        }
+        Some(FlightRecord {
+            kind_code: w[0],
+            trace: u64::from_le_bytes(w[8..16].try_into().unwrap()),
+            t0_us: u64::from_le_bytes(w[16..24].try_into().unwrap()),
+            t1_us: u64::from_le_bytes(w[24..32].try_into().unwrap()),
+            a: u64::from_le_bytes(w[32..40].try_into().unwrap()),
+            b: u64::from_le_bytes(w[40..48].try_into().unwrap()),
+        })
+    }
+
+    /// This record as a trace record, when it is a span or event.
+    pub fn as_trace_record(&self) -> Option<TraceRecord> {
+        Some(TraceRecord {
+            trace: TraceId(self.trace),
+            kind: RecordKind::from_code(self.kind_code)?,
+            t0_us: self.t0_us,
+            t1_us: self.t1_us,
+            a: self.a,
+            b: self.b,
+        })
+    }
+
+    /// The series id, when this record is a metric sample (`b` unused,
+    /// `a` carries the value as `f64::to_bits`).
+    pub fn series(&self) -> Option<SeriesId> {
+        if self.kind_code & 0x80 != 0 {
+            SeriesId::from_code(self.kind_code & 0x7F)
+        } else {
+            None
+        }
+    }
+
+    /// Human label for monitor output.
+    pub fn kind_str(&self) -> String {
+        if let Some(s) = self.series() {
+            format!("sample:{}", s.as_str())
+        } else if let Some(k) = RecordKind::from_code(self.kind_code) {
+            k.as_str().to_string()
+        } else {
+            format!("unknown:{:#04x}", self.kind_code)
+        }
+    }
+}
+
+/// Fixed-capacity overwrite ring (single lock: writers are the
+/// single-threaded virtual-time event loop, so there is no contention to
+/// shard away, and one ring keeps dump order globally chronological).
+struct Ring {
+    buf: Vec<FlightRecord>,
+    head: usize,
+    wrapped: bool,
+}
+
+impl Ring {
+    fn new() -> Self {
+        Ring { buf: Vec::new(), head: 0, wrapped: false }
+    }
+
+    fn push(&mut self, r: FlightRecord) -> bool {
+        if self.wrapped {
+            self.buf[self.head] = r;
+            self.head = (self.head + 1) % RING_CAP;
+            return true;
+        }
+        self.buf.push(r);
+        if self.buf.len() == RING_CAP {
+            self.wrapped = true;
+        }
+        false
+    }
+
+    /// Retained records, oldest first.
+    fn snapshot(&self) -> Vec<FlightRecord> {
+        if !self.wrapped {
+            return self.buf.clone();
+        }
+        let mut out = Vec::with_capacity(RING_CAP);
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+struct FlightCore {
+    seed: u64,
+    key: SealKey,
+    sidecar: PathBuf,
+    ring: Mutex<Ring>,
+    vnow: AtomicU64,
+    dropped: AtomicU64,
+    dumped: AtomicBool,
+}
+
+/// The flight-recorder handle: cheap to clone, `off()` is free to call
+/// into (every method is an `#[inline]` early return when disarmed).
+#[derive(Clone, Default)]
+pub struct FlightRecorder(Option<Arc<FlightCore>>);
+
+impl FlightRecorder {
+    /// The disarmed recorder as a `const` (compile-time no-op path).
+    pub const OFF: FlightRecorder = FlightRecorder(None);
+
+    /// A recorder that records nothing and allocates nothing.
+    pub fn off() -> Self {
+        FlightRecorder(None)
+    }
+
+    /// Arm the black box: ring in memory, sealed dump to `sidecar` on
+    /// the first trigger.  `seed` binds the dump's subkeys (and is
+    /// stored in the header) so same-seed dumps are byte-identical.
+    pub fn armed(seed: u64, key: SealKey, sidecar: PathBuf) -> Self {
+        FlightRecorder(Some(Arc::new(FlightCore {
+            seed,
+            key,
+            sidecar,
+            ring: Mutex::new(Ring::new()),
+            vnow: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            dumped: AtomicBool::new(false),
+        })))
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Publish the event loop's virtual time (stamped into the trigger
+    /// frame at dump time).
+    #[inline]
+    pub fn set_vnow(&self, t_us: u64) {
+        if let Some(core) = &self.0 {
+            core.vnow.store(t_us, Ordering::Relaxed);
+        }
+    }
+
+    /// Last published virtual time (0 when disarmed).
+    #[inline]
+    pub fn vnow(&self) -> u64 {
+        self.0.as_ref().map(|c| c.vnow.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    #[inline]
+    fn push(&self, r: FlightRecord) {
+        let Some(core) = &self.0 else { return };
+        let overwrote = core.ring.lock().unwrap().push(r);
+        if overwrote {
+            core.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a completed span `[t0, t1]`.
+    #[inline]
+    pub fn span(&self, trace: TraceId, stage: Stage, t0_us: u64, t1_us: u64, a: u64, b: u64) {
+        if self.0.is_none() {
+            return;
+        }
+        self.push(FlightRecord {
+            kind_code: RecordKind::Span(stage).code(),
+            trace: trace.0,
+            t0_us,
+            t1_us,
+            a,
+            b,
+        });
+    }
+
+    /// Record an instant event at `t`.
+    #[inline]
+    pub fn event(&self, trace: TraceId, kind: EventKind, t_us: u64, a: u64, b: u64) {
+        if self.0.is_none() {
+            return;
+        }
+        self.push(FlightRecord {
+            kind_code: RecordKind::Event(kind).code(),
+            trace: trace.0,
+            t0_us: t_us,
+            t1_us: t_us,
+            a,
+            b,
+        });
+    }
+
+    /// Record one metric sample (`value` kept as `f64::to_bits`).
+    #[inline]
+    pub fn sample(&self, series: SeriesId, t_us: u64, value: f64) {
+        if self.0.is_none() {
+            return;
+        }
+        self.push(FlightRecord {
+            kind_code: 0x80 | series as u8,
+            trace: TraceId::STORAGE.0,
+            t0_us: t_us,
+            t1_us: t_us,
+            a: value.to_bits(),
+            b: 0,
+        });
+    }
+
+    /// Records overwritten by ring overflow since arming.
+    pub fn dropped(&self) -> u64 {
+        self.0.as_ref().map(|c| c.dropped.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// True once a trigger has latched the dump.
+    pub fn dumped(&self) -> bool {
+        self.0.as_ref().map(|c| c.dumped.load(Ordering::Relaxed)).unwrap_or(false)
+    }
+
+    /// Seal the ring and persist it to the sidecar.  First trigger wins:
+    /// returns the dump path on the winning call, `None` when disarmed,
+    /// already dumped, or the write failed (the failure is reported on
+    /// stderr but never panics — this runs inside the panic hook).
+    pub fn dump(&self, trigger: FlightTrigger, detail: u64) -> Option<PathBuf> {
+        let core = self.0.as_ref()?;
+        if core.dumped.compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst).is_err()
+        {
+            return None;
+        }
+        let records = core.ring.lock().unwrap().snapshot();
+        let t_us = core.vnow.load(Ordering::Relaxed);
+        let bytes = encode_dump(&core.key, core.seed, trigger, t_us, detail, &records);
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&core.sidecar)?;
+            use std::io::Write;
+            f.write_all(&bytes)?;
+            f.sync_all()
+        };
+        match write() {
+            Ok(()) => Some(core.sidecar.clone()),
+            Err(e) => {
+                eprintln!("flight: failed to write {}: {e}", core.sidecar.display());
+                None
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            None => write!(f, "FlightRecorder(off)"),
+            Some(c) => write!(
+                f,
+                "FlightRecorder(armed, sidecar {}, dumped {})",
+                c.sidecar.display(),
+                c.dumped.load(Ordering::Relaxed)
+            ),
+        }
+    }
+}
+
+/// Install a process-wide panic hook that dumps the black box with
+/// [`FlightTrigger::Panic`] before chaining to the previous hook.
+/// No-op for a disarmed recorder.  The dump latch makes the hook
+/// idempotent and safe alongside other triggers.
+pub fn install_panic_hook(rec: &FlightRecorder) {
+    if !rec.is_enabled() {
+        return;
+    }
+    let rec = rec.clone();
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        rec.dump(FlightTrigger::Panic, 0);
+        prev(info);
+    }));
+}
+
+/// Build the complete sealed dump byte stream (pure: same key, seed,
+/// trigger, time, and records ⇒ identical bytes).
+fn encode_dump(
+    key: &SealKey,
+    seed: u64,
+    trigger: FlightTrigger,
+    t_us: u64,
+    detail: u64,
+    records: &[FlightRecord],
+) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(
+        FILE_HDR_LEN + TRIGGER_LEN + records.len() * FlightRecord::WIRE_LEN + 1024,
+    );
+    bytes.extend_from_slice(&FLIGHT_MAGIC);
+    bytes.extend_from_slice(&FLIGHT_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&0u32.to_le_bytes());
+    bytes.extend_from_slice(&seed.to_le_bytes());
+
+    let mut meta = [0u8; TRIGGER_LEN];
+    meta[0] = trigger as u8;
+    meta[8..16].copy_from_slice(&t_us.to_le_bytes());
+    meta[16..24].copy_from_slice(&detail.to_le_bytes());
+    meta[24..32].copy_from_slice(&(records.len() as u64).to_le_bytes());
+    let tweak = |s, n| flight_tweak(seed, s, n);
+    bytes.extend_from_slice(&frames::seal_frame(key, &FRAME_MAGIC, NONCE_DOMAIN, 0, &meta, tweak));
+
+    for (i, batch) in records.chunks(BATCH).enumerate() {
+        let mut payload = Vec::with_capacity(batch.len() * FlightRecord::WIRE_LEN);
+        for r in batch {
+            payload.extend_from_slice(&r.encode());
+        }
+        bytes.extend_from_slice(&frames::seal_frame(
+            key,
+            &FRAME_MAGIC,
+            NONCE_DOMAIN,
+            1 + i as u64,
+            &payload,
+            tweak,
+        ));
+    }
+    bytes
+}
+
+/// A decoded black-box dump.
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    pub seed: u64,
+    pub trigger: FlightTrigger,
+    /// Virtual time at which the trigger fired.
+    pub trigger_t_us: u64,
+    /// Trigger-specific detail word (e.g. shed-reason or alert code).
+    pub detail: u64,
+    /// Ring records, oldest first.
+    pub records: Vec<FlightRecord>,
+    /// True when the dump itself was torn (crash mid-dump): the decoded
+    /// records are a valid prefix of what the ring held.
+    pub truncated: bool,
+}
+
+/// Decode a sealed dump file.  Fails closed on tamper; a torn tail
+/// yields `truncated: true` with the valid prefix.
+pub fn decode_dump(path: &Path, key: &SealKey) -> Result<FlightDump> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading dump {}", path.display()))?;
+    decode_dump_bytes(&bytes, key)
+}
+
+/// Decode a sealed dump from memory (see [`decode_dump`]).
+pub fn decode_dump_bytes(bytes: &[u8], key: &SealKey) -> Result<FlightDump> {
+    if bytes.len() < FILE_HDR_LEN {
+        bail!("dump shorter than its {FILE_HDR_LEN}-byte header");
+    }
+    if bytes[..8] != FLIGHT_MAGIC {
+        bail!("not a flight dump (bad magic)");
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != FLIGHT_VERSION {
+        bail!("unsupported dump version {version}");
+    }
+    let seed = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let (payloads, _valid) = frames::scan_frames(
+        key,
+        &FRAME_MAGIC,
+        NONCE_DOMAIN,
+        bytes,
+        FILE_HDR_LEN,
+        |s, n| flight_tweak(seed, s, n),
+    )
+    .map_err(|e| match e {
+        frames::FrameError::Tamper(what) => {
+            anyhow::anyhow!("tamper detected: {what} failed verification")
+        }
+        frames::FrameError::Corrupt(why) => anyhow::anyhow!("corrupt dump: {why}"),
+    })?;
+    let Some(meta) = payloads.first() else {
+        bail!("dump has no trigger frame (torn before the first seal)");
+    };
+    if meta.len() != TRIGGER_LEN {
+        bail!("trigger frame has {} bytes, expected {TRIGGER_LEN}", meta.len());
+    }
+    let trigger = FlightTrigger::from_code(meta[0])
+        .ok_or_else(|| anyhow::anyhow!("unknown trigger code {}", meta[0]))?;
+    let trigger_t_us = u64::from_le_bytes(meta[8..16].try_into().unwrap());
+    let detail = u64::from_le_bytes(meta[16..24].try_into().unwrap());
+    let stated = u64::from_le_bytes(meta[24..32].try_into().unwrap());
+    let mut records = Vec::new();
+    for p in &payloads[1..] {
+        if p.len() % FlightRecord::WIRE_LEN != 0 {
+            bail!("record batch of {} bytes is not a whole number of records", p.len());
+        }
+        for chunk in p.chunks(FlightRecord::WIRE_LEN) {
+            records.push(FlightRecord::decode(chunk).unwrap());
+        }
+    }
+    if records.len() as u64 > stated {
+        bail!("dump holds {} records but claims {stated}", records.len());
+    }
+    let truncated = (records.len() as u64) < stated;
+    Ok(FlightDump { seed, trigger, trigger_t_us, detail, records, truncated })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> SealKey {
+        SealKey::from_passphrase("flight-test-key")
+    }
+
+    fn dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("champ-flight-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn fill(rec: &FlightRecorder, n: u64) {
+        for i in 0..n {
+            rec.set_vnow(i * 100);
+            rec.span(TraceId::request(i), Stage::Compute, i * 100, i * 100 + 40, 1, 2);
+            rec.event(TraceId::request(i), EventKind::Completed, i * 100 + 40, 1, 0);
+            rec.sample(SeriesId::Goodput, i * 100, 42.5 + i as f64);
+        }
+    }
+
+    #[test]
+    fn disarmed_recorder_records_nothing_and_never_dumps() {
+        let r = FlightRecorder::off();
+        r.span(TraceId::request(1), Stage::Queue, 0, 10, 0, 0);
+        r.event(TraceId::request(1), EventKind::Shed, 5, 0, 0);
+        r.sample(SeriesId::P99, 5, 1.0);
+        r.set_vnow(99);
+        assert!(!r.is_enabled());
+        assert_eq!(r.vnow(), 0);
+        assert_eq!(r.dropped(), 0);
+        assert!(!r.dumped());
+        assert!(r.dump(FlightTrigger::Manual, 0).is_none());
+        assert!(FlightRecorder::OFF.dump(FlightTrigger::Manual, 0).is_none());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let d = dir("ring");
+        let r = FlightRecorder::armed(7, key(), d.join("ring.bbx"));
+        for i in 0..(RING_CAP as u64 + 10) {
+            r.event(TraceId::request(i), EventKind::Offered, i, i, 0);
+        }
+        assert_eq!(r.dropped(), 10);
+        let path = r.dump(FlightTrigger::Manual, 0).unwrap();
+        let dump = decode_dump(&path, &key()).unwrap();
+        assert_eq!(dump.records.len(), RING_CAP);
+        // Oldest 10 gone, order chronological, newest survives.
+        assert_eq!(dump.records.first().unwrap().t0_us, 10);
+        assert_eq!(dump.records.last().unwrap().t0_us, RING_CAP as u64 + 9);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn dump_then_decode_roundtrips_all_record_families() {
+        let d = dir("rt");
+        let r = FlightRecorder::armed(42, key(), d.join("rt.bbx"));
+        fill(&r, 300); // > BATCH records, so multiple batch frames
+        r.set_vnow(29_900);
+        let path = r.dump(FlightTrigger::JournalStalled, 3).unwrap();
+        assert!(r.dumped());
+        let dump = decode_dump(&path, &key()).unwrap();
+        assert_eq!(dump.seed, 42);
+        assert_eq!(dump.trigger, FlightTrigger::JournalStalled);
+        assert_eq!(dump.trigger_t_us, 29_900);
+        assert_eq!(dump.detail, 3);
+        assert!(!dump.truncated);
+        assert_eq!(dump.records.len(), 900);
+        // Families decode to their typed views.
+        let spans =
+            dump.records.iter().filter(|r| {
+                matches!(r.as_trace_record().map(|t| t.kind), Some(RecordKind::Span(_)))
+            });
+        assert_eq!(spans.count(), 300);
+        let samples: Vec<_> = dump.records.iter().filter_map(|r| r.series()).collect();
+        assert_eq!(samples.len(), 300);
+        assert!(samples.iter().all(|s| *s == SeriesId::Goodput));
+        let first_sample =
+            dump.records.iter().find(|r| r.series().is_some()).unwrap();
+        assert_eq!(f64::from_bits(first_sample.a), 42.5);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn dumps_are_byte_identical_for_same_seed_and_content() {
+        let d = dir("det");
+        let mk = |name: &str| {
+            let r = FlightRecorder::armed(11, key(), d.join(name));
+            fill(&r, 50);
+            r.set_vnow(4_900);
+            r.dump(FlightTrigger::ShedSpike, 1).unwrap()
+        };
+        let a = std::fs::read(mk("a.bbx")).unwrap();
+        let b = std::fs::read(mk("b.bbx")).unwrap();
+        assert_eq!(a, b, "same seed + same ring must dump identical bytes");
+        // A different seed reseals under unrelated subkeys.
+        let r = FlightRecorder::armed(12, key(), d.join("c.bbx"));
+        fill(&r, 50);
+        r.set_vnow(4_900);
+        let c = std::fs::read(r.dump(FlightTrigger::ShedSpike, 1).unwrap()).unwrap();
+        assert_ne!(a, c);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn first_trigger_wins_and_later_triggers_are_no_ops() {
+        let d = dir("latch");
+        let r = FlightRecorder::armed(5, key(), d.join("latch.bbx"));
+        fill(&r, 10);
+        assert!(r.dump(FlightTrigger::Eviction, 9).is_some());
+        // More records + a second trigger must not rewrite the file.
+        let before = std::fs::read(d.join("latch.bbx")).unwrap();
+        fill(&r, 10);
+        assert!(r.dump(FlightTrigger::Panic, 0).is_none());
+        let after = std::fs::read(d.join("latch.bbx")).unwrap();
+        assert_eq!(before, after);
+        let dump = decode_dump(&d.join("latch.bbx"), &key()).unwrap();
+        assert_eq!(dump.trigger, FlightTrigger::Eviction);
+        assert_eq!(dump.detail, 9);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn tampered_dump_fails_closed_wrong_key_too() {
+        let d = dir("tamper");
+        let r = FlightRecorder::armed(3, key(), d.join("t.bbx"));
+        fill(&r, 20);
+        let path = r.dump(FlightTrigger::Manual, 0).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Sampled interior bit flips (every 7th byte keeps the test fast).
+        for i in (FILE_HDR_LEN..bytes.len()).step_by(7) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 1;
+            assert!(decode_dump_bytes(&bad, &key()).is_err(), "byte {i}: flip accepted");
+        }
+        let wrong = SealKey::from_passphrase("not-the-key");
+        assert!(decode_dump_bytes(&bytes, &wrong).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn torn_dump_decodes_to_a_truncated_prefix() {
+        let d = dir("torn");
+        let r = FlightRecorder::armed(8, key(), d.join("torn.bbx"));
+        fill(&r, 300); // two batch frames
+        let path = r.dump(FlightTrigger::Panic, 0).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Cut mid-way through the last frame: the crash being recorded
+        // can tear the dump itself.
+        let cut = bytes.len() - 100;
+        let dump = decode_dump_bytes(&bytes[..cut], &key()).unwrap();
+        assert!(dump.truncated, "short tail must surface as truncation");
+        assert!(dump.records.len() < 900);
+        assert!(!dump.records.is_empty());
+        assert_eq!(dump.trigger, FlightTrigger::Panic);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn panic_hook_dumps_then_chains() {
+        let d = dir("panic");
+        let r = FlightRecorder::armed(2, key(), d.join("panic.bbx"));
+        fill(&r, 5);
+        r.set_vnow(400);
+        install_panic_hook(&r);
+        let caught = std::panic::catch_unwind(|| panic!("boom"));
+        // Restore the default hook so later tests print panics normally.
+        let _ = std::panic::take_hook();
+        assert!(caught.is_err());
+        let dump = decode_dump(&d.join("panic.bbx"), &key()).unwrap();
+        assert_eq!(dump.trigger, FlightTrigger::Panic);
+        assert_eq!(dump.trigger_t_us, 400);
+        assert_eq!(dump.records.len(), 15);
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

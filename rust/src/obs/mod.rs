@@ -19,6 +19,14 @@
 //!   flamegraph text, both emitted through the crate's own `json` module.
 //! * [`health`] — the end-of-run "SLO health" text surface: per-class and
 //!   per-tenant budget burn plus the top-5 slowest spans by stage.
+//! * [`flight`] — the black-box flight recorder: a small always-on ring
+//!   of recent spans/events/metric samples, sealed and dumped to a
+//!   sidecar `.bbx` file automatically when something goes wrong
+//!   (shed spike, miss burst, eviction, journal stall, panic).
+//! * [`detect`] — streaming EWMA z-score detectors and multi-window SLO
+//!   burn-rate alerting over the per-tick series, deterministic in
+//!   virtual time; its level output drives the closed-loop admission
+//!   governor in `serve::admission`.
 //!
 //! Two invariants the rest of the crate leans on:
 //!
@@ -32,11 +40,15 @@
 //!    total key, so the same seed yields a bit-identical trace, and a
 //!    traced run's reports are bit-identical to an untraced run's.
 
+pub mod detect;
 pub mod export;
+pub mod flight;
 pub mod health;
 pub mod recorder;
 pub mod registry;
 
+pub use detect::{AlertKind, AlertScope, AnomalyAlert, AnomalyEngine, SeriesId, SloBudget};
+pub use flight::{FlightDump, FlightRecord, FlightRecorder, FlightTrigger};
 pub use recorder::{EventKind, RecordKind, Stage, TraceId, TraceRecord, TraceRecorder};
 pub use registry::{HistSummary, MetricsRegistry, MetricsSnapshot};
 

@@ -97,6 +97,11 @@ impl Stage {
         Stage::HostPrep,
         Stage::UnsealWave,
     ];
+
+    /// Inverse of the span discriminant (for flight-ring decode).
+    pub fn from_code(c: u8) -> Option<Stage> {
+        Stage::ALL.get(c as usize).copied()
+    }
 }
 
 /// Instantaneous (zero-width) trace events.
@@ -118,6 +123,15 @@ pub enum EventKind {
     MediaMount = 5,
     /// Sealed media unmounted (`a` = media uid).
     MediaUnmount = 6,
+    /// Background journal compaction folded the sidecar into a fresh
+    /// image (`a` = frames folded, `b` = new image uid truncated to u64).
+    MediaCompaction = 7,
+    /// A streaming detector or burn-rate alerter fired (`a` = packed
+    /// alert code, `b` = observed value as `f64::to_bits`).
+    Alert = 8,
+    /// The flight recorder dumped its black box (`a` = trigger code,
+    /// `b` = trigger detail word).
+    FlightDump = 9,
 }
 
 impl EventKind {
@@ -130,7 +144,27 @@ impl EventKind {
             EventKind::BusDefer => "bus-defer",
             EventKind::MediaMount => "media-mount",
             EventKind::MediaUnmount => "media-unmount",
+            EventKind::MediaCompaction => "media-compaction",
+            EventKind::Alert => "alert",
+            EventKind::FlightDump => "flight-dump",
         }
+    }
+
+    /// Inverse of the event discriminant (for flight-ring decode).
+    pub fn from_code(c: u8) -> Option<EventKind> {
+        Some(match c {
+            0 => EventKind::Offered,
+            1 => EventKind::Shed,
+            2 => EventKind::Completed,
+            3 => EventKind::Requeued,
+            4 => EventKind::BusDefer,
+            5 => EventKind::MediaMount,
+            6 => EventKind::MediaUnmount,
+            7 => EventKind::MediaCompaction,
+            8 => EventKind::Alert,
+            9 => EventKind::FlightDump,
+            _ => return None,
+        })
     }
 }
 
@@ -143,11 +177,26 @@ pub enum RecordKind {
 
 impl RecordKind {
     /// Total order over record kinds (spans sort before events at equal
-    /// timestamps, each family by its discriminant).
-    fn code(&self) -> u8 {
+    /// timestamps, each family by its discriminant).  This is also the
+    /// flight-ring wire code: spans in `0x00..=0x3F`, events in
+    /// `0x40..=0x7F` (the `0x80` bit is reserved for metric samples,
+    /// which exist only in the flight ring).
+    pub(crate) fn code(&self) -> u8 {
         match self {
             RecordKind::Span(s) => *s as u8,
             RecordKind::Event(e) => 0x40 | *e as u8,
+        }
+    }
+
+    /// Inverse of [`RecordKind::code`] over the span/event bands.
+    pub(crate) fn from_code(c: u8) -> Option<RecordKind> {
+        if c & 0x80 != 0 {
+            return None; // metric-sample band: not a trace record kind
+        }
+        if c & 0x40 == 0 {
+            Stage::from_code(c).map(RecordKind::Span)
+        } else {
+            EventKind::from_code(c & !0x40).map(RecordKind::Event)
         }
     }
 
@@ -392,6 +441,24 @@ mod tests {
         assert!(TraceId::frame(5).is_frame());
         assert!(!TraceId::request(5).is_frame());
         assert!(!TraceId::STORAGE.is_frame());
+    }
+
+    #[test]
+    fn record_kind_codes_roundtrip() {
+        for s in Stage::ALL {
+            let k = RecordKind::Span(s);
+            assert_eq!(RecordKind::from_code(k.code()), Some(k));
+        }
+        for c in 0u8..16 {
+            let Some(e) = EventKind::from_code(c) else { break };
+            let k = RecordKind::Event(e);
+            assert_eq!(k.code(), 0x40 | c);
+            assert_eq!(RecordKind::from_code(k.code()), Some(k));
+        }
+        // The metric-sample band and out-of-range codes decode to None.
+        assert_eq!(RecordKind::from_code(0x80), None);
+        assert_eq!(RecordKind::from_code(0x3F), None);
+        assert_eq!(RecordKind::from_code(0x7F), None);
     }
 
     #[test]

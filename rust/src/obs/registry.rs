@@ -122,7 +122,10 @@ impl HistSummary {
     fn of(h: &Histogram) -> Self {
         HistSummary {
             count: h.count(),
-            mean_us: h.mean_us(),
+            mean_us: h.mean_us() as u64,
+            // Interpolated within the log bucket: error bounded by one
+            // bucket (factor of 2), clamped to observed [min, max] —
+            // see `Histogram::percentile_us`.
             p50_us: h.percentile_us(50.0),
             p99_us: h.percentile_us(99.0),
             max_us: h.max_us(),
@@ -188,6 +191,42 @@ mod tests {
         assert_eq!(h.count, 4);
         assert_eq!(h.max_us, 800);
         assert!(h.p99_us >= 800, "p99 upper bound covers the max sample");
+    }
+
+    #[test]
+    fn summary_quantiles_are_within_one_bucket_of_exact() {
+        let exact = |sorted: &[u64], p: f64| -> u64 {
+            let idx =
+                ((sorted.len() as f64 * p / 100.0).ceil() as usize).clamp(1, sorted.len()) - 1;
+            sorted[idx]
+        };
+        // Adversarial shapes: all mass in one bucket, a cross-bucket
+        // ramp, and a bimodal split across the range.
+        let shapes: [(&str, Vec<u64>); 3] = [
+            ("constant", vec![777; 500]),
+            ("ramp", (1..=2048).collect()),
+            ("bimodal", {
+                let mut v = vec![25u64; 950];
+                v.extend(vec![64_000u64; 50]);
+                v
+            }),
+        ];
+        for (name, mut vals) in shapes {
+            let reg = MetricsRegistry::new();
+            for &v in &vals {
+                reg.observe("q", v);
+            }
+            vals.sort_unstable();
+            let snap = reg.snapshot();
+            let h = &snap.hists[0].1;
+            for (p, got) in [(50.0, h.p50_us), (99.0, h.p99_us)] {
+                let e = exact(&vals, p);
+                assert!(
+                    got >= (e / 2).max(vals[0]) && got <= e.saturating_mul(2).min(h.max_us),
+                    "{name} p{p}: got {got}, exact {e}"
+                );
+            }
+        }
     }
 
     #[test]

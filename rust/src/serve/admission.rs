@@ -59,20 +59,34 @@ pub struct TokenBucket {
     burst: f64,
     tokens: f64,
     last_us: u64,
+    /// Governor multiplier on the refill rate (1.0 = configured rate).
+    /// The burst capacity is deliberately *not* scaled: a governed
+    /// tenant keeps its ability to absorb a short spike, it just earns
+    /// tokens more slowly.
+    scale: f64,
 }
 
 impl TokenBucket {
     pub fn new(rate_per_s: f64, burst: u32) -> Self {
         let burst = (burst.max(1)) as f64;
-        TokenBucket { rate_per_s: rate_per_s.max(0.0), burst, tokens: burst, last_us: 0 }
+        TokenBucket { rate_per_s: rate_per_s.max(0.0), burst, tokens: burst, last_us: 0, scale: 1.0 }
     }
 
     fn refill(&mut self, now_us: u64) {
         if now_us > self.last_us {
             let dt_s = (now_us - self.last_us) as f64 / 1e6;
-            self.tokens = (self.tokens + dt_s * self.rate_per_s).min(self.burst);
+            self.tokens = (self.tokens + dt_s * self.rate_per_s * self.scale).min(self.burst);
             self.last_us = now_us;
         }
+    }
+
+    /// Change the governor scale at `now`.  Tokens earned before the
+    /// change are credited at the *old* rate first, so a scale step is a
+    /// clean piecewise-linear knee rather than a retroactive rewrite of
+    /// the refill history.
+    pub fn set_scale(&mut self, scale: f64, now_us: u64) {
+        self.refill(now_us);
+        self.scale = scale.clamp(0.0, 1.0);
     }
 
     /// Take one token if available.
@@ -228,6 +242,113 @@ impl AdmissionController {
     pub fn queued_in_class(&self, class: usize) -> usize {
         self.queues.get(class).map(BinaryHeap::len).unwrap_or(0)
     }
+
+    /// Apply the governor's refill scale to every tenant bucket at `now`
+    /// (see [`TokenBucket::set_scale`]).
+    pub fn set_rate_scale(&mut self, scale: f64, now_us: u64) {
+        for b in &mut self.buckets {
+            b.set_scale(scale, now_us);
+        }
+    }
+}
+
+/// Control-law constants for the closed-loop [`AdmissionGovernor`].
+#[derive(Debug, Clone, Copy)]
+pub struct GovernorConfig {
+    /// Lowest refill scale the governor may reach.  A strictly positive
+    /// floor is the no-deadlock guarantee: buckets always refill at
+    /// `floor × rate`, so admission can never be starved forever.
+    pub floor: f64,
+    /// Multiplicative decrease applied per step-down.
+    pub step_down: f64,
+    /// Multiplicative increase applied per step-up (recovery).
+    pub step_up: f64,
+    /// Consecutive burning ticks required before a step-down.
+    pub down_after: u32,
+    /// Consecutive clean ticks required before a step-up — the
+    /// hysteresis: recovery is much slower than reaction, so the loop
+    /// cannot chatter around the SLO boundary.
+    pub up_after: u32,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig { floor: 0.25, step_down: 0.5, step_up: 1.25, down_after: 2, up_after: 10 }
+    }
+}
+
+/// The closed-loop admission governor: AIMD-style multiplicative
+/// decrease under sustained SLO burn, hysteretic multiplicative recovery
+/// once the burn clears (DESIGN.md §Flight recorder & anomaly detection,
+/// "governor control law").
+///
+/// The input is the anomaly engine's *level* `burning` signal, one call
+/// per virtual-time tick; the output is a refill scale in
+/// `[floor, 1.0]` the session pushes into
+/// [`AdmissionController::set_rate_scale`].  Rate-limited sheds are
+/// excluded from the burn definition upstream, so the governor's own
+/// action cannot re-trigger itself: the loop has strictly negative
+/// feedback and settles at the floor under unbounded overload.
+#[derive(Debug, Clone)]
+pub struct AdmissionGovernor {
+    cfg: GovernorConfig,
+    scale: f64,
+    /// Lowest scale reached this run (reported as `governor_min_scale`).
+    min_scale: f64,
+    hot: u32,
+    cool: u32,
+}
+
+impl AdmissionGovernor {
+    pub fn new(cfg: GovernorConfig) -> Self {
+        AdmissionGovernor { cfg, scale: 1.0, min_scale: 1.0, hot: 0, cool: 0 }
+    }
+
+    /// Current refill scale in `[floor, 1.0]`.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Lowest scale reached since construction.
+    pub fn min_scale(&self) -> f64 {
+        self.min_scale
+    }
+
+    /// True while the governor is below full rate.
+    pub fn engaged(&self) -> bool {
+        self.scale < 1.0
+    }
+
+    /// Feed one tick's burning level; returns `Some(new_scale)` when the
+    /// scale changed (the caller then pushes it into the controller and
+    /// records it), `None` otherwise.
+    pub fn tick(&mut self, burning: bool) -> Option<f64> {
+        if burning {
+            self.hot += 1;
+            self.cool = 0;
+            if self.hot >= self.cfg.down_after {
+                self.hot = 0;
+                let next = (self.scale * self.cfg.step_down).max(self.cfg.floor);
+                if next < self.scale {
+                    self.scale = next;
+                    self.min_scale = self.min_scale.min(next);
+                    return Some(next);
+                }
+            }
+        } else {
+            self.cool += 1;
+            self.hot = 0;
+            if self.cool >= self.cfg.up_after {
+                self.cool = 0;
+                let next = (self.scale * self.cfg.step_up).min(1.0);
+                if next > self.scale {
+                    self.scale = next;
+                    return Some(next);
+                }
+            }
+        }
+        None
+    }
 }
 
 #[cfg(test)]
@@ -373,6 +494,80 @@ mod tests {
         // The QueueFull shed must not have consumed the second token: the
         // same tenant can still admit into another class.
         assert_eq!(a.offer(req(3, 1, &p, 0), 0), Admission::Admitted);
+    }
+
+    #[test]
+    fn set_scale_credits_old_rate_first() {
+        let mut b = TokenBucket::new(10.0, 1);
+        assert!(b.try_take(0), "burst token");
+        // 1s at full rate would earn 10 tokens (capped at burst 1).
+        b.set_scale(0.25, 1_000_000);
+        // The second elapsed *before* the step must be credited at the
+        // old 1.0 scale: a token is available immediately.
+        assert!(b.try_take(1_000_000));
+        // From here refill runs at 2.5 rps: 100ms earns 0.25 tokens.
+        assert!(!b.try_take(1_100_000));
+        assert!(b.try_take(1_400_000), "400ms at quarter rate earns one token");
+    }
+
+    #[test]
+    fn governor_steps_down_under_sustained_burn_and_recovers_hysteretically() {
+        let mut g = AdmissionGovernor::new(GovernorConfig::default());
+        assert_eq!(g.scale(), 1.0);
+        assert!(g.tick(true).is_none(), "one burning tick is not sustained");
+        assert_eq!(g.tick(true), Some(0.5), "down_after=2 consecutive ticks step down");
+        assert!(g.engaged());
+        // Recovery needs up_after=10 *consecutive* clean ticks; a burning
+        // tick in between resets the streak.
+        for _ in 0..9 {
+            assert!(g.tick(false).is_none());
+        }
+        assert!(g.tick(true).is_none(), "burn resets the recovery streak");
+        for _ in 0..9 {
+            assert!(g.tick(false).is_none());
+        }
+        assert_eq!(g.tick(false), Some(0.625), "10th clean tick steps up by 1.25x");
+        assert_eq!(g.min_scale(), 0.5);
+    }
+
+    #[test]
+    fn governor_never_deadlocks_admission() {
+        // Unbounded burn: the scale settles at the floor, never 0, and a
+        // bucket governed at the floor still admits eventually.
+        let mut g = AdmissionGovernor::new(GovernorConfig::default());
+        for _ in 0..10_000 {
+            g.tick(true);
+            assert!(g.scale() >= g.cfg.floor);
+        }
+        assert_eq!(g.scale(), g.cfg.floor);
+        let p = MissionProfile::checkpoint();
+        let mut a = AdmissionController::new(&p, 100.0);
+        a.set_rate_scale(g.scale(), 0);
+        // Drain the burst, then confirm refill still makes progress.
+        let mut admitted_after_starve = false;
+        for i in 0..10_000u64 {
+            let now = i * 100_000;
+            if a.offer(req(i, 0, &p, now), now) == Admission::Admitted && i > 1_000 {
+                admitted_after_starve = true;
+            }
+            let mut exp = Vec::new();
+            while a.pop_dispatchable(now, false, 0, &mut exp).is_some() {}
+        }
+        assert!(admitted_after_starve, "floor-governed bucket must keep admitting");
+    }
+
+    #[test]
+    fn governor_recovers_fully_after_burn_clears() {
+        let mut g = AdmissionGovernor::new(GovernorConfig::default());
+        for _ in 0..20 {
+            g.tick(true);
+        }
+        assert_eq!(g.scale(), g.cfg.floor);
+        for _ in 0..200 {
+            g.tick(false);
+        }
+        assert_eq!(g.scale(), 1.0, "clean ticks must walk the scale back to full rate");
+        assert_eq!(g.min_scale(), g.cfg.floor, "min_scale remembers the deepest cut");
     }
 
     #[test]

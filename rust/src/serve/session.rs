@@ -57,13 +57,19 @@ use crate::crypto::seal::SealKey;
 use crate::device::caps::CapDescriptor;
 use crate::device::timing::{stream_handoff_us, DeviceProfile};
 use crate::device::{Cartridge, DeviceKind};
-use crate::obs::{EventKind, Stage, TraceId, TraceRecorder, TraceSnapshot};
+use crate::obs::detect::TickSample;
+use crate::obs::{
+    AlertKind, AnomalyAlert, AnomalyEngine, EventKind, FlightRecorder, FlightTrigger, SeriesId,
+    SloBudget, Stage, TraceId, TraceRecorder, TraceSnapshot,
+};
 use crate::power::{PowerModel, PowerReport};
 use crate::util::rng::Rng;
 use crate::vdisk::{fold_records, EnrollJournal, JournalRecord, MountEvent, MountSupervisor};
 use crate::workload::video::VideoSource;
 
-use super::admission::{Admission, AdmissionController, ShedReason};
+use super::admission::{
+    Admission, AdmissionController, AdmissionGovernor, GovernorConfig, ShedReason,
+};
 use super::slo::{ClassOutcome, SloTracker, TenantOutcome};
 use super::traffic::{self, MissionProfile, Request, RequestKind};
 
@@ -167,6 +173,21 @@ pub struct ServeConfig {
     /// bus grant → compute → unseal).  Off = the no-op recorder path; the
     /// outcome's reports are bit-identical either way.
     pub trace: bool,
+    /// Arm the black-box flight recorder: a bounded ring of the most
+    /// recent spans/events/metric samples, sealed and dumped to this
+    /// sidecar path on the *first* trigger (shed-rate spike, deadline
+    /// miss burst, eviction, journal stall, panic).  None = the no-op
+    /// recorder path; an armed-but-never-triggered run's reports are
+    /// bit-identical to off.
+    pub flight: Option<PathBuf>,
+    /// Close the loop: let the anomaly engine's burn level scale the
+    /// admission token-bucket refill down under sustained burn (and back
+    /// up hysteretically once it clears).
+    pub governor: bool,
+    /// Background journal compaction: at a health tick where the journal
+    /// holds at least this many sealed frames, fold it into the image in
+    /// place and rebind (0 = never compact mid-run).
+    pub compact_threshold: u64,
 }
 
 impl ServeConfig {
@@ -185,6 +206,9 @@ impl ServeConfig {
             image_key: "champ-dev-key".to_string(),
             journal: None,
             trace: false,
+            flight: None,
+            governor: false,
+            compact_threshold: 0,
         }
     }
 }
@@ -237,6 +261,23 @@ pub struct ServeOutcome {
     pub media_events: Vec<MountEvent>,
     /// The causal trace + metrics snapshot (None unless `cfg.trace`).
     pub trace: Option<TraceSnapshot>,
+    /// Streaming anomaly alerts raised during the run (empty unless the
+    /// detector engine ran: flight armed or governor on).
+    pub anomaly_alerts: Vec<AnomalyAlert>,
+    /// The sealed flight dump written this run (first trigger wins; None
+    /// when unarmed or never triggered).
+    pub flight_dump: Option<PathBuf>,
+    /// Lowest token-bucket refill scale the governor reached (1.0 when
+    /// the governor is off or never engaged).
+    pub governor_min_scale: f64,
+    /// Background journal compactions folded during the run.
+    pub compactions: u64,
+    /// Completions past their deadline, summed over classes.
+    pub deadline_misses: u64,
+    /// Sheds *after* admission (expired + evicted + queue-full + journal
+    /// stall) — the waste the governor exists to reduce, as opposed to
+    /// its own rate-limited sheds at the front door.
+    pub post_admission_sheds: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -303,6 +344,31 @@ pub struct ServeSession {
     queue_since: BTreeMap<u64, u64>,
     /// Clone of the orchestrator's recorder (off unless `cfg.trace`).
     obs: TraceRecorder,
+    /// Black-box ring (off unless `cfg.flight`); teed the same spans and
+    /// events as `obs`, plus the per-tick detector series.
+    flight: FlightRecorder,
+    /// Streaming detectors + burn-rate alerting (None unless the flight
+    /// ring is armed or the governor is on — the engine feeds both).
+    engine: Option<AnomalyEngine>,
+    gov: Option<AdmissionGovernor>,
+    anomaly_alerts: Vec<AnomalyAlert>,
+    flight_dump: Option<PathBuf>,
+    compactions: u64,
+    /// True after a mid-run journal reopen failed: enrolls shed typed
+    /// (`JournalStalled`) instead of acking without durability.
+    journal_poisoned: bool,
+    /// Previous-tick cumulative (bad, total) per class/tenant, diffed
+    /// into the burn-rate windows each tick.
+    prev_class: Vec<(u64, u64)>,
+    prev_tenant: Vec<(u64, u64)>,
+    /// Previous-tick cumulative counters behind the global series.
+    prev_on_time: u64,
+    prev_shed: u64,
+    prev_terminal: u64,
+    prev_defers: u64,
+    prev_cache: (u64, u64),
+    /// Completion latencies observed this tick (engine p99 series).
+    tick_lat: Vec<u64>,
     t0: u64,
     capacity_rps: f64,
     offered_rps: f64,
@@ -447,6 +513,25 @@ impl ServeSession {
             .collect();
         busy0.sort_by_key(|&(uid, _)| uid);
 
+        // The black box arms with the same seal passphrase as the media:
+        // one operator secret decodes both the cartridge and its dumps.
+        let flight = match &cfg.flight {
+            Some(p) => {
+                FlightRecorder::armed(cfg.seed, SealKey::from_passphrase(&cfg.image_key), p.clone())
+            }
+            None => FlightRecorder::off(),
+        };
+        let gov = cfg.governor.then(|| AdmissionGovernor::new(GovernorConfig::default()));
+        let engine = (flight.is_enabled() || gov.is_some()).then(|| {
+            AnomalyEngine::new(
+                cfg.profile.classes.len(),
+                cfg.profile.tenants.len(),
+                SloBudget::default(),
+            )
+        });
+        let prev_class = vec![(0, 0); cfg.profile.classes.len()];
+        let prev_tenant = vec![(0, 0); cfg.profile.tenants.len()];
+
         let obs = o.obs.clone();
         Ok(ServeSession {
             cfg,
@@ -475,6 +560,21 @@ impl ServeSession {
             requeued_total: 0,
             queue_since: BTreeMap::new(),
             obs,
+            flight,
+            engine,
+            gov,
+            anomaly_alerts: Vec::new(),
+            flight_dump: None,
+            compactions: 0,
+            journal_poisoned: false,
+            prev_class,
+            prev_tenant,
+            prev_on_time: 0,
+            prev_shed: 0,
+            prev_terminal: 0,
+            prev_defers: 0,
+            prev_cache: (0, 0),
+            tick_lat: Vec::new(),
             t0,
             capacity_rps,
             offered_rps,
@@ -569,6 +669,7 @@ impl ServeSession {
             // Publish virtual "now" for clock-less writers (the vdisk
             // unseal walk stamps its wave records with this).
             self.obs.set_vnow(now);
+            self.flight.set_vnow(now);
             match c.payload {
                 SEv::Arrival(i) => self.on_arrival(i as usize, now),
                 SEv::MatchDone(id) => self.on_match_done(id, now),
@@ -583,12 +684,31 @@ impl ServeSession {
 
     // ------------------------------------------------------------- events
 
+    /// True while any record sink is live (trace ring or flight ring):
+    /// gates the span bookkeeping both tee into.
+    fn observing(&self) -> bool {
+        self.obs.is_enabled() || self.flight.is_enabled()
+    }
+
+    /// Record one span into every live sink.  Both recorders are no-ops
+    /// when off, so the un-armed path stays zero-cost.
+    fn span2(&self, t: TraceId, stage: Stage, t0: u64, t1: u64, a: u64, b: u64) {
+        self.obs.span(t, stage, t0, t1, a, b);
+        self.flight.span(t, stage, t0, t1, a, b);
+    }
+
+    /// Record one instant event into every live sink.
+    fn event2(&self, t: TraceId, kind: EventKind, at: u64, a: u64, b: u64) {
+        self.obs.event(t, kind, at, a, b);
+        self.flight.event(t, kind, at, a, b);
+    }
+
     fn on_arrival(&mut self, i: usize, now: u64) {
         let req = self.reqs[i];
         self.slo.offered(&req);
         self.o.reg.count("serve.offered", 1);
         self.o.reg.count(&format!("serve.tenant.{}.offered", req.tenant), 1);
-        self.obs.event(
+        self.event2(
             TraceId::request(req.id),
             EventKind::Offered,
             now,
@@ -597,8 +717,8 @@ impl ServeSession {
         );
         match self.adm.offer(req, now) {
             Admission::Admitted => {
-                if self.obs.is_enabled() {
-                    self.obs.span(
+                if self.observing() {
+                    self.span2(
                         TraceId::request(req.id),
                         Stage::Admission,
                         now,
@@ -618,7 +738,7 @@ impl ServeSession {
         self.slo.shed(req, reason, now);
         self.o.reg.count(&format!("serve.shed.{}", reason.as_str()), 1);
         self.o.reg.count(&format!("serve.tenant.{}.shed", req.tenant), 1);
-        if self.obs.is_enabled() {
+        if self.observing() {
             let code = match reason {
                 ShedReason::RateLimited => 0,
                 ShedReason::QueueFull => 1,
@@ -626,7 +746,7 @@ impl ServeSession {
                 ShedReason::Evicted => 3,
                 ShedReason::JournalStalled => 4,
             };
-            self.obs.event(TraceId::request(req.id), EventKind::Shed, now, code, req.class as u64);
+            self.event2(TraceId::request(req.id), EventKind::Shed, now, code, req.class as u64);
             self.queue_since.remove(&req.id);
         }
     }
@@ -637,7 +757,10 @@ impl ServeSession {
         self.o.reg.count("serve.completed", 1);
         self.o.reg.count(&format!("serve.tenant.{}.completed", req.tenant), 1);
         self.o.reg.observe("serve.latency_us", now.saturating_sub(req.arrival_us));
-        self.obs.event(
+        if self.engine.is_some() {
+            self.tick_lat.push(now.saturating_sub(req.arrival_us));
+        }
+        self.event2(
             TraceId::request(req.id),
             EventKind::Completed,
             now,
@@ -667,10 +790,17 @@ impl ServeSession {
                 // Write-ahead: the sealed frame must be durable before
                 // the ack.  A journal that cannot take the write sheds
                 // typed — never an ack the next mount cannot reproduce.
+                if self.journal_poisoned {
+                    self.o.reg.count("serve.journal_stalled", 1);
+                    self.record_shed(req, ShedReason::JournalStalled, now);
+                    self.flight_trigger(FlightTrigger::JournalStalled, req.id, now);
+                    continue;
+                }
                 if let Some(j) = self.journal.as_mut() {
                     if j.append(&eid, &vec).is_err() {
                         self.o.reg.count("serve.journal_stalled", 1);
                         self.record_shed(req, ShedReason::JournalStalled, now);
+                        self.flight_trigger(FlightTrigger::JournalStalled, req.id, now);
                         continue;
                     }
                     self.o.reg.count("serve.journal_appends", 1);
@@ -701,7 +831,7 @@ impl ServeSession {
                         mounts.handle_detach(STORAGE_MEDIA_UID, now);
                         self.mounted_index = None;
                         self.mounted_ivf = None;
-                        self.obs.event(
+                        self.event2(
                             TraceId::STORAGE,
                             EventKind::MediaUnmount,
                             now,
@@ -713,7 +843,7 @@ impl ServeSession {
                         if mounts.handle_attach(STORAGE_MEDIA_UID, now).is_some() {
                             self.mounted_index = mounts.gallery_index(STORAGE_MEDIA_UID);
                             self.mounted_ivf = mounts.ivf_index(STORAGE_MEDIA_UID);
-                            self.obs.event(
+                            self.event2(
                                 TraceId::STORAGE,
                                 EventKind::MediaMount,
                                 now,
@@ -797,10 +927,200 @@ impl ServeSession {
             if self.stage_uids.contains(&uid) {
                 self.requeue_limbo(now);
                 self.o.health.deregister(uid);
+                self.flight_trigger(FlightTrigger::Eviction, uid, now);
             }
         }
+        self.anomaly_tick(now);
+        self.maybe_compact(now);
         if self.slo.terminal_count < self.cfg.requests {
             self.q.push(now + TICK_US, SEv::HealthTick);
+        }
+    }
+
+    /// Seal and dump the flight ring (first trigger wins; later calls are
+    /// no-ops inside the recorder).
+    fn flight_trigger(&mut self, trigger: FlightTrigger, detail: u64, now: u64) {
+        if let Some(p) = self.flight.dump(trigger, detail) {
+            self.obs.event(TraceId::STORAGE, EventKind::FlightDump, now, trigger as u64, detail);
+            self.o.reg.count("serve.flight_dumps", 1);
+            self.flight_dump = Some(p);
+        }
+    }
+
+    /// One detector tick: diff the cumulative SLO tallies into per-scope
+    /// `(bad, total)` deltas and the global series, feed the engine, tee
+    /// alerts into both record sinks, and let the burn level drive the
+    /// governor and the dump triggers.
+    ///
+    /// "Bad" deliberately excludes rate-limited sheds: those are the
+    /// governor's own actuation, and counting them as burn would lock the
+    /// loop into positive feedback (see `obs::detect`).
+    fn anomaly_tick(&mut self, now: u64) {
+        if self.engine.is_none() {
+            return;
+        }
+        let scope_delta = |slo: &super::slo::ClassSlo, prev: &mut (u64, u64)| {
+            let bad = (slo.completed - slo.on_time)
+                + slo.shed_expired
+                + slo.shed_evicted
+                + slo.shed_queue_full
+                + slo.shed_journal_stalled;
+            let total = slo.completed + slo.shed_total() - slo.shed_rate_limited;
+            let d = (bad - prev.0, total - prev.1);
+            *prev = (bad, total);
+            d
+        };
+        let mut class_bad = Vec::with_capacity(self.prev_class.len());
+        let (mut on_time, mut shed, mut terminal) = (0u64, 0u64, 0u64);
+        for i in 0..self.prev_class.len() {
+            let c = self.slo.class(i);
+            on_time += c.on_time;
+            shed += c.shed_total();
+            terminal += c.completed + c.shed_total();
+            class_bad.push(scope_delta(c, &mut self.prev_class[i]));
+        }
+        let mut tenant_bad = Vec::with_capacity(self.prev_tenant.len());
+        for i in 0..self.prev_tenant.len() {
+            tenant_bad.push(scope_delta(self.slo.tenant(i), &mut self.prev_tenant[i]));
+        }
+
+        let mut series: Vec<(SeriesId, f64)> = Vec::with_capacity(5);
+        series.push((SeriesId::Goodput, (on_time - self.prev_on_time) as f64));
+        self.prev_on_time = on_time;
+        if !self.tick_lat.is_empty() {
+            self.tick_lat.sort_unstable();
+            let idx = ((self.tick_lat.len() as f64 * 0.99).ceil() as usize)
+                .clamp(1, self.tick_lat.len())
+                - 1;
+            series.push((SeriesId::P99, self.tick_lat[idx] as f64));
+            self.tick_lat.clear();
+        }
+        let term_d = terminal - self.prev_terminal;
+        let shed_d = shed - self.prev_shed;
+        (self.prev_terminal, self.prev_shed) = (terminal, shed);
+        if term_d > 0 {
+            series.push((SeriesId::ShedRate, shed_d as f64 / term_d as f64));
+        }
+        if let Some(img) = self.mounts.as_ref().and_then(|m| m.image(STORAGE_MEDIA_UID)) {
+            let cs = img.cache_stats();
+            let (dh, dm) = (cs.hits - self.prev_cache.0, cs.misses - self.prev_cache.1);
+            self.prev_cache = (cs.hits, cs.misses);
+            if dh + dm > 0 {
+                series.push((SeriesId::CacheHitRate, dh as f64 / (dh + dm) as f64));
+            }
+        }
+        let defers = self.o.reg.counter_value("engine.bus.defers");
+        series.push((SeriesId::BusDeferRate, (defers - self.prev_defers) as f64));
+        self.prev_defers = defers;
+
+        for &(s, v) in &series {
+            self.flight.sample(s, now, v);
+        }
+        let sample = TickSample { t_us: now, class_bad, tenant_bad, series };
+        let verdict = self.engine.as_mut().unwrap().tick(&sample);
+        for alert in verdict.alerts {
+            self.event2(
+                TraceId::STORAGE,
+                EventKind::Alert,
+                now,
+                alert.code(),
+                alert.value.to_bits(),
+            );
+            let trigger = match alert.kind {
+                AlertKind::Spike if alert.series == Some(SeriesId::ShedRate) => {
+                    Some(FlightTrigger::ShedSpike)
+                }
+                AlertKind::BurnFast | AlertKind::BurnSlow => {
+                    Some(FlightTrigger::DeadlineMissBurst)
+                }
+                _ => None,
+            };
+            if let Some(t) = trigger {
+                self.flight_trigger(t, alert.code(), now);
+            }
+            self.anomaly_alerts.push(alert);
+        }
+        if let Some(g) = self.gov.as_mut() {
+            if let Some(scale) = g.tick(verdict.burning) {
+                self.adm.set_rate_scale(scale, now);
+                self.o.reg.gauge("serve.governor_scale_pct", (scale * 100.0).round() as u64);
+            }
+        }
+    }
+
+    /// Background compaction: when the journal crosses the configured
+    /// frame threshold, fold it into the image through the exact `champd
+    /// vdisk compact` code path, then remount so the serving snapshot
+    /// rides the new uid and reopen the reset journal against it.
+    fn maybe_compact(&mut self, now: u64) {
+        if self.cfg.compact_threshold == 0
+            || self.mounted_index.is_none()
+            || self.journal.as_ref().map_or(true, |j| j.frames() < self.cfg.compact_threshold)
+        {
+            return;
+        }
+        let (Some(image), Some(jpath)) = (self.cfg.image.clone(), self.cfg.journal.clone())
+        else {
+            return;
+        };
+        // Our append handle must not outlive the fold: compact truncates
+        // and rebinds the journal file underneath it.
+        let old_journal = self.journal.take();
+        let opts = crate::cli::vdisk::CompactOptions {
+            image,
+            journal: jpath.clone(),
+            passphrase: self.cfg.image_key.clone(),
+            out: None,
+        };
+        let sum = match crate::cli::vdisk::compact(&opts) {
+            Ok(s) => s,
+            Err(e) => {
+                // Fail safe: keep serving against the old image + journal
+                // and stop retrying every tick.
+                eprintln!("background compaction failed (serving continues): {e:#}");
+                self.o.reg.count("serve.compaction_failed", 1);
+                self.journal = old_journal;
+                self.cfg.compact_threshold = 0;
+                return;
+            }
+        };
+        self.compactions += 1;
+        self.o.reg.count("serve.compactions", 1);
+        self.event2(
+            TraceId::STORAGE,
+            EventKind::MediaCompaction,
+            now,
+            sum.folded,
+            sum.image.image_uid,
+        );
+        // Remount: the file at the image path is now the compacted image;
+        // the in-memory snapshot (old uid) must not serve past this tick.
+        if let Some(m) = self.mounts.as_mut() {
+            m.handle_detach(STORAGE_MEDIA_UID, now);
+            if m.handle_attach(STORAGE_MEDIA_UID, now).is_some() {
+                self.mounted_index = m.gallery_index(STORAGE_MEDIA_UID);
+                self.mounted_ivf = m.ivf_index(STORAGE_MEDIA_UID);
+            } else {
+                self.mounted_index = None;
+                self.mounted_ivf = None;
+            }
+        }
+        // Every overlay row was journal-backed and is now inside the
+        // image: reset the overlay so passes stop double-scanning them.
+        self.index = GalleryIndex::with_capacity(self.cfg.dim, 0);
+        match EnrollJournal::open_for_image(
+            &jpath,
+            &SealKey::from_passphrase(&self.cfg.image_key),
+            sum.image.image_uid,
+            Some((sum.source_uid, sum.folded)),
+        ) {
+            Ok((j, _)) => self.journal = Some(j),
+            Err(e) => {
+                // No durable journal, no acks: enrolls shed typed from
+                // here on instead of acking volatile state.
+                eprintln!("journal reopen after compaction failed: {e:#}");
+                self.journal_poisoned = true;
+            }
         }
     }
 
@@ -819,14 +1139,14 @@ impl ServeSession {
                     self.slo.requeued(&req);
                     self.requeued_total += 1;
                     self.o.reg.count("serve.requeued", 1);
-                    self.obs.event(
+                    self.event2(
                         TraceId::request(req.id),
                         EventKind::Requeued,
                         now,
                         req.class as u64,
                         req.tenant as u64,
                     );
-                    if self.obs.is_enabled() {
+                    if self.observing() {
                         self.queue_since.insert(req.id, now);
                     }
                     self.adm.requeue(req);
@@ -926,16 +1246,16 @@ impl ServeSession {
         for r in &reqs {
             self.log_dispatch(r, now);
         }
-        if self.obs.is_enabled() {
+        if self.observing() {
             // Span tiling: queue[admit,pop] + grant[pop,start] +
             // compute[start,done] sums exactly to completion − arrival.
             for r in &reqs {
                 let t = TraceId::request(r.id);
                 let since = self.queue_since.remove(&r.id).unwrap_or(r.arrival_us);
-                self.obs.span(t, Stage::Queue, since, now, r.class as u64, r.tenant as u64);
-                self.obs.span(t, Stage::Dispatch, now, now, reqs.len() as u64, 0);
-                self.obs.span(t, Stage::BusGrant, now, svc_start, 0, 0);
-                self.obs.span(t, Stage::Compute, svc_start, done, cost_rows as u64, reqs.len() as u64);
+                self.span2(t, Stage::Queue, since, now, r.class as u64, r.tenant as u64);
+                self.span2(t, Stage::Dispatch, now, now, reqs.len() as u64, 0);
+                self.span2(t, Stage::BusGrant, now, svc_start, 0, 0);
+                self.span2(t, Stage::Compute, svc_start, done, cost_rows as u64, reqs.len() as u64);
             }
         }
         let id = self.next_batch;
@@ -960,7 +1280,17 @@ impl ServeSession {
             // that cannot meet its deadline under that estimate is shed
             // now instead of dispatched to miss.
             let head_wait = self.o.carts[&head].timeline.next_free().saturating_sub(now);
-            let est = head_wait + self.chain_est_us(self.cfg.batch);
+            let mut est = head_wait + self.chain_est_us(self.cfg.batch);
+            // Under sustained burn the engaged governor pads the dispatch
+            // guard: the raw estimate ignores stage-2/3 queue residency
+            // behind the credit window, which is exactly where overload
+            // misses come from.  The pad shrinks back to zero as the
+            // scale recovers to 1.0.
+            if let Some(g) = &self.gov {
+                if g.engaged() {
+                    est += ((1.0 - g.scale()) * est as f64) as u64;
+                }
+            }
             let mut expired = Vec::new();
             let mut reqs: Vec<Request> = Vec::new();
             while reqs.len() < self.cfg.batch as usize {
@@ -993,7 +1323,7 @@ impl ServeSession {
             for r in &reqs {
                 self.log_dispatch(r, now);
             }
-            if self.obs.is_enabled() {
+            if self.observing() {
                 // Same tiling as the match path: the chain (all stages +
                 // tail) is one Compute span from first-stage service start
                 // to result return.
@@ -1001,10 +1331,10 @@ impl ServeSession {
                 for r in &reqs {
                     let tr = TraceId::request(r.id);
                     let since = self.queue_since.remove(&r.id).unwrap_or(r.arrival_us);
-                    self.obs.span(tr, Stage::Queue, since, now, r.class as u64, r.tenant as u64);
-                    self.obs.span(tr, Stage::Dispatch, now, now, count, 0);
-                    self.obs.span(tr, Stage::BusGrant, now, cs, 0, 0);
-                    self.obs.span(tr, Stage::Compute, cs, t, self.stage_uids.len() as u64, count);
+                    self.span2(tr, Stage::Queue, since, now, r.class as u64, r.tenant as u64);
+                    self.span2(tr, Stage::Dispatch, now, now, count, 0);
+                    self.span2(tr, Stage::BusGrant, now, cs, 0, 0);
+                    self.span2(tr, Stage::Compute, cs, t, self.stage_uids.len() as u64, count);
                 }
             }
             let id = self.next_batch;
@@ -1062,6 +1392,11 @@ impl ServeSession {
         let offered: u64 = classes.iter().map(|c| c.offered).sum();
         let completed: u64 = classes.iter().map(|c| c.completed).sum();
         let shed: u64 = classes.iter().map(|c| c.shed).sum();
+        let deadline_misses: u64 = classes.iter().map(|c| c.completed - c.on_time).sum();
+        let post_admission_sheds: u64 = classes
+            .iter()
+            .map(|c| c.shed_expired + c.shed_evicted + c.shed_queue_full + c.shed_journal_stalled)
+            .sum();
 
         // Publish the storage-side tallies into the registry before the
         // snapshot: cache effectiveness and the wave-admission savings.
@@ -1132,6 +1467,12 @@ impl ServeSession {
             accounting_ok: self.slo.accounting_holds(),
             media_events: self.mounts.map(|m| m.events).unwrap_or_default(),
             trace,
+            anomaly_alerts: self.anomaly_alerts,
+            flight_dump: self.flight_dump,
+            governor_min_scale: self.gov.as_ref().map_or(1.0, |g| g.min_scale()),
+            compactions: self.compactions,
+            deadline_misses,
+            post_admission_sheds,
         }
     }
 }
@@ -1510,6 +1851,131 @@ mod tests {
             out.ann_boosted > 0,
             "underloaded identify with 250ms+ deadlines must widen nprobe"
         );
+    }
+
+    // ---- closed-loop admission governor ---------------------------------
+
+    #[test]
+    fn governor_engages_and_reduces_misses_under_overload() {
+        for overload in [4.0, 8.0] {
+            let base = small_cfg(MissionProfile::disaster_response(), overload, 250);
+            let mut governed = base.clone();
+            governed.governor = true;
+            let un = ServeSession::new(base).unwrap().run(vec![]);
+            let gov = ServeSession::new(governed).unwrap().run(vec![]);
+            assert!(un.accounting_ok && gov.accounting_ok);
+            assert!(gov.completed > 0, "{overload}x: governed serving must not starve");
+            assert_eq!(un.governor_min_scale.to_bits(), 1.0f64.to_bits());
+            assert!(
+                gov.governor_min_scale < 1.0,
+                "{overload}x overload must engage the governor"
+            );
+            // The control objective: late work (deadline misses + sheds
+            // discovered after admission) strictly shrinks; the governor
+            // turns it into cheap front-door rate limiting instead.
+            assert!(
+                gov.deadline_misses < un.deadline_misses || un.deadline_misses == 0,
+                "{overload}x: misses {} must drop below ungoverned {}",
+                gov.deadline_misses,
+                un.deadline_misses
+            );
+            let (u, g) = (
+                un.deadline_misses + un.post_admission_sheds,
+                gov.deadline_misses + gov.post_admission_sheds,
+            );
+            assert!(g < u, "{overload}x: governed late work {g} must beat ungoverned {u}");
+        }
+    }
+
+    // ---- black-box flight recorder --------------------------------------
+
+    #[test]
+    fn armed_flight_changes_no_outcome_and_dumps_deterministically() {
+        let dir = std::env::temp_dir().join(format!("champ-servflt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Armed but never triggered (0.5x underload): bit-identical
+        // numbers to off, and no sidecar file ever appears.
+        let calm = small_cfg(MissionProfile::checkpoint(), 0.5, 100);
+        let mut armed = calm.clone();
+        armed.flight = Some(dir.join("calm.bbx"));
+        let off = ServeSession::new(calm).unwrap().run(vec![]);
+        let on = ServeSession::new(armed).unwrap().run(vec![]);
+        assert_eq!(
+            (off.offered, off.completed, off.shed, off.elapsed_us),
+            (on.offered, on.completed, on.shed, on.elapsed_us)
+        );
+        for (x, y) in off.classes.iter().zip(&on.classes) {
+            assert_eq!((x.p50_us, x.p99_us, x.on_time), (y.p50_us, y.p99_us, y.on_time));
+            assert_eq!(x.goodput_rps.to_bits(), y.goodput_rps.to_bits());
+        }
+        assert!(on.flight_dump.is_none());
+        assert!(!dir.join("calm.bbx").exists(), "untriggered ring must not dump");
+
+        // 8x overload: the burn detectors trip, the ring seals to the
+        // sidecar, and the dump is byte-identical for the same seed.
+        let run_dump = |tag: &str| -> Vec<u8> {
+            let mut cfg = small_cfg(MissionProfile::disaster_response(), 8.0, 250);
+            cfg.flight = Some(dir.join(format!("{tag}.bbx")));
+            let out = ServeSession::new(cfg).unwrap().run(vec![]);
+            assert!(!out.anomaly_alerts.is_empty(), "8x must raise alerts");
+            let p = out.flight_dump.expect("8x must trigger a dump");
+            std::fs::read(p).unwrap()
+        };
+        let (a, b) = (run_dump("hot-a"), run_dump("hot-b"));
+        assert_eq!(a, b, "same seed, same sealed dump bytes");
+        let dump = crate::obs::flight::decode_dump_bytes(
+            &a,
+            &SealKey::from_passphrase("champ-dev-key"),
+        )
+        .unwrap();
+        assert_eq!(dump.seed, 11);
+        assert!(!dump.records.is_empty());
+        assert!(!dump.truncated);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- background journal compaction ----------------------------------
+
+    #[test]
+    fn background_compaction_folds_mid_run_and_survives_the_power_cycle() {
+        let path = packed_image("bgc", 256, 32, "serve-media-key");
+        let jpath = path.with_file_name("bgc.cjl");
+        let mut cfg = image_cfg(path.clone(), 150);
+        cfg.journal = Some(jpath.clone());
+        cfg.compact_threshold = 2;
+
+        let out = ServeSession::new(cfg.clone()).unwrap().run(vec![]);
+        assert!(out.accounting_ok, "compaction must not break exactly-once accounting");
+        let enrolled = enrolls_of(&out);
+        assert!(enrolled > 0);
+        assert!(out.compactions >= 1, "threshold 2 must fold mid-run: {:?}", out.compactions);
+
+        // The folded enrollments live inside the sealed image now: it
+        // mounts clean with more rows than packed, carrying provenance.
+        let img = crate::vdisk::MountedImage::mount(
+            &path,
+            &SealKey::from_passphrase("serve-media-key"),
+        )
+        .unwrap();
+        let (idx, _) = img.load_gallery_index().unwrap();
+        assert!(idx.len() > 256, "folded rows must be in the image: {}", idx.len());
+        assert!(img.manifest.compacted_from().is_some());
+        drop(img);
+
+        // Power cycle: the next boot recovers only the post-compaction
+        // tail from the journal, and every acked enrollment — folded or
+        // tailed — still resolves rank-1.
+        let s2 = ServeSession::new(cfg).unwrap();
+        assert!(
+            (s2.recovered_count() as u64) < enrolled,
+            "folded frames must have left the journal: {} of {enrolled}",
+            s2.recovered_count()
+        );
+        assert_eq!(s2.verify_replay().unwrap(), s2.recovered_count());
+        let out2 = s2.run(vec![]);
+        assert!(out2.accounting_ok);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 
     #[test]

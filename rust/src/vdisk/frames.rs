@@ -1,0 +1,237 @@
+//! Generic sealed-frame codec: the CTR+HMAC append-frame format shared by
+//! the enrollment journal ([`super::journal`]) and the flight recorder's
+//! black-box dumps (`obs::flight`).
+//!
+//! Both consumers write the same wire shape — a 24-byte frame header
+//! (`magic(4) | u64 seq | u64 nonce | u32 payload_len`) followed by the
+//! payload sealed under a per-frame subkey — and both inherit the same
+//! guarantees from this one implementation:
+//!
+//! * **Content-derived nonce.**  The nonce is the first 8 LE bytes of
+//!   SHA-256(`domain || payload`), so re-sealing the same payload at the
+//!   same seq re-derives the same subkey and produces bit-identical
+//!   ciphertext (no keystream-reuse hazard, and dumps are deterministic),
+//!   while a different payload lands under an unrelated keystream.
+//! * **Position-bound subkeys.**  The caller's tweak closure folds the
+//!   container identity plus `(seq, nonce)` into the subkey derivation, so
+//!   splicing frames between files or reordering them fails the MAC.
+//! * **Torn-tail vs. tamper discipline.**  A crash mid-append leaves a
+//!   *prefix* of the final frame; the scanner stops at a short header or a
+//!   short sealed body (never acked, safe to drop).  Anything a torn
+//!   prefix cannot explain — bad magic with a full header present,
+//!   out-of-order seq, MAC failure, nonce mismatch — fails closed as
+//!   [`FrameError::Tamper`].
+
+use sha2::{Digest, Sha256};
+
+use crate::crypto::seal::{SealKey, TAG_LEN};
+
+/// Frame header: magic(4) + seq(8) + nonce(8) + payload_len(4).
+pub(crate) const FRAME_HDR_LEN: usize = 24;
+/// Upper bound on one sealed payload; anything larger is structural
+/// corruption, not data.
+pub(crate) const MAX_PAYLOAD: usize = 1 << 24;
+
+/// Why a frame scan stopped believing the bytes.
+#[derive(Debug)]
+pub(crate) enum FrameError {
+    /// A failure a torn prefix cannot explain: fail closed.
+    Tamper(&'static str),
+    /// Structurally invalid metadata (length field out of range).
+    Corrupt(String),
+}
+
+impl From<FrameError> for super::VdiskError {
+    fn from(e: FrameError) -> Self {
+        match e {
+            FrameError::Tamper(what) => super::VdiskError::Tamper(what),
+            FrameError::Corrupt(why) => super::VdiskError::Corrupt(why),
+        }
+    }
+}
+
+/// Content nonce: first 8 bytes of SHA-256(`domain || payload`), LE.
+pub(crate) fn payload_nonce(domain: &[u8], payload: &[u8]) -> u64 {
+    let mut h = Sha256::new();
+    h.update(domain);
+    h.update(payload);
+    let d = h.finalize();
+    u64::from_le_bytes(d[..8].try_into().unwrap())
+}
+
+/// Build one complete sealed frame (header + ciphertext + tag).  `tweak`
+/// maps `(seq, nonce)` to the subkey derivation string binding the frame
+/// to its container and position.
+pub(crate) fn seal_frame(
+    key: &SealKey,
+    magic: &[u8; 4],
+    nonce_domain: &[u8],
+    seq: u64,
+    payload: &[u8],
+    tweak: impl Fn(u64, u64) -> String,
+) -> Vec<u8> {
+    let nonce = payload_nonce(nonce_domain, payload);
+    let sealed = key.subkey(&tweak(seq, nonce)).seal(payload);
+    let mut frame = Vec::with_capacity(FRAME_HDR_LEN + sealed.len());
+    frame.extend_from_slice(magic);
+    frame.extend_from_slice(&seq.to_le_bytes());
+    frame.extend_from_slice(&nonce.to_le_bytes());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&sealed);
+    frame
+}
+
+/// Scan every frame from byte offset `start`.  Returns the decoded
+/// payloads in seq order plus the byte length of the valid prefix (a torn
+/// tail is excluded, not an error).  Any failure a torn prefix cannot
+/// explain fails closed.
+pub(crate) fn scan_frames(
+    key: &SealKey,
+    magic: &[u8; 4],
+    nonce_domain: &[u8],
+    bytes: &[u8],
+    start: usize,
+    tweak: impl Fn(u64, u64) -> String,
+) -> Result<(Vec<Vec<u8>>, u64), FrameError> {
+    let fac = key.subkey_factory();
+    let mut off = start.min(bytes.len());
+    let mut seq = 0u64;
+    let mut out = Vec::new();
+    while off < bytes.len() {
+        let rem = bytes.len() - off;
+        if rem < FRAME_HDR_LEN {
+            break; // torn frame header: never acked, truncate
+        }
+        let hdr = &bytes[off..off + FRAME_HDR_LEN];
+        // A torn append leaves a *prefix*: with >= 24 bytes present, the
+        // whole header of a legitimate frame is present and valid.  A
+        // mismatch here is tampering, not tearing.
+        if hdr[..4] != magic[..] {
+            return Err(FrameError::Tamper("frame magic"));
+        }
+        let fseq = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+        let nonce = u64::from_le_bytes(hdr[12..20].try_into().unwrap());
+        let plen = u32::from_le_bytes(hdr[20..24].try_into().unwrap()) as usize;
+        if fseq != seq {
+            return Err(FrameError::Tamper("frame sequence"));
+        }
+        if plen == 0 || plen > MAX_PAYLOAD {
+            return Err(FrameError::Corrupt(format!("frame payload length {plen}")));
+        }
+        let frame_len = FRAME_HDR_LEN + plen + TAG_LEN;
+        if rem < frame_len {
+            break; // torn body or torn MAC: never acked, truncate
+        }
+        let sealed = &bytes[off + FRAME_HDR_LEN..off + frame_len];
+        let sub = fac.derive(&tweak(fseq, nonce));
+        let payload = sub.unseal(sealed).map_err(|_| FrameError::Tamper("frame"))?;
+        if payload_nonce(nonce_domain, &payload) != nonce {
+            return Err(FrameError::Tamper("frame nonce"));
+        }
+        out.push(payload);
+        off += frame_len;
+        seq += 1;
+    }
+    Ok((out, off as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MAGIC: [u8; 4] = *b"TST1";
+    const DOMAIN: &[u8] = b"champ-frames-test-v1";
+
+    fn key() -> SealKey {
+        SealKey::from_passphrase("frames-test-key")
+    }
+
+    fn tweak(seq: u64, nonce: u64) -> String {
+        format!("test/frames/{seq}/{nonce:016x}")
+    }
+
+    fn stream(payloads: &[&[u8]]) -> Vec<u8> {
+        let k = key();
+        let mut bytes = Vec::new();
+        for (i, p) in payloads.iter().enumerate() {
+            bytes.extend_from_slice(&seal_frame(&k, &MAGIC, DOMAIN, i as u64, p, tweak));
+        }
+        bytes
+    }
+
+    #[test]
+    fn roundtrip_in_seq_order() {
+        let bytes = stream(&[b"alpha", b"bravo", b"charlie"]);
+        let (got, valid) = scan_frames(&key(), &MAGIC, DOMAIN, &bytes, 0, tweak).unwrap();
+        assert_eq!(got, vec![b"alpha".to_vec(), b"bravo".to_vec(), b"charlie".to_vec()]);
+        assert_eq!(valid, bytes.len() as u64);
+    }
+
+    #[test]
+    fn sealing_is_deterministic_per_payload() {
+        let a = seal_frame(&key(), &MAGIC, DOMAIN, 0, b"same", tweak);
+        let b = seal_frame(&key(), &MAGIC, DOMAIN, 0, b"same", tweak);
+        assert_eq!(a, b, "same payload at same seq must reseal bit-identically");
+        let c = seal_frame(&key(), &MAGIC, DOMAIN, 0, b"other", tweak);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn torn_tail_truncates_and_keeps_the_prefix() {
+        let mut bytes = stream(&[b"kept-0", b"kept-1"]);
+        let whole = bytes.len();
+        let extra = seal_frame(&key(), &MAGIC, DOMAIN, 2, b"torn", tweak);
+        for cut in [1, FRAME_HDR_LEN - 1, FRAME_HDR_LEN, FRAME_HDR_LEN + 2, extra.len() - 1] {
+            bytes.truncate(whole);
+            bytes.extend_from_slice(&extra[..cut]);
+            let (got, valid) = scan_frames(&key(), &MAGIC, DOMAIN, &bytes, 0, tweak).unwrap();
+            assert_eq!(got.len(), 2, "cut {cut}: acked prefix must survive");
+            assert_eq!(valid, whole as u64, "cut {cut}: torn tail excluded");
+        }
+    }
+
+    #[test]
+    fn reordered_and_spliced_frames_fail_closed() {
+        let k = key();
+        let f0 = seal_frame(&k, &MAGIC, DOMAIN, 0, b"first", tweak);
+        let f1 = seal_frame(&k, &MAGIC, DOMAIN, 1, b"second", tweak);
+        // Swapped order: the seq check rejects before any MAC work.
+        let mut swapped = f1.clone();
+        swapped.extend_from_slice(&f0);
+        assert!(matches!(
+            scan_frames(&k, &MAGIC, DOMAIN, &swapped, 0, tweak),
+            Err(FrameError::Tamper(_))
+        ));
+        // A frame re-stamped with another seq fails its position-bound MAC.
+        let mut restamped = f1.clone();
+        restamped[4..12].copy_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(
+            scan_frames(&k, &MAGIC, DOMAIN, &restamped, 0, tweak),
+            Err(FrameError::Tamper(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_key_magic_or_domain_fails_closed() {
+        let bytes = stream(&[b"payload"]);
+        let wrong = SealKey::from_passphrase("not-the-key");
+        assert!(scan_frames(&wrong, &MAGIC, DOMAIN, &bytes, 0, tweak).is_err());
+        assert!(scan_frames(&key(), b"NOPE", DOMAIN, &bytes, 0, tweak).is_err());
+        // A different nonce domain breaks the content-nonce check even
+        // though the keystream would otherwise verify.
+        assert!(scan_frames(&key(), &MAGIC, b"other-domain", &bytes, 0, tweak).is_err());
+    }
+
+    #[test]
+    fn interior_bit_flips_fail_closed() {
+        let bytes = stream(&[b"bit-flip-coverage payload"]);
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 1;
+            assert!(
+                scan_frames(&key(), &MAGIC, DOMAIN, &bad, 0, tweak).is_err(),
+                "byte {i}: flip accepted"
+            );
+        }
+    }
+}

@@ -54,12 +54,10 @@ use std::fs::{File, OpenOptions};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
-use sha2::{Digest, Sha256};
-
 use crate::biometric::index::GalleryIndex;
-use crate::crypto::seal::{SealKey, TAG_LEN};
+use crate::crypto::seal::SealKey;
 
-use super::{journal_tweak, VdiskError};
+use super::{frames, journal_tweak, VdiskError};
 
 /// Journal file magic.
 pub const JOURNAL_MAGIC: [u8; 8] = *b"CHAMPCJL";
@@ -68,11 +66,10 @@ pub const JOURNAL_VERSION: u32 = 1;
 /// File header: magic(8) + version(4) + reserved(4) + image_uid(8).
 const FILE_HDR_LEN: usize = 24;
 /// Frame header: magic(4) + seq(8) + nonce(8) + payload_len(4).
-const FRAME_HDR_LEN: usize = 24;
+const FRAME_HDR_LEN: usize = frames::FRAME_HDR_LEN;
 const FRAME_MAGIC: [u8; 4] = *b"CJL1";
-/// Upper bound on one sealed record (a 4 KiB id + a 64k-dim template is
-/// far inside this); anything larger is structural corruption.
-const MAX_PAYLOAD: usize = 1 << 24;
+/// Domain string mixed into the content-derived frame nonce.
+const NONCE_DOMAIN: &[u8] = b"champ-journal-nonce-v1";
 /// Ids longer than this are structural corruption, not data.
 const MAX_ID_LEN: usize = 4096;
 
@@ -113,15 +110,6 @@ fn file_header(image_uid: u64) -> [u8; FILE_HDR_LEN] {
     h
 }
 
-/// Content nonce: first 8 bytes of SHA-256(payload), little-endian.
-fn payload_nonce(payload: &[u8]) -> u64 {
-    let mut h = Sha256::new();
-    h.update(b"champ-journal-nonce-v1");
-    h.update(payload);
-    let d = h.finalize();
-    u64::from_le_bytes(d[..8].try_into().unwrap())
-}
-
 /// One gallery wire record: `[u32 id_len][id][dim × f32 LE]`.
 fn encode_payload(id: &str, template: &[f32]) -> Vec<u8> {
     let mut p = Vec::with_capacity(4 + id.len() + template.len() * 4);
@@ -156,68 +144,34 @@ fn decode_payload(p: &[u8]) -> Result<(String, Vec<f32>), VdiskError> {
     Ok((id, template))
 }
 
-/// Build one complete sealed frame (header + ciphertext + tag).
+/// Build one complete sealed frame (header + ciphertext + tag) through
+/// the shared codec ([`frames`]) under the journal's magic, nonce domain,
+/// and image-bound tweak.
 fn seal_frame(key: &SealKey, image_uid: u64, seq: u64, payload: &[u8]) -> Vec<u8> {
-    let nonce = payload_nonce(payload);
-    let sealed = key.subkey(&journal_tweak(image_uid, seq, nonce)).seal(payload);
-    let mut frame = Vec::with_capacity(FRAME_HDR_LEN + sealed.len());
-    frame.extend_from_slice(&FRAME_MAGIC);
-    frame.extend_from_slice(&seq.to_le_bytes());
-    frame.extend_from_slice(&nonce.to_le_bytes());
-    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    frame.extend_from_slice(&sealed);
-    frame
+    frames::seal_frame(key, &FRAME_MAGIC, NONCE_DOMAIN, seq, payload, |s, n| {
+        journal_tweak(image_uid, s, n)
+    })
 }
 
 /// Scan every frame after the file header.  Returns the recovered records
 /// plus the byte length of the valid prefix (torn tail excluded).  Any
-/// failure a torn prefix cannot explain fails closed.
+/// failure a torn prefix cannot explain fails closed (the shared codec
+/// enforces the torn-vs-tamper discipline; see [`frames::scan_frames`]).
 fn scan_frames(
     key: &SealKey,
     image_uid: u64,
     bytes: &[u8],
 ) -> Result<(Vec<JournalRecord>, u64), VdiskError> {
-    let fac = key.subkey_factory();
-    let mut off = FILE_HDR_LEN.min(bytes.len());
-    let mut seq = 0u64;
-    let mut recs = Vec::new();
-    while off < bytes.len() {
-        let rem = bytes.len() - off;
-        if rem < FRAME_HDR_LEN {
-            break; // torn frame header: never acked, truncate
-        }
-        let hdr = &bytes[off..off + FRAME_HDR_LEN];
-        // A torn append leaves a *prefix*: with >= 24 bytes present, the
-        // whole header of a legitimate frame is present and valid.  A
-        // mismatch here is tampering, not tearing.
-        if hdr[..4] != FRAME_MAGIC {
-            return Err(VdiskError::Tamper("journal frame magic"));
-        }
-        let fseq = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
-        let nonce = u64::from_le_bytes(hdr[12..20].try_into().unwrap());
-        let plen = u32::from_le_bytes(hdr[20..24].try_into().unwrap()) as usize;
-        if fseq != seq {
-            return Err(VdiskError::Tamper("journal frame sequence"));
-        }
-        if plen == 0 || plen > MAX_PAYLOAD {
-            return Err(VdiskError::Corrupt(format!("journal frame payload length {plen}")));
-        }
-        let frame_len = FRAME_HDR_LEN + plen + TAG_LEN;
-        if rem < frame_len {
-            break; // torn body or torn MAC: never acked, truncate
-        }
-        let sealed = &bytes[off + FRAME_HDR_LEN..off + frame_len];
-        let sub = fac.derive(&journal_tweak(image_uid, fseq, nonce));
-        let payload = sub.unseal(sealed).map_err(|_| VdiskError::Tamper("journal frame"))?;
-        if payload_nonce(&payload) != nonce {
-            return Err(VdiskError::Tamper("journal frame nonce"));
-        }
-        let (id, template) = decode_payload(&payload)?;
-        recs.push(JournalRecord { seq: fseq, id, template });
-        off += frame_len;
-        seq += 1;
+    let (payloads, valid_len) =
+        frames::scan_frames(key, &FRAME_MAGIC, NONCE_DOMAIN, bytes, FILE_HDR_LEN, |s, n| {
+            journal_tweak(image_uid, s, n)
+        })?;
+    let mut recs = Vec::with_capacity(payloads.len());
+    for (i, p) in payloads.iter().enumerate() {
+        let (id, template) = decode_payload(p)?;
+        recs.push(JournalRecord { seq: i as u64, id, template });
     }
-    Ok((recs, off as u64))
+    Ok((recs, valid_len))
 }
 
 /// Parse + validate the 24-byte file header; returns the bound image uid.

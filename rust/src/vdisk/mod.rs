@@ -39,6 +39,7 @@
 
 pub mod cache;
 pub mod extent;
+pub(crate) mod frames;
 pub mod image;
 pub mod journal;
 pub mod manifest;

@@ -86,7 +86,7 @@ fn serve_report_covers_all_profiles_with_power_rows() {
             cfg
         })
         .collect();
-    let (report, outcomes) = serve_report(configs, false).unwrap();
+    let (report, outcomes) = serve_report(configs, false, false).unwrap();
     assert_eq!(outcomes.len(), 3);
     assert_eq!(report.power.len(), 3);
     for p in MissionProfile::all() {
@@ -186,7 +186,7 @@ fn mid_run_media_detach_falls_back_without_panic() {
 fn trace_driven_serve_report_records_the_requeue() {
     // The satellite contract: MissionTrace::disaster_response() end-to-end
     // through the `champd serve` code path, requeue visible in telemetry.
-    let (report, outcomes) = serve_report(vec![disaster_cfg()], true).unwrap();
+    let (report, outcomes) = serve_report(vec![disaster_cfg()], true, false).unwrap();
     let requeued: u64 = report.records.iter().map(|r| r.requeued).sum();
     assert!(requeued > 0, "trace requeue must surface in BENCH_serve.json");
     assert_eq!(requeued, outcomes[0].1.requeued);

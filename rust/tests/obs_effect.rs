@@ -8,7 +8,10 @@
 //!   replayable forensics, not samples;
 //! * per-request spans tile exactly: queue -> bus-grant -> compute are
 //!   contiguous and their durations sum to completion - arrival, and an
-//!   image-backed run shows the storage unseal-wave spans.
+//!   image-backed run shows the storage unseal-wave spans;
+//! * the flight recorder obeys the same observer-effect law: armed but
+//!   untriggered is bit-identical to off, and a triggered run's sealed
+//!   dump is byte-deterministic per seed.
 
 use champ::cli::serve::serve_report;
 use champ::obs::{EventKind, RecordKind, Stage, TraceId, TraceRecorder};
@@ -28,8 +31,8 @@ fn cfg_with(trace: bool, seed: u64) -> ServeConfig {
 
 #[test]
 fn traced_and_untraced_reports_are_bit_identical() {
-    let (mut plain, out_plain) = serve_report(vec![cfg_with(false, 17)], false).unwrap();
-    let (mut traced, out_traced) = serve_report(vec![cfg_with(true, 17)], true).unwrap();
+    let (mut plain, out_plain) = serve_report(vec![cfg_with(false, 17)], false, false).unwrap();
+    let (mut traced, out_traced) = serve_report(vec![cfg_with(true, 17)], true, false).unwrap();
     // The report (classes, tenants, power) must not feel the observer.
     plain.commit = "x".into();
     traced.commit = "x".into();
@@ -160,4 +163,68 @@ fn image_backed_run_traces_the_unseal_waves() {
     // Cache tallies made it into the registry.
     let inserts = snap.metrics.counter("vdisk.cache.inserts");
     assert!(inserts > 0, "boot gallery load must populate the block cache");
+}
+
+#[test]
+fn armed_but_untriggered_flight_is_bit_identical_to_off() {
+    let dir = std::env::temp_dir().join(format!("champ-obsflt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // Underload so no detector fires: the black box stays quiet.
+    let calm = |flight: Option<std::path::PathBuf>| {
+        let mut cfg = cfg_with(false, 43);
+        cfg.overload = 0.5;
+        cfg.flight = flight;
+        cfg
+    };
+    let bbx = dir.join("quiet.bbx");
+    let (mut off, out_off) = serve_report(vec![calm(None)], false, false).unwrap();
+    let (mut armed, out_armed) =
+        serve_report(vec![calm(Some(bbx.clone()))], false, false).unwrap();
+    off.commit = "x".into();
+    armed.commit = "x".into();
+    assert_eq!(
+        off.to_json_pretty(),
+        armed.to_json_pretty(),
+        "an armed-but-untriggered flight recorder changed the serving report"
+    );
+    let (p, a) = (&out_off[0].1, &out_armed[0].1);
+    assert_eq!((p.offered, p.completed, p.shed), (a.offered, a.completed, a.shed));
+    assert_eq!(p.elapsed_us, a.elapsed_us);
+    assert!(a.flight_dump.is_none(), "quiet run must not dump");
+    assert!(!bbx.exists(), "no trigger, no sidecar file");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn triggered_dumps_are_byte_deterministic_per_seed() {
+    use champ::crypto::seal::SealKey;
+    use champ::obs::flight::decode_dump_bytes;
+
+    let dir = std::env::temp_dir().join(format!("champ-obsdet-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // Disaster at 8x overload drives the burn detectors over threshold.
+    let hot = |name: &str| {
+        let mut cfg = ServeConfig::new(MissionProfile::disaster_response());
+        cfg.requests = 250;
+        cfg.overload = 8.0;
+        cfg.gallery = 512;
+        cfg.dim = 32;
+        cfg.seed = 47;
+        cfg.flight = Some(dir.join(name));
+        cfg
+    };
+    let run = |name: &str| {
+        let out = ServeSession::new(hot(name)).unwrap().run(vec![]);
+        assert!(out.accounting_ok);
+        assert!(!out.anomaly_alerts.is_empty(), "8x overload must raise alerts");
+        let path = out.flight_dump.expect("8x overload must trigger the black box");
+        std::fs::read(path).unwrap()
+    };
+    let (a, b) = (run("a.bbx"), run("b.bbx"));
+    assert_eq!(a, b, "same seed must seal byte-identical dumps");
+    let dump = decode_dump_bytes(&a, &SealKey::from_passphrase("champ-dev-key")).unwrap();
+    assert_eq!(dump.seed, 47);
+    assert!(!dump.truncated);
+    assert!(!dump.records.is_empty());
+    std::fs::remove_dir_all(&dir).ok();
 }
