@@ -1,43 +1,103 @@
-//! Multi-unit CHAMP: two units chained over Gigabit Ethernet (paper §3.1).
+//! Multi-unit CHAMP: a federated rack of units serving one gallery
+//! (paper §3.1 scaled out).
 //!
 //!     cargo run --release --example multi_unit
 //!
-//! Unit A (vehicle checkpoint) runs detect + quality; unit B (command
-//! post) runs the embedder.  Intermediate face crops cross the GbE link.
+//! Three units share a 3 000-identity corpus under rendezvous placement
+//! with replication factor 2.  Identify probes scatter to every unit
+//! holding routed keys, each unit scans its shard in parallel, and the
+//! per-unit top-k lists heap-merge into an answer bit-identical to a
+//! single-unit scan over the whole corpus.  The demo then pulls a unit
+//! mid-flight (the replicas absorb it), brings it back, and racks a
+//! fourth unit whose shard fills through incremental rebalance steps.
 
-use champ::bus::topology::SlotId;
-use champ::bus::usb3::BusProfile;
-use champ::coordinator::link::UnitLink;
-use champ::coordinator::pipeline::{Pipeline, Stage};
-use champ::coordinator::scheduler::Orchestrator;
-use champ::device::caps::CapDescriptor;
-use champ::device::{Cartridge, DeviceKind};
-use champ::workload::video::VideoSource;
+use champ::biometric::index::GalleryIndex;
+use champ::serve::federation::FederationRouter;
+use champ::util::rng::Rng;
+
+const DIM: usize = 32;
+const CORPUS: usize = 3_000;
+const K: usize = 5;
+
+fn print_hits(label: &str, router: &FederationRouter, hits: &[(u32, f32)]) {
+    let top = hits
+        .iter()
+        .map(|&(seq, score)| format!("{}:{score:.4}", router.id_of(seq)))
+        .collect::<Vec<_>>()
+        .join("  ");
+    println!("{label:<28} {top}");
+}
 
 fn main() -> anyhow::Result<()> {
-    // Unit A: head of the pipeline.
-    let mut a = Orchestrator::new(BusProfile::usb3_gen1(), 4);
-    a.plug(SlotId(0), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_detect()))?;
-    a.plug(SlotId(1), Cartridge::new(0, DeviceKind::Ncs2, CapDescriptor::face_quality()))?;
+    // Rack of three units, every identity on two of them.
+    let uids: Vec<u64> = (0..3).map(|i| 0xFED0_0000 + i).collect();
+    let mut router = FederationRouter::new(DIM, &uids, 2);
 
-    // Unit B: the tail (embedder).  Its head consumes FaceCrop, which is
-    // not camera-runnable on its own — exactly why it lives behind a link.
-    let mut b = Orchestrator::new(BusProfile::usb3_gen1(), 4);
-    let cart = Cartridge::new(1, DeviceKind::Ncs2, CapDescriptor::face_embed());
-    b.topology.insert(SlotId(0), 1)?;
-    b.registry.register(1, SlotId(0), cart.cap.clone(), 0);
-    b.pipeline = Pipeline { stages: vec![Stage { uid: 1, cap: cart.cap.clone() }] };
-    b.carts.insert(1, cart);
+    // Enroll the corpus; keep a flat single-unit index as the oracle.
+    let mut oracle = GalleryIndex::new(DIM);
+    let mut rng = Rng::new(0x05ca77e4);
+    for i in 0..CORPUS {
+        let id = format!("person-{i:04}");
+        let t = rng.unit_vec(DIM);
+        router.enroll(&id, &t)?;
+        oracle.upsert(id, &t);
+    }
+    println!(
+        "{} identities over {} units (RF {}), shard sizes: {:?}",
+        router.enrolled_count(),
+        router.unit_count(),
+        router.replication(),
+        (0..router.unit_count()).map(|u| router.assigned_count(u)).collect::<Vec<_>>()
+    );
 
-    let mut link = UnitLink::gbe();
-    let mut cam = VideoSource::paper_stream(3).with_rate_fps(6.0);
-    let rep = link.run_split(&mut a, &mut b, &mut cam, 60)?;
+    // A probe: a noisy view of an enrolled face.
+    let probe: Vec<f32> = {
+        let mut noise = Rng::new(42);
+        router
+            .template_of(1_234)
+            .iter()
+            .map(|&x| x + 0.05 * noise.normal())
+            .collect()
+    };
 
-    println!("unit A: {} | link: GbE | unit B: {}",
-        a.pipeline.stages.iter().map(|s| s.cap.id.name()).collect::<Vec<_>>().join(" -> "),
-        b.pipeline.stages.iter().map(|s| s.cap.id.name()).collect::<Vec<_>>().join(" -> "));
-    println!("frames: {}  fps: {:.2}", rep.frames, rep.fps);
-    println!("e2e latency: mean {:.1} ms (link crossings total {:.1} ms)",
-        rep.latency.mean_us() / 1e3, rep.link_us_total as f64 / 1e3);
+    // Scatter-gather identify vs the covering single-unit scan: the
+    // merged answer must be bit-identical (same scores, same order).
+    let fed = router.identify(&probe, K);
+    let flat = oracle.top_k(&probe, K);
+    assert_eq!(fed.len(), flat.len());
+    for (&(seq, fs), &(row, os)) in fed.iter().zip(flat.iter()) {
+        assert_eq!(router.id_of(seq), oracle.id_of(row), "merge order must match the flat scan");
+        assert_eq!(fs.to_bits(), os.to_bits(), "scores must be bit-identical");
+    }
+    print_hits("federated top-k:", &router, &fed);
+    println!("(bit-identical to a single-unit scan over the union)");
+
+    // Pull unit 0: every key it served re-routes to its replica, and the
+    // answer does not change by a single bit.
+    router.detach(0);
+    let pulled = router.identify(&probe, K);
+    assert_eq!(pulled, fed, "RF 2 must absorb a single unit loss");
+    print_hits("after detaching unit 0:", &router, &pulled);
+    router.reattach(0);
+
+    // Rack a fourth unit: placement re-ranks and the new shard fills via
+    // bounded rebalance steps, exactly-once accounted.
+    let unit = router.attach_expand(0xFED0_0003, None, None)?;
+    let total = router.rebalance_pending();
+    let mut steps = 0;
+    while router.rebalance_pending() > 0 {
+        router.rebalance_step(64, steps * 1_000)?;
+        steps += 1;
+        assert!(router.rebalance_accounting_holds(), "every transfer accounted exactly once");
+    }
+    println!(
+        "racked unit {unit}: {total} copies drained in {steps} steps, shard sizes now {:?}",
+        (0..router.unit_count()).map(|u| router.assigned_count(u)).collect::<Vec<_>>()
+    );
+
+    let expanded = router.identify(&probe, K);
+    assert_eq!(expanded, fed, "rebalance must not change any answer");
+    print_hits("after racking unit 3:", &router, &expanded);
+    println!("scatter-gather pass cost: {} us (virtual)", router.fed_pass_us(1, K));
     Ok(())
 }

@@ -15,7 +15,7 @@
 //! existing call site breaks and no fast path gains an abstraction tax
 //! it didn't opt into.
 
-use super::index::{GalleryIndex, QuantIndex};
+use super::index::{GalleryIndex, QuantIndex, TopK};
 use super::ivf::{IvfIndex, DEFAULT_NPROBE};
 use super::template::Template;
 
@@ -179,6 +179,28 @@ impl SearchBackend for IvfBackend<'_> {
     }
 }
 
+/// Deterministic bounded heap-merge of per-shard top-k lists.
+///
+/// Each input list pairs a *global* candidate ordinal (for the federation
+/// tier: the global enrollment sequence) with its score. The merge uses the
+/// exact `Cand` ordering the single-index scan uses — `f32::total_cmp` on the
+/// score, ties broken toward the *lower* ordinal (enrollment order) — so as
+/// long as the input lists partition the corpus and each list is a faithful
+/// per-shard `top_k`, the output is bit-identical to one scan over the union.
+pub fn merge_topk<I, L>(lists: I, k: usize) -> Vec<(usize, f32)>
+where
+    I: IntoIterator<Item = L>,
+    L: IntoIterator<Item = (usize, f32)>,
+{
+    let mut heap = TopK::new(k);
+    for list in lists {
+        for (ordinal, score) in list {
+            heap.offer(score, ordinal);
+        }
+    }
+    heap.into_sorted().into_iter().map(|c| (c.row, c.score)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::ivf::{clustered_index, IvfParams};
@@ -245,5 +267,39 @@ mod tests {
         }
         assert_eq!(SearchBackend::len(&ib), idx.len());
         assert_eq!(SearchBackend::len(&qb), idx.len());
+    }
+
+    #[test]
+    fn merge_topk_is_bit_identical_to_a_union_scan() {
+        let mut rng = Rng::new(74);
+        let dim = 16;
+        let n = 400;
+        let mut union = GalleryIndex::new(dim);
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| rng.unit_vec(dim)).collect();
+        for (i, v) in rows.iter().enumerate() {
+            union.upsert(format!("id{i}"), v);
+        }
+        // Partition rows across 3 "units" by ordinal; each unit runs its own
+        // exact per-subset scan, the merge must reproduce the union top_k.
+        let probe = rng.unit_vec(dim);
+        for k in [1usize, 5, 17] {
+            let per_unit: Vec<Vec<(usize, f32)>> = (0..3)
+                .map(|u| union.top_k_rows(&probe, (0..n).filter(|r| r % 3 == u), k))
+                .collect();
+            let merged = merge_topk(per_unit, k);
+            let oracle = union.top_k(&probe, k);
+            assert_eq!(merged.len(), oracle.len());
+            for (m, o) in merged.iter().zip(&oracle) {
+                assert_eq!(m.0, o.0, "merge must keep enrollment-order tie-break");
+                assert_eq!(m.1.to_bits(), o.1.to_bits(), "scores must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_topk_handles_empty_and_short_lists() {
+        let merged = merge_topk(vec![vec![], vec![(3usize, 0.5f32)], vec![]], 4);
+        assert_eq!(merged, vec![(3, 0.5)]);
+        assert!(merge_topk(Vec::<Vec<(usize, f32)>>::new(), 4).is_empty());
     }
 }

@@ -87,6 +87,62 @@ impl MediaBay {
     }
 }
 
+/// The cartridge hot-swap machinery generalized to a whole CHAMP unit: in a
+/// federation rack, an entire unit (chassis, accelerators, mounted shard) can
+/// be pulled or racked while the tier keeps serving. The same staggered-pin /
+/// debounce physics apply per-unit; the federation router reacts to the
+/// OS-visible event by re-routing that unit's shard keys to their replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UnitEvent {
+    /// Virtual time at which the unit is physically pulled/racked.
+    pub at_us: u64,
+    /// Federation unit uid (not a cartridge slot — the whole unit).
+    pub unit_uid: u64,
+    pub kind: HotplugKind,
+}
+
+impl UnitEvent {
+    /// When the federation router notices. A unit enumerates a whole bus
+    /// tree, so attach visibility is one extra debounce window on top of the
+    /// cartridge latency; detach is the same port-status interrupt.
+    pub fn visible_at(&self) -> u64 {
+        let extra = match self.kind {
+            HotplugKind::Attach => 100_000,
+            HotplugKind::Detach => 0,
+        };
+        self.at_us + self.kind.latency_us() + extra
+    }
+}
+
+/// Time-ordered queue of scripted unit-level events.
+#[derive(Debug, Default, Clone)]
+pub struct UnitScript {
+    events: Vec<UnitEvent>,
+}
+
+impl UnitScript {
+    pub fn new(mut events: Vec<UnitEvent>) -> Self {
+        events.sort_by_key(|e| e.at_us);
+        UnitScript { events }
+    }
+
+    /// Pop every event whose *visible* time is <= `now`.
+    pub fn due(&mut self, now_us: u64) -> Vec<UnitEvent> {
+        let (due, rest): (Vec<UnitEvent>, Vec<UnitEvent>) =
+            self.events.iter().copied().partition(|e| e.visible_at() <= now_us);
+        self.events = rest;
+        due
+    }
+
+    pub fn pending(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn next_visible(&self) -> Option<u64> {
+        self.events.iter().map(|e| e.visible_at()).min()
+    }
+}
+
 /// Time-ordered queue of scripted events.
 #[derive(Debug, Default, Clone)]
 pub struct HotplugScript {
@@ -148,6 +204,19 @@ mod tests {
         let mk = |t| HotplugEvent { at_us: t, slot: SlotId(0), kind: HotplugKind::Detach, uid: 0 };
         let s = HotplugScript::new(vec![mk(500), mk(100)]);
         assert_eq!(s.next_visible(), Some(100 + 20_000));
+    }
+
+    #[test]
+    fn unit_events_are_slower_to_attach_and_ordered() {
+        let det = UnitEvent { at_us: 1_000, unit_uid: 2, kind: HotplugKind::Detach };
+        let att = UnitEvent { at_us: 1_000, unit_uid: 2, kind: HotplugKind::Attach };
+        assert_eq!(det.visible_at(), 1_000 + 20_000);
+        assert!(att.visible_at() > det.visible_at(), "unit enumeration dominates");
+        let mut s = UnitScript::new(vec![att, det]);
+        assert_eq!(s.next_visible(), Some(det.visible_at()));
+        assert!(s.due(det.visible_at() - 1).is_empty());
+        assert_eq!(s.due(det.visible_at()), vec![det]);
+        assert_eq!(s.pending(), 1);
     }
 
     #[test]

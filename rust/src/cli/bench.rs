@@ -19,6 +19,11 @@
 //! cartridge read pipeline — mount-to-first-match, parallel unseal MB/s,
 //! cache hit rate, bytes-copied-per-template — into `BENCH_vdisk.json`.
 //!
+//! `champd bench federation` (see [`super::bench_federation`]) sweeps the
+//! scale-out scatter-gather tier over rack sizes at a fixed corpus into
+//! `BENCH_federation.json`, gating the committed goodput floors plus the
+//! machine-independent scaling contract (>= 1.7x at 2 units, >= 3x at 4).
+//!
 //! The shared flag surface (`--sizes/--out/--baseline/--tolerance/
 //! --no-guard/--trace`) is resolved through [`super::CommonOpts`] with
 //! per-verb defaults.
@@ -539,8 +544,9 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         Some("scaling") => run_scaling(args),
         Some("match") => run_match(args),
         Some("vdisk") => super::bench_vdisk::run(args),
+        Some("federation") => super::bench_federation::run(args),
         other => anyhow::bail!(
-            "unknown bench target {other:?}; available: scaling, match, vdisk"
+            "unknown bench target {other:?}; available: scaling, match, vdisk, federation"
         ),
     }
 }

@@ -1,0 +1,298 @@
+//! `champd bench federation` — goodput vs unit count for the scale-out
+//! scatter-gather tier.
+//!
+//! Sweeps the federated serving run ([`crate::serve::federation::run`])
+//! over a list of rack sizes at a fixed corpus, writes
+//! `BENCH_federation.json` ([`crate::metrics::report::FederationReport`],
+//! schema v1), and enforces two gates:
+//!
+//! * the committed goodput floors
+//!   (`rust/benches/common/federation_baseline.json`, conservative,
+//!   machine-dependent, 10% tolerance), and
+//! * the machine-independent scaling contract
+//!   ([`FederationReport::check_contract`]): at the 1M-identity corpus a
+//!   2-unit rack must deliver >= 1.7x the 1-unit goodput and a 4-unit
+//!   rack >= 3.0x — ratios of the same virtual-time run, immune to
+//!   runner speed.
+//!
+//! With `--inject-detach`, every multi-unit point is re-run with a
+//! scripted mid-run unit-0 pull; those records are written with
+//! `"detach": true` and the contract gate requires
+//! `detach_sheds == 0` (replication >= 2 must absorb a single loss).
+//!
+//! Flags:
+//!   --units LIST      rack sizes to sweep, comma-separated (default 1,2,4)
+//!   --replication R   copies per identity, clamped to the rack (default 2)
+//!   --frames N        offered requests per point (default 200)
+//!   --corpus N        enrolled identities, k/m suffixes ok (default 1m)
+//!   --dim D           embedding dimension (default 64)
+//!   --k K             top-k per identify probe (default 10)
+//!   --overload F      offered load vs calibrated rack capacity (default 2.0)
+//!   --seed S          traffic seed (default 7)
+//!   --inject-detach   add a mid-run unit-0 detach pass per multi-unit point
+//!   --out PATH        output JSON (default BENCH_federation.json)
+//!   --baseline PATH   baseline JSON (default: the committed floors)
+//!   --tolerance PCT   allowed goodput drop below baseline (default 10)
+//!   --no-guard        write telemetry but skip both gates
+
+use crate::metrics::report::{
+    current_commit, FederationRecord, FederationReport, FEDERATION_CONTRACT_MIN_GALLERY,
+};
+use crate::serve::federation::{self, FederationConfig, FederationOutcome};
+
+use super::{parse_sizes, Args, BenchDefaults, CommonOpts};
+
+/// Committed goodput floors (very conservative: they catch collapses in
+/// the scatter-gather path, not runner noise; the scaling *ratios* are
+/// the machine-independent gate).
+const DEFAULT_BASELINE: &str = include_str!("../../benches/common/federation_baseline.json");
+
+/// Parse `--units "1,2,4"`.
+fn parse_units(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let n: usize = tok.parse().map_err(|_| anyhow::anyhow!("bad unit count {tok:?}"))?;
+        anyhow::ensure!((1..=64).contains(&n), "unit count must be 1..=64, got {n}");
+        out.push(n);
+    }
+    anyhow::ensure!(!out.is_empty(), "no unit counts given");
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
+fn record_from(out: &FederationOutcome, detach: bool) -> FederationRecord {
+    FederationRecord {
+        units: out.units,
+        replication: out.replication,
+        gallery: out.gallery,
+        dim: out.dim,
+        overload: out.overload,
+        detach,
+        capacity_rps: out.capacity_rps,
+        goodput_rps: out.goodput_rps,
+        offered: out.offered,
+        completed: out.completed,
+        shed: out.shed,
+        requeued: out.requeued,
+        detach_sheds: out.detach_sheds,
+        scatter_batches: out.scatter_batches,
+    }
+}
+
+/// Run the federation sweep and assemble the telemetry report.
+pub fn federation_report(
+    units_list: &[usize],
+    base: &FederationConfig,
+    inject_detach: bool,
+) -> anyhow::Result<FederationReport> {
+    let mut report = FederationReport::new(current_commit(), base.seed);
+    for &units in units_list {
+        let cfg = FederationConfig {
+            units,
+            replication: base.replication.min(units),
+            detach_at_us: None,
+            reattach_at_us: None,
+            ..base.clone()
+        };
+        let out = federation::run(&cfg)?;
+        anyhow::ensure!(out.accounting_ok, "{units} units: terminal accounting violated");
+        print_outcome(&out, false);
+        report.push(record_from(&out, false));
+        // The detach pass: pull unit 0 a quarter of the way into the
+        // horizon the clean run just measured (deterministically mid-run
+        // at any corpus/frame setting).
+        if inject_detach && units >= 2 && cfg.replication >= 2 {
+            let detach_cfg =
+                FederationConfig { detach_at_us: Some(out.elapsed_us / 4), ..cfg.clone() };
+            let dout = federation::run(&detach_cfg)?;
+            anyhow::ensure!(dout.accounting_ok, "{units} units: detach accounting violated");
+            print_outcome(&dout, true);
+            report.push(record_from(&dout, true));
+        }
+    }
+    Ok(report)
+}
+
+fn print_outcome(out: &FederationOutcome, detach: bool) {
+    println!(
+        "\n== {} unit(s), RF {}{} (gallery {}, capacity {:.1} rps, offered {:.1} rps) ==",
+        out.units,
+        out.replication,
+        if detach { ", mid-run detach" } else { "" },
+        out.gallery,
+        out.capacity_rps,
+        out.offered_rps
+    );
+    println!(
+        "totals: {} offered = {} completed + {} shed; {} requeued, {} detach-attributed; \
+         {} scatter batches; goodput {:.1} rps; horizon {:.2} s",
+        out.offered,
+        out.completed,
+        out.shed,
+        out.requeued,
+        out.detach_sheds,
+        out.scatter_batches,
+        out.goodput_rps,
+        out.elapsed_us as f64 / 1e6
+    );
+    for c in &out.classes {
+        println!(
+            "  {:<16} prio {} | {:>5} offered {:>5} completed {:>5} shed | goodput {:>7.1} rps",
+            c.name, c.priority, c.offered, c.completed, c.shed, c.goodput_rps
+        );
+    }
+}
+
+fn print_scaling(report: &FederationReport) {
+    let one = report
+        .records
+        .iter()
+        .find(|r| r.units == 1 && !r.detach)
+        .map(|r| r.goodput_rps)
+        .unwrap_or(0.0);
+    if one <= 0.0 {
+        return;
+    }
+    for r in report.records.iter().filter(|r| !r.detach && r.units > 1) {
+        println!(
+            "scaling {} units: {:.2}x the 1-unit goodput ({:.1} vs {:.1} rps)",
+            r.units,
+            r.goodput_rps / one,
+            r.goodput_rps,
+            one
+        );
+    }
+}
+
+/// Entry point for `champd bench federation`.
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let opts = CommonOpts::build(
+        args,
+        BenchDefaults { sizes: None, out: "BENCH_federation.json", trace: "TRACE_federation.json" },
+    )?;
+    let units_list = parse_units(args.flag("units").unwrap_or("1,2,4"))?;
+    let corpus = parse_sizes(args.flag("corpus").unwrap_or("1m"))?;
+    anyhow::ensure!(corpus.len() == 1, "--corpus takes one size, got {corpus:?}");
+    let base = FederationConfig {
+        replication: args.flag_u64("replication", 2).max(1) as usize,
+        seed: args.flag_u64("seed", 7),
+        requests: args.flag_u64("frames", 200).max(1) as usize,
+        overload: args.flag_f64("overload", 2.0),
+        gallery: corpus[0],
+        dim: args.flag_u64("dim", 64) as usize,
+        k: args.flag_u64("k", 10) as usize,
+        trace: opts.trace.is_some(),
+        ..FederationConfig::default()
+    };
+
+    let report = federation_report(&units_list, &base, args.switch("inject-detach"))?;
+    print_scaling(&report);
+    report.write(&opts.out)?;
+    println!(
+        "\nwrote {} ({} records, commit {})",
+        opts.out,
+        report.records.len(),
+        report.commit
+    );
+
+    if opts.no_guard {
+        return Ok(());
+    }
+    // Machine-independent contract first: scaling ratios (only gated at
+    // >= 1M identities) and zero detach-attributed sheds at RF >= 2.
+    let mut violations = report.check_contract();
+    if base.gallery < FEDERATION_CONTRACT_MIN_GALLERY {
+        println!(
+            "scaling contract not gated (corpus {} < {}; fixed per-pass costs dominate)",
+            base.gallery, FEDERATION_CONTRACT_MIN_GALLERY
+        );
+    }
+    let baseline = match &opts.baseline {
+        Some(p) => FederationReport::load(p)?,
+        None => FederationReport::parse(DEFAULT_BASELINE)?,
+    };
+    // Only gate baseline rows this sweep actually produced.
+    let mut scoped = FederationReport::new(baseline.commit.clone(), baseline.seed);
+    for r in &baseline.records {
+        if units_list.contains(&r.units)
+            && r.gallery == base.gallery
+            && r.dim == base.dim
+            && (!r.detach || args.switch("inject-detach"))
+        {
+            scoped.push(r.clone());
+        }
+    }
+    anyhow::ensure!(
+        !scoped.records.is_empty(),
+        "no baseline records cover this sweep (units {units_list:?}, gallery {}, dim {}); \
+         add floors to the baseline or pass --no-guard",
+        base.gallery,
+        base.dim
+    );
+    violations.extend(report.check_against(&scoped, opts.tolerance));
+    if violations.is_empty() {
+        println!(
+            "federation guard OK ({} baseline records, tolerance {:.0}%)",
+            scoped.records.len(),
+            opts.tolerance * 100.0
+        );
+        Ok(())
+    } else {
+        for v in &violations {
+            eprintln!("REGRESSION: {v}");
+        }
+        anyhow::bail!("{} federation regression(s)", violations.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedded_baseline_parses_and_floors_the_ci_job() {
+        let b = FederationReport::parse(DEFAULT_BASELINE).unwrap();
+        assert!(!b.records.is_empty());
+        // The CI job sweeps 1/2/4 units at the 1M corpus: every point must
+        // be floored, and the floors themselves must satisfy the scaling
+        // contract (otherwise a run exactly at floor would fail it).
+        for units in [1usize, 2, 4] {
+            assert!(b.find(units, 1_000_000, 64, false).is_some(), "{units} units floor");
+        }
+        assert!(b.check_contract().is_empty(), "{:?}", b.check_contract());
+    }
+
+    #[test]
+    fn parse_units_handles_lists_and_rejects_garbage() {
+        assert_eq!(parse_units("1,2,4").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_units("4, 2 ,4,1").unwrap(), vec![1, 2, 4], "sorted + deduped");
+        assert!(parse_units("").is_err());
+        assert!(parse_units("0").is_err());
+        assert!(parse_units("65").is_err());
+        assert!(parse_units("two").is_err());
+    }
+
+    #[test]
+    fn small_sweep_produces_clean_and_detach_records() {
+        let base = FederationConfig {
+            gallery: 2_000,
+            dim: 16,
+            requests: 120,
+            ..FederationConfig::default()
+        };
+        let report = federation_report(&[1, 2], &base, true).unwrap();
+        // 1 and 2 clean points, plus the 2-unit detach pass.
+        assert_eq!(report.records.len(), 3);
+        let clean = report.find(2, 2_000, 16, false).unwrap();
+        assert!(clean.goodput_rps > 0.0 && clean.scatter_batches > 0);
+        assert_eq!(report.find(1, 2_000, 16, true), None, "no detach pass at 1 unit");
+        let detach = report.find(2, 2_000, 16, true).unwrap();
+        assert_eq!(detach.detach_sheds, 0, "RF=2 must absorb the scripted pull");
+        // Small corpus: the contract's scaling gate is exempt, the detach
+        // gate still applies (and passes).
+        assert!(report.check_contract().is_empty(), "{:?}", report.check_contract());
+        let back = FederationReport::parse(&report.to_json_pretty()).unwrap();
+        assert_eq!(back.records, report.records);
+    }
+}

@@ -11,6 +11,7 @@
 //! drift between subcommands.
 
 pub mod bench;
+pub mod bench_federation;
 pub mod bench_vdisk;
 pub mod monitor;
 pub mod serve;

@@ -53,6 +53,17 @@
 //!   --inject-swap     script the §5 mid-run cartridge swap as hot-plug
 //!                     events regardless of profile or --trace (the
 //!                     anomaly-injection CI job's fault)
+//!   --units N         serve through the scale-out federation tier: the
+//!                     gallery shards across N units (rendezvous-hashed,
+//!                     replicated) and Identify scatter-gathers across
+//!                     them; writes BENCH_federation.json instead of the
+//!                     serve report (default 1 = single-unit session)
+//!   --replication R   copies per identity when --units > 1 (default 2)
+//!   --journal-dir D   per-unit enrollment journals under D when
+//!                     --units > 1: every acked Enroll is sealed +
+//!                     fsynced to every replica's journal before the ack
+//!   --inject-detach   with --units > 1, add a mid-run unit-0 pull pass
+//!                     (replication >= 2 must shed nothing)
 //!   --out PATH        output JSON (default BENCH_serve.json)
 //!   --baseline PATH   baseline JSON (default: the committed floors)
 //!   --tolerance PCT   allowed goodput drop below baseline (default 10)
@@ -65,6 +76,7 @@ use crate::metrics::report::{
 };
 use crate::obs::export;
 use crate::obs::health::{health_summary, BudgetRow};
+use crate::serve::federation::FederationConfig;
 use crate::serve::session::{ServeConfig, ServeOutcome, ServeSession};
 use crate::serve::traffic::MissionProfile;
 use crate::workload::traces::MissionTrace;
@@ -387,8 +399,60 @@ fn print_outcome(profile: &MissionProfile, out: &ServeOutcome) {
     }
 }
 
+/// `champd serve --units N` (N > 1): serve through the federation router
+/// instead of one unit's session.  The serve baseline guard does not
+/// apply (single-unit floors do not describe a rack); `champd bench
+/// federation` owns the federated gates.
+fn run_federated(args: &Args, units: usize) -> anyhow::Result<()> {
+    let opts = CommonOpts::build(
+        args,
+        BenchDefaults { sizes: None, out: "BENCH_federation.json", trace: "TRACE_federation.json" },
+    )?;
+    let profile_name = args.flag("profile").unwrap_or("federation");
+    let profile = MissionProfile::by_name(profile_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown profile {profile_name:?}; federated serving takes one profile \
+             (federation|checkpoint|watchlist|disaster)"
+        )
+    })?;
+    let cfg = FederationConfig {
+        profile,
+        units,
+        replication: args.flag_u64("replication", 2).max(1) as usize,
+        seed: args.flag_u64("seed", 7),
+        requests: args.flag_u64("frames", 200).max(1) as usize,
+        overload: args.flag_f64("overload", 2.0),
+        batch: args.flag_u64("batch", 2).max(1) as usize,
+        gallery: args.flag_u64("gallery", 10_000) as usize,
+        dim: args.flag_u64("dim", 64) as usize,
+        k: args.flag_u64("k", 10) as usize,
+        journal_dir: args.flag("journal-dir").map(std::path::PathBuf::from),
+        journal_key: args.flag("image-key").unwrap_or("champ-dev-key").to_string(),
+        trace: opts.trace.is_some(),
+        detach_at_us: None,
+        reattach_at_us: None,
+    };
+    let report =
+        crate::cli::bench_federation::federation_report(&[units], &cfg, args.switch("inject-detach"))?;
+    report.write(&opts.out)?;
+    println!(
+        "\nwrote {} ({} records, commit {}); federated gates run under \
+         `champd bench federation`",
+        opts.out,
+        report.records.len(),
+        report.commit
+    );
+    let violations = report.check_contract();
+    anyhow::ensure!(violations.is_empty(), "federation gate failed: {violations:?}");
+    Ok(())
+}
+
 /// Entry point for `champd serve`.
 pub fn run(args: &Args) -> anyhow::Result<()> {
+    let units = args.flag_u64("units", 1).max(1) as usize;
+    if units > 1 {
+        return run_federated(args, units);
+    }
     let opts = CommonOpts::build(
         args,
         BenchDefaults { sizes: None, out: "BENCH_serve.json", trace: "TRACE_serve.json" },

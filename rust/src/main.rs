@@ -4,10 +4,13 @@
 //!   run              pipelined run from a config (default config if none)
 //!   serve            multi-tenant serving layer: admission control,
 //!                    deadline scheduling, load shedding -> BENCH_serve.json
+//!                    (--units N > 1 switches to the federated scatter-gather
+//!                    tier -> BENCH_federation.json)
 //!   sweep            Table-1 broadcast scaling sweep (--kind ncs2|coral)
 //!   bench            bench telemetry (scaling -> BENCH_scaling.json,
 //!                    match -> BENCH_match.json, vdisk -> BENCH_vdisk.json,
-//!                    each with a regression guard)
+//!                    federation -> BENCH_federation.json, each with a
+//!                    regression guard)
 //!   hotswap          the §4.2 hot-swap experiment
 //!   power            §4.3 power report over the Table-1 sweep
 //!   trace            traced serving run -> Perfetto JSON + folded stacks
@@ -46,6 +49,8 @@ USAGE: champd <subcommand> [flags]
         [--journal J.cjl] [--flight BOX.bbx] [--governor]
         [--compact-threshold N] [--inject-swap] [--out PATH]
         [--baseline PATH] [--tolerance PCT] [--no-guard]
+        [--units N] [--replication R] [--journal-dir DIR] [--inject-detach]
+        (--units N > 1 federates the gallery over N simulated units)
   trace [--profile checkpoint|watchlist|disaster|all] [--out PATH]
         [--overload F] [--frames N] [--seed S] [--image IMG.vdisk]
         [--image-key K] (serving knobs as in serve; tracing always on)
@@ -59,6 +64,10 @@ USAGE: champd <subcommand> [flags]
         (sizes above 1m need --huge; the ann variant gates recall@1 >= 0.99)
   bench vdisk [--sizes 10k,100k] [--dim D] [--block-size B] [--out PATH]
         [--baseline PATH] [--tolerance PCT] [--no-guard]
+  bench federation [--units 1,2,4] [--replication R] [--frames N]
+        [--corpus 1m] [--dim D] [--k K] [--overload F] [--seed S]
+        [--inject-detach] [--out PATH] [--baseline PATH] [--tolerance PCT]
+        [--no-guard] (gates goodput floors + the scaling contract)
   hotswap [--fps F]
   power [--kind ncs2|coral]
   export-workflow [config.json]

@@ -941,6 +941,247 @@ impl VdiskReport {
     }
 }
 
+/// One point of the federation sweep (`BENCH_federation.json`): a full
+/// scatter-gather serving run at one (units, replication, detach) setting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationRecord {
+    pub units: usize,
+    pub replication: usize,
+    /// Enrolled identities across the rack (counted once, not per replica).
+    pub gallery: usize,
+    pub dim: usize,
+    pub overload: f64,
+    /// Whether the run scripted a mid-run unit detach.
+    pub detach: bool,
+    /// Calibrated rack capacity (requests/s at overload 1.0).
+    pub capacity_rps: f64,
+    /// Sum of per-class on-time goodput — the scaling contract's metric.
+    pub goodput_rps: f64,
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub requeued: u64,
+    /// Sheds attributable to the federation failure path (double eviction
+    /// or requeued-then-expired). Must be 0 for a single detach at RF >= 2.
+    pub detach_sheds: u64,
+    /// Scatter-gather passes executed over the run.
+    pub scatter_batches: u64,
+}
+
+impl FederationRecord {
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("units", json::num(self.units as f64)),
+            ("replication", json::num(self.replication as f64)),
+            ("gallery", json::num(self.gallery as f64)),
+            ("dim", json::num(self.dim as f64)),
+            ("overload", json::num(self.overload)),
+            ("detach", Value::Bool(self.detach)),
+            ("capacity_rps", json::num(self.capacity_rps)),
+            ("goodput_rps", json::num(self.goodput_rps)),
+            ("offered", json::num(self.offered as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("shed", json::num(self.shed as f64)),
+            ("requeued", json::num(self.requeued as f64)),
+            ("detach_sheds", json::num(self.detach_sheds as f64)),
+            ("scatter_batches", json::num(self.scatter_batches as f64)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Option<FederationRecord> {
+        Some(FederationRecord {
+            units: v.get("units")?.as_usize()?,
+            replication: v.get("replication")?.as_usize()?,
+            gallery: v.get("gallery")?.as_usize()?,
+            dim: v.get("dim")?.as_usize()?,
+            overload: v.get("overload")?.as_f64()?,
+            detach: v.get("detach").and_then(Value::as_bool).unwrap_or(false),
+            capacity_rps: v.get("capacity_rps").and_then(Value::as_f64).unwrap_or(0.0),
+            goodput_rps: v.get("goodput_rps")?.as_f64()?,
+            offered: v.get("offered")?.as_u64()?,
+            completed: v.get("completed")?.as_u64()?,
+            shed: v.get("shed")?.as_u64()?,
+            requeued: v.get("requeued").and_then(Value::as_u64).unwrap_or(0),
+            detach_sheds: v.get("detach_sheds").and_then(Value::as_u64).unwrap_or(0),
+            scatter_batches: v.get("scatter_batches").and_then(Value::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+pub const FEDERATION_SCHEMA_VERSION: u64 = 1;
+
+/// The machine-independent scaling contract gated in CI: at the 1M-identity
+/// corpus, a 2-unit rack must deliver >= 1.7x the 1-unit goodput and a
+/// 4-unit rack >= 3.0x.  The floors are deliberately below the ideal 2x/4x
+/// so scatter/merge overhead has headroom, but far above what any
+/// non-scaling implementation could reach.
+pub const FEDERATION_CONTRACT_2U: f64 = 1.7;
+pub const FEDERATION_CONTRACT_4U: f64 = 3.0;
+
+/// Corpus floor for the contract: below this the fixed per-pass costs
+/// (scatter fan-out, merge) dominate and the ratio is meaningless.
+pub const FEDERATION_CONTRACT_MIN_GALLERY: usize = 1_000_000;
+
+/// The federation telemetry file (`BENCH_federation.json`, schema v1).
+///
+/// ```json
+/// {
+///   "schema": 1,
+///   "commit": "<sha or 'unknown'>",
+///   "seed": 7,
+///   "records": [
+///     { "units": 4, "replication": 2, "gallery": 1000000, "dim": 64,
+///       "overload": 2.0, "detach": false,
+///       "capacity_rps": 60.1, "goodput_rps": 55.9,
+///       "offered": 200, "completed": 188, "shed": 12, "requeued": 0,
+///       "detach_sheds": 0, "scatter_batches": 94 }
+///   ]
+/// }
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct FederationReport {
+    pub commit: String,
+    pub seed: u64,
+    pub records: Vec<FederationRecord>,
+}
+
+impl FederationReport {
+    pub fn new(commit: impl Into<String>, seed: u64) -> Self {
+        FederationReport { commit: commit.into(), seed, records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: FederationRecord) {
+        self.records.push(r);
+    }
+
+    pub fn find(
+        &self,
+        units: usize,
+        gallery: usize,
+        dim: usize,
+        detach: bool,
+    ) -> Option<&FederationRecord> {
+        self.records
+            .iter()
+            .find(|r| r.units == units && r.gallery == gallery && r.dim == dim && r.detach == detach)
+    }
+
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("schema", json::num(FEDERATION_SCHEMA_VERSION as f64)),
+            ("commit", json::s(&self.commit)),
+            ("seed", json::num(self.seed as f64)),
+            ("records", Value::Arr(self.records.iter().map(FederationRecord::to_value).collect())),
+        ])
+    }
+
+    pub fn to_json_pretty(&self) -> String {
+        self.to_value().to_json_pretty()
+    }
+
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let commit =
+            v.get("commit").and_then(Value::as_str).unwrap_or("unknown").to_string();
+        let seed = v.get("seed").and_then(Value::as_u64).unwrap_or(0);
+        let mut records = Vec::new();
+        for r in v.get("records").and_then(Value::as_arr).unwrap_or(&[]) {
+            records.push(FederationRecord::from_value(r).ok_or_else(|| {
+                anyhow::anyhow!("malformed federation record: {}", r.to_json())
+            })?);
+        }
+        Ok(FederationReport { commit, seed, records })
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path.as_ref(), self.to_json_pretty() + "\n")?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("bad federation JSON: {e:?}"))?;
+        Self::from_value(&v)
+    }
+
+    /// Regression guard on goodput floors, mirroring the other gates:
+    /// every baseline (units, gallery, dim, detach) row must be present
+    /// with `goodput_rps >= baseline * (1 - tolerance)`.
+    pub fn check_against(&self, baseline: &FederationReport, tolerance: f64) -> Vec<String> {
+        let mut violations = Vec::new();
+        for b in &baseline.records {
+            match self.find(b.units, b.gallery, b.dim, b.detach) {
+                None => violations.push(format!(
+                    "missing record units={} gallery={} dim={} detach={} \
+                     (baseline {:.1} rps goodput)",
+                    b.units, b.gallery, b.dim, b.detach, b.goodput_rps
+                )),
+                Some(cur) => {
+                    let floor = b.goodput_rps * (1.0 - tolerance);
+                    if cur.goodput_rps < floor {
+                        violations.push(format!(
+                            "units={} gallery={} dim={}: {:.1} rps goodput < floor {:.1} \
+                             (baseline {:.1}, tol {:.0}%)",
+                            b.units, b.gallery, b.dim,
+                            cur.goodput_rps, floor, b.goodput_rps, tolerance * 100.0
+                        ));
+                    }
+                }
+            }
+        }
+        violations
+    }
+
+    /// The machine-independent scaling contract: goodput ratios between
+    /// unit counts at the same (gallery, dim, overload), checked only at
+    /// corpora >= [`FEDERATION_CONTRACT_MIN_GALLERY`] and only over
+    /// detach-free records.  Also gates `detach_sheds == 0` on every
+    /// detach record run at replication >= 2.
+    pub fn check_contract(&self) -> Vec<String> {
+        let mut violations = Vec::new();
+        let eligible: Vec<&FederationRecord> = self
+            .records
+            .iter()
+            .filter(|r| !r.detach && r.gallery >= FEDERATION_CONTRACT_MIN_GALLERY)
+            .collect();
+        for one in eligible.iter().filter(|r| r.units == 1) {
+            for (units, factor) in
+                [(2usize, FEDERATION_CONTRACT_2U), (4usize, FEDERATION_CONTRACT_4U)]
+            {
+                let peer = eligible.iter().find(|r| {
+                    r.units == units
+                        && r.gallery == one.gallery
+                        && r.dim == one.dim
+                        && (r.overload - one.overload).abs() < 1e-9
+                });
+                if let Some(p) = peer {
+                    let floor = one.goodput_rps * factor;
+                    if p.goodput_rps < floor {
+                        violations.push(format!(
+                            "scaling contract: {} units at gallery={} deliver {:.1} rps \
+                             goodput < {:.1} ({}x the 1-unit {:.1})",
+                            units, one.gallery, p.goodput_rps, floor, factor, one.goodput_rps
+                        ));
+                    }
+                }
+            }
+        }
+        for r in self.records.iter().filter(|r| r.detach && r.replication >= 2) {
+            if r.detach_sheds > 0 {
+                violations.push(format!(
+                    "detach at units={} RF={} shed {} federation-attributed requests \
+                     (must be 0)",
+                    r.units, r.replication, r.detach_sheds
+                ));
+            }
+        }
+        violations
+    }
+}
+
 /// Best-effort commit id for the report: `$GITHUB_SHA` in CI, `git
 /// rev-parse` locally, `"unknown"` otherwise.
 pub fn current_commit() -> String {
@@ -1261,6 +1502,91 @@ mod tests {
     #[test]
     fn malformed_vdisk_record_is_an_error() {
         assert!(VdiskReport::parse(r#"{"records": [{"identities": 10}]}"#).is_err());
+    }
+
+    fn fed_record(units: usize, gallery: usize, goodput: f64, detach: bool) -> FederationRecord {
+        FederationRecord {
+            units,
+            replication: 2,
+            gallery,
+            dim: 64,
+            overload: 2.0,
+            detach,
+            capacity_rps: goodput / 0.9,
+            goodput_rps: goodput,
+            offered: 200,
+            completed: 180,
+            shed: 20,
+            requeued: 0,
+            detach_sheds: 0,
+            scatter_batches: 90,
+        }
+    }
+
+    #[test]
+    fn federation_report_roundtrips_through_json() {
+        let mut rep = FederationReport::new("fade", 7);
+        rep.push(fed_record(1, 1_000_000, 15.0, false));
+        rep.push(fed_record(4, 1_000_000, 58.0, true));
+        let text = rep.to_json_pretty();
+        assert!(text.contains("\"schema\": 1"), "{text}");
+        let back = FederationReport::parse(&text).unwrap();
+        assert_eq!(back.commit, "fade");
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.records, rep.records);
+        assert!(back.find(1, 1_000_000, 64, false).is_some());
+        assert!(back.find(1, 1_000_000, 64, true).is_none());
+        assert!(back.find(2, 1_000_000, 64, false).is_none());
+        assert!(FederationReport::parse(r#"{"records": [{"units": 2}]}"#).is_err());
+    }
+
+    #[test]
+    fn federation_guard_gates_goodput_floors() {
+        let mut baseline = FederationReport::new("base", 7);
+        baseline.push(fed_record(2, 1_000_000, 30.0, false));
+        let mut cur = FederationReport::new("cur", 7);
+        cur.push(fed_record(2, 1_000_000, 27.5, false)); // -8.3%: inside tol
+        assert!(cur.check_against(&baseline, 0.10).is_empty());
+        let mut cur = FederationReport::new("cur", 7);
+        cur.push(fed_record(2, 1_000_000, 26.0, false)); // -13%: regression
+        let v = cur.check_against(&baseline, 0.10);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("26.0 rps goodput"));
+        assert!(FederationReport::new("cur", 7).check_against(&baseline, 0.10)[0]
+            .contains("missing record"));
+    }
+
+    #[test]
+    fn federation_contract_gates_scaling_and_detach_sheds() {
+        // Healthy scaling: 1.9x at 2 units, 3.6x at 4 — both above floor.
+        let mut rep = FederationReport::new("ok", 7);
+        rep.push(fed_record(1, 1_000_000, 15.0, false));
+        rep.push(fed_record(2, 1_000_000, 28.5, false));
+        rep.push(fed_record(4, 1_000_000, 54.0, false));
+        assert!(rep.check_contract().is_empty());
+
+        // Broken scaling: 4 units deliver only 2x.
+        let mut rep = FederationReport::new("bad", 7);
+        rep.push(fed_record(1, 1_000_000, 15.0, false));
+        rep.push(fed_record(4, 1_000_000, 30.0, false));
+        let v = rep.check_contract();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("scaling contract"));
+
+        // Small corpora are exempt: fixed costs dominate there.
+        let mut rep = FederationReport::new("small", 7);
+        rep.push(fed_record(1, 10_000, 100.0, false));
+        rep.push(fed_record(4, 10_000, 110.0, false));
+        assert!(rep.check_contract().is_empty());
+
+        // A detach record with federation-attributed sheds fails the gate.
+        let mut rep = FederationReport::new("shed", 7);
+        let mut r = fed_record(2, 1_000_000, 28.0, true);
+        r.detach_sheds = 3;
+        rep.push(r);
+        let v = rep.check_contract();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("must be 0"));
     }
 
     #[test]

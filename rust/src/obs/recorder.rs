@@ -71,6 +71,14 @@ pub enum Stage {
     HostPrep = 6,
     /// One bounded wave of the vdisk parallel unseal walk.
     UnsealWave = 7,
+    /// Federation fan-out: the router splitting a probe batch into per-unit
+    /// sub-queries, zero-width per request.
+    Scatter = 8,
+    /// Waiting for the slowest probed unit in a scatter-gather pass:
+    /// fan-out → last per-unit answer.
+    ProbeWait = 9,
+    /// Deterministic bounded heap-merge of per-unit top-k lists.
+    Merge = 10,
 }
 
 impl Stage {
@@ -84,10 +92,13 @@ impl Stage {
             Stage::Wire => "wire",
             Stage::HostPrep => "host-prep",
             Stage::UnsealWave => "unseal-wave",
+            Stage::Scatter => "scatter",
+            Stage::ProbeWait => "probe-wait",
+            Stage::Merge => "merge",
         }
     }
 
-    pub const ALL: [Stage; 8] = [
+    pub const ALL: [Stage; 11] = [
         Stage::Admission,
         Stage::Queue,
         Stage::Dispatch,
@@ -96,6 +107,9 @@ impl Stage {
         Stage::Wire,
         Stage::HostPrep,
         Stage::UnsealWave,
+        Stage::Scatter,
+        Stage::ProbeWait,
+        Stage::Merge,
     ];
 
     /// Inverse of the span discriminant (for flight-ring decode).

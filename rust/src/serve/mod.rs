@@ -29,6 +29,15 @@
 //! * [`slo`] — per-class SLO accounting: exact p50/p99 latency, goodput,
 //!   deadline-miss and shed rates, with an exactly-once terminal-outcome
 //!   state machine (`offered == completed + shed`, checked per class).
+//! * [`shard`] / [`federation`] — the scale-out tier: rendezvous-hashed
+//!   placement of the gallery across a rack of units (replication ≥ 2),
+//!   scatter-gather `Identify` with a deterministic bounded heap-merge
+//!   that is bit-identical to a single-unit scan over the union, and
+//!   unit-level hot-swap (detach re-routes to replicas, re-attach
+//!   rebalances incrementally with exactly-once transfer accounting).
+//!   `champd serve --units N --replication R` exposes it end to end and
+//!   `champd bench federation` sweeps goodput vs unit count into
+//!   `BENCH_federation.json`.
 //!
 //! `champd serve` drives the whole stack and writes `BENCH_serve.json`
 //! ([`crate::metrics::report::ServeReport`], schema v1).  The run is
@@ -36,6 +45,8 @@
 //! report, which is what makes an incident replayable for forensics.
 
 pub mod admission;
+pub mod federation;
 pub mod session;
+pub mod shard;
 pub mod slo;
 pub mod traffic;

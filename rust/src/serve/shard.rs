@@ -1,0 +1,258 @@
+//! Rendezvous (highest-random-weight) shard placement for the federation tier.
+//!
+//! Every enrolled identity key is owned by the `replication` units with the
+//! highest rendezvous weight `hrw_weight(unit_uid, key)`. The scheme needs no
+//! central directory and is stable under membership change: adding or removing
+//! one unit only reassigns the keys whose top-RF set that unit enters or
+//! leaves (~RF/N of the corpus), never a full reshuffle. Routing (which owner
+//! actually answers a probe) is a separate, liveness-aware choice so that a
+//! detached unit's keys fall through to the next-ranked live replica without
+//! moving any data.
+
+/// SplitMix64 finalizer: the avalanche core used to turn (unit, key) into a
+/// uniform rendezvous weight. Deterministic across platforms.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Rendezvous weight of `unit_uid` for `key`. Higher wins ownership.
+#[inline]
+pub fn hrw_weight(unit_uid: u64, key: u64) -> u64 {
+    mix64(unit_uid ^ key.rotate_left(32) ^ 0x9e37_79b9_7f4a_7c15)
+}
+
+/// FNV-1a over an identity string: the stable placement key for an id.
+pub fn placement_key(id: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in id.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Membership + liveness view of the federation rack.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    /// Unit uids in attach order; index into this vec is the unit index used
+    /// everywhere else in the federation tier.
+    units: Vec<u64>,
+    live: Vec<bool>,
+    replication: usize,
+}
+
+impl ShardMap {
+    /// Build a map over `units` (uids must be unique) with the given
+    /// replication factor, clamped to the unit count.
+    pub fn new(units: &[u64], replication: usize) -> Self {
+        assert!(!units.is_empty(), "federation needs at least one unit");
+        for (i, u) in units.iter().enumerate() {
+            assert!(!units[..i].contains(u), "duplicate unit uid {u:#x}");
+        }
+        let rf = replication.max(1).min(units.len());
+        ShardMap { units: units.to_vec(), live: vec![true; units.len()], replication: rf }
+    }
+
+    pub fn units(&self) -> &[u64] {
+        &self.units
+    }
+
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+
+    pub fn is_live(&self, unit: usize) -> bool {
+        self.live.get(unit).copied().unwrap_or(false)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|l| **l).count()
+    }
+
+    /// Mark a unit live (re-attach) or dead (detach). Placement is unchanged;
+    /// only routing decisions see liveness.
+    pub fn set_live(&mut self, unit: usize, live: bool) {
+        self.live[unit] = live;
+    }
+
+    /// Expand the rack with a new unit (live). Returns its unit index. The
+    /// replication factor is re-clamped in case the rack was smaller than the
+    /// requested RF at construction.
+    pub fn add_unit(&mut self, uid: u64, requested_rf: usize) -> usize {
+        assert!(!self.units.contains(&uid), "duplicate unit uid {uid:#x}");
+        self.units.push(uid);
+        self.live.push(true);
+        self.replication = requested_rf.max(self.replication).min(self.units.len());
+        self.units.len() - 1
+    }
+
+    /// The `replication` owner unit indexes for `key`, ranked best-first by
+    /// (rendezvous weight desc, uid asc). Liveness is ignored: ownership is a
+    /// placement fact, routing handles failures.
+    pub fn owners(&self, key: u64) -> Vec<usize> {
+        let mut ranked: Vec<(u64, u64, usize)> = self
+            .units
+            .iter()
+            .enumerate()
+            .map(|(i, &uid)| (hrw_weight(uid, key), uid, i))
+            .collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        ranked.truncate(self.replication);
+        ranked.into_iter().map(|(_, _, i)| i).collect()
+    }
+
+    /// Owner set as it stood *before* unit `skip` joined: the top-RF ranked
+    /// units with `skip` filtered out. Used while a rack expansion is still
+    /// draining, so fresh enrolls keep full replication on units that can
+    /// already hold data.
+    pub fn owners_excluding(&self, key: u64, skip: usize) -> Vec<usize> {
+        let mut ranked: Vec<(u64, u64, usize)> = self
+            .units
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != skip)
+            .map(|(i, &uid)| (hrw_weight(uid, key), uid, i))
+            .collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        ranked.truncate(self.replication.min(ranked.len().max(1)));
+        ranked.into_iter().map(|(_, _, i)| i).collect()
+    }
+
+    /// Highest-weight live unit among `candidates` for `key` — the routing
+    /// decision. `None` when every candidate replica is down.
+    pub fn best_live(&self, key: u64, candidates: &[usize]) -> Option<usize> {
+        candidates
+            .iter()
+            .copied()
+            .filter(|&u| self.is_live(u))
+            .max_by(|&a, &b| {
+                hrw_weight(self.units[a], key)
+                    .cmp(&hrw_weight(self.units[b], key))
+                    .then(self.units[b].cmp(&self.units[a]))
+            })
+    }
+
+    /// Routing without an explicit resident set: best live unit among the
+    /// placement owners of `key`.
+    pub fn route(&self, key: u64) -> Option<usize> {
+        let owners = self.owners(key);
+        self.best_live(key, &owners)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<u64> {
+        (0..n).map(|i| placement_key(&format!("id{i}"))).collect()
+    }
+
+    #[test]
+    fn owners_are_deterministic_distinct_and_rf_sized() {
+        let map = ShardMap::new(&[11, 22, 33, 44], 2);
+        for key in keys(500) {
+            let o1 = map.owners(key);
+            let o2 = map.owners(key);
+            assert_eq!(o1, o2);
+            assert_eq!(o1.len(), 2);
+            assert_ne!(o1[0], o1[1]);
+        }
+    }
+
+    #[test]
+    fn replication_clamps_to_unit_count() {
+        let map = ShardMap::new(&[7], 3);
+        assert_eq!(map.replication(), 1);
+        assert_eq!(map.owners(99).len(), 1);
+    }
+
+    #[test]
+    fn detach_routes_to_next_ranked_replica_and_reattach_restores() {
+        let mut map = ShardMap::new(&[11, 22, 33, 44], 2);
+        let key = placement_key("id42");
+        let owners = map.owners(key);
+        let primary = map.route(key).unwrap();
+        assert_eq!(primary, owners[0]);
+        map.set_live(primary, false);
+        let fallback = map.route(key).unwrap();
+        assert_eq!(fallback, owners[1]);
+        map.set_live(primary, true);
+        assert_eq!(map.route(key).unwrap(), primary);
+    }
+
+    #[test]
+    fn placement_is_stable_under_expansion() {
+        // Adding one unit to an N-unit rack must move only the keys whose
+        // top-RF set the new unit enters: ~RF/(N+1) of owner sets change and
+        // ~1/(N+1) of primaries move. Gate at 2x the expectation.
+        let n = 4usize;
+        let ks = keys(20_000);
+        let base = ShardMap::new(&[11, 22, 33, 44], 2);
+        let before_owners: Vec<Vec<usize>> = ks.iter().map(|&k| base.owners(k)).collect();
+        let before_primary: Vec<usize> = ks.iter().map(|&k| base.route(k).unwrap()).collect();
+
+        let mut grown = base.clone();
+        let new_unit = grown.add_unit(55, 2);
+        let mut owner_changed = 0usize;
+        let mut primary_moved = 0usize;
+        for (i, &k) in ks.iter().enumerate() {
+            let now = grown.owners(k);
+            if now != before_owners[i] {
+                owner_changed += 1;
+                // Every change must be the new unit entering the set.
+                assert!(now.contains(&new_unit), "owner churn unrelated to the added unit");
+            }
+            if grown.route(k).unwrap() != before_primary[i] {
+                primary_moved += 1;
+            }
+        }
+        let total = ks.len() as f64;
+        let owner_frac = owner_changed as f64 / total;
+        let primary_frac = primary_moved as f64 / total;
+        let rf = 2.0;
+        let n1 = (n + 1) as f64;
+        assert!(owner_frac > 0.0, "expansion moved nothing; hashing is degenerate");
+        assert!(
+            owner_frac < 2.0 * rf / n1,
+            "owner churn {owner_frac:.3} exceeds 2x the rendezvous expectation {:.3}",
+            rf / n1
+        );
+        assert!(
+            primary_frac < 2.0 / n1,
+            "primary churn {primary_frac:.3} exceeds 2x the rendezvous expectation {:.3}",
+            1.0 / n1
+        );
+    }
+
+    #[test]
+    fn keys_spread_roughly_evenly() {
+        let map = ShardMap::new(&[1, 2, 3, 4], 2);
+        let mut per_unit = [0usize; 4];
+        let ks = keys(40_000);
+        for &k in &ks {
+            per_unit[map.route(k).unwrap()] += 1;
+        }
+        let expect = ks.len() / 4;
+        for (u, &c) in per_unit.iter().enumerate() {
+            assert!(
+                c > expect / 2 && c < expect * 2,
+                "unit {u} holds {c} primaries, expected ~{expect}"
+            );
+        }
+    }
+}

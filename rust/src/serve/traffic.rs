@@ -265,6 +265,38 @@ impl MissionProfile {
         }
     }
 
+    /// Rack-scale federation mission: pure scatter-gather identification
+    /// from two rack feeds. Identify-only by design — this is the workload
+    /// whose goodput the federation scaling contract pins, so it must not
+    /// be diluted by inference classes that do not shard with the gallery.
+    pub fn federation() -> Self {
+        MissionProfile {
+            name: "federation",
+            shape: ArrivalShape::Poisson,
+            tenants: vec![
+                TenantSpec { name: "rack-north", share: 0.5, rate_factor: 0.9, burst: 32 },
+                TenantSpec { name: "rack-south", share: 0.5, rate_factor: 0.9, burst: 32 },
+            ],
+            classes: vec![
+                ClassSpec {
+                    name: "edge-identify",
+                    kind: RequestKind::Identify,
+                    priority: 0,
+                    deadline_us: 600_000,
+                    share: 0.7,
+                },
+                ClassSpec {
+                    name: "batch-identify",
+                    kind: RequestKind::Identify,
+                    priority: 1,
+                    deadline_us: 2_000_000,
+                    share: 0.3,
+                },
+            ],
+            queue_depth: 128,
+        }
+    }
+
     /// The three shipped profiles, in the canonical report order.
     pub fn all() -> Vec<MissionProfile> {
         vec![Self::checkpoint(), Self::watchlist(), Self::disaster_response()]
@@ -276,6 +308,7 @@ impl MissionProfile {
             "checkpoint" => Some(Self::checkpoint()),
             "watchlist" | "surveillance" => Some(Self::watchlist()),
             "disaster" | "disaster-response" => Some(Self::disaster_response()),
+            "federation" | "rack" => Some(Self::federation()),
             _ => None,
         }
     }
@@ -374,6 +407,18 @@ mod tests {
         assert_eq!(MissionProfile::by_name("surveillance").unwrap().name, "watchlist");
         assert_eq!(MissionProfile::by_name("disaster-response").unwrap().name, "disaster");
         assert!(MissionProfile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn federation_profile_validates_but_stays_out_of_all() {
+        let p = MissionProfile::federation();
+        p.validate().unwrap();
+        assert!(p.classes.iter().all(|c| c.kind == RequestKind::Identify),
+            "the federation profile drives the scatter-gather path only");
+        assert_eq!(MissionProfile::by_name("federation").unwrap().name, p.name);
+        assert_eq!(MissionProfile::by_name("rack").unwrap().name, p.name);
+        // Not in all(): the single-unit serve sweeps must not pick it up.
+        assert!(MissionProfile::all().iter().all(|q| q.name != p.name));
     }
 
     #[test]

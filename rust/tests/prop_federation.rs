@@ -1,0 +1,208 @@
+//! Property suite for the federation tier (acceptance gates):
+//!
+//! * the scatter-gather merged top-k is **bit-identical** to a single-unit
+//!   scan over the union corpus, across random unit counts, replication
+//!   factors, k, and corpus sizes — including with a random unit detached;
+//! * a mid-run unit pull at RF 2 sheds nothing federation-attributable and
+//!   requeues the in-flight batch exactly once;
+//! * rendezvous placement is stable under membership churn: racking or
+//!   pulling one unit moves only ~RF/N of the owner sets;
+//! * journal-aware replication survives a power cycle **plus the loss of
+//!   one unit's journal**: every acked enroll is recovered from the
+//!   surviving replica journals.
+
+use champ::biometric::index::GalleryIndex;
+use champ::serve::federation::{self, FederationConfig, FederationRouter};
+use champ::serve::shard::{placement_key, ShardMap};
+use champ::util::prop::check;
+use champ::util::rng::Rng;
+
+/// Build a federated router plus the flat union oracle over one corpus.
+fn corpus(
+    rng: &mut Rng,
+    n: usize,
+    units: usize,
+    rf: usize,
+    dim: usize,
+) -> (FederationRouter, GalleryIndex) {
+    let uids: Vec<u64> = (0..units as u64).map(|i| 0xBEEF_0000 + i * 17).collect();
+    let mut router = FederationRouter::new(dim, &uids, rf);
+    let mut oracle = GalleryIndex::new(dim);
+    for i in 0..n {
+        let id = format!("id{i}");
+        let t = rng.unit_vec(dim);
+        router.enroll(&id, &t).unwrap();
+        oracle.upsert(id, &t);
+    }
+    (router, oracle)
+}
+
+/// Assert the federated answer equals the flat scan bit-for-bit.
+fn assert_bit_identical(router: &FederationRouter, oracle: &GalleryIndex, probe: &[f32], k: usize) {
+    let fed = router.identify(probe, k);
+    let flat = oracle.top_k(probe, k);
+    assert_eq!(fed.len(), flat.len(), "federated answer is missing rows at k={k}");
+    for (i, (&(seq, fs), &(row, os))) in fed.iter().zip(flat.iter()).enumerate() {
+        assert_eq!(
+            router.id_of(seq),
+            oracle.id_of(row),
+            "rank {i}: merged order diverges from the flat scan"
+        );
+        assert_eq!(fs.to_bits(), os.to_bits(), "rank {i}: score not bit-identical");
+    }
+}
+
+#[test]
+fn merged_topk_is_bit_identical_across_shard_shapes() {
+    check("federation/bit-identity", 0xFED1, 24, |rng, _| {
+        let units = rng.range(1, 7) as usize;
+        let rf = rng.range(1, units as u64 + 1) as usize;
+        let dim = [8usize, 16, 32][rng.range(0, 3) as usize];
+        let n = rng.range(50, 800) as usize;
+        let k = rng.range(1, 24) as usize;
+        let (router, oracle) = corpus(rng, n, units, rf, dim);
+        for _ in 0..4 {
+            let probe = rng.unit_vec(dim);
+            assert_bit_identical(&router, &oracle, &probe, k);
+        }
+    });
+}
+
+#[test]
+fn merged_topk_survives_a_random_detach_at_rf2() {
+    check("federation/detach-bit-identity", 0xFED2, 16, |rng, _| {
+        let units = rng.range(2, 6) as usize;
+        let dim = 16;
+        let n = rng.range(100, 600) as usize;
+        let (mut router, oracle) = corpus(rng, n, units, 2, dim);
+        let victim = rng.range(0, units as u64) as usize;
+        router.detach(victim);
+        assert_eq!(router.unroutable(), 0, "RF 2 must keep every key routable");
+        let k = rng.range(1, 12) as usize;
+        for _ in 0..3 {
+            let probe = rng.unit_vec(dim);
+            assert_bit_identical(&router, &oracle, &probe, k);
+        }
+        router.reattach(victim);
+        let probe = rng.unit_vec(dim);
+        assert_bit_identical(&router, &oracle, &probe, k);
+    });
+}
+
+#[test]
+fn detach_under_load_sheds_nothing_and_requeues_exactly_once() {
+    for seed in [3u64, 11, 29] {
+        let cfg = FederationConfig {
+            units: 3,
+            replication: 2,
+            gallery: 2_000,
+            dim: 16,
+            requests: 150,
+            seed,
+            detach_at_us: Some(5_000),
+            ..FederationConfig::default()
+        };
+        let out = federation::run(&cfg).unwrap();
+        assert!(out.accounting_ok, "seed {seed}: terminal accounting violated");
+        assert_eq!(out.detaches, 1, "seed {seed}");
+        assert_eq!(
+            out.detach_sheds, 0,
+            "seed {seed}: a single pull at RF 2 must shed nothing"
+        );
+        assert!(out.requeued >= 1, "seed {seed}: the in-flight batch must requeue");
+        assert_eq!(out.offered, out.completed + out.shed, "seed {seed}");
+        // Exactly-once: a requeued request terminates once, so requeues can
+        // never exceed the scatter passes that were in flight.
+        assert!(out.requeued <= cfg.batch as u64, "seed {seed}: batch requeued more than once");
+    }
+}
+
+#[test]
+fn rendezvous_placement_is_stable_under_membership_churn() {
+    check("federation/placement-stability", 0xFED3, 12, |rng, _| {
+        let n = rng.range(3, 8) as usize;
+        let rf = rng.range(1, (n as u64).min(3) + 1) as usize;
+        let uids: Vec<u64> = (0..n as u64).map(|i| (rng.next_u64() | 1) ^ i).collect();
+        let map = ShardMap::new(&uids, rf);
+        let keys: Vec<u64> = (0..4_000).map(|i| placement_key(&format!("id{i}"))).collect();
+        let before: Vec<Vec<usize>> = keys.iter().map(|&k| map.owners(k)).collect();
+
+        // Rack one more unit: only owner sets the new unit enters may change.
+        let mut grown = map.clone();
+        let added = grown.add_unit(0xADD_u64 ^ rng.next_u64(), rf);
+        let mut churn = 0usize;
+        for (i, &k) in keys.iter().enumerate() {
+            let now = grown.owners(k);
+            if now != before[i] {
+                churn += 1;
+                assert!(now.contains(&added), "churn unrelated to the added unit");
+            }
+        }
+        let frac = churn as f64 / keys.len() as f64;
+        let expect = rf as f64 / (n + 1) as f64;
+        assert!(frac < 2.5 * expect + 0.02, "owner churn {frac:.3} vs expectation {expect:.3}");
+
+        // Pull a unit (liveness only): placement must not move at all, and
+        // every key must still route somewhere while any replica lives.
+        let mut pulled = map.clone();
+        pulled.set_live(rng.range(0, n as u64) as usize, false);
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(pulled.owners(k), before[i], "detach must never move placement");
+            if rf >= 2 {
+                assert!(pulled.route(k).is_some(), "key lost routing at RF {rf}");
+            }
+        }
+    });
+}
+
+#[test]
+fn acked_enrolls_survive_power_cycle_and_one_journal_loss() {
+    let dir = std::env::temp_dir()
+        .join(format!("champ-prop-federation-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let uids: Vec<u64> = vec![0xACE1, 0xACE2, 0xACE3];
+    let dim = 16;
+    let key = "prop-federation-key";
+
+    let mut rng = Rng::new(0xFED4);
+    let mut acked: Vec<(String, Vec<f32>)> = Vec::new();
+    {
+        let mut router = FederationRouter::new(dim, &uids, 2)
+            .with_journals(&dir, key)
+            .unwrap();
+        for i in 0..120 {
+            let id = format!("victim{i}");
+            let t = rng.unit_vec(dim);
+            // The ack implies the append hit *every* replica journal.
+            router.enroll(&id, &t).unwrap();
+            acked.push((id, t));
+        }
+        assert_eq!(router.enrolled_count(), acked.len());
+    } // power cycle: router dropped, only the journals persist
+
+    // Lose one unit's journal outright — RF 2 means every identity still
+    // has at least one surviving journal copy.
+    std::fs::remove_file(dir.join(format!("unit-{:x}.journal", uids[0]))).unwrap();
+
+    let router = FederationRouter::new(dim, &uids, 2).with_journals(&dir, key).unwrap();
+    assert_eq!(
+        router.enrolled_count(),
+        acked.len(),
+        "replay must recover the full acked set from surviving replicas"
+    );
+    let mut oracle = GalleryIndex::new(dim);
+    for (id, t) in &acked {
+        oracle.upsert(id.clone(), t);
+    }
+    for i in 0..8 {
+        let probe: Vec<f32> = acked[i * 13].1.iter().map(|&x| x + 0.03).collect();
+        let fed = router.identify(&probe, 5);
+        let flat = oracle.top_k(&probe, 5);
+        assert_eq!(fed.len(), flat.len());
+        for (&(seq, fs), &(row, os)) in fed.iter().zip(flat.iter()) {
+            assert_eq!(router.id_of(seq), oracle.id_of(row));
+            assert_eq!(fs.to_bits(), os.to_bits());
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
